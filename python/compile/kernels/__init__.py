@@ -1,0 +1,3 @@
+"""L1 Pallas kernels + pure-jnp reference oracles."""
+
+from . import flash_decode, gemm, group_gemm, ref  # noqa: F401

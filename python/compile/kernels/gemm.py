@@ -1,0 +1,126 @@
+"""L1 Pallas kernel: tiled GEMM.
+
+This is the per-tile compute that Triton-distributed's *consumer* kernels
+(Fig. 4 `consumer_gemm`) perform between `wait`/`consume_token` primitives.
+On the real system the tile order is swizzled by the L3 coordinator; the
+kernel itself is a plain MXU-friendly tiled matmul.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper tiles for
+CUDA threadblocks + tensor cores; here we tile for the TPU memory
+hierarchy — BlockSpec expresses the HBM->VMEM schedule, 128x128 output
+tiles feed the 128x128 MXU systolic array, and the K dimension is blocked
+so the working set (x_tile + w_tile + accumulator) stays far below VMEM.
+
+Must be lowered with ``interpret=True`` on this CPU image: a real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, n_k: int):
+    """One (bm, bn) output tile; grid axis 2 walks K blocks.
+
+    The output block is revisited for every K block (its index map ignores
+    the K grid axis), so it doubles as the f32 accumulator — mirroring the
+    f32 accumulation of both tensor-core MMA and the TPU MXU.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "out_dtype")
+)
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    out_dtype=None,
+) -> jax.Array:
+    """Tiled GEMM ``x @ w`` via a Pallas kernel.
+
+    Args:
+      x: ``[M, K]`` array (f32 or bf16).
+      w: ``[K, N]`` array (same dtype as ``x``).
+      block_m/n/k: tile sizes. Shapes that do not divide are padded up and
+        the result is sliced back, matching how the paper's Triton GEMM
+        masks edge tiles.
+      out_dtype: output dtype; defaults to ``x.dtype``. Accumulation is
+        always f32.
+
+    Returns:
+      ``[M, N]`` product.
+    """
+    if x.ndim != 2 or w.ndim != 2 or x.shape[1] != w.shape[0]:
+        raise ValueError(f"bad gemm shapes {x.shape} @ {w.shape}")
+    out_dtype = out_dtype or x.dtype
+    m, k = x.shape
+    _, n = w.shape
+
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    pad_m, pad_n, pad_k = (-m) % bm, (-n) % bn, (-k) % bk
+    if pad_m or pad_k:
+        x = jnp.pad(x, ((0, pad_m), (0, pad_k)))
+    if pad_k or pad_n:
+        w = jnp.pad(w, ((0, pad_k), (0, pad_n)))
+    pm, pk = x.shape
+    _, pn = w.shape
+    n_k = pk // bk
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(pm // bm, pn // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pm, pn), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+    if pad_m or pad_n:
+        out = out[:m, :n]
+    return out.astype(out_dtype)
+
+
+def vmem_bytes(block_m: int, block_n: int, block_k: int, itemsize: int = 2) -> int:
+    """Estimated VMEM working set for one tile step (double-buffered inputs).
+
+    Used by DESIGN.md §6 and the Rust cost model to sanity-check that the
+    chosen tiling fits the 16 MiB TPU VMEM with room for double buffering.
+    """
+    x_tile = block_m * block_k * itemsize
+    w_tile = block_k * block_n * itemsize
+    acc = block_m * block_n * 4  # f32 accumulator
+    return 2 * (x_tile + w_tile) + acc
+
+
+def mxu_utilization(m: int, n: int, k: int, block_m: int = 128,
+                    block_n: int = 128, block_k: int = 128) -> float:
+    """Fraction of MXU MACs doing useful work (padding waste excluded).
+
+    The 128x128 systolic array is fully fed when every block dim is a
+    multiple of 128; edge tiles pad and waste the padded fraction.
+    """
+    import math
+
+    pm = math.ceil(m / block_m) * block_m
+    pn = math.ceil(n / block_n) * block_n
+    pk = math.ceil(k / block_k) * block_k
+    return (m * n * k) / float(pm * pn * pk)

@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: grouped (per-expert) GEMM for MoE layers.
+
+Triton-distributed's AG+MoE / MoE+RS kernels (Tables 4 and 5) wrap a
+GroupGEMM: tokens are routed to experts, every expert multiplies its token
+buffer by its own weight matrix. We use capacity-based routing (fixed
+``capacity`` tokens per expert, overflow dropped, underflow zero-padded) so
+the grouped problem has a static shape — the standard way MoE GroupGEMMs
+are expressed for both tensor cores and the TPU MXU.
+
+Layout: ``x [E, C, H] @ w [E, H, F] -> [E, C, F]`` with a 4D grid
+``(E, C/bc, F/bf, H/bh)``; the expert axis is the slowest so each expert's
+weight tile stays VMEM-resident across its whole token buffer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _group_gemm_kernel(x_ref, w_ref, o_ref, *, n_k: int):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Blocks carry a leading singleton expert dim; contract over H.
+    x = x_ref[0]
+    w = w_ref[0]
+    o_ref[0] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_c", "block_f", "block_h", "out_dtype")
+)
+def group_gemm(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_c: int = 64,
+    block_f: int = 128,
+    block_h: int = 128,
+    out_dtype=None,
+) -> jax.Array:
+    """Grouped GEMM ``out[e] = x[e] @ w[e]`` for every expert ``e``.
+
+    Args:
+      x: ``[E, C, H]`` routed token buffers.
+      w: ``[E, H, F]`` expert weights.
+      block_c/f/h: tile sizes (token, out-feature, contraction).
+
+    Returns:
+      ``[E, C, F]``.
+    """
+    if x.ndim != 3 or w.ndim != 3 or x.shape[0] != w.shape[0] or x.shape[2] != w.shape[1]:
+        raise ValueError(f"bad group_gemm shapes {x.shape} @ {w.shape}")
+    out_dtype = out_dtype or x.dtype
+    e, c, h = x.shape
+    _, _, f = w.shape
+
+    bc, bf, bh = min(block_c, c), min(block_f, f), min(block_h, h)
+    pad_c, pad_f, pad_h = (-c) % bc, (-f) % bf, (-h) % bh
+    if pad_c or pad_h:
+        x = jnp.pad(x, ((0, 0), (0, pad_c), (0, pad_h)))
+    if pad_h or pad_f:
+        w = jnp.pad(w, ((0, 0), (0, pad_h), (0, pad_f)))
+    _, pc, ph = x.shape
+    _, _, pf = w.shape
+    n_k = ph // bh
+
+    out = pl.pallas_call(
+        functools.partial(_group_gemm_kernel, n_k=n_k),
+        grid=(e, pc // bc, pf // bf, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bc, bh), lambda ee, i, j, kk: (ee, i, kk)),
+            pl.BlockSpec((1, bh, bf), lambda ee, i, j, kk: (ee, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda ee, i, j, kk: (ee, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, pc, pf), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+    if pad_c or pad_f:
+        out = out[:, :c, :f]
+    return out.astype(out_dtype)

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness references: small, obviously-correct jnp
+implementations that pytest/hypothesis compare the Pallas kernels against
+(`assert_allclose`). Nothing here is performance-tuned on purpose.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array, out_dtype=None) -> jax.Array:
+    """Reference GEMM with f32 accumulation."""
+    out_dtype = out_dtype or x.dtype
+    acc = jnp.dot(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return acc.astype(out_dtype)
+
+
+def group_gemm_ref(x: jax.Array, w: jax.Array, out_dtype=None) -> jax.Array:
+    """Reference grouped GEMM: out[e] = x[e] @ w[e]."""
+    out_dtype = out_dtype or x.dtype
+    acc = jnp.einsum(
+        "ech,ehf->ecf", x.astype(jnp.float32), w.astype(jnp.float32)
+    )
+    return acc.astype(out_dtype)
+
+
+def decode_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Reference decode attention: full softmax over the whole KV length.
+
+    q: [H, D], k/v: [H, S, D] -> [H, D] (f32).
+    """
+    d = q.shape[-1]
+    scale = 1.0 / (d ** 0.5)
+    scores = jnp.einsum("hd,hsd->hs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hs,hsd->hd", p, v.astype(jnp.float32))
+
+
+def moe_dispatch_ref(tokens, topk_idx, topk_gate, num_experts, capacity):
+    """Reference capacity-based MoE dispatch.
+
+    tokens: [T, H]; topk_idx/topk_gate: [T, K].
+    Returns (buffers [E, C, H], slot_idx [T, K] (-1 = dropped)).
+    Tokens claim expert slots in (t, k) scan order; overflow is dropped —
+    the same deterministic policy as the Pallas/jnp dispatch in model.py.
+    """
+    import numpy as np
+
+    tokens = np.asarray(tokens)
+    topk_idx = np.asarray(topk_idx)
+    t, h = tokens.shape
+    k = topk_idx.shape[1]
+    buffers = np.zeros((num_experts, capacity, h), dtype=np.float32)
+    counts = np.zeros(num_experts, dtype=np.int64)
+    slot_idx = -np.ones((t, k), dtype=np.int64)
+    for ti in range(t):
+        for ki in range(k):
+            e = int(topk_idx[ti, ki])
+            if counts[e] < capacity:
+                buffers[e, counts[e]] = tokens[ti]
+                slot_idx[ti, ki] = counts[e]
+                counts[e] += 1
+    return jnp.asarray(buffers), jnp.asarray(slot_idx)
+
+
+def moe_combine_ref(expert_out, slot_idx, topk_idx, topk_gate, num_tokens):
+    """Reference MoE combine: gate-weighted sum of expert outputs per token."""
+    import numpy as np
+
+    expert_out = np.asarray(expert_out, dtype=np.float32)
+    slot_idx = np.asarray(slot_idx)
+    topk_idx = np.asarray(topk_idx)
+    topk_gate = np.asarray(topk_gate, dtype=np.float32)
+    t, k = topk_idx.shape
+    f = expert_out.shape[-1]
+    out = np.zeros((t, f), dtype=np.float32)
+    for ti in range(t):
+        for ki in range(k):
+            s = slot_idx[ti, ki]
+            if s >= 0:
+                out[ti] += topk_gate[ti, ki] * expert_out[topk_idx[ti, ki], s]
+    return jnp.asarray(out)

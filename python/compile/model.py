@@ -1,0 +1,140 @@
+"""L2: JAX compute graphs calling the L1 Pallas kernels.
+
+These are the *computation* halves of Triton-distributed's overlapping
+kernels. On the real system the Triton consumer kernel interleaves
+`wait`/`consume_token` with tile compute; in this reproduction the L3 Rust
+coordinator owns the signal/tile scheduling and calls these graphs (AOT
+compiled, see aot.py) for the math:
+
+  * ``gemm_tile``        — the per-(rank-chunk) GEMM of AG+GEMM / GEMM+RS,
+  * ``moe_ffn``          — dispatch + GroupGEMM + combine (AG+MoE, MoE+RS),
+  * ``decode_partial`` / ``decode_combine`` — distributed flash decoding,
+  * ``tp_mlp_shard``     — one tensor-parallel MLP shard used by the
+                            end-to-end TP-serving example.
+
+Everything is shape-static so it can be lowered once to HLO text and run
+from Rust via PJRT with zero Python on the request path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flash_decode as fd
+from .kernels import gemm as gemm_k
+from .kernels import group_gemm as gg_k
+
+
+# ---------------------------------------------------------------------------
+# GEMM entry points
+# ---------------------------------------------------------------------------
+
+def gemm_tile(x: jax.Array, w: jax.Array) -> jax.Array:
+    """The consumer-GEMM compute for one gathered chunk: ``x @ w``."""
+    return gemm_k.matmul(x, w)
+
+
+# ---------------------------------------------------------------------------
+# MoE: capacity-based dispatch -> GroupGEMM -> gate-weighted combine
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("num_experts", "capacity"))
+def moe_dispatch(tokens, topk_idx, *, num_experts: int, capacity: int):
+    """Route tokens into fixed-capacity expert buffers.
+
+    Deterministic (t, k) scan-order slot assignment; overflow dropped.
+    Matches `ref.moe_dispatch_ref` exactly.
+
+    Returns (buffers [E, C, H], slot_idx [T, K] with -1 for dropped).
+    """
+    t, h = tokens.shape
+    k = topk_idx.shape[1]
+    flat_e = topk_idx.reshape(-1)                                    # [TK]
+    onehot = jax.nn.one_hot(flat_e, num_experts, dtype=jnp.int32)    # [TK, E]
+    pos_in_e = jnp.cumsum(onehot, axis=0) - 1                        # [TK, E]
+    slot = jnp.sum(pos_in_e * onehot, axis=1)                        # [TK]
+    valid = slot < capacity
+    safe_slot = jnp.where(valid, slot, capacity)  # OOB -> dropped by mode
+    tokens_rep = jnp.repeat(tokens, k, axis=0)                       # [TK, H]
+    buffers = jnp.zeros((num_experts, capacity, h), tokens.dtype)
+    buffers = buffers.at[flat_e, safe_slot].set(tokens_rep, mode="drop")
+    slot_idx = jnp.where(valid, slot, -1).reshape(t, k)
+    return buffers, slot_idx
+
+
+@jax.jit
+def moe_combine(expert_out, slot_idx, topk_idx, topk_gate):
+    """Gate-weighted sum of expert outputs back to token order.
+
+    expert_out: [E, C, F]; slot_idx/topk_idx/topk_gate: [T, K] -> [T, F].
+    """
+    t, k = topk_idx.shape
+    valid = slot_idx >= 0
+    safe_slot = jnp.where(valid, slot_idx, 0)
+    gathered = expert_out[topk_idx, safe_slot]                       # [T, K, F]
+    gathered = gathered * valid[..., None].astype(gathered.dtype)
+    weights = topk_gate.astype(gathered.dtype)
+    return jnp.einsum("tkf,tk->tf", gathered, weights)
+
+
+@functools.partial(jax.jit, static_argnames=("num_experts", "capacity"))
+def moe_ffn(tokens, topk_idx, topk_gate, w_experts, *, num_experts: int,
+            capacity: int):
+    """Full MoE layer: dispatch -> GroupGEMM (Pallas) -> combine.
+
+    tokens [T, H], topk_idx/gate [T, K], w_experts [E, H, F] -> [T, F].
+    """
+    buffers, slot_idx = moe_dispatch(
+        tokens, topk_idx, num_experts=num_experts, capacity=capacity
+    )
+    expert_out = gg_k.group_gemm(buffers, w_experts)
+    return moe_combine(expert_out, slot_idx, topk_idx, topk_gate)
+
+
+# ---------------------------------------------------------------------------
+# Flash decoding (re-exported so aot.py lowers from one module)
+# ---------------------------------------------------------------------------
+
+decode_partial = fd.decode_partial
+decode_combine = fd.decode_combine
+decode = fd.decode
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel transformer shard (end-to-end serving example)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def tp_mlp_shard(x: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    """One TP rank's MLP shard: partial = gelu(x @ w_up) @ w_down.
+
+    x: [T, H]; w_up: [H, F/ws]; w_down: [F/ws, H]. The [T, H] outputs are
+    *partial sums* — the L3 coordinator ReduceScatters them (GEMM+RS).
+    """
+    hidden = gemm_k.matmul(x, w_up, out_dtype=jnp.float32)
+    hidden = jax.nn.gelu(hidden)
+    return gemm_k.matmul(hidden.astype(x.dtype), w_down, out_dtype=jnp.float32)
+
+
+@jax.jit
+def tp_attn_shard(x, wq, wk, wv, wo, k_cache, v_cache):
+    """One TP rank's decode-attention shard for a single token.
+
+    x: [1, H]; wq/wk/wv: [H, hd*heads_local]; wo: [hd*heads_local, H];
+    k_cache/v_cache: [heads_local, S, hd]. Returns ([1, H] partial sum,
+    new k/v rows [heads_local, 1, hd]) — the coordinator appends the cache
+    rows and AllReduces (RS+AG) the partial output.
+    """
+    heads, s, hd = k_cache.shape
+    q = gemm_k.matmul(x, wq).reshape(heads, hd)
+    k_new = gemm_k.matmul(x, wk).reshape(heads, 1, hd)
+    v_new = gemm_k.matmul(x, wv).reshape(heads, 1, hd)
+    k_all = jnp.concatenate([k_cache, k_new], axis=1)
+    v_all = jnp.concatenate([v_cache, v_new], axis=1)
+    attn = fd.decode(q, k_all, v_all)                    # [heads, hd] f32
+    attn = attn.reshape(1, heads * hd).astype(x.dtype)
+    out = gemm_k.matmul(attn, wo, out_dtype=jnp.float32)
+    return out, k_new, v_new

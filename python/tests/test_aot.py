@@ -1,0 +1,63 @@
+"""AOT lowering: HLO text artifacts + manifest integrity.
+
+Lowers a small subset (full catalog is exercised by `make artifacts`) and
+checks the interchange contract the Rust runtime depends on.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+def test_to_hlo_text_roundtrippable(tmp_path):
+    """HLO text must contain an ENTRY computation and a tuple root
+    (return_tuple=True is what rust's to_tuple unwrap expects)."""
+    spec = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    lowered = jax.jit(lambda x, w: (model.gemm_tile(x, w),)).lower(spec, spec)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "f32[8,8]" in text
+
+
+def test_lower_entry_writes_file_and_info(tmp_path):
+    entry = aot._entry(
+        "gemm_test_8x8x8",
+        lambda x, w: (model.gemm_tile(x, w),),
+        [aot.spec((8, 8)), aot.spec((8, 8))],
+    )
+    info = aot.lower_entry(entry, str(tmp_path))
+    assert os.path.exists(tmp_path / "gemm_test_8x8x8.hlo.txt")
+    assert info["args"][0]["shape"] == [8, 8]
+    assert info["outputs"][0]["shape"] == [8, 8]
+    assert info["outputs"][0]["dtype"] == "float32"
+
+
+def test_manifest_catalog_names_unique():
+    entries = aot.build_entries()
+    names = [e["name"] for e in entries]
+    assert len(names) == len(set(names))
+    # Catalog must cover every family the Rust layer calls.
+    fams = ("gemm_", "moe_ffn_", "group_gemm_", "decode_partial_",
+            "decode_combine_", "tp_mlp_shard_", "tp_attn_shard_")
+    for fam in fams:
+        assert any(n.startswith(fam) for n in names), f"missing family {fam}"
+
+
+def test_lowered_gemm_executes_correctly(tmp_path):
+    """Execute the lowered computation via jax and compare to eager — the
+    same computation Rust will run through PJRT."""
+    m = k = n = 8
+    fn = lambda x, w: (model.gemm_tile(x, w),)  # noqa: E731
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((m, k), dtype=np.float32))
+    w = jnp.asarray(rng.standard_normal((k, n), dtype=np.float32))
+    compiled = jax.jit(fn).lower(x, w).compile()
+    got = compiled(x, w)[0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x) @ np.asarray(w),
+                               rtol=1e-5, atol=1e-5)

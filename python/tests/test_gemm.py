@@ -1,0 +1,78 @@
+"""L1 GEMM kernel vs pure-jnp oracle (the core correctness signal)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gemm
+from compile.kernels.ref import matmul_ref
+
+
+def _rand(rng, shape, dtype=np.float32):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32)).astype(dtype)
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (8, 8, 8), (64, 64, 64), (128, 128, 128), (256, 128, 64),
+    (33, 47, 29),          # nothing divides the block
+    (1, 128, 1),           # degenerate decode-like GEMV
+    (128, 1, 128),         # rank-1 update
+])
+def test_matmul_matches_ref(rng, m, k, n):
+    x, w = _rand(rng, (m, k)), _rand(rng, (k, n))
+    got = gemm.matmul(x, w, block_m=32, block_n=32, block_k=32)
+    want = matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(16, 16, 16), (32, 64, 16), (128, 128, 128)])
+def test_matmul_block_invariance(rng, bm, bn, bk):
+    """Result must not depend on the tiling (f32 accumulation everywhere)."""
+    x, w = _rand(rng, (96, 80)), _rand(rng, (80, 112))
+    base = gemm.matmul(x, w, block_m=8, block_n=8, block_k=80)
+    got = gemm.matmul(x, w, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_bf16(rng):
+    x = _rand(rng, (64, 64), jnp.bfloat16)
+    w = _rand(rng, (64, 64), jnp.bfloat16)
+    got = gemm.matmul(x, w, out_dtype=jnp.float32)
+    want = matmul_ref(x, w, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_matmul_rejects_bad_shapes(rng):
+    with pytest.raises(ValueError):
+        gemm.matmul(_rand(rng, (4, 5)), _rand(rng, (6, 7)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96), k=st.integers(1, 96), n=st.integers(1, 96),
+    bm=st.sampled_from([8, 16, 32]), bn=st.sampled_from([8, 16, 32]),
+    bk=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_property(m, k, n, bm, bn, bk, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, k), dtype=np.float32))
+    w = jnp.asarray(rng.standard_normal((k, n), dtype=np.float32))
+    got = gemm.matmul(x, w, block_m=bm, block_n=bn, block_k=bk)
+    want = matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_budget():
+    """DESIGN.md §6: the default tiling double-buffers inside 16 MiB VMEM."""
+    assert gemm.vmem_bytes(128, 128, 128) < 16 * 1024 * 1024 // 4
+
+
+def test_mxu_utilization_aligned_is_one():
+    assert gemm.mxu_utilization(4096, 4096, 4096) == 1.0
+    assert gemm.mxu_utilization(100, 100, 100) < 1.0

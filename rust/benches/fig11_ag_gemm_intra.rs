@@ -1,0 +1,41 @@
+//! Fig. 11: Intra-node AllGather GEMM on 8x H800 — ours vs PyTorch+NCCL
+//! vs FLUX. Paper result: avg 1.42x vs PyTorch+NCCL, 1.09x vs FLUX.
+
+use triton_dist_sim::bench::banner;
+use triton_dist_sim::config::{ClusterSpec, GemmShape};
+use triton_dist_sim::coordinator::{ag_gemm, run_timing};
+use triton_dist_sim::metrics::{FigureReport, SpeedupRow};
+use triton_dist_sim::topology::Topology;
+
+/// LLM-layer shapes (per-rank N; K full), FLUX-style M sweep.
+pub fn shapes(ws: usize) -> Vec<GemmShape> {
+    let mut v = Vec::new();
+    for m in [512usize, 1024, 2048, 4096, 8192] {
+        v.push(GemmShape::new(m.max(ws), 49152 / 8, 8192)); // MLP up-proj
+        v.push(GemmShape::new(m.max(ws), 8192 / 8 * 3, 8192)); // qkv proj
+    }
+    v
+}
+
+fn main() {
+    banner("Fig 11: intra-node AG+GEMM, 8x H800");
+    let cluster = ClusterSpec::h800(1, 8);
+    let topo = Topology::build(cluster);
+    let mut fig = FigureReport::new("Fig 11");
+    for shape in shapes(8) {
+        let t = |v| {
+            let (mut op, _b) = ag_gemm::build(cluster, shape, v);
+            run_timing(&mut op, &topo)
+        };
+        fig.push(SpeedupRow {
+            workload: format!("M{} N{} K{}", shape.m, shape.n, shape.k),
+            ours: t(ag_gemm::AgGemmVariant::OursPush),
+            baselines: vec![
+                ("pytorch+nccl".into(), t(ag_gemm::AgGemmVariant::Nccl)),
+                ("flux".into(), t(ag_gemm::AgGemmVariant::Flux)),
+            ],
+        });
+    }
+    println!("{}", fig.render());
+    println!("paper: avg 1.42x vs PyTorch+NCCL, 1.09x vs FLUX");
+}

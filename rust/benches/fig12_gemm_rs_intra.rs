@@ -1,0 +1,40 @@
+//! Fig. 12: Intra-node GEMM ReduceScatter on 8x H800 — ours vs
+//! PyTorch+NCCL vs FLUX. Paper: avg 1.28x vs PyTorch, 1.30x vs FLUX.
+
+use triton_dist_sim::bench::banner;
+use triton_dist_sim::config::{ClusterSpec, GemmShape};
+use triton_dist_sim::coordinator::{gemm_rs, run_timing};
+use triton_dist_sim::metrics::{FigureReport, SpeedupRow};
+use triton_dist_sim::topology::Topology;
+
+pub fn shapes() -> Vec<GemmShape> {
+    let mut v = Vec::new();
+    for m in [512usize, 1024, 2048, 4096, 8192] {
+        v.push(GemmShape::new(m, 8192, 49152 / 8)); // MLP down-proj (K local)
+        v.push(GemmShape::new(m, 8192, 8192 / 8)); // attn out-proj
+    }
+    v
+}
+
+fn main() {
+    banner("Fig 12: intra-node GEMM+RS, 8x H800");
+    let cluster = ClusterSpec::h800(1, 8);
+    let topo = Topology::build(cluster);
+    let mut fig = FigureReport::new("Fig 12");
+    for shape in shapes() {
+        let t = |v| {
+            let (mut op, _b) = gemm_rs::build(cluster, shape, v);
+            run_timing(&mut op, &topo)
+        };
+        fig.push(SpeedupRow {
+            workload: format!("M{} N{} Kl{}", shape.m, shape.n, shape.k),
+            ours: t(gemm_rs::GemmRsVariant::OursIntra),
+            baselines: vec![
+                ("pytorch+nccl".into(), t(gemm_rs::GemmRsVariant::Nccl)),
+                ("flux".into(), t(gemm_rs::GemmRsVariant::Flux)),
+            ],
+        });
+    }
+    println!("{}", fig.render());
+    println!("paper: avg 1.28x vs PyTorch+NCCL, 1.30x vs FLUX");
+}

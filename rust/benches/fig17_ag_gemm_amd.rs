@@ -1,0 +1,29 @@
+//! Fig. 17: Intra-node AllGather GEMM on 8x MI308X (full mesh) vs
+//! PyTorch+RCCL. Paper: avg 1.09x.
+
+use triton_dist_sim::bench::banner;
+use triton_dist_sim::config::{ClusterSpec, GemmShape};
+use triton_dist_sim::coordinator::{ag_gemm, run_timing};
+use triton_dist_sim::metrics::{FigureReport, SpeedupRow};
+use triton_dist_sim::topology::Topology;
+
+fn main() {
+    banner("Fig 17: intra-node AG+GEMM on 8x MI308X");
+    let cluster = ClusterSpec::mi308x(8);
+    let topo = Topology::build(cluster);
+    let mut fig = FigureReport::new("Fig 17");
+    for m in [512usize, 1024, 2048, 4096, 8192] {
+        let shape = GemmShape::new(m, 49152 / 8, 8192);
+        let t = |v| {
+            let (mut op, _b) = ag_gemm::build(cluster, shape, v);
+            run_timing(&mut op, &topo)
+        };
+        fig.push(SpeedupRow {
+            workload: format!("M{m}"),
+            ours: t(ag_gemm::AgGemmVariant::OursAmd { sub_chunks: 4 }),
+            baselines: vec![("pytorch+rccl".into(), t(ag_gemm::AgGemmVariant::Nccl))],
+        });
+    }
+    println!("{}", fig.render());
+    println!("paper: avg 1.09x vs PyTorch+RCCL (rocBLAS GEMM)");
+}

@@ -1,0 +1,29 @@
+//! Fig. 18: Intra-node GEMM ReduceScatter on 8x MI308X (fused scatter,
+//! §3.6) vs PyTorch+RCCL. Paper: avg 1.16x.
+
+use triton_dist_sim::bench::banner;
+use triton_dist_sim::config::{ClusterSpec, GemmShape};
+use triton_dist_sim::coordinator::{gemm_rs, run_timing};
+use triton_dist_sim::metrics::{FigureReport, SpeedupRow};
+use triton_dist_sim::topology::Topology;
+
+fn main() {
+    banner("Fig 18: intra-node GEMM+RS on 8x MI308X");
+    let cluster = ClusterSpec::mi308x(8);
+    let topo = Topology::build(cluster);
+    let mut fig = FigureReport::new("Fig 18");
+    for m in [512usize, 1024, 2048, 4096, 8192] {
+        let shape = GemmShape::new(m, 8192, 49152 / 8);
+        let t = |v| {
+            let (mut op, _b) = gemm_rs::build(cluster, shape, v);
+            run_timing(&mut op, &topo)
+        };
+        fig.push(SpeedupRow {
+            workload: format!("M{m}"),
+            ours: t(gemm_rs::GemmRsVariant::OursAmd { comm_tiles: 4 }),
+            baselines: vec![("pytorch+rccl".into(), t(gemm_rs::GemmRsVariant::Nccl))],
+        });
+    }
+    println!("{}", fig.render());
+    println!("paper: avg 1.16x vs PyTorch+RCCL");
+}

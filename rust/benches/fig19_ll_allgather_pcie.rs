@@ -1,0 +1,60 @@
+//! Fig. 19: Low-latency AllGather on L20 (PCIe-only) vs NVSHMEM
+//! fcollect (32/64-bit) and NCCL (in/out-of-place), 8 and 16 GPUs,
+//! small messages. Paper: single-node 1.40-2.33x vs NVSHMEM and
+//! 1.7-1.87x vs NCCL; two-node comparable to NVSHMEM, >2x vs NCCL.
+
+use triton_dist_sim::bench::banner;
+use triton_dist_sim::collectives::allgather::ag_ll_pcie;
+use triton_dist_sim::collectives::baseline::{nccl_allgather_smallmsg, nvshmem_fcollect};
+use triton_dist_sim::collectives::{AgBufs, ProgBuild};
+use triton_dist_sim::config::{ClusterSpec, DType};
+use triton_dist_sim::mem::SymmetricHeap;
+use triton_dist_sim::metrics::{FigureReport, SpeedupRow};
+use triton_dist_sim::shmem::ShmemCtx;
+use triton_dist_sim::sim::{NoopExecutor, Sim, SimConfig};
+use triton_dist_sim::topology::Topology;
+
+fn run(cluster: ClusterSpec, shard_bytes: usize, which: &str) -> f64 {
+    let ctx = ShmemCtx::new(cluster, DType::BF16);
+    let topo = Topology::build(cluster);
+    let shard = (shard_bytes / 2).max(1); // bf16 elements
+    let mut heap = SymmetricHeap::new(ctx.n_pes(), 4 * ctx.n_pes());
+    let bufs = if which == "ours" {
+        AgBufs::alloc_ll(&mut heap, &ctx, shard)
+    } else {
+        AgBufs::alloc(&mut heap, &ctx, shard)
+    };
+    let mut pb = ProgBuild::new();
+    match which {
+        "ours" => ag_ll_pcie(&ctx, &bufs, &mut pb),
+        "nvshmem32" => nvshmem_fcollect(&ctx, &bufs, &mut pb, 0.5e-6),
+        "nvshmem64" => nvshmem_fcollect(&ctx, &bufs, &mut pb, 0.2e-6),
+        "nccl-in" => nccl_allgather_smallmsg(&ctx, &bufs, &mut pb, false),
+        "nccl-oop" => nccl_allgather_smallmsg(&ctx, &bufs, &mut pb, true),
+        _ => unreachable!(),
+    }
+    let sim = Sim::with_config(&topo, SimConfig { numerics: false, trace: false });
+    sim.run(&pb.prog, &mut heap, &mut NoopExecutor).unwrap().makespan
+}
+
+fn main() {
+    banner("Fig 19: LL AllGather on L20 (PCIe)");
+    for (nodes, gpn) in [(1usize, 8usize), (2, 8)] {
+        let cluster = ClusterSpec::l20(nodes, gpn);
+        let mut fig = FigureReport::new(&format!("{} GPUs ({} node)", nodes * gpn, nodes));
+        for msg in [128usize, 512, 2048, 8192, 32768, 65536] {
+            fig.push(SpeedupRow {
+                workload: format!("{msg} B/rank"),
+                ours: run(cluster, msg, "ours"),
+                baselines: vec![
+                    ("nvshmem-32bit".into(), run(cluster, msg, "nvshmem32")),
+                    ("nvshmem-64bit".into(), run(cluster, msg, "nvshmem64")),
+                    ("nccl-inplace".into(), run(cluster, msg, "nccl-in")),
+                    ("nccl-oop".into(), run(cluster, msg, "nccl-oop")),
+                ],
+            });
+        }
+        println!("{}", fig.render());
+    }
+    println!("paper: 1.40-2.33x vs NVSHMEM and 1.7-1.87x vs NCCL single node");
+}

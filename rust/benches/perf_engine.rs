@@ -1,0 +1,69 @@
+//! §Perf: wall-clock performance of the DES engine itself (the L3 hot
+//! path). Reports events/second on representative workloads; tracked in
+//! EXPERIMENTS.md §Perf with the optimization log.
+
+use triton_dist_sim::bench::{banner, bench_wall};
+use triton_dist_sim::collectives::alltoall::{a2a_ll, A2aBufs, A2aCfg};
+use triton_dist_sim::collectives::ProgBuild;
+use triton_dist_sim::config::{ClusterSpec, DType, GemmShape};
+use triton_dist_sim::coordinator::ag_gemm;
+use triton_dist_sim::mem::SymmetricHeap;
+use triton_dist_sim::shmem::ShmemCtx;
+use triton_dist_sim::sim::{NoopExecutor, Sim, SimConfig};
+use triton_dist_sim::topology::Topology;
+
+fn main() {
+    banner("engine performance (wall clock)");
+
+    // 64-rank AllToAll: many concurrent flows + LL waits
+    let cluster = ClusterSpec::h800(8, 8);
+    let ctx = ShmemCtx::new(cluster, DType::BF16);
+    let topo = Topology::build(cluster);
+    let mut events = 0u64;
+    let stat = bench_wall("alltoall-64rank", 1, 5, || {
+        let mut heap = SymmetricHeap::new(64, 256);
+        let bufs = A2aBufs::alloc(&mut heap, &ctx, 64);
+        let mut pb = ProgBuild::new();
+        a2a_ll(&ctx, &bufs, &mut pb, &A2aCfg::ours());
+        let sim = Sim::with_config(&topo, SimConfig { numerics: false, trace: false });
+        let rep = sim.run(&pb.prog, &mut heap, &mut NoopExecutor).unwrap();
+        events = rep.events;
+    });
+    println!("{}", stat.render());
+    println!(
+        "  {} events -> {:.2} M events/s",
+        events,
+        events as f64 / stat.median_s / 1e6
+    );
+
+    // AG+GEMM with numerics off — program-build + engine cost
+    let cluster = ClusterSpec::h800(1, 8);
+    let topo8 = Topology::build(cluster);
+    let shape = GemmShape::new(8192, 6144, 8192);
+    let mut events2 = 0u64;
+    let stat2 = bench_wall("ag_gemm-build+run", 1, 10, || {
+        let (mut op, _b) = ag_gemm::build(cluster, shape, ag_gemm::AgGemmVariant::OursPush);
+        let sim = Sim::with_config(&topo8, SimConfig { numerics: false, trace: false });
+        let rep = sim.run(&op.prog, &mut op.heap, &mut NoopExecutor).unwrap();
+        events2 = rep.events;
+    });
+    println!("{}", stat2.render());
+    println!(
+        "  {} events -> {:.2} M events/s",
+        events2,
+        events2 as f64 / stat2.median_s / 1e6
+    );
+
+    // numerics path: data movement through the heap
+    let mut stat3_events = 0u64;
+    let stat3 = bench_wall("ag_gemm-numerics(native)", 1, 3, || {
+        let small = GemmShape::new(512, 64, 64);
+        let (mut op, bufs) = ag_gemm::build(cluster, small, ag_gemm::AgGemmVariant::OursPush);
+        ag_gemm::fill_inputs(&mut op.heap, &bufs, 1);
+        let sim = Sim::new(&topo8);
+        let mut exec = triton_dist_sim::runtime::HybridExecutor::native_only();
+        let rep = sim.run(&op.prog, &mut op.heap, &mut exec).unwrap();
+        stat3_events = rep.events;
+    });
+    println!("{}", stat3.render());
+}

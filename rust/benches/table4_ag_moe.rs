@@ -1,0 +1,83 @@
+//! Table 4: AG+MoE shapes and latency (ms), intra (8x H800) and inter
+//! (16x H800), ours vs PyTorch+NCCL. Paper: intra avg 44.97x, inter avg
+//! 26.50x; near-linear intra->inter weak scaling for ours.
+
+use triton_dist_sim::bench::banner;
+use triton_dist_sim::config::{ClusterSpec, MoeShape};
+use triton_dist_sim::coordinator::{moe, run_timing};
+use triton_dist_sim::topology::Topology;
+use triton_dist_sim::util::stats::geomean;
+use triton_dist_sim::util::Table;
+
+/// The 15 rows of Table 4.
+pub fn rows() -> Vec<MoeShape> {
+    let mk = |t, h, f, e, k| MoeShape {
+        tokens_per_rank: t,
+        in_hidden: h,
+        out_hidden: f,
+        experts: e,
+        topk: k,
+    };
+    vec![
+        mk(256, 2048, 1408, 60, 4),
+        mk(512, 2048, 1408, 60, 4),
+        mk(1024, 2048, 1408, 60, 4),
+        mk(2048, 2048, 1408, 60, 4),
+        mk(256, 14336, 4096, 8, 2),
+        mk(512, 14336, 4096, 8, 2),
+        mk(1024, 14336, 4096, 8, 2),
+        mk(2048, 14336, 4096, 8, 2),
+        mk(256, 16384, 6144, 8, 2),
+        mk(512, 16384, 6144, 8, 2),
+        mk(1024, 16384, 6144, 8, 2),
+        mk(2048, 16384, 6144, 8, 2),
+        mk(512, 1408, 2048, 64, 6),
+        mk(1024, 1408, 2048, 64, 6),
+        mk(2048, 1408, 2048, 64, 6),
+    ]
+}
+
+fn main() {
+    banner("Table 4: AG+MoE shapes and performance (ms)");
+    let intra = ClusterSpec::h800(1, 8);
+    let inter = ClusterSpec::h800(2, 8);
+    let topo_intra = Topology::build(intra);
+    let topo_inter = Topology::build(inter);
+    let mut t = Table::new("Table 4").header(&[
+        "name", "tok/rank", "in", "out", "E", "k",
+        "ours-intra", "ours-inter", "torch-intra", "torch-inter", "speedup-intra",
+    ]);
+    let mut sp_intra = Vec::new();
+    let mut sp_inter = Vec::new();
+    for (i, shape) in rows().into_iter().enumerate() {
+        let run = |cluster, topo: &Topology, v| {
+            let (mut op, _b) = moe::build_ag_moe(cluster, shape, v);
+            run_timing(&mut op, topo)
+        };
+        let oi = run(intra, &topo_intra, moe::MoeVariant::Ours);
+        let oe = run(inter, &topo_inter, moe::MoeVariant::Ours);
+        let ti = run(intra, &topo_intra, moe::MoeVariant::Torch);
+        let te = run(inter, &topo_inter, moe::MoeVariant::Torch);
+        sp_intra.push(ti / oi);
+        sp_inter.push(te / oe);
+        t.row(&[
+            format!("AG+MoE-{}", i + 1),
+            shape.tokens_per_rank.to_string(),
+            shape.in_hidden.to_string(),
+            shape.out_hidden.to_string(),
+            shape.experts.to_string(),
+            shape.topk.to_string(),
+            format!("{:.2}", oi * 1e3),
+            format!("{:.2}", oe * 1e3),
+            format!("{:.2}", ti * 1e3),
+            format!("{:.2}", te * 1e3),
+            format!("{:.1}x", ti / oi),
+        ]);
+    }
+    t.print();
+    println!(
+        "avg speedup: intra {:.2}x, inter {:.2}x (paper: 44.97x / 26.50x)",
+        geomean(&sp_intra),
+        geomean(&sp_inter)
+    );
+}

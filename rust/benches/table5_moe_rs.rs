@@ -1,0 +1,77 @@
+//! Table 5: MoE+RS shapes and latency (ms). Paper: intra avg 15.55x,
+//! inter avg 5.16x vs PyTorch; inter scaling is sub-linear (the paper
+//! notes a dedicated RS kernel is future work).
+
+use triton_dist_sim::bench::banner;
+use triton_dist_sim::config::{ClusterSpec, MoeShape};
+use triton_dist_sim::coordinator::{moe, run_timing};
+use triton_dist_sim::topology::Topology;
+use triton_dist_sim::util::stats::geomean;
+use triton_dist_sim::util::Table;
+
+/// The 10 rows of Table 5 (tokens/rank = 1024 everywhere).
+pub fn rows() -> Vec<MoeShape> {
+    let mk = |h, f, e, k| MoeShape {
+        tokens_per_rank: 1024,
+        in_hidden: h,
+        out_hidden: f,
+        experts: e,
+        topk: k,
+    };
+    vec![
+        mk(1536, 2048, 8, 2),
+        mk(1536, 2048, 32, 2),
+        mk(1536, 2048, 64, 2),
+        mk(1536, 2048, 32, 5),
+        mk(1536, 2048, 64, 5),
+        mk(2048, 4096, 8, 2),
+        mk(2048, 4096, 32, 2),
+        mk(2048, 4096, 64, 2),
+        mk(2048, 4096, 32, 5),
+        mk(2048, 4096, 64, 5),
+    ]
+}
+
+fn main() {
+    banner("Table 5: MoE+RS shapes and performance (ms)");
+    let intra = ClusterSpec::h800(1, 8);
+    let inter = ClusterSpec::h800(2, 8);
+    let topo_intra = Topology::build(intra);
+    let topo_inter = Topology::build(inter);
+    let mut t = Table::new("Table 5").header(&[
+        "name", "in", "out", "E", "k",
+        "ours-intra", "ours-inter", "torch-intra", "torch-inter", "speedup-intra",
+    ]);
+    let mut sp_intra = Vec::new();
+    let mut sp_inter = Vec::new();
+    for (i, shape) in rows().into_iter().enumerate() {
+        let run = |cluster, topo: &Topology, v| {
+            let (mut op, _b) = moe::build_moe_rs(cluster, shape, v);
+            run_timing(&mut op, topo)
+        };
+        let oi = run(intra, &topo_intra, moe::MoeVariant::Ours);
+        let oe = run(inter, &topo_inter, moe::MoeVariant::Ours);
+        let ti = run(intra, &topo_intra, moe::MoeVariant::Torch);
+        let te = run(inter, &topo_inter, moe::MoeVariant::Torch);
+        sp_intra.push(ti / oi);
+        sp_inter.push(te / oe);
+        t.row(&[
+            format!("MoE-RS-{}", i + 1),
+            shape.in_hidden.to_string(),
+            shape.out_hidden.to_string(),
+            shape.experts.to_string(),
+            shape.topk.to_string(),
+            format!("{:.2}", oi * 1e3),
+            format!("{:.2}", oe * 1e3),
+            format!("{:.2}", ti * 1e3),
+            format!("{:.2}", te * 1e3),
+            format!("{:.1}x", ti / oi),
+        ]);
+    }
+    t.print();
+    println!(
+        "avg speedup: intra {:.2}x, inter {:.2}x (paper: 15.55x / 5.16x)",
+        geomean(&sp_intra),
+        geomean(&sp_inter)
+    );
+}

@@ -1,0 +1,198 @@
+//! Distributed autotuner (§3.8).
+//!
+//! Unlike single-device autotuners, tuning an *overlapping* kernel means
+//! profiling whole multi-rank programs: every trial must (1) wrap the
+//! complete target function — communication + computation + host launch —
+//! (2) reset all signals between trials (a stale signal would satisfy the
+//! next trial's waits and corrupt both timing and semantics), and
+//! (3) aggregate a single globally-unified best configuration across
+//! ranks. This module implements those semantics over the DES.
+
+use crate::mem::SymmetricHeap;
+
+/// One evaluated configuration.
+#[derive(Debug, Clone)]
+pub struct Trial<C> {
+    pub config: C,
+    /// Virtual latency of the whole target function (s).
+    pub latency: f64,
+}
+
+/// Tuning outcome.
+#[derive(Debug, Clone)]
+pub struct TuneResult<C> {
+    pub best: Trial<C>,
+    pub trials: Vec<Trial<C>>,
+    pub name: String,
+}
+
+impl<C: std::fmt::Debug> TuneResult<C> {
+    /// Render a small report table.
+    pub fn render(&self) -> String {
+        let mut t = crate::util::Table::new(&format!("autotune: {}", self.name))
+            .header(&["config", "latency", "best"]);
+        for tr in &self.trials {
+            t.row(&[
+                format!("{:?}", tr.config),
+                crate::util::stats::fmt_time(tr.latency),
+                if tr.latency == self.best.latency { "*" } else { "" }.to_string(),
+            ]);
+        }
+        t.render()
+    }
+}
+
+/// Per-rank measurement: the simulated world reports one latency per rank
+/// (on real hardware each rank profiles locally; makespans can differ by
+/// rank-local noise). The *global* best is chosen on the aggregated
+/// worst-rank latency — the paper's "globally unified best configuration".
+#[derive(Debug, Clone)]
+pub struct RankMeasurements {
+    pub per_rank: Vec<f64>,
+}
+
+impl RankMeasurements {
+    /// The latency the collective actually exhibits: the slowest rank.
+    pub fn aggregate(&self) -> f64 {
+        self.per_rank.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+/// Tune over `configs`. The evaluator builds + runs the whole target
+/// function for one config and returns per-rank latencies. Signals are
+/// reset in the shared heap before every trial.
+pub fn tune<C: Clone + std::fmt::Debug>(
+    name: &str,
+    configs: &[C],
+    heap: &mut SymmetricHeap,
+    mut eval: impl FnMut(&C, &mut SymmetricHeap) -> Result<RankMeasurements, String>,
+) -> Result<TuneResult<C>, String> {
+    if configs.is_empty() {
+        return Err(format!("autotune '{name}': empty config space"));
+    }
+    let mut trials = Vec::with_capacity(configs.len());
+    for cfg in configs {
+        // §3.8: reset every signal before re-profiling the target
+        heap.reset_signals();
+        let meas = eval(cfg, heap)?;
+        trials.push(Trial {
+            config: cfg.clone(),
+            latency: meas.aggregate(),
+        });
+    }
+    let best = trials
+        .iter()
+        .min_by(|a, b| a.latency.partial_cmp(&b.latency).unwrap())
+        .unwrap()
+        .clone();
+    Ok(TuneResult {
+        best,
+        trials,
+        name: name.to_string(),
+    })
+}
+
+/// Convenience: tune a rebuild-per-trial program (the common case where
+/// each config produces a fresh program + heap, e.g. tile sizes).
+pub fn tune_rebuild<C: Clone + std::fmt::Debug>(
+    name: &str,
+    configs: &[C],
+    mut eval: impl FnMut(&C) -> Result<f64, String>,
+) -> Result<TuneResult<C>, String> {
+    if configs.is_empty() {
+        return Err(format!("autotune '{name}': empty config space"));
+    }
+    let mut trials = Vec::with_capacity(configs.len());
+    for cfg in configs {
+        let latency = eval(cfg)?;
+        trials.push(Trial {
+            config: cfg.clone(),
+            latency,
+        });
+    }
+    let best = trials
+        .iter()
+        .min_by(|a, b| a.latency.partial_cmp(&b.latency).unwrap())
+        .unwrap()
+        .clone();
+    Ok(TuneResult {
+        best,
+        trials,
+        name: name.to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_minimum() {
+        let r = tune_rebuild("t", &[1u32, 2, 3], |c| Ok(10.0 / *c as f64)).unwrap();
+        assert_eq!(r.best.config, 3);
+        assert_eq!(r.trials.len(), 3);
+    }
+
+    #[test]
+    fn empty_space_errors() {
+        assert!(tune_rebuild::<u32>("t", &[], |_| Ok(0.0)).is_err());
+    }
+
+    #[test]
+    fn signals_reset_between_trials() {
+        let mut heap = SymmetricHeap::new(2, 4);
+        let mut seen_dirty = false;
+        let configs = [1u32, 2];
+        tune("t", &configs, &mut heap, |_c, h| {
+            // every trial must observe clean signals
+            for r in 0..2 {
+                for i in 0..4 {
+                    if h.signal(r, i) != 0 {
+                        seen_dirty = true;
+                    }
+                }
+            }
+            // dirty them for the next trial
+            h.signal_set(0, 1, 99);
+            Ok(RankMeasurements {
+                per_rank: vec![1.0, 2.0],
+            })
+        })
+        .unwrap();
+        assert!(!seen_dirty, "a trial saw stale signals");
+    }
+
+    #[test]
+    fn aggregate_is_worst_rank() {
+        let m = RankMeasurements {
+            per_rank: vec![1.0, 5.0, 2.0],
+        };
+        assert_eq!(m.aggregate(), 5.0);
+    }
+
+    #[test]
+    fn render_marks_best() {
+        let r = tune_rebuild("demo", &[4u32, 8], |c| Ok(*c as f64)).unwrap();
+        let s = r.render();
+        assert!(s.contains('*'));
+        assert!(s.contains("demo"));
+    }
+
+    #[test]
+    fn tunes_a_real_overlapping_kernel() {
+        // AMD AG+GEMM sub-chunk factor: the autotuner should prefer
+        // multi-sub-chunk configs (they engage all mesh links).
+        use crate::config::{ClusterSpec, GemmShape};
+        use crate::coordinator::ag_gemm::{build, AgGemmVariant};
+        use crate::topology::Topology;
+        let cluster = ClusterSpec::mi308x(8);
+        let topo = Topology::build(cluster);
+        let shape = GemmShape::new(4096, 2048, 1024);
+        let r = tune_rebuild("amd sub_chunks", &[1usize, 2, 4, 8], |&sc| {
+            let (mut op, _b) = build(cluster, shape, AgGemmVariant::OursAmd { sub_chunks: sc });
+            Ok(crate::coordinator::run_timing(&mut op, &topo))
+        })
+        .unwrap();
+        assert!(r.best.config >= 2, "expected sub-chunking to win: {:?}", r.best);
+    }
+}

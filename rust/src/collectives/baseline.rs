@@ -1,0 +1,417 @@
+//! Baseline collectives the paper compares against.
+//!
+//! * **NCCL-like ring AllGather / ReduceScatter** — the PyTorch+NCCL
+//!   baseline: SM-channel kernels, operator-level synchronization (a
+//!   barrier before and after), no fine-grained overlap hooks.
+//! * **NVSHMEM `fcollect`-like AllGather** — one-shot nbi puts + barrier,
+//!   with 32/64-bit granule overhead (Fig. 19 comparators).
+//! * **NCCL in-place / out-of-place AllGather** — ring plus protocol
+//!   overhead; out-of-place pays an extra local copy (Fig. 19).
+
+use crate::program::{ComputeCost, NumericOp, Op, SigCond, SigOp};
+use crate::shmem::ShmemCtx;
+
+use super::{AgBufs, ProgBuild, RsBufs};
+
+/// Ring AllGather with per-step signal synchronization, as NCCL's ring
+/// protocol does. `sms` models the NCCL channel SM usage (blocks the
+/// GEMM from using the full device while running).
+pub fn nccl_allgather_ring(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild, sms: u32) {
+    nccl_allgather_ring_done(ctx, bufs, pb, sms, None)
+}
+
+/// NCCL channel count: multiple parallel rings so multi-node traffic uses
+/// every NIC and full-mesh traffic uses several links — modeling NCCL's
+/// multi-channel rings (a single ring would unfairly bottleneck the
+/// baseline on one NIC / one mesh link).
+fn nccl_channels(ctx: &ShmemCtx) -> usize {
+    if ctx.n_nodes() > 1 {
+        ctx.local_world_size().min(4)
+    } else {
+        4.min(ctx.n_pes() - 1).max(1)
+    }
+}
+
+/// Position -> rank mapping of ring `c` (see [`nccl_channels`]): rotated
+/// local ranks across nodes (distinct NIC crossing pairs), or stride
+/// rings on a single node (distinct mesh links).
+fn ring_perm(ctx: &ShmemCtx, c: usize) -> Vec<usize> {
+    let ws = ctx.n_pes();
+    let lws = ctx.local_world_size();
+    if ctx.n_nodes() > 1 {
+        (0..ws)
+            .map(|i| (i / lws) * lws + (c + i % lws) % lws)
+            .collect()
+    } else {
+        let mut stride = 2 * c + 1;
+        if gcd(stride, ws) != 1 {
+            stride = 1;
+        }
+        (0..ws).map(|i| (i * stride) % ws).collect()
+    }
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 { a } else { gcd(b, a % b) }
+}
+
+/// Ring AllGather with an optional completion signal (`done_sig` set on
+/// every rank after the exit barrier) for callers that chain work.
+/// Segment-arrival signals count one increment per channel; consumers
+/// should wait `Ge 1` (partial) or rely on `done_sig` (full).
+pub fn nccl_allgather_ring_done(
+    ctx: &ShmemCtx,
+    bufs: &AgBufs,
+    pb: &mut ProgBuild,
+    sms: u32,
+    done_sig: Option<usize>,
+) {
+    let ws = ctx.n_pes();
+    let channels = nccl_channels(ctx).min(bufs.shard); // sub-shard must be non-empty
+    let enter = pb.fresh_barrier();
+    let exit = pb.fresh_barrier();
+    let expect = ws * channels;
+    let sub = bufs.shard / channels;
+    for c in 0..channels {
+        let perm = ring_perm(ctx, c);
+        let pos_of = {
+            let mut inv = vec![0usize; ws];
+            for (i, &r) in perm.iter().enumerate() {
+                inv[r] = i;
+            }
+            inv
+        };
+        // channel c owns elements [c*sub, c*sub+len) of every segment
+        let len = if c == channels - 1 { bufs.shard - c * sub } else { sub };
+        // per-channel signal space above the per-segment ones
+        let sig = |seg: usize| bufs.sig_base + ws + 1 + c * ws + seg;
+        for r in 0..ws {
+            let p = pos_of[r];
+            let right = perm[(p + 1) % ws];
+            let mut t = ctx
+                .task(r, format!("nccl_ag_ring[{r}.{c}]"))
+                .with_sms(sms.div_ceil(channels as u32).max(1))
+                .launch_overhead();
+            t.barrier_group(enter, crate::program::Scope::World, expect);
+            for s in 0..ws - 1 {
+                // ring positions: at step s position p forwards the segment
+                // owned by position (p - s)
+                let send_seg = perm[(p + ws - s) % ws];
+                let recv_seg = perm[(p + ws - s - 1) % ws];
+                t.putmem_signal_nbi(
+                    bufs.seg(send_seg, r).sub(c * sub, len),
+                    bufs.seg(send_seg, right).sub(c * sub, len),
+                    sig(send_seg),
+                    SigOp::Set,
+                    1,
+                );
+                t.signal_wait_until(sig(recv_seg), SigCond::Ge, 1);
+                // publish progress on the shared per-segment counter
+                t.notify(r, bufs.sig(recv_seg), SigOp::Add, 1);
+            }
+            t.quiet();
+            t.notify(r, bufs.sig(r), SigOp::Add, 1);
+            t.barrier_group(exit, crate::program::Scope::World, expect);
+            if let Some(d) = done_sig {
+                t.notify(r, d, SigOp::Set, 1);
+            }
+            pb.prog.push(t.build());
+        }
+    }
+}
+
+/// Ring ReduceScatter (NCCL-like): partial sums travel the ring, each
+/// hop adds the local contribution. Rank `r` plays ring-role `r-1` so the
+/// fully-reduced chunk `r` lands on rank `r`.
+///
+/// Flow control matches NCCL's FIFO-credit protocol: two parity slots,
+/// counting arrival signals (`Add 1`, waited with `Ge`), and explicit
+/// consume-acks back to the sender before a slot is rewritten — a
+/// set/reset scheme deadlocks once the ring pipeline gets deep enough.
+pub fn nccl_reduce_scatter_ring(ctx: &ShmemCtx, bufs: &RsBufs, pb: &mut ProgBuild, sms: u32) {
+    let ws = ctx.n_pes();
+    assert!(ws >= 2);
+    let channels = nccl_channels(ctx).min(bufs.shard);
+    let enter = pb.fresh_barrier();
+    let exit = pb.fresh_barrier();
+    let expect = ws * channels;
+    let sub = bufs.shard / channels;
+    for c in 0..channels {
+        let perm = ring_perm(ctx, c);
+        let mut pos_of = vec![0usize; ws];
+        for (i, &rr) in perm.iter().enumerate() {
+            pos_of[rr] = i;
+        }
+        let len = if c == channels - 1 { bufs.shard - c * sub } else { sub };
+        let chunk_bytes = ctx.bytes(len);
+        // per-channel signal space: arr(p) / ack(p)
+        let arr = |p: usize| bufs.sig_base + 8 * c + p;
+        let ack = |p: usize| bufs.sig_base + 8 * c + 2 + p;
+        for r in 0..ws {
+            let p = pos_of[r];
+            let right = perm[(p + 1) % ws];
+            let left = perm[(p + ws - 1) % ws];
+            // roles are ring positions; fully-reduced chunk for rank at
+            // position q is chunk perm[q]; play role q-1 so chunk r lands
+            // on rank r
+            let role = (p + ws - 1) % ws;
+            let chunk_at = |role_pos: usize| perm[role_pos % ws];
+            let mut t = ctx
+                .task(r, format!("nccl_rs_ring[{r}.{c}]"))
+                .with_sms(sms.div_ceil(channels as u32).max(1))
+                .launch_overhead();
+            t.barrier_group(enter, crate::program::Scope::World, expect);
+            for s in 0..ws - 1 {
+                let par = s % 2;
+                let src = if s == 0 {
+                    bufs.in_chunk(chunk_at(role), r).sub(c * sub, len)
+                } else {
+                    let pp = (s - 1) % 2;
+                    let chn = chunk_at(role + ws - s);
+                    t.signal_wait_until(arr(pp), SigCond::Ge, ((s - 1) / 2 + 1) as u64);
+                    t.op(Op::Compute {
+                        cost: ComputeCost::Reduce {
+                            bytes: chunk_bytes * 2.0,
+                        },
+                        numeric: NumericOp::ReduceAdd {
+                            srcs: vec![bufs.in_chunk(chn, r).sub(c * sub, len)],
+                            dst: bufs.scatter_slot(pp, r).sub(c * sub, len),
+                            zero_dst: false,
+                        },
+                        label: "ring_add",
+                    });
+                    bufs.scatter_slot(pp, r).sub(c * sub, len)
+                };
+                if s >= 2 {
+                    t.signal_wait_until(ack(par), SigCond::Ge, (s / 2) as u64);
+                }
+                t.op(Op::Put {
+                    src,
+                    dst: bufs.scatter_slot(par, right).sub(c * sub, len),
+                    bytes: chunk_bytes,
+                    signal: Some((
+                        crate::program::SigRef {
+                            rank: right,
+                            idx: arr(par),
+                        },
+                        SigOp::Add,
+                        1,
+                    )),
+                    blocking: true,
+                    label: "ring_fwd",
+                });
+                if s > 0 {
+                    t.notify(left, ack((s - 1) % 2), SigOp::Add, 1);
+                }
+            }
+            let last_p = (ws - 2) % 2;
+            t.signal_wait_until(arr(last_p), SigCond::Ge, ((ws - 2) / 2 + 1) as u64);
+            t.op(Op::Compute {
+                cost: ComputeCost::Reduce {
+                    bytes: chunk_bytes * 2.0,
+                },
+                numeric: NumericOp::ReduceAdd {
+                    srcs: vec![
+                        bufs.scatter_slot(last_p, r).sub(c * sub, len),
+                        bufs.in_chunk(r, r).sub(c * sub, len),
+                    ],
+                    dst: bufs.out(r).sub(c * sub, len),
+                    zero_dst: true,
+                },
+                label: "ring_final_add",
+            });
+            t.notify(left, ack(last_p), SigOp::Add, 1);
+            t.barrier_group(exit, crate::program::Scope::World, expect);
+            pb.prog.push(t.build());
+        }
+    }
+}
+
+/// NVSHMEM `fcollect`-like AllGather: every rank nbi-puts its shard to all
+/// peers at once, bracketed by barriers. `granule_overhead` models the
+/// per-put protocol cost difference between the 32-bit and 64-bit
+/// datatype paths (Fig. 19's NVSHMEM-32bit vs NVSHMEM-64bit).
+pub fn nvshmem_fcollect(
+    ctx: &ShmemCtx,
+    bufs: &AgBufs,
+    pb: &mut ProgBuild,
+    granule_overhead: f64,
+) {
+    let ws = ctx.n_pes();
+    let enter = pb.fresh_barrier();
+    let exit = pb.fresh_barrier();
+    for r in 0..ws {
+        let mut t = ctx
+            .task(r, format!("fcollect[{r}]"))
+            .with_sms(1)
+            .launch_overhead();
+        t.barrier_all(enter);
+        t.notify(r, bufs.sig(r), SigOp::Set, 1);
+        for i in 1..ws {
+            let peer = (r + i) % ws;
+            t.op(Op::Sleep {
+                secs: granule_overhead,
+            });
+            t.putmem_nbi(bufs.seg(r, r), bufs.seg(r, peer));
+        }
+        t.quiet();
+        t.barrier_all(exit);
+        // fcollect gives no per-segment signals; publish all at the end
+        for s in 0..ws {
+            t.notify(r, bufs.sig(s), SigOp::Set, 1);
+        }
+        pb.prog.push(t.build());
+    }
+}
+
+/// NCCL AllGather as launched by PyTorch (Fig. 19): ring + protocol
+/// launch cost; `out_of_place` adds the result copy NCCL performs when
+/// the user buffer differs from the communication buffer.
+pub fn nccl_allgather_smallmsg(
+    ctx: &ShmemCtx,
+    bufs: &AgBufs,
+    pb: &mut ProgBuild,
+    out_of_place: bool,
+) {
+    let ws = ctx.n_pes();
+    let done = bufs.sig_base + ws; // past the per-segment signals
+    nccl_allgather_ring_done(ctx, bufs, pb, 16, out_of_place.then_some(done));
+    if out_of_place {
+        for r in 0..ws {
+            let mut t = ctx
+                .task(r, format!("nccl_oop_copy[{r}]"))
+                .on_copy_engine()
+                .start_delay(ctx.cluster.hw.launch_overhead * 2.0);
+            t.signal_wait_until(done, SigCond::Ge, 1);
+            // local copy of the whole gathered buffer
+            let whole = crate::mem::Slice::new(r, bufs.data, 0, ws * bufs.shard);
+            t.copy_local(whole, whole);
+            pb.prog.push(t.build());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{
+        expected_allgather, expected_reduce_scatter, fill_ag_inputs, fill_rs_inputs,
+        verify_allgather, verify_reduce_scatter,
+    };
+    use crate::config::{ClusterSpec, DType};
+    use crate::mem::SymmetricHeap;
+    use crate::sim::{NoopExecutor, Sim};
+    use crate::topology::Topology;
+
+    #[test]
+    fn ring_allgather_correct() {
+        for ws in [2usize, 4, 8] {
+            let cluster = ClusterSpec::h800(1, ws);
+            let ctx = ShmemCtx::new(cluster, DType::BF16);
+            let topo = Topology::build(cluster);
+            let mut heap = SymmetricHeap::new(ws, 4 * ws.max(8));
+            let bufs = AgBufs::alloc(&mut heap, &ctx, 16);
+            fill_ag_inputs(&mut heap, &bufs, 2);
+            let expected = expected_allgather(&heap, &bufs);
+            let mut pb = ProgBuild::new();
+            nccl_allgather_ring(&ctx, &bufs, &mut pb, 16);
+            Sim::new(&topo)
+                .run(&pb.prog, &mut heap, &mut NoopExecutor)
+                .unwrap();
+            verify_allgather(&heap, &bufs, &expected).unwrap();
+        }
+    }
+
+    #[test]
+    fn ring_allgather_inter_node_correct() {
+        let cluster = ClusterSpec::h800(2, 4);
+        let ctx = ShmemCtx::new(cluster, DType::BF16);
+        let topo = Topology::build(cluster);
+        let mut heap = SymmetricHeap::new(8, 32);
+        let bufs = AgBufs::alloc(&mut heap, &ctx, 16);
+        fill_ag_inputs(&mut heap, &bufs, 4);
+        let expected = expected_allgather(&heap, &bufs);
+        let mut pb = ProgBuild::new();
+        nccl_allgather_ring(&ctx, &bufs, &mut pb, 16);
+        Sim::new(&topo)
+            .run(&pb.prog, &mut heap, &mut NoopExecutor)
+            .unwrap();
+        verify_allgather(&heap, &bufs, &expected).unwrap();
+    }
+
+    #[test]
+    fn ring_reduce_scatter_correct() {
+        for ws in [2usize, 4, 8] {
+            let cluster = ClusterSpec::h800(1, ws);
+            let ctx = ShmemCtx::new(cluster, DType::BF16);
+            let topo = Topology::build(cluster);
+            let mut heap = SymmetricHeap::new(ws, 4 * ws.max(8));
+            let bufs = RsBufs::alloc(&mut heap, &ctx, 8);
+            fill_rs_inputs(&mut heap, &bufs, 6);
+            let expected = expected_reduce_scatter(&heap, &bufs);
+            let mut pb = ProgBuild::new();
+            nccl_reduce_scatter_ring(&ctx, &bufs, &mut pb, 16);
+            Sim::new(&topo)
+                .run(&pb.prog, &mut heap, &mut NoopExecutor)
+                .unwrap();
+            verify_reduce_scatter(&heap, &bufs, &expected).unwrap();
+        }
+    }
+
+    #[test]
+    fn fcollect_correct() {
+        let cluster = ClusterSpec::h800(1, 8);
+        let ctx = ShmemCtx::new(cluster, DType::BF16);
+        let topo = Topology::build(cluster);
+        let mut heap = SymmetricHeap::new(8, 32);
+        let bufs = AgBufs::alloc(&mut heap, &ctx, 16);
+        fill_ag_inputs(&mut heap, &bufs, 8);
+        let expected = expected_allgather(&heap, &bufs);
+        let mut pb = ProgBuild::new();
+        nvshmem_fcollect(&ctx, &bufs, &mut pb, 0.2e-6);
+        Sim::new(&topo)
+            .run(&pb.prog, &mut heap, &mut NoopExecutor)
+            .unwrap();
+        verify_allgather(&heap, &bufs, &expected).unwrap();
+    }
+
+    #[test]
+    fn oop_costs_more_than_inplace() {
+        let run = |oop: bool| {
+            let cluster = ClusterSpec::l20(1, 8);
+            let ctx = ShmemCtx::new(cluster, DType::BF16);
+            let topo = Topology::build(cluster);
+            let mut heap = SymmetricHeap::new(8, 32);
+            let bufs = AgBufs::alloc(&mut heap, &ctx, 4096);
+            fill_ag_inputs(&mut heap, &bufs, 8);
+            let mut pb = ProgBuild::new();
+            nccl_allgather_smallmsg(&ctx, &bufs, &mut pb, oop);
+            Sim::new(&topo)
+                .run(&pb.prog, &mut heap, &mut NoopExecutor)
+                .unwrap()
+                .makespan
+        };
+        assert!(run(true) > run(false));
+    }
+
+    #[test]
+    fn ring_is_latency_bound_for_small_messages() {
+        // (ws-1) serial hops: ring latency should scale with world size
+        // while the LL direct path does not — Fig. 19's mechanism.
+        let ring_t = |ws: usize| {
+            let cluster = ClusterSpec::h800(1, ws);
+            let ctx = ShmemCtx::new(cluster, DType::BF16);
+            let topo = Topology::build(cluster);
+            let mut heap = SymmetricHeap::new(ws, 4 * ws.max(8));
+            let bufs = AgBufs::alloc(&mut heap, &ctx, 64);
+            fill_ag_inputs(&mut heap, &bufs, 1);
+            let mut pb = ProgBuild::new();
+            nccl_allgather_ring(&ctx, &bufs, &mut pb, 16);
+            Sim::new(&topo)
+                .run(&pb.prog, &mut heap, &mut NoopExecutor)
+                .unwrap()
+                .makespan
+        };
+        assert!(ring_t(8) > ring_t(2));
+    }
+}

@@ -1,0 +1,375 @@
+//! One-sided ReduceScatter variants (§3.3, §3.5, Alg. 3/5, Fig. 9/10).
+
+use crate::program::{ComputeCost, NumericOp, Op, Scope, SigCond, SigOp};
+use crate::shmem::ShmemCtx;
+
+use super::{ProgBuild, RsBufs};
+
+/// Alg. 3 — push-mode intra-node ReduceScatter.
+///
+/// Two parallel parts per rank: a copy-engine stream pushing each input
+/// chunk to its destination rank's scatter slot (with a delivery signal),
+/// and an SM reduction task that accumulates slots as they arrive. The
+/// reduction runs on `reduce_sms` SMs (§3.5 sizing: ~15 on H800).
+///
+/// `producer_sig`: if `Some(base)`, chunk `dst` may only be pushed after
+/// local signal `base + dst` is set (the producer-GEMM linkage of
+/// GEMM+RS); `None` treats inputs as ready.
+pub fn rs_push_intra(
+    ctx: &ShmemCtx,
+    bufs: &RsBufs,
+    pb: &mut ProgBuild,
+    reduce_sms: u32,
+    producer_sig: Option<usize>,
+) {
+    let ws = ctx.n_pes();
+    assert_eq!(ctx.n_nodes(), 1, "rs_push_intra is single-node");
+
+    for r in 0..ws {
+        // Stream 1: scatter each chunk to its destination (shifted walk).
+        let mut scat = ctx.task(r, format!("rs_scatter[{r}]")).on_copy_engine().launch_overhead();
+        for i in 0..ws {
+            let dst = (r + 1 + i) % ws; // own chunk lands last (overlap-friendly)
+            if let Some(base) = producer_sig {
+                scat.signal_wait_until(base + dst, SigCond::Eq, 1);
+            }
+            scat.putmem_signal(
+                bufs.in_chunk(dst, r),
+                bufs.scatter_slot(r, dst),
+                bufs.scatter_sig(r),
+                SigOp::Set,
+                1,
+            );
+        }
+        pb.prog.push(scat.build());
+
+        // Stream 2: local reduction, incremental as slots arrive.
+        let mut red = ctx
+            .task(r, format!("rs_reduce[{r}]"))
+            .with_sms(reduce_sms)
+            .launch_overhead();
+        for src in 0..ws {
+            red.signal_wait_until(bufs.scatter_sig(src), SigCond::Eq, 1);
+            red.op(Op::Compute {
+                cost: ComputeCost::Reduce {
+                    bytes: ctx.bytes(bufs.shard) as f64 * 2.0,
+                },
+                numeric: NumericOp::ReduceAdd {
+                    srcs: vec![bufs.scatter_slot(src, r)],
+                    dst: bufs.out(r),
+                    zero_dst: src == 0,
+                },
+                label: "rs_local_reduce",
+            });
+        }
+        pb.prog.push(red.build());
+    }
+}
+
+/// §3.6 — AMD fused-scatter ReduceScatter: the *producer* stores each
+/// output tile directly to the destination rank (fused into the producer
+/// kernel to avoid hipStreamWriteValue interference), then a barrier and
+/// a local reduction produce the final output. Communication tiling
+/// (`comm_tiles` sub-chunks per chunk) is decoupled from compute tiling
+/// so all mesh links are used.
+pub fn rs_fused_amd(
+    ctx: &ShmemCtx,
+    bufs: &RsBufs,
+    pb: &mut ProgBuild,
+    comm_tiles: usize,
+    reduce_sms: u32,
+    producer_sig: Option<usize>,
+) {
+    let ws = ctx.n_pes();
+    assert_eq!(ctx.n_nodes(), 1);
+    assert!(comm_tiles >= 1 && bufs.shard % comm_tiles == 0);
+    let sub = bufs.shard / comm_tiles;
+    let bid = pb.fresh_barrier();
+    // participants: ws store streams + 1 reduce task per rank
+    let expect = ws * (ws + 1);
+
+    for r in 0..ws {
+        // fused scatter: producer stores tiles remotely as they complete;
+        // one task per destination so all 7 mesh links run concurrently.
+        for i in 0..ws {
+            let dst = (r + 1 + i) % ws;
+            // fused into the producer's epilogue: stores issue from the
+            // producer's own CUs (no extra reservation, §3.6)
+            let mut t = ctx
+                .task(r, format!("rs_fused_store[{r}->{dst}]"))
+                .on_copy_engine()
+                .launch_overhead();
+            if let Some(base) = producer_sig {
+                t.signal_wait_until(base + dst, SigCond::Eq, 1);
+            }
+            for s in 0..comm_tiles {
+                t.putmem_nbi(
+                    bufs.in_chunk(dst, r).sub(s * sub, sub),
+                    bufs.scatter_slot(r, dst).sub(s * sub, sub),
+                );
+            }
+            t.quiet();
+            t.barrier_group(bid, Scope::World, expect);
+            pb.prog.push(t.build());
+        }
+
+        // reduction after the barrier
+        let mut red = ctx
+            .task(r, format!("rs_reduce[{r}]"))
+            .with_sms(reduce_sms)
+            .launch_overhead();
+        red.barrier_group(bid, Scope::World, expect);
+        red.op(Op::Compute {
+            cost: ComputeCost::Reduce {
+                bytes: ctx.bytes(bufs.shard) as f64 * ws as f64,
+            },
+            numeric: NumericOp::ReduceAdd {
+                srcs: (0..ws).map(|s| bufs.scatter_slot(s, r)).collect(),
+                dst: bufs.out(r),
+                zero_dst: true,
+            },
+            label: "rs_reduce_all",
+        });
+        pb.prog.push(red.build());
+    }
+}
+
+/// Alg. 5 + Fig. 10 — inter-node ReduceScatter with heterogeneous
+/// communication: intra-node scatter on the copy engine, local reduction
+/// on a small SM budget, inter-node P2P on one SM, final reduction on the
+/// full device. The §3.5 balance: scatter moves `(lws-1)/lws` of the data
+/// at NVLink bandwidth while P2P moves `1/n_nodes` at NIC bandwidth, so
+/// the reduction only needs ~470 GB/s => ~15 SMs on H800.
+///
+/// Buffer roles (see [`RsBufs`]):
+///   input[dst chunk] -> scatter_slot[src local rank] (intra-node, per iter)
+///   reduce(scatter slots) -> partial_slot[src node]  (P2P inter-node)
+///   reduce(partial slots) -> out
+///
+/// Iterations walk target nodes other-nodes-first (Fig. 10 shift) so the
+/// NIC sends start as early as possible; scatter slots are recycled per
+/// iteration behind a node-scoped barrier joined by all three streams.
+pub fn rs_inter(
+    ctx: &ShmemCtx,
+    bufs: &RsBufs,
+    pb: &mut ProgBuild,
+    reduce1_sms: u32,
+    reduce2_sms: u32,
+    producer_sig: Option<usize>,
+) {
+    let ws = ctx.n_pes();
+    let lws = ctx.local_world_size();
+    let n_nodes = ctx.n_nodes();
+    assert!(n_nodes > 1, "rs_inter requires multiple nodes");
+
+    // one barrier id per iteration; joined by scatter + reduce + p2p of
+    // every rank in the node (3 tasks per rank)
+    let iter_bids: Vec<usize> = (0..n_nodes).map(|_| pb.fresh_barrier()).collect();
+    let iter_expect = 3 * lws;
+
+    for r in 0..ws {
+        let node = ctx.node_of(r);
+        let lr = ctx.local_rank_of(r);
+        let scope = Scope::Node(node);
+
+        // -- Stream 0: intra-node scatter (copy engine).
+        let mut scat = ctx
+            .task(r, format!("rs_scatter[{r}]"))
+            .on_copy_engine()
+            .launch_overhead();
+        // -- Stream 1a: per-iteration local reduction (small SM budget).
+        let mut red = ctx
+            .task(r, format!("rs_reduce1[{r}]"))
+            .with_sms(reduce1_sms)
+            .launch_overhead();
+        // -- Stream 1b: inter-node P2P (1 SM).
+        let mut p2p = ctx
+            .task(r, format!("rs_p2p[{r}]"))
+            .with_sms(1)
+            .launch_overhead();
+
+        for it in 0..n_nodes {
+            let tn = (node + 1 + it) % n_nodes; // other nodes first (Fig. 10)
+
+            // scatter: chunk destined for (tn, tlr) lands on node peer tlr,
+            // slot indexed by the *source* local rank; local copy last.
+            for j in 0..lws {
+                let tlr = (lr + 1 + j) % lws;
+                let dst_global = tn * lws + tlr;
+                let land_on = node * lws + tlr;
+                if let Some(base) = producer_sig {
+                    // gate on the producer GEMM finishing this chunk
+                    scat.signal_wait_until(base + dst_global, SigCond::Eq, 1);
+                }
+                scat.putmem_signal(
+                    bufs.in_chunk(dst_global, r),
+                    bufs.scatter_slot(lr, land_on),
+                    bufs.scatter_sig(lr),
+                    SigOp::Set,
+                    (it + 1) as u64,
+                );
+            }
+            scat.barrier_group(iter_bids[it], scope, iter_expect);
+
+            // reduce: wait all lws slots of this iteration, then reduce
+            // into the partial for *this* node's contribution.
+            for s in 0..lws {
+                red.signal_wait_until(bufs.scatter_sig(s), SigCond::Ge, (it + 1) as u64);
+            }
+            red.op(Op::Compute {
+                cost: ComputeCost::Reduce {
+                    bytes: ctx.bytes(bufs.shard) as f64 * lws as f64,
+                },
+                numeric: NumericOp::ReduceAdd {
+                    srcs: (0..lws).map(|s| bufs.scatter_slot(s, r)).collect(),
+                    dst: if tn == node {
+                        bufs.partial_slot(node, r)
+                    } else {
+                        bufs.stage_slot(tn, r) // staging for the send to node tn
+                    },
+                    zero_dst: true,
+                },
+                label: "rs_reduce_node",
+            });
+            if tn == node {
+                // own-node partial is final in place
+                red.notify(r, bufs.partial_sig(node, lws), SigOp::Set, 1);
+            } else {
+                // hand the staged partial to the P2P stream
+                red.notify(r, bufs.stage_sig(tn, lws, n_nodes), SigOp::Set, 1);
+            }
+            red.barrier_group(iter_bids[it], scope, iter_expect);
+
+            // p2p: ship the staged partial to the peer rank of node tn;
+            // delivery sets the *arrival* signal for this sender's node.
+            if tn != node {
+                let target = tn * lws + lr;
+                p2p.signal_wait_until(bufs.stage_sig(tn, lws, n_nodes), SigCond::Ge, 1);
+                p2p.putmem_signal(
+                    bufs.stage_slot(tn, r),
+                    bufs.partial_slot(node, target),
+                    bufs.partial_sig(node, lws),
+                    SigOp::Set,
+                    1,
+                );
+            }
+            p2p.barrier_group(iter_bids[it], scope, iter_expect);
+        }
+        pb.prog.push(scat.build());
+        pb.prog.push(red.build());
+        pb.prog.push(p2p.build());
+
+        // -- Final: all partials present, reduce across nodes (132 SMs).
+        let mut fin = ctx
+            .task(r, format!("rs_reduce2[{r}]"))
+            .with_sms(reduce2_sms)
+            .launch_overhead();
+        for n in 0..n_nodes {
+            fin.signal_wait_until(bufs.partial_sig(n, lws), SigCond::Eq, 1);
+        }
+        fin.op(Op::Compute {
+            cost: ComputeCost::Reduce {
+                bytes: ctx.bytes(bufs.shard) as f64 * n_nodes as f64,
+            },
+            numeric: NumericOp::ReduceAdd {
+                srcs: (0..n_nodes).map(|n| bufs.partial_slot(n, r)).collect(),
+                dst: bufs.out(r),
+                zero_dst: true,
+            },
+            label: "rs_reduce_final",
+        });
+        pb.prog.push(fin.build());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{expected_reduce_scatter, fill_rs_inputs, verify_reduce_scatter};
+    use crate::config::{ClusterSpec, DType};
+    use crate::mem::SymmetricHeap;
+    use crate::sim::{NoopExecutor, Sim};
+    use crate::topology::Topology;
+
+    fn run_rs(
+        cluster: ClusterSpec,
+        shard: usize,
+        build: impl Fn(&ShmemCtx, &RsBufs, &mut ProgBuild),
+    ) -> f64 {
+        let ctx = ShmemCtx::new(cluster, DType::BF16);
+        let topo = Topology::build(cluster);
+        let mut heap = SymmetricHeap::new(ctx.n_pes(), 8 * ctx.n_pes().max(16));
+        let bufs = RsBufs::alloc(&mut heap, &ctx, shard);
+        fill_rs_inputs(&mut heap, &bufs, 3);
+        let expected = expected_reduce_scatter(&heap, &bufs);
+        let mut pb = ProgBuild::new();
+        build(&ctx, &bufs, &mut pb);
+        let sim = Sim::new(&topo);
+        let rep = sim.run(&pb.prog, &mut heap, &mut NoopExecutor).unwrap();
+        verify_reduce_scatter(&heap, &bufs, &expected).unwrap();
+        rep.makespan
+    }
+
+    #[test]
+    fn push_intra_reduces() {
+        run_rs(ClusterSpec::h800(1, 8), 64, |c, b, p| {
+            rs_push_intra(c, b, p, 15, None)
+        });
+    }
+
+    #[test]
+    fn push_intra_two_ranks() {
+        run_rs(ClusterSpec::h800(1, 2), 16, |c, b, p| {
+            rs_push_intra(c, b, p, 15, None)
+        });
+    }
+
+    #[test]
+    fn fused_amd_reduces() {
+        run_rs(ClusterSpec::mi308x(8), 64, |c, b, p| {
+            rs_fused_amd(c, b, p, 4, 16, None)
+        });
+    }
+
+    #[test]
+    fn inter_node_reduces() {
+        run_rs(ClusterSpec::h800(2, 4), 32, |c, b, p| {
+            rs_inter(c, b, p, 15, 120, None)
+        });
+    }
+
+    #[test]
+    fn inter_node_reduces_4x4() {
+        run_rs(ClusterSpec::h800(4, 4), 16, |c, b, p| {
+            rs_inter(c, b, p, 15, 120, None)
+        });
+    }
+
+    #[test]
+    fn producer_gated_scatter_waits() {
+        // With a producer signal that is set late by a helper task, the
+        // result must still be correct (scatter waits for production).
+        let cluster = ClusterSpec::h800(1, 4);
+        let ctx = ShmemCtx::new(cluster, DType::BF16);
+        let topo = Topology::build(cluster);
+        let mut heap = SymmetricHeap::new(4, 64);
+        let bufs = RsBufs::alloc(&mut heap, &ctx, 8);
+        fill_rs_inputs(&mut heap, &bufs, 11);
+        let expected = expected_reduce_scatter(&heap, &bufs);
+        let mut pb = ProgBuild::new();
+        let base = 32; // producer signal base
+        rs_push_intra(&ctx, &bufs, &mut pb, 15, Some(base));
+        // producer: sets chunk-ready signals after simulated compute time
+        for r in 0..4 {
+            let mut prod = ctx.task(r, format!("producer[{r}]")).with_sms(64);
+            for dst in 0..4 {
+                prod.op(crate::program::Op::Sleep { secs: 2e-6 });
+                prod.notify(r, base + dst, SigOp::Set, 1);
+            }
+            pb.prog.push(prod.build());
+        }
+        let sim = Sim::new(&topo);
+        sim.run(&pb.prog, &mut heap, &mut NoopExecutor).unwrap();
+        verify_reduce_scatter(&heap, &bufs, &expected).unwrap();
+    }
+}

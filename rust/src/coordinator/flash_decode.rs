@@ -1,0 +1,330 @@
+//! Distributed flash decoding (Fig. 15): every rank computes partial
+//! attention over its KV-cache shard, partials are gathered with the
+//! low-latency AllGather, and a combine kernel merges them. Scales decode
+//! to many GPUs; the metric is achieved per-GPU HBM bandwidth.
+
+use crate::collectives::allgather::{ag_ll_inter_gated, ag_ll_intra_gated, ag_ll_pcie};
+use crate::collectives::{AgBufs, ProgBuild};
+use crate::config::ClusterSpec;
+use crate::kernels::names::Entry;
+use crate::mem::{BufId, Slice, SymmetricHeap};
+use crate::program::{ComputeCost, NumericOp, Op, SigCond, SigOp};
+use crate::util::Rng;
+
+use super::{setup, BuiltOp};
+
+/// Flash-decode configuration (batch size 1, per the paper).
+#[derive(Debug, Clone, Copy)]
+pub struct FlashDecodeCfg {
+    pub heads: usize,
+    pub head_dim: usize,
+    /// KV length held by each rank.
+    pub kv_per_rank: usize,
+    /// Allocate and run real numerics (tests); timing-only benches use
+    /// `false` so 1M-token KV caches don't allocate gigabytes.
+    pub numeric: bool,
+}
+
+pub struct FlashDecodeBufs {
+    pub q: BufId,
+    pub k: BufId,
+    pub v: BufId,
+    /// Gathered partials: per-rank segment = [o(h*d) | m(h) | l(h)].
+    pub ag: AgBufs,
+    pub out: BufId,
+    pub cfg: FlashDecodeCfg,
+}
+
+/// Signal set by the partial kernel when this rank's partial is ready.
+const READY_SIG: usize = 90;
+
+/// Segment layout helpers.
+impl FlashDecodeBufs {
+    pub fn seg_len(cfg: &FlashDecodeCfg) -> usize {
+        cfg.heads * (cfg.head_dim + 2)
+    }
+
+    fn o_part(&self, r: usize) -> Slice {
+        let h = self.cfg.heads;
+        let d = self.cfg.head_dim;
+        self.ag.seg(r, r).sub(0, h * d)
+    }
+
+    fn m_part(&self, r: usize) -> Slice {
+        let h = self.cfg.heads;
+        let d = self.cfg.head_dim;
+        self.ag.seg(r, r).sub(h * d, h)
+    }
+
+    fn l_part(&self, r: usize) -> Slice {
+        let h = self.cfg.heads;
+        let d = self.cfg.head_dim;
+        self.ag.seg(r, r).sub(h * d + h, h)
+    }
+}
+
+/// Build the distributed flash-decode program on any cluster (H800 uses
+/// multimem LL AllGather; L20 uses the PCIe LL variant).
+pub fn build(cluster: ClusterSpec, cfg: FlashDecodeCfg) -> (BuiltOp, FlashDecodeBufs) {
+    let (ctx, _t) = setup(cluster);
+    let ws = ctx.n_pes();
+    let h = cfg.heads;
+    let d = cfg.head_dim;
+    let hw = cluster.hw;
+
+    let mut heap = SymmetricHeap::new(ws, 96 + ws);
+    let kv_elems = if cfg.numeric { h * cfg.kv_per_rank * d } else { 1 };
+    let q = heap.alloc("q", h * d);
+    let k = heap.alloc("k_cache", kv_elems);
+    let v = heap.alloc("v_cache", kv_elems);
+    let ag = AgBufs::alloc_ll(&mut heap, &ctx, FlashDecodeBufs::seg_len(&cfg));
+    let out = heap.alloc("attn_out", h * d);
+    let bufs = FlashDecodeBufs { q, k, v, ag, out, cfg };
+
+    let mut pb = ProgBuild::new();
+    let kv_bytes = (h * cfg.kv_per_rank * d) as f64 * ctx.dtype.bytes() as f64;
+
+    // -- partial attention per rank (bandwidth-bound kernel)
+    for r in 0..ws {
+        let mut t = ctx
+            .task(r, format!("decode_partial[{r}]"))
+            .with_sms(hw.sms - (ws as u32).min(hw.sms / 2) - 1)
+            .launch_overhead();
+        t.op(Op::Compute {
+            cost: ComputeCost::MemBound { bytes: kv_bytes * 2.0 },
+            numeric: if cfg.numeric {
+                NumericOp::Call {
+                    entry: Entry::decode_partial_name(h, cfg.kv_per_rank, d),
+                    args: vec![
+                        Slice::new(r, q, 0, h * d),
+                        Slice::new(r, k, 0, kv_elems),
+                        Slice::new(r, v, 0, kv_elems),
+                    ],
+                    outs: vec![bufs.o_part(r), bufs.m_part(r), bufs.l_part(r)],
+                }
+            } else {
+                NumericOp::None
+            },
+            label: "decode_partial",
+        });
+        t.notify(r, READY_SIG, SigOp::Set, 1);
+        pb.prog.push(t.build());
+    }
+
+    // -- low-latency AllGather of the partials, gated on readiness
+    match (hw.kind, ctx.n_nodes()) {
+        (crate::config::HardwareKind::H800, 1) => {
+            ag_ll_intra_gated(&ctx, &bufs.ag, &mut pb, Some(READY_SIG))
+        }
+        (crate::config::HardwareKind::H800, _) => {
+            ag_ll_inter_gated(&ctx, &bufs.ag, &mut pb, Some(READY_SIG))
+        }
+        _ => {
+            // PCIe/AMD path: direct LL puts; gating folded in by making
+            // the send task wait first (pcie variant packs immediately, so
+            // prepend a wait via a wrapper task is overkill — the pcie
+            // variant's send task starts with a pack; add the gate there)
+            ag_ll_pcie_gated(&ctx, &bufs.ag, &mut pb)
+        }
+    }
+
+    // -- combine after all partial segments arrive
+    for r in 0..ws {
+        let mut t = ctx
+            .task(r, format!("decode_combine[{r}]"))
+            .with_sms(2)
+            .launch_overhead();
+        for s in 0..ws {
+            t.signal_wait_until(bufs.ag.sig(s), SigCond::Ge, 1);
+        }
+        t.op(Op::Compute {
+            cost: ComputeCost::MemBound {
+                bytes: (FlashDecodeBufs::seg_len(&cfg) * ws * ctx.dtype.bytes()) as f64 * 2.0,
+            },
+            numeric: if cfg.numeric {
+                NumericOp::Call {
+                    entry: format!("decode_combine_seg_h{h}_p{ws}_d{d}"),
+                    args: (0..ws).map(|s| bufs.ag.seg(s, r)).collect(),
+                    outs: vec![Slice::new(r, out, 0, h * d)],
+                }
+            } else {
+                NumericOp::None
+            },
+            label: "decode_combine",
+        });
+        pb.prog.push(t.build());
+    }
+
+    let op = BuiltOp {
+        ctx,
+        heap,
+        prog: pb.prog,
+        name: format!("FlashDecode+AG ws={ws} kv={}", cfg.kv_per_rank),
+    };
+    (op, bufs)
+}
+
+/// PCIe LL AllGather with the readiness gate folded into the senders.
+fn ag_ll_pcie_gated(ctx: &crate::shmem::ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild) {
+    let before = pb.prog.tasks.len();
+    ag_ll_pcie(ctx, bufs, pb);
+    for task in pb.prog.tasks.iter_mut().skip(before) {
+        if task.name.starts_with("ag_ll_send") {
+            let mut ops = vec![Op::WaitSignal {
+                idx: READY_SIG,
+                cond: SigCond::Ge,
+                value: 1,
+            }];
+            ops.extend(task.ops.drain(..));
+            task.ops = ops;
+        }
+    }
+}
+
+/// Seed q/k/v (replicated q, per-rank KV shards).
+pub fn fill_inputs(heap: &mut SymmetricHeap, bufs: &FlashDecodeBufs, seed: u64) {
+    assert!(bufs.cfg.numeric, "fill_inputs requires numeric buffers");
+    let mut rng = Rng::new(seed);
+    let qv = rng.normal_vec(heap.buf_len(bufs.q));
+    for r in 0..heap.world() {
+        heap.write(Slice::new(r, bufs.q, 0, qv.len()), &qv);
+        let mut kr = Rng::new(seed ^ ((r as u64) << 9));
+        let kv = kr.normal_vec(heap.buf_len(bufs.k));
+        heap.write(Slice::new(r, bufs.k, 0, kv.len()), &kv);
+        let vv = kr.normal_vec(heap.buf_len(bufs.v));
+        heap.write(Slice::new(r, bufs.v, 0, vv.len()), &vv);
+    }
+}
+
+/// Reference: full attention over the concatenated KV of all ranks.
+pub fn reference_output(heap: &SymmetricHeap, bufs: &FlashDecodeBufs) -> Vec<f32> {
+    let ws = heap.world();
+    let h = bufs.cfg.heads;
+    let d = bufs.cfg.head_dim;
+    let s_local = bufs.cfg.kv_per_rank;
+    let s_total = ws * s_local;
+    let q = heap.read(Slice::new(0, bufs.q, 0, h * d)).to_vec();
+    // interleave per-rank shards into [h, ws*s_local, d]
+    let mut k_all = vec![0.0f32; h * s_total * d];
+    let mut v_all = vec![0.0f32; h * s_total * d];
+    for r in 0..ws {
+        let kr = heap.read(Slice::new(r, bufs.k, 0, h * s_local * d));
+        let vr = heap.read(Slice::new(r, bufs.v, 0, h * s_local * d));
+        for hh in 0..h {
+            let dst = hh * s_total * d + r * s_local * d;
+            let src = hh * s_local * d;
+            k_all[dst..dst + s_local * d].copy_from_slice(&kr[src..src + s_local * d]);
+            v_all[dst..dst + s_local * d].copy_from_slice(&vr[src..src + s_local * d]);
+        }
+    }
+    let (o, m, l) = crate::kernels::exec::decode_partial(&q, &k_all, &v_all, h, s_total, d);
+    crate::kernels::exec::decode_combine(&o, &m, &l, h, 1, d)
+}
+
+pub fn verify(heap: &SymmetricHeap, bufs: &FlashDecodeBufs, expected: &[f32]) -> Result<(), String> {
+    for r in 0..heap.world() {
+        let got = heap.read(Slice::new(r, bufs.out, 0, expected.len()));
+        for (i, (g, e)) in got.iter().zip(expected).enumerate() {
+            if (g - e).abs() > 1e-4_f32.max(e.abs() * 1e-4) {
+                return Err(format!("flash decode mismatch rank {r} elem {i}: {g} vs {e}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Achieved per-GPU HBM bandwidth (the Fig. 15 metric).
+pub fn achieved_bw(cfg: &FlashDecodeCfg, _cluster: &ClusterSpec, makespan: f64) -> f64 {
+    let kv_bytes = (cfg.heads * cfg.kv_per_rank * cfg.head_dim * 2 * 2) as f64; // K+V bf16
+    kv_bytes / makespan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HybridExecutor;
+    use crate::topology::Topology;
+
+    fn run_numeric(cluster: ClusterSpec) {
+        let cfg = FlashDecodeCfg {
+            heads: 4,
+            head_dim: 16,
+            kv_per_rank: 32,
+            numeric: true,
+        };
+        let (mut op, bufs) = build(cluster, cfg);
+        fill_inputs(&mut op.heap, &bufs, 11);
+        let exp = reference_output(&op.heap, &bufs);
+        let topo = Topology::build(cluster);
+        let mut exec = HybridExecutor::native_only();
+        super::super::run_numeric(&mut op, &topo, &mut exec);
+        verify(&op.heap, &bufs, &exp).unwrap();
+    }
+
+    #[test]
+    fn intra_node_correct() {
+        run_numeric(ClusterSpec::h800(1, 8));
+    }
+
+    #[test]
+    fn inter_node_correct() {
+        run_numeric(ClusterSpec::h800(2, 4));
+    }
+
+    #[test]
+    fn pcie_correct() {
+        run_numeric(ClusterSpec::l20(1, 4));
+    }
+
+    #[test]
+    fn weak_scaling_holds_bandwidth() {
+        // Fig. 15 weak scaling: per-GPU KV fixed, bandwidth stays high as
+        // ranks grow (comm is tiny vs the KV sweep).
+        let cfg = FlashDecodeCfg {
+            heads: 8,
+            head_dim: 64,
+            kv_per_rank: 32 * 1024,
+            numeric: false,
+        };
+        let bw = |ws: usize| {
+            let cluster = ClusterSpec::h800(1, ws);
+            let (mut op, _b) = build(cluster, cfg);
+            let topo = Topology::build(cluster);
+            let t = super::super::run_timing(&mut op, &topo);
+            achieved_bw(&cfg, &cluster, t)
+        };
+        let b2 = bw(2);
+        let b8 = bw(8);
+        assert!(b8 > 0.5 * b2, "weak scaling collapsed: {b2} -> {b8}");
+    }
+
+    #[test]
+    fn strong_scaling_has_crossover() {
+        // Fig. 15 strong scaling: for short global KV more GPUs don't
+        // help (latency floor); for very long KV they do.
+        let t = |ws: usize, kv_total: usize| {
+            let cfg = FlashDecodeCfg {
+                heads: 8,
+                head_dim: 64,
+                kv_per_rank: kv_total / ws,
+                numeric: false,
+            };
+            let cluster = ClusterSpec::h800(1, ws);
+            let (mut op, _b) = build(cluster, cfg);
+            let topo = Topology::build(cluster);
+            super::super::run_timing(&mut op, &topo)
+        };
+        // parallel efficiency of 8 GPUs vs 2: poor at short ctx (comm
+        // floor dominates), good at very long ctx — the paper's "more
+        // GPUs only help beyond ~256K" shape.
+        let eff = |kv: usize| (t(2, kv) / t(8, kv)) / 4.0;
+        let eff_small = eff(64 * 1024);
+        let eff_large = eff(1024 * 1024);
+        assert!(
+            eff_small < eff_large - 0.15,
+            "no crossover contrast: {eff_small} vs {eff_large}"
+        );
+        assert!(eff_large > 0.75, "long-ctx efficiency too poor: {eff_large}");
+        assert!(t(8, 1024 * 1024) < t(2, 1024 * 1024));
+    }
+}

@@ -1,0 +1,75 @@
+//! The L3 coordinator: builds whole-world programs for the paper's fused
+//! overlapping kernels (Table 3) — ours and every baseline — and runs
+//! them on the DES with optional real numerics through PJRT/native
+//! executors.
+
+pub mod ag_gemm;
+pub mod flash_decode;
+pub mod gemm_rs;
+pub mod moe;
+
+use crate::config::{ClusterSpec, DType};
+use crate::mem::SymmetricHeap;
+use crate::program::Program;
+use crate::shmem::ShmemCtx;
+use crate::sim::{ComputeExecutor, NoopExecutor, Sim, SimConfig, SimReport};
+use crate::topology::Topology;
+
+/// Everything needed to execute one built program.
+pub struct BuiltOp {
+    pub ctx: ShmemCtx,
+    pub heap: SymmetricHeap,
+    pub prog: Program,
+    /// Human name for reports ("AG+GEMM ours (push)" etc.)
+    pub name: String,
+}
+
+/// Run a built op in timing-only mode; returns the virtual makespan (s).
+pub fn run_timing(op: &mut BuiltOp, topo: &Topology) -> f64 {
+    let sim = Sim::with_config(
+        topo,
+        SimConfig {
+            numerics: false,
+            trace: false,
+        },
+    );
+    sim.run(&op.prog, &mut op.heap, &mut NoopExecutor)
+        .unwrap_or_else(|e| panic!("{} failed: {e}", op.name))
+        .makespan
+}
+
+/// Run with numerics through the given executor.
+pub fn run_numeric(
+    op: &mut BuiltOp,
+    topo: &Topology,
+    exec: &mut dyn ComputeExecutor,
+) -> SimReport {
+    let sim = Sim::new(topo);
+    sim.run(&op.prog, &mut op.heap, exec)
+        .unwrap_or_else(|e| panic!("{} failed: {e}", op.name))
+}
+
+/// Run with numerics + tracing (timeline extraction).
+pub fn run_traced(
+    op: &mut BuiltOp,
+    topo: &Topology,
+    exec: &mut dyn ComputeExecutor,
+) -> SimReport {
+    let sim = Sim::with_config(
+        topo,
+        SimConfig {
+            numerics: true,
+            trace: true,
+        },
+    );
+    sim.run(&op.prog, &mut op.heap, exec)
+        .unwrap_or_else(|e| panic!("{} failed: {e}", op.name))
+}
+
+/// Convenience: context + topology for a cluster at bf16.
+pub fn setup(cluster: ClusterSpec) -> (ShmemCtx, Topology) {
+    (
+        ShmemCtx::new(cluster, DType::BF16),
+        Topology::build(cluster),
+    )
+}

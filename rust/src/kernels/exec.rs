@@ -1,0 +1,443 @@
+//! Native (pure-Rust) reference implementations of every kernel entry.
+//!
+//! These are the numeric fallback when AOT artifacts are absent (unit
+//! tests, property tests) and the cross-check oracle for the PJRT path
+//! (`rust/tests/runtime_xla.rs` asserts XLA output == native output).
+//! They intentionally mirror python/compile/kernels/ref.py.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::mem::{Slice, SymmetricHeap};
+use crate::sim::ComputeExecutor;
+
+use super::names::Entry;
+
+/// Pure-Rust executor dispatching on the entry-name families.
+#[derive(Default)]
+pub struct NativeExecutor;
+
+impl NativeExecutor {
+    pub fn new() -> Self {
+        NativeExecutor
+    }
+}
+
+impl ComputeExecutor for NativeExecutor {
+    fn call(
+        &mut self,
+        heap: &mut SymmetricHeap,
+        entry: &str,
+        args: &[Slice],
+        outs: &[Slice],
+    ) -> Result<()> {
+        let parsed = Entry::parse(entry).with_context(|| format!("unknown entry '{entry}'"))?;
+        let read = |s: &Slice| heap.read(*s).to_vec();
+        let inputs: Vec<Vec<f32>> = args.iter().map(|s| read(s)).collect();
+        let results = eval_entry(&parsed, &inputs)?;
+        ensure!(
+            results.len() == outs.len(),
+            "entry '{entry}': {} outputs produced, {} expected",
+            results.len(),
+            outs.len()
+        );
+        for (slice, vals) in outs.iter().zip(results) {
+            ensure!(
+                slice.len == vals.len(),
+                "entry '{entry}': output slice len {} != produced {}",
+                slice.len,
+                vals.len()
+            );
+            heap.write(*slice, &vals);
+        }
+        Ok(())
+    }
+}
+
+/// Evaluate one entry on raw f32 buffers (int args carried as f32).
+pub fn eval_entry(entry: &Entry, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+    match *entry {
+        Entry::Gemm { m, k, n } => {
+            ensure!(inputs.len() == 2, "gemm takes 2 args");
+            ensure!(inputs[0].len() == m * k && inputs[1].len() == k * n, "gemm arg sizes");
+            Ok(vec![matmul(&inputs[0], &inputs[1], m, k, n)])
+        }
+        Entry::GroupGemm { e, c, h, f } => {
+            ensure!(inputs.len() == 2);
+            ensure!(inputs[0].len() == e * c * h && inputs[1].len() == e * h * f);
+            let mut out = vec![0.0f32; e * c * f];
+            for ei in 0..e {
+                let x = &inputs[0][ei * c * h..(ei + 1) * c * h];
+                let w = &inputs[1][ei * h * f..(ei + 1) * h * f];
+                let o = matmul(x, w, c, h, f);
+                out[ei * c * f..(ei + 1) * c * f].copy_from_slice(&o);
+            }
+            Ok(vec![out])
+        }
+        Entry::DecodePartial { h, s, d } => {
+            ensure!(inputs.len() == 3);
+            ensure!(inputs[0].len() == h * d);
+            ensure!(inputs[1].len() == h * s * d && inputs[2].len() == h * s * d);
+            let (o, m, l) = decode_partial(&inputs[0], &inputs[1], &inputs[2], h, s, d);
+            Ok(vec![o, m, l])
+        }
+        Entry::DecodeCombineSeg { h, p, d } => {
+            ensure!(inputs.len() == p, "seg combine takes p args");
+            let seg = h * (d + 2);
+            let mut o = vec![0.0f32; h * p * d];
+            let mut m = vec![0.0f32; h * p];
+            let mut l = vec![0.0f32; h * p];
+            for (pi, sv) in inputs.iter().enumerate() {
+                ensure!(sv.len() == seg, "segment size {} != {seg}", sv.len());
+                for hh in 0..h {
+                    o[hh * p * d + pi * d..hh * p * d + (pi + 1) * d]
+                        .copy_from_slice(&sv[hh * d..(hh + 1) * d]);
+                    m[hh * p + pi] = sv[h * d + hh];
+                    l[hh * p + pi] = sv[h * d + h + hh];
+                }
+            }
+            Ok(vec![decode_combine(&o, &m, &l, h, p, d)])
+        }
+        Entry::DecodeCombine { h, p, d } => {
+            ensure!(inputs.len() == 3);
+            ensure!(inputs[0].len() == h * p * d);
+            ensure!(inputs[1].len() == h * p && inputs[2].len() == h * p);
+            Ok(vec![decode_combine(&inputs[0], &inputs[1], &inputs[2], h, p, d)])
+        }
+        Entry::MoeFfn { t, h, f, e, k, c } => {
+            ensure!(inputs.len() == 4, "moe_ffn takes 4 args");
+            let (tokens, idx, gate, w) = (&inputs[0], &inputs[1], &inputs[2], &inputs[3]);
+            ensure!(tokens.len() == t * h && idx.len() == t * k);
+            ensure!(gate.len() == t * k && w.len() == e * h * f);
+            Ok(vec![moe_ffn(tokens, idx, gate, w, t, h, f, e, k, c)])
+        }
+        Entry::TpMlpShard { t, h, f } => {
+            ensure!(inputs.len() == 3);
+            ensure!(inputs[0].len() == t * h);
+            ensure!(inputs[1].len() == h * f && inputs[2].len() == f * h);
+            let hidden: Vec<f32> = matmul(&inputs[0], &inputs[1], t, h, f)
+                .into_iter()
+                .map(gelu)
+                .collect();
+            Ok(vec![matmul(&hidden, &inputs[2], t, f, h)])
+        }
+        Entry::TpAttnShard { t, h, nh, hd, s } => {
+            ensure!(t == 1, "tp_attn_shard handles a single decode token");
+            ensure!(inputs.len() == 7);
+            let x = &inputs[0];
+            let (wq, wk, wv, wo) = (&inputs[1], &inputs[2], &inputs[3], &inputs[4]);
+            let (kc, vc) = (&inputs[5], &inputs[6]);
+            let hl = nh * hd;
+            ensure!(x.len() == h && wq.len() == h * hl && wo.len() == hl * h);
+            ensure!(kc.len() == nh * s * hd && vc.len() == nh * s * hd);
+            let q = matmul(x, wq, 1, h, hl);
+            let k_new = matmul(x, wk, 1, h, hl);
+            let v_new = matmul(x, wv, 1, h, hl);
+            // cache + new row, laid out [nh, s+1, hd]
+            let s1 = s + 1;
+            let mut k_all = vec![0.0f32; nh * s1 * hd];
+            let mut v_all = vec![0.0f32; nh * s1 * hd];
+            for hh in 0..nh {
+                k_all[hh * s1 * hd..hh * s1 * hd + s * hd]
+                    .copy_from_slice(&kc[hh * s * hd..(hh + 1) * s * hd]);
+                v_all[hh * s1 * hd..hh * s1 * hd + s * hd]
+                    .copy_from_slice(&vc[hh * s * hd..(hh + 1) * s * hd]);
+                k_all[hh * s1 * hd + s * hd..(hh + 1) * s1 * hd]
+                    .copy_from_slice(&k_new[hh * hd..(hh + 1) * hd]);
+                v_all[hh * s1 * hd + s * hd..(hh + 1) * s1 * hd]
+                    .copy_from_slice(&v_new[hh * hd..(hh + 1) * hd]);
+            }
+            let (o, m, l) = decode_partial(&q, &k_all, &v_all, nh, s1, hd);
+            let attn = decode_combine(&o, &m, &l, nh, 1, hd);
+            let out = matmul(&attn, wo, 1, hl, h);
+            Ok(vec![out, k_new, v_new])
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// math
+// ---------------------------------------------------------------------------
+
+/// Row-major `[m,k] x [k,n] -> [m,n]` with f32 accumulation (ikj loop
+/// order: streams `w` rows, vectorizes the inner `j` loop).
+pub fn matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let orow = &mut out[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let a = x[i * k + kk];
+            if a == 0.0 {
+                continue;
+            }
+            let wrow = &w[kk * n..(kk + 1) * n];
+            for (o, &b) in orow.iter_mut().zip(wrow) {
+                *o += a * b;
+            }
+        }
+    }
+    out
+}
+
+/// tanh-approximate GELU, matching `jax.nn.gelu` (approximate=True).
+pub fn gelu(x: f32) -> f32 {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Split-KV partial attention: q `[h,d]`, k/v `[h,s,d]` ->
+/// (o `[h,d]`, m `[h]`, l `[h]`) — one split over the whole shard.
+pub fn decode_partial(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    h: usize,
+    s: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut o = vec![0.0f32; h * d];
+    let mut m = vec![0.0f32; h];
+    let mut l = vec![0.0f32; h];
+    for hh in 0..h {
+        let qh = &q[hh * d..(hh + 1) * d];
+        let mut scores = vec![0.0f32; s];
+        for si in 0..s {
+            let kr = &k[hh * s * d + si * d..hh * s * d + (si + 1) * d];
+            scores[si] = qh.iter().zip(kr).map(|(a, b)| a * b).sum::<f32>() * scale;
+        }
+        let mx = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut lsum = 0.0f32;
+        let oh = &mut o[hh * d..(hh + 1) * d];
+        for si in 0..s {
+            let p = (scores[si] - mx).exp();
+            lsum += p;
+            let vr = &v[hh * s * d + si * d..hh * s * d + (si + 1) * d];
+            for (a, &b) in oh.iter_mut().zip(vr) {
+                *a += p * b;
+            }
+        }
+        m[hh] = mx;
+        l[hh] = lsum;
+    }
+    (o, m, l)
+}
+
+/// LSE merge of `p` partials per head: o `[h,p,d]`, m/l `[h,p]` -> `[h,d]`.
+pub fn decode_combine(o: &[f32], m: &[f32], l: &[f32], h: usize, p: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; h * d];
+    for hh in 0..h {
+        let ms = &m[hh * p..(hh + 1) * p];
+        let m_star = ms.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut l_star = 0.0f32;
+        for pi in 0..p {
+            l_star += (ms[pi] - m_star).exp() * l[hh * p + pi];
+        }
+        let oh = &mut out[hh * d..(hh + 1) * d];
+        for pi in 0..p {
+            let alpha = (ms[pi] - m_star).exp();
+            let op = &o[hh * p * d + pi * d..hh * p * d + (pi + 1) * d];
+            for (a, &b) in oh.iter_mut().zip(op) {
+                *a += alpha * b;
+            }
+        }
+        for a in oh.iter_mut() {
+            *a /= l_star;
+        }
+    }
+    out
+}
+
+/// Capacity-routed MoE FFN matching model.moe_ffn / ref.moe_dispatch_ref:
+/// deterministic (t, k) scan-order slot claim, overflow dropped,
+/// gate-weighted combine.
+#[allow(clippy::too_many_arguments)]
+pub fn moe_ffn(
+    tokens: &[f32],
+    idx: &[f32],
+    gate: &[f32],
+    w: &[f32],
+    t: usize,
+    h: usize,
+    f: usize,
+    e: usize,
+    k: usize,
+    cap: usize,
+) -> Vec<f32> {
+    // dispatch
+    let mut buffers = vec![0.0f32; e * cap * h];
+    let mut counts = vec![0usize; e];
+    let mut slot = vec![-1isize; t * k];
+    for ti in 0..t {
+        for ki in 0..k {
+            let ei = idx[ti * k + ki] as usize;
+            assert!(ei < e, "expert index {ei} out of range");
+            if counts[ei] < cap {
+                let s = counts[ei];
+                buffers[ei * cap * h + s * h..ei * cap * h + (s + 1) * h]
+                    .copy_from_slice(&tokens[ti * h..(ti + 1) * h]);
+                slot[ti * k + ki] = s as isize;
+                counts[ei] += 1;
+            }
+        }
+    }
+    // grouped GEMM
+    let mut eout = vec![0.0f32; e * cap * f];
+    for ei in 0..e {
+        let x = &buffers[ei * cap * h..(ei + 1) * cap * h];
+        let wi = &w[ei * h * f..(ei + 1) * h * f];
+        let o = matmul(x, wi, cap, h, f);
+        eout[ei * cap * f..(ei + 1) * cap * f].copy_from_slice(&o);
+    }
+    // combine
+    let mut out = vec![0.0f32; t * f];
+    for ti in 0..t {
+        for ki in 0..k {
+            let s = slot[ti * k + ki];
+            if s >= 0 {
+                let ei = idx[ti * k + ki] as usize;
+                let g = gate[ti * k + ki];
+                let row = &eout[ei * cap * f + s as usize * f..ei * cap * f + (s as usize + 1) * f];
+                for (o, &v) in out[ti * f..(ti + 1) * f].iter_mut().zip(row) {
+                    *o += g * v;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Convenience used by tests: run an entry fully outside the heap.
+pub fn eval_named(name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+    match Entry::parse(name) {
+        Some(e) => eval_entry(&e, inputs),
+        None => bail!("unknown entry '{name}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn matmul_identity() {
+        // 2x2 identity
+        let i2 = vec![1.0, 0.0, 0.0, 1.0];
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(matmul(&x, &i2, 2, 2, 2), x);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let x = vec![1.0, 2.0, 3.0, 4.0]; // [[1,2],[3,4]]
+        let w = vec![1.0, 1.0, 1.0, 1.0];
+        assert_eq!(matmul(&x, &w, 2, 2, 2), vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn decode_partial_then_combine_is_softmax_attention() {
+        let mut rng = Rng::new(3);
+        let (h, s, d) = (2usize, 16usize, 8usize);
+        let q = rng.normal_vec(h * d);
+        let k = rng.normal_vec(h * s * d);
+        let v = rng.normal_vec(h * s * d);
+        // split into two halves and combine; compare against one split
+        let (o1, m1, l1) = decode_partial(&q, &k, &v, h, s, d);
+        let full = decode_combine(&o1, &m1, &l1, h, 1, d);
+
+        let split = |range: std::ops::Range<usize>| {
+            let mut ks = vec![0.0; h * (range.len()) * d];
+            let mut vs = vec![0.0; h * (range.len()) * d];
+            for hh in 0..h {
+                for (j, si) in range.clone().enumerate() {
+                    for dd in 0..d {
+                        ks[hh * range.len() * d + j * d + dd] = k[hh * s * d + si * d + dd];
+                        vs[hh * range.len() * d + j * d + dd] = v[hh * s * d + si * d + dd];
+                    }
+                }
+            }
+            decode_partial(&q, &ks, &vs, h, range.len(), d)
+        };
+        let (oa, ma, la) = split(0..8);
+        let (ob, mb, lb) = split(8..16);
+        // interleave partials as [h, 2, ...]
+        let mut o = vec![0.0; h * 2 * d];
+        let mut m = vec![0.0; h * 2];
+        let mut l = vec![0.0; h * 2];
+        for hh in 0..h {
+            o[hh * 2 * d..hh * 2 * d + d].copy_from_slice(&oa[hh * d..(hh + 1) * d]);
+            o[hh * 2 * d + d..hh * 2 * d + 2 * d].copy_from_slice(&ob[hh * d..(hh + 1) * d]);
+            m[hh * 2] = ma[hh];
+            m[hh * 2 + 1] = mb[hh];
+            l[hh * 2] = la[hh];
+            l[hh * 2 + 1] = lb[hh];
+        }
+        let merged = decode_combine(&o, &m, &l, h, 2, d);
+        for (a, b) in merged.iter().zip(full.iter()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn moe_ffn_all_on_one_expert_with_capacity_one_drops() {
+        let (t, h, f, e, k, cap) = (3usize, 2usize, 2usize, 2usize, 1usize, 1usize);
+        let tokens = vec![1.0, 0.0, 2.0, 0.0, 3.0, 0.0];
+        let idx = vec![0.0, 0.0, 0.0]; // all to expert 0
+        let gate = vec![1.0, 1.0, 1.0];
+        // expert 0 weight = identity-ish
+        let w = vec![1.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0];
+        let out = moe_ffn(&tokens, &idx, &gate, &w, t, h, f, e, k, cap);
+        // only token 0 claimed a slot
+        assert_eq!(out[0..2], [1.0, 0.0]);
+        assert_eq!(out[2..4], [0.0, 0.0]);
+        assert_eq!(out[4..6], [0.0, 0.0]);
+    }
+
+    #[test]
+    fn executor_runs_gemm_through_heap() {
+        use crate::mem::{Slice, SymmetricHeap};
+        use crate::sim::ComputeExecutor;
+        let mut heap = SymmetricHeap::new(1, 1);
+        let b = heap.alloc("x", 12);
+        heap.write(Slice::new(0, b, 0, 4), &[1.0, 2.0, 3.0, 4.0]);
+        heap.write(Slice::new(0, b, 4, 4), &[1.0, 0.0, 0.0, 1.0]);
+        let mut ex = NativeExecutor::new();
+        ex.call(
+            &mut heap,
+            "gemm_2x2x2",
+            &[Slice::new(0, b, 0, 4), Slice::new(0, b, 4, 4)],
+            &[Slice::new(0, b, 8, 4)],
+        )
+        .unwrap();
+        assert_eq!(heap.read(Slice::new(0, b, 8, 4)), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn executor_rejects_unknown_entry_and_bad_sizes() {
+        use crate::mem::{Slice, SymmetricHeap};
+        use crate::sim::ComputeExecutor;
+        let mut heap = SymmetricHeap::new(1, 1);
+        let b = heap.alloc("x", 8);
+        let mut ex = NativeExecutor::new();
+        assert!(ex
+            .call(&mut heap, "nope_1x1", &[], &[Slice::new(0, b, 0, 1)])
+            .is_err());
+        assert!(ex
+            .call(
+                &mut heap,
+                "gemm_2x2x2",
+                &[Slice::new(0, b, 0, 3), Slice::new(0, b, 3, 4)],
+                &[Slice::new(0, b, 0, 4)],
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn gelu_reference_points() {
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(100.0) - 100.0).abs() < 1e-3);
+        assert!(gelu(-100.0).abs() < 1e-3);
+        // gelu(1) ~ 0.8412
+        assert!((gelu(1.0) - 0.8412).abs() < 1e-3);
+    }
+}

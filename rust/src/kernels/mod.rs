@@ -1,0 +1,13 @@
+//! Compute kernels: entry-name conventions, native (pure-Rust) reference
+//! implementations, and cost helpers.
+//!
+//! Entry names are the contract between three parties: the python AOT
+//! catalog (python/compile/aot.py), the PJRT runtime (`crate::runtime`),
+//! and the native fallback ([`exec::NativeExecutor`]). A name encodes the
+//! kernel family and its static shape, e.g. `gemm_64x64x64`,
+//! `decode_combine_h8_p4_d64`.
+
+pub mod exec;
+pub mod names;
+
+pub use exec::NativeExecutor;

@@ -1,0 +1,209 @@
+//! Entry-name parsing/formatting shared by the PJRT runtime and the
+//! native executor.
+
+/// Parsed kernel entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Entry {
+    /// `gemm_{m}x{k}x{n}`
+    Gemm { m: usize, k: usize, n: usize },
+    /// `group_gemm_e{e}_c{c}_h{h}_f{f}`
+    GroupGemm { e: usize, c: usize, h: usize, f: usize },
+    /// `decode_partial_h{h}_s{s}_d{d}` (single-split per call)
+    DecodePartial { h: usize, s: usize, d: usize },
+    /// `decode_combine_h{h}_p{p}_d{d}`
+    DecodeCombine { h: usize, p: usize, d: usize },
+    /// `decode_combine_seg_h{h}_p{p}_d{d}` — combine taking `p` separate
+    /// per-rank segments, each laid out `[o(h*d) | m(h) | l(h)]` (the
+    /// wire format the LL AllGather moves in FlashDecode+AG).
+    DecodeCombineSeg { h: usize, p: usize, d: usize },
+    /// `moe_ffn_t{t}_h{h}_f{f}_e{e}_k{k}_c{c}` (`c` = expert capacity)
+    MoeFfn { t: usize, h: usize, f: usize, e: usize, k: usize, c: usize },
+    /// `tp_mlp_shard_t{t}_h{h}_f{f}`
+    TpMlpShard { t: usize, h: usize, f: usize },
+    /// `tp_attn_shard_t{t}_h{h}_nh{nh}_hd{hd}_s{s}`
+    TpAttnShard { t: usize, h: usize, nh: usize, hd: usize, s: usize },
+}
+
+fn nums(s: &str, seps: &[&str]) -> Option<Vec<usize>> {
+    // extract the numeric fields following each separator tag
+    let mut out = Vec::new();
+    let mut rest = s;
+    for sep in seps {
+        let at = rest.find(sep)?;
+        let after = &rest[at + sep.len()..];
+        let end = after
+            .find(|c: char| !c.is_ascii_digit())
+            .unwrap_or(after.len());
+        out.push(after[..end].parse().ok()?);
+        rest = &after[end..];
+    }
+    Some(out)
+}
+
+impl Entry {
+    /// Parse an entry name; `None` if it doesn't match a known family.
+    pub fn parse(name: &str) -> Option<Entry> {
+        if let Some(rest) = name.strip_prefix("gemm_") {
+            let parts: Vec<usize> = rest
+                .split('x')
+                .map(|p| p.parse().ok())
+                .collect::<Option<_>>()?;
+            if parts.len() == 3 {
+                return Some(Entry::Gemm {
+                    m: parts[0],
+                    k: parts[1],
+                    n: parts[2],
+                });
+            }
+            return None;
+        }
+        if name.starts_with("group_gemm_") {
+            let v = nums(name, &["_e", "_c", "_h", "_f"])?;
+            return Some(Entry::GroupGemm {
+                e: v[0],
+                c: v[1],
+                h: v[2],
+                f: v[3],
+            });
+        }
+        if name.starts_with("decode_partial_") {
+            let v = nums(name, &["_h", "_s", "_d"])?;
+            return Some(Entry::DecodePartial {
+                h: v[0],
+                s: v[1],
+                d: v[2],
+            });
+        }
+        if name.starts_with("decode_combine_seg_") {
+            let v = nums(name, &["_h", "_p", "_d"])?;
+            return Some(Entry::DecodeCombineSeg {
+                h: v[0],
+                p: v[1],
+                d: v[2],
+            });
+        }
+        if name.starts_with("decode_combine_") {
+            let v = nums(name, &["_h", "_p", "_d"])?;
+            return Some(Entry::DecodeCombine {
+                h: v[0],
+                p: v[1],
+                d: v[2],
+            });
+        }
+        if name.starts_with("moe_ffn_") {
+            let v = nums(name, &["_t", "_h", "_f", "_e", "_k", "_c"])?;
+            return Some(Entry::MoeFfn {
+                t: v[0],
+                h: v[1],
+                f: v[2],
+                e: v[3],
+                k: v[4],
+                c: v[5],
+            });
+        }
+        if name.starts_with("tp_mlp_shard_") {
+            let v = nums(name, &["_t", "_h", "_f"])?;
+            return Some(Entry::TpMlpShard {
+                t: v[0],
+                h: v[1],
+                f: v[2],
+            });
+        }
+        if name.starts_with("tp_attn_shard_") {
+            let v = nums(name, &["_t", "_h", "_nh", "_hd", "_s"])?;
+            return Some(Entry::TpAttnShard {
+                t: v[0],
+                h: v[1],
+                nh: v[2],
+                hd: v[3],
+                s: v[4],
+            });
+        }
+        None
+    }
+
+    /// Canonical name for a GEMM of these dims.
+    pub fn gemm_name(m: usize, k: usize, n: usize) -> String {
+        format!("gemm_{m}x{k}x{n}")
+    }
+
+    pub fn group_gemm_name(e: usize, c: usize, h: usize, f: usize) -> String {
+        format!("group_gemm_e{e}_c{c}_h{h}_f{f}")
+    }
+
+    pub fn decode_partial_name(h: usize, s: usize, d: usize) -> String {
+        format!("decode_partial_h{h}_s{s}_d{d}")
+    }
+
+    pub fn decode_combine_name(h: usize, p: usize, d: usize) -> String {
+        format!("decode_combine_h{h}_p{p}_d{d}")
+    }
+
+    pub fn decode_combine_seg_name(h: usize, p: usize, d: usize) -> String {
+        format!("decode_combine_seg_h{h}_p{p}_d{d}")
+    }
+
+    pub fn moe_ffn_name(t: usize, h: usize, f: usize, e: usize, k: usize, c: usize) -> String {
+        format!("moe_ffn_t{t}_h{h}_f{f}_e{e}_k{k}_c{c}")
+    }
+
+    pub fn tp_mlp_name(t: usize, h: usize, f: usize) -> String {
+        format!("tp_mlp_shard_t{t}_h{h}_f{f}")
+    }
+
+    pub fn tp_attn_name(t: usize, h: usize, nh: usize, hd: usize, s: usize) -> String {
+        format!("tp_attn_shard_t{t}_h{h}_nh{nh}_hd{hd}_s{s}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_gemm() {
+        assert_eq!(
+            Entry::parse(&Entry::gemm_name(64, 128, 32)),
+            Some(Entry::Gemm { m: 64, k: 128, n: 32 })
+        );
+    }
+
+    #[test]
+    fn roundtrip_all_families() {
+        assert_eq!(
+            Entry::parse(&Entry::group_gemm_name(8, 32, 128, 256)),
+            Some(Entry::GroupGemm { e: 8, c: 32, h: 128, f: 256 })
+        );
+        assert_eq!(
+            Entry::parse(&Entry::decode_partial_name(8, 256, 64)),
+            Some(Entry::DecodePartial { h: 8, s: 256, d: 64 })
+        );
+        assert_eq!(
+            Entry::parse(&Entry::decode_combine_name(8, 4, 64)),
+            Some(Entry::DecodeCombine { h: 8, p: 4, d: 64 })
+        );
+        assert_eq!(
+            Entry::parse(&Entry::decode_combine_seg_name(8, 4, 64)),
+            Some(Entry::DecodeCombineSeg { h: 8, p: 4, d: 64 })
+        );
+        assert_eq!(
+            Entry::parse(&Entry::moe_ffn_name(64, 128, 256, 8, 2, 32)),
+            Some(Entry::MoeFfn { t: 64, h: 128, f: 256, e: 8, k: 2, c: 32 })
+        );
+        assert_eq!(
+            Entry::parse(&Entry::tp_mlp_name(8, 256, 128)),
+            Some(Entry::TpMlpShard { t: 8, h: 256, f: 128 })
+        );
+        assert_eq!(
+            Entry::parse(&Entry::tp_attn_name(1, 256, 2, 32, 64)),
+            Some(Entry::TpAttnShard { t: 1, h: 256, nh: 2, hd: 32, s: 64 })
+        );
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert_eq!(Entry::parse("bogus_1x2"), None);
+        assert_eq!(Entry::parse("gemm_1x2"), None);
+        assert_eq!(Entry::parse(""), None);
+    }
+}

@@ -1,0 +1,39 @@
+//! # triton-dist-sim
+//!
+//! Reproduction of **"Triton-distributed: Programming Overlapping Kernels
+//! on Distributed AI Systems with the Triton Compiler"** (ByteDance Seed,
+//! 2025) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator: the paper's programming model
+//!   (symmetric memory, signal exchange, async-tasks), OpenSHMEM-style
+//!   primitives, every overlapping collective of §3, swizzle planners,
+//!   resource partition, the distributed autotuner, and a discrete-event
+//!   cluster simulator standing in for the H800/MI308X/L20 testbeds.
+//! * **L2 (python/compile/model.py)** — JAX compute graphs (GEMM tiles,
+//!   MoE GroupGEMM, flash decoding, TP transformer shards), AOT-lowered
+//!   to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (interpret mode)
+//!   with pure-jnp oracles.
+//!
+//! Python never runs on the request path: `make artifacts` lowers once,
+//! then the Rust binary loads the HLO via PJRT (`runtime`).
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for measured
+//! results.
+
+pub mod autotune;
+pub mod bench;
+pub mod cli;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod kernels;
+pub mod overlap;
+pub mod metrics;
+pub mod runtime;
+pub mod mem;
+pub mod program;
+pub mod shmem;
+pub mod sim;
+pub mod topology;
+pub mod util;

@@ -1,0 +1,224 @@
+//! triton-dist-sim CLI: run any overlapping kernel (and its baselines) on
+//! a simulated cluster, print timelines and figure-style reports.
+
+use triton_dist_sim::cli::Args;
+use triton_dist_sim::config::{ClusterSpec, GemmShape, MoeShape};
+use triton_dist_sim::coordinator::{self, ag_gemm, flash_decode, gemm_rs, moe};
+use triton_dist_sim::metrics;
+use triton_dist_sim::overlap::features;
+use triton_dist_sim::runtime::HybridExecutor;
+use triton_dist_sim::topology::Topology;
+use triton_dist_sim::util::stats::fmt_time;
+
+const USAGE: &str = "\
+triton-dist-sim — Triton-distributed reproduction on a simulated cluster
+
+USAGE: triton-dist-sim <command> [options]
+
+COMMANDS:
+  features                    print the Table-2 optimization matrix
+  ag-gemm                     run AG+GEMM (ours vs nccl vs flux)
+  gemm-rs                     run GEMM+RS (ours vs nccl vs flux)
+  ag-moe                      run AG+MoE (ours vs pytorch)
+  flash-decode                run distributed flash decoding
+  timeline                    print an ASCII timeline of AG+GEMM
+  artifacts                   list loaded AOT artifacts (PJRT manifest)
+
+COMMON OPTIONS:
+  --nodes N       (default 1)        --gpus N   per node (default 8)
+  --hw  h800|mi308x|l20 (default h800)
+  --m/--n/--k     GEMM dims          --trace    write chrome trace JSON
+  --numeric       run real numerics through PJRT/native executors
+";
+
+fn cluster_from(args: &Args) -> Result<ClusterSpec, String> {
+    let nodes = args.usize_or("nodes", 1)?;
+    let gpus = args.usize_or("gpus", 8)?;
+    Ok(match args.get_or("hw", "h800") {
+        "h800" => ClusterSpec::h800(nodes, gpus),
+        "mi308x" => ClusterSpec::mi308x(gpus),
+        "l20" => ClusterSpec::l20(nodes, gpus),
+        other => return Err(format!("unknown --hw '{other}'")),
+    })
+}
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<(), String> {
+    match args.subcommand.as_deref() {
+        None | Some("help") => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some("features") => {
+            println!("{}", features::render_table2());
+            Ok(())
+        }
+        Some("artifacts") => {
+            match triton_dist_sim::runtime::XlaRuntime::try_default() {
+                Some(rt) => {
+                    println!("loaded artifacts:");
+                    for n in rt.entry_names() {
+                        println!("  {n}");
+                    }
+                }
+                None => println!("no artifacts found (run `make artifacts`)"),
+            }
+            Ok(())
+        }
+        Some("ag-gemm") => {
+            let cluster = cluster_from(args)?;
+            let ws = cluster.world_size();
+            let m = args.usize_or("m", 512 * ws)?;
+            let n = args.usize_or("n", 1024)?;
+            let k = args.usize_or("k", 2048)?;
+            let shape = GemmShape::new(m, n, k);
+            let topo = Topology::build(cluster);
+            let mut report = metrics::FigureReport::new("AG+GEMM");
+            let variants: Vec<ag_gemm::AgGemmVariant> = if cluster.nodes > 1 {
+                vec![ag_gemm::AgGemmVariant::OursInter, ag_gemm::AgGemmVariant::Nccl]
+            } else if matches!(cluster.hw.kind, triton_dist_sim::config::HardwareKind::MI308X) {
+                vec![
+                    ag_gemm::AgGemmVariant::OursAmd { sub_chunks: 4 },
+                    ag_gemm::AgGemmVariant::Nccl,
+                ]
+            } else {
+                vec![
+                    ag_gemm::AgGemmVariant::OursPush,
+                    ag_gemm::AgGemmVariant::Nccl,
+                    ag_gemm::AgGemmVariant::Flux,
+                ]
+            };
+            let mut ours = 0.0;
+            let mut baselines = Vec::new();
+            for v in variants {
+                let (mut op, bufs) = ag_gemm::build(cluster, shape, v);
+                let t = if args.flag("numeric") {
+                    ag_gemm::fill_inputs(&mut op.heap, &bufs, 1);
+                    let reference = ag_gemm::reference_output(&op.heap, &bufs);
+                    let mut exec = HybridExecutor::auto();
+                    let rep = coordinator::run_numeric(&mut op, &topo, &mut exec);
+                    ag_gemm::verify(&op.heap, &bufs, &reference)?;
+                    println!(
+                        "numerics OK ({} xla calls, {} native)",
+                        exec.xla_calls, exec.native_calls
+                    );
+                    rep.makespan
+                } else {
+                    coordinator::run_timing(&mut op, &topo)
+                };
+                println!("{:<24} {}", op.name, fmt_time(t));
+                if op.name.contains("ours") && ours == 0.0 {
+                    ours = t;
+                } else {
+                    baselines.push((op.name.clone(), t));
+                }
+            }
+            report.push(metrics::SpeedupRow {
+                workload: format!("M{m} N{n} K{k} ws{ws}"),
+                ours,
+                baselines,
+            });
+            println!("{}", report.render());
+            Ok(())
+        }
+        Some("gemm-rs") => {
+            let cluster = cluster_from(args)?;
+            let ws = cluster.world_size();
+            let m = args.usize_or("m", 512 * ws)?;
+            let n = args.usize_or("n", 1024)?;
+            let k = args.usize_or("k", 2048)?;
+            let shape = GemmShape::new(m, n, k);
+            let topo = Topology::build(cluster);
+            let variants = if cluster.nodes > 1 {
+                vec![gemm_rs::GemmRsVariant::OursInter, gemm_rs::GemmRsVariant::Nccl]
+            } else {
+                vec![
+                    gemm_rs::GemmRsVariant::OursIntra,
+                    gemm_rs::GemmRsVariant::Nccl,
+                    gemm_rs::GemmRsVariant::Flux,
+                ]
+            };
+            for v in variants {
+                let (mut op, _b) = gemm_rs::build(cluster, shape, v);
+                let t = coordinator::run_timing(&mut op, &topo);
+                println!("{:<24} {}", op.name, fmt_time(t));
+            }
+            Ok(())
+        }
+        Some("ag-moe") => {
+            let cluster = cluster_from(args)?;
+            let shape = MoeShape {
+                tokens_per_rank: args.usize_or("tokens", 256)?,
+                in_hidden: args.usize_or("in-hidden", 2048)?,
+                out_hidden: args.usize_or("out-hidden", 1408)?,
+                experts: args.usize_or("experts", 60)?,
+                topk: args.usize_or("topk", 4)?,
+            };
+            let topo = Topology::build(cluster);
+            for v in [moe::MoeVariant::Ours, moe::MoeVariant::Torch] {
+                let (mut op, _b) = moe::build_ag_moe(cluster, shape, v);
+                let t = coordinator::run_timing(&mut op, &topo);
+                println!("{:<24} {}", op.name, fmt_time(t));
+            }
+            Ok(())
+        }
+        Some("flash-decode") => {
+            let cluster = cluster_from(args)?;
+            let cfg = flash_decode::FlashDecodeCfg {
+                heads: args.usize_or("heads", 8)?,
+                head_dim: args.usize_or("head-dim", 64)?,
+                kv_per_rank: args.usize_or("kv", 32 * 1024)?,
+                numeric: false,
+            };
+            let topo = Topology::build(cluster);
+            let (mut op, _b) = flash_decode::build(cluster, cfg);
+            let t = coordinator::run_timing(&mut op, &topo);
+            let bw = flash_decode::achieved_bw(&cfg, &cluster, t);
+            println!(
+                "{} latency={} achieved-bw={:.2} TB/s per GPU",
+                op.name,
+                fmt_time(t),
+                bw / 1e12
+            );
+            Ok(())
+        }
+        Some("timeline") => {
+            let cluster = cluster_from(args)?;
+            let shape = GemmShape::new(
+                args.usize_or("m", 64 * cluster.world_size())?,
+                args.usize_or("n", 64)?,
+                args.usize_or("k", 64)?,
+            );
+            let topo = Topology::build(cluster);
+            let (mut op, bufs) = ag_gemm::build(cluster, shape, ag_gemm::AgGemmVariant::OursPush);
+            ag_gemm::fill_inputs(&mut op.heap, &bufs, 3);
+            let mut exec = HybridExecutor::auto();
+            let rep = coordinator::run_traced(&mut op, &topo, &mut exec);
+            println!("{}", metrics::ascii_timeline(&rep, 100));
+            if args.flag("trace") {
+                let path = "trace.json";
+                std::fs::write(path, metrics::chrome_trace(&rep)).map_err(|e| e.to_string())?;
+                println!("wrote {path}");
+            }
+            Ok(())
+        }
+        Some(other) => Err(format!("unknown command '{other}'\n{USAGE}")),
+    }
+}

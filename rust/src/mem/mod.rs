@@ -1,0 +1,258 @@
+//! Symmetric memory (§2.1).
+//!
+//! Every rank allocates buffers of identical sizes in the same order, so a
+//! `BufId` names "the same" buffer on every rank — exactly the OpenSHMEM /
+//! NVSHMEM symmetric-heap contract. There is **no** unified address space:
+//! remote data is only reachable through the `shmem` primitives, which the
+//! DES engine turns into flows + real `memcpy`s between rank shards.
+//!
+//! Storage is always `f32` (numerics); the *timing* byte-size of a transfer
+//! is `elements * workload-dtype-size`, so bf16 workloads are timed as
+//! 2-byte payloads while correctness is checked in f32 (DESIGN.md §2).
+//!
+//! Each rank also owns a signal pad: a `u64` array in symmetric memory
+//! manipulated only through signal ops (§2.1 "Signal Exchange").
+
+/// Identifies a symmetric buffer (same id on every rank).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BufId(pub usize);
+
+/// A contiguous element range of one rank's copy of a symmetric buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Slice {
+    pub rank: usize,
+    pub buf: BufId,
+    /// Element offset.
+    pub off: usize,
+    /// Element count.
+    pub len: usize,
+}
+
+impl Slice {
+    pub fn new(rank: usize, buf: BufId, off: usize, len: usize) -> Self {
+        Slice { rank, buf, off, len }
+    }
+
+    /// The whole buffer `buf` on `rank` (length resolved by the heap).
+    pub fn sub(&self, off: usize, len: usize) -> Slice {
+        assert!(off + len <= self.len, "sub-slice out of range");
+        Slice {
+            rank: self.rank,
+            buf: self.buf,
+            off: self.off + off,
+            len,
+        }
+    }
+
+    /// Same range viewed on another rank's copy (symmetric addressing —
+    /// the analogue of `remote_ptr`).
+    pub fn on_rank(&self, rank: usize) -> Slice {
+        Slice { rank, ..*self }
+    }
+}
+
+/// The symmetric heap for a whole simulated world.
+pub struct SymmetricHeap {
+    world: usize,
+    /// `data[rank][buf]` -> storage.
+    data: Vec<Vec<Vec<f32>>>,
+    /// Buffer names for diagnostics.
+    names: Vec<String>,
+    /// `signals[rank][idx]`.
+    signals: Vec<Vec<u64>>,
+}
+
+impl SymmetricHeap {
+    pub fn new(world: usize, signal_pad: usize) -> Self {
+        SymmetricHeap {
+            world,
+            data: (0..world).map(|_| Vec::new()).collect(),
+            names: Vec::new(),
+            signals: (0..world).map(|_| vec![0u64; signal_pad]).collect(),
+        }
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn signal_pad(&self) -> usize {
+        self.signals[0].len()
+    }
+
+    /// Collective allocation: every rank gets a zero-filled buffer of
+    /// `len` elements; returns the symmetric id.
+    pub fn alloc(&mut self, name: &str, len: usize) -> BufId {
+        for r in 0..self.world {
+            self.data[r].push(vec![0.0f32; len]);
+        }
+        self.names.push(name.to_string());
+        BufId(self.names.len() - 1)
+    }
+
+    pub fn buf_len(&self, buf: BufId) -> usize {
+        self.data[0][buf.0].len()
+    }
+
+    pub fn buf_name(&self, buf: BufId) -> &str {
+        &self.names[buf.0]
+    }
+
+    /// Read-only view of one rank's slice.
+    pub fn read(&self, s: Slice) -> &[f32] {
+        &self.data[s.rank][s.buf.0][s.off..s.off + s.len]
+    }
+
+    /// Overwrite one rank's slice.
+    pub fn write(&mut self, s: Slice, values: &[f32]) {
+        assert_eq!(values.len(), s.len, "write length mismatch");
+        self.data[s.rank][s.buf.0][s.off..s.off + s.len].copy_from_slice(values);
+    }
+
+    /// memcpy `src -> dst` across (or within) ranks. This is the numeric
+    /// payload of every put/get/copy op.
+    pub fn copy(&mut self, src: Slice, dst: Slice) {
+        assert_eq!(src.len, dst.len, "copy length mismatch");
+        if src.rank == dst.rank && src.buf == dst.buf {
+            // same buffer: honour overlap via a temp
+            let tmp: Vec<f32> = self.read(src).to_vec();
+            self.write(dst, &tmp);
+            return;
+        }
+        // split borrow: ranks or buffers differ
+        let tmp: Vec<f32> = self.read(src).to_vec();
+        self.write(dst, &tmp);
+    }
+
+    /// Accumulate `src` into `dst` (`dst += src`) — the reduction payload.
+    pub fn reduce_add(&mut self, src: Slice, dst: Slice) {
+        assert_eq!(src.len, dst.len, "reduce length mismatch");
+        let tmp: Vec<f32> = self.read(src).to_vec();
+        let d = &mut self.data[dst.rank][dst.buf.0][dst.off..dst.off + dst.len];
+        for (o, v) in d.iter_mut().zip(tmp.iter()) {
+            *o += v;
+        }
+    }
+
+    // ---- signals ---------------------------------------------------------
+    //
+    // The signal pad auto-grows: programs compute signal indices from
+    // geometry (channels x segments etc.) and sizing every call site is
+    // error-prone. Growth is deterministic and zero-initialized.
+
+    fn grow(&mut self, idx: usize) {
+        if idx >= self.signals[0].len() {
+            for pad in &mut self.signals {
+                pad.resize(idx + 1, 0);
+            }
+        }
+    }
+
+    pub fn signal(&self, rank: usize, idx: usize) -> u64 {
+        self.signals[rank].get(idx).copied().unwrap_or(0)
+    }
+
+    pub fn signal_set(&mut self, rank: usize, idx: usize, v: u64) {
+        self.grow(idx);
+        self.signals[rank][idx] = v;
+    }
+
+    pub fn signal_add(&mut self, rank: usize, idx: usize, v: u64) -> u64 {
+        self.grow(idx);
+        self.signals[rank][idx] += v;
+        self.signals[rank][idx]
+    }
+
+    /// Atomic compare-and-swap on a signal; returns the previous value.
+    pub fn signal_cas(&mut self, rank: usize, idx: usize, expect: u64, new: u64) -> u64 {
+        self.grow(idx);
+        let cur = self.signals[rank][idx];
+        if cur == expect {
+            self.signals[rank][idx] = new;
+        }
+        cur
+    }
+
+    /// Reset every signal on every rank to zero — required between
+    /// autotuner trials (§3.8: "we need to reset all the signals every
+    /// time we profile the generated code").
+    pub fn reset_signals(&mut self) {
+        for pad in &mut self.signals {
+            pad.iter_mut().for_each(|s| *s = 0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_is_symmetric() {
+        let mut h = SymmetricHeap::new(4, 8);
+        let b = h.alloc("t", 16);
+        for r in 0..4 {
+            assert_eq!(h.read(Slice::new(r, b, 0, 16)).len(), 16);
+        }
+        assert_eq!(h.buf_name(b), "t");
+        assert_eq!(h.buf_len(b), 16);
+    }
+
+    #[test]
+    fn copy_moves_data_between_ranks() {
+        let mut h = SymmetricHeap::new(2, 4);
+        let b = h.alloc("x", 4);
+        h.write(Slice::new(0, b, 0, 4), &[1.0, 2.0, 3.0, 4.0]);
+        h.copy(Slice::new(0, b, 1, 2), Slice::new(1, b, 0, 2));
+        assert_eq!(h.read(Slice::new(1, b, 0, 4)), &[2.0, 3.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn overlapping_same_buffer_copy_is_safe() {
+        let mut h = SymmetricHeap::new(1, 1);
+        let b = h.alloc("x", 4);
+        h.write(Slice::new(0, b, 0, 4), &[1.0, 2.0, 3.0, 4.0]);
+        h.copy(Slice::new(0, b, 0, 2), Slice::new(0, b, 1, 2));
+        assert_eq!(h.read(Slice::new(0, b, 0, 4)), &[1.0, 1.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn reduce_add_accumulates() {
+        let mut h = SymmetricHeap::new(2, 1);
+        let b = h.alloc("x", 2);
+        h.write(Slice::new(0, b, 0, 2), &[1.0, 2.0]);
+        h.write(Slice::new(1, b, 0, 2), &[10.0, 20.0]);
+        h.reduce_add(Slice::new(0, b, 0, 2), Slice::new(1, b, 0, 2));
+        assert_eq!(h.read(Slice::new(1, b, 0, 2)), &[11.0, 22.0]);
+    }
+
+    #[test]
+    fn signal_ops() {
+        let mut h = SymmetricHeap::new(2, 4);
+        h.signal_set(1, 2, 7);
+        assert_eq!(h.signal(1, 2), 7);
+        assert_eq!(h.signal_add(1, 2, 3), 10);
+        assert_eq!(h.signal_cas(1, 2, 10, 1), 10);
+        assert_eq!(h.signal(1, 2), 1);
+        assert_eq!(h.signal_cas(1, 2, 10, 5), 1); // no-op, expect mismatch
+        assert_eq!(h.signal(1, 2), 1);
+        h.reset_signals();
+        assert_eq!(h.signal(1, 2), 0);
+    }
+
+    #[test]
+    fn slice_sub_and_on_rank() {
+        let s = Slice::new(0, BufId(3), 10, 20);
+        let t = s.sub(5, 10);
+        assert_eq!((t.off, t.len), (15, 10));
+        let u = t.on_rank(2);
+        assert_eq!(u.rank, 2);
+        assert_eq!((u.off, u.len, u.buf), (15, 10, BufId(3)));
+    }
+
+    #[test]
+    #[should_panic]
+    fn sub_out_of_range_panics() {
+        Slice::new(0, BufId(0), 0, 4).sub(2, 4);
+    }
+}

@@ -1,0 +1,270 @@
+//! Report layer: speedup tables (the figures' rows), Fig.-1-style geomean
+//! summaries, ASCII timelines and chrome-trace export.
+
+use std::fmt::Write as _;
+
+use crate::sim::{OpSpan, SimReport};
+use crate::util::stats::{fmt_time, geomean};
+use crate::util::Table;
+
+/// One workload's results: ours vs named baselines (latencies in s).
+#[derive(Debug, Clone)]
+pub struct SpeedupRow {
+    pub workload: String,
+    pub ours: f64,
+    pub baselines: Vec<(String, f64)>,
+}
+
+impl SpeedupRow {
+    pub fn speedup_vs(&self, name: &str) -> Option<f64> {
+        self.baselines
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, t)| t / self.ours)
+    }
+}
+
+/// A figure/table reproduction: rows + printing.
+#[derive(Debug, Clone, Default)]
+pub struct FigureReport {
+    pub title: String,
+    pub rows: Vec<SpeedupRow>,
+}
+
+impl FigureReport {
+    pub fn new(title: &str) -> Self {
+        FigureReport {
+            title: title.to_string(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: SpeedupRow) {
+        self.rows.push(row);
+    }
+
+    /// Baseline names in first-row order.
+    pub fn baseline_names(&self) -> Vec<String> {
+        self.rows
+            .first()
+            .map(|r| r.baselines.iter().map(|(n, _)| n.clone()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Geomean speedup vs one baseline across rows (the paper's "average
+    /// speedup").
+    pub fn avg_speedup(&self, baseline: &str) -> f64 {
+        let s: Vec<f64> = self
+            .rows
+            .iter()
+            .filter_map(|r| r.speedup_vs(baseline))
+            .collect();
+        geomean(&s)
+    }
+
+    /// Render as an aligned table with per-baseline speedup columns.
+    pub fn render(&self) -> String {
+        let names = self.baseline_names();
+        let mut header = vec!["workload".to_string(), "ours".to_string()];
+        for n in &names {
+            header.push(n.clone());
+            header.push(format!("vs {n}"));
+        }
+        let mut t = Table::new(&self.title).header(&header);
+        for row in &self.rows {
+            let mut cells = vec![row.workload.clone(), fmt_time(row.ours)];
+            for n in &names {
+                let b = row.baselines.iter().find(|(bn, _)| bn == n);
+                match b {
+                    Some((_, lat)) => {
+                        cells.push(fmt_time(*lat));
+                        cells.push(format!("{:.2}x", lat / row.ours));
+                    }
+                    None => {
+                        cells.push("-".into());
+                        cells.push("-".into());
+                    }
+                }
+            }
+            t.row(&cells);
+        }
+        let mut out = t.render();
+        for n in &names {
+            let _ = writeln!(out, "avg speedup vs {n}: {:.2}x", self.avg_speedup(n));
+        }
+        out
+    }
+}
+
+/// Fig. 1: one bar per workload family — geomean speedup vs the
+/// PyTorch+NCCL/RCCL baseline.
+pub fn fig1_summary(reports: &[(&str, f64)]) -> String {
+    let mut t = Table::new("Fig. 1: Average Speedup of Triton-distributed to Baselines")
+        .header(&["workload", "avg speedup", "bar"]);
+    for (name, s) in reports {
+        let bar = "#".repeat(((s.log10() * 20.0).max(1.0)) as usize);
+        t.row(&[name.to_string(), format!("{s:.2}x"), bar]);
+    }
+    t.render()
+}
+
+// ---------------------------------------------------------------------------
+// timelines
+// ---------------------------------------------------------------------------
+
+/// Render an ASCII timeline of op spans (one lane per task), like the
+/// paper's Fig. 3/5/9 timing diagrams.
+pub fn ascii_timeline(report: &SimReport, width: usize) -> String {
+    if report.op_spans.is_empty() {
+        return "(no spans; run with trace enabled)".into();
+    }
+    let t_end = report.makespan.max(1e-12);
+    let mut lanes: std::collections::BTreeMap<String, Vec<&OpSpan>> = Default::default();
+    for s in &report.op_spans {
+        lanes
+            .entry(format!("r{} {}", s.rank, s.task_name))
+            .or_default()
+            .push(s);
+    }
+    let name_w = lanes.keys().map(|k| k.len()).max().unwrap_or(8).min(28);
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "timeline 0 .. {} ({} lanes)",
+        fmt_time(t_end),
+        lanes.len()
+    );
+    for (name, spans) in lanes {
+        let mut row = vec![' '; width];
+        for s in spans {
+            let a = ((s.t0 / t_end) * width as f64) as usize;
+            let b = (((s.t1 / t_end) * width as f64) as usize).min(width.saturating_sub(1));
+            let ch = span_char(&s.label);
+            for c in row.iter_mut().take(b + 1).skip(a.min(width - 1)) {
+                *c = ch;
+            }
+        }
+        let label: String = name.chars().take(name_w).collect();
+        let _ = writeln!(out, "{label:<name_w$} |{}|", row.iter().collect::<String>());
+    }
+    out.push_str("legend: g=gemm c=copy/put r=reduce l=ll/multimem w=wait .=other\n");
+    out
+}
+
+fn span_char(label: &str) -> char {
+    if label.contains("gemm") || label.contains("moe") || label.contains("decode_partial") {
+        'g'
+    } else if label.contains("put") || label.contains("copy") || label.contains("get") {
+        'c'
+    } else if label.contains("reduce") {
+        'r'
+    } else if label.contains("ll") || label.contains("multimem") {
+        'l'
+    } else if label.contains("wait") || label.contains("barrier") {
+        'w'
+    } else {
+        '.'
+    }
+}
+
+/// Export op spans as a chrome://tracing JSON document.
+pub fn chrome_trace(report: &SimReport) -> String {
+    use crate::util::json::Json;
+    let mut events = Vec::new();
+    for s in &report.op_spans {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("name".into(), Json::Str(s.label.clone()));
+        obj.insert("cat".into(), Json::Str("op".into()));
+        obj.insert("ph".into(), Json::Str("X".into()));
+        obj.insert("ts".into(), Json::Num(s.t0 * 1e6));
+        obj.insert("dur".into(), Json::Num((s.t1 - s.t0) * 1e6));
+        obj.insert("pid".into(), Json::Num(s.rank as f64));
+        obj.insert("tid".into(), Json::Num(s.task as f64));
+        let mut args = std::collections::BTreeMap::new();
+        args.insert("task".into(), Json::Str(s.task_name.clone()));
+        obj.insert("args".into(), Json::Obj(args));
+        events.push(Json::Obj(obj));
+    }
+    let mut root = std::collections::BTreeMap::new();
+    root.insert("traceEvents".into(), Json::Arr(events));
+    root.insert("displayTimeUnit".into(), Json::Str("ns".into()));
+    Json::Obj(root).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_report() -> SimReport {
+        SimReport {
+            makespan: 10e-6,
+            op_spans: vec![
+                OpSpan {
+                    task: 0,
+                    rank: 0,
+                    task_name: "gemm".into(),
+                    label: "gemm_chunk".into(),
+                    t0: 0.0,
+                    t1: 5e-6,
+                },
+                OpSpan {
+                    task: 1,
+                    rank: 0,
+                    task_name: "scatter".into(),
+                    label: "putmem_signal".into(),
+                    t0: 2e-6,
+                    t1: 8e-6,
+                },
+            ],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn speedup_math() {
+        let row = SpeedupRow {
+            workload: "w".into(),
+            ours: 1.0,
+            baselines: vec![("nccl".into(), 2.0), ("flux".into(), 1.5)],
+        };
+        assert_eq!(row.speedup_vs("nccl"), Some(2.0));
+        assert_eq!(row.speedup_vs("none"), None);
+    }
+
+    #[test]
+    fn figure_report_renders_and_averages() {
+        let mut f = FigureReport::new("demo");
+        for ours in [1.0, 2.0] {
+            f.push(SpeedupRow {
+                workload: format!("m{ours}"),
+                ours,
+                baselines: vec![("nccl".into(), ours * 2.0)],
+            });
+        }
+        assert!((f.avg_speedup("nccl") - 2.0).abs() < 1e-12);
+        let s = f.render();
+        assert!(s.contains("avg speedup vs nccl: 2.00x"));
+        assert!(s.contains("2.00x"));
+    }
+
+    #[test]
+    fn timeline_renders_lanes() {
+        let s = ascii_timeline(&demo_report(), 40);
+        assert!(s.contains("r0 gemm"));
+        assert!(s.contains('g'));
+        assert!(s.contains('c'));
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json() {
+        let s = chrome_trace(&demo_report());
+        let doc = crate::util::json::parse(&s).unwrap();
+        assert_eq!(doc.get("traceEvents").as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn fig1_summary_renders() {
+        let s = fig1_summary(&[("AG+GEMM", 1.42), ("AG+MoE", 44.97)]);
+        assert!(s.contains("44.97x"));
+    }
+}

@@ -1,0 +1,8 @@
+//! Overlapping machinery: tile swizzles (§3.7), resource partition
+//! (§3.8), and the Table-2 optimization matrix.
+
+pub mod features;
+pub mod partition;
+pub mod swizzle;
+
+pub use partition::{plan_inter_ag, plan_inter_rs, plan_intra_ag, Partition};

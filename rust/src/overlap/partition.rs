@@ -1,0 +1,149 @@
+//! Resource partition (§3.8): spatially mapping compute and communication
+//! onto disjoint processing units so every async-task finishes together
+//! ("avoid long tails").
+
+use crate::config::HardwareModel;
+
+/// SM budget split for an inter-node GEMM+RS-style overlapping kernel
+/// (Fig. 9's 116/copy-engine/1/16/132 assignment on H800).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Partition {
+    /// SMs for the producer/consumer GEMM.
+    pub gemm_sms: u32,
+    /// SMs for the inter-node P2P block.
+    pub p2p_sms: u32,
+    /// SMs for the per-iteration local reduction.
+    pub reduce1_sms: u32,
+    /// SMs for the final reduction (after GEMM completes, full device).
+    pub reduce2_sms: u32,
+}
+
+/// §3.5's bandwidth-balance sizing: the local reduction must keep up with
+/// the intra-node scatter minus the P2P drain:
+///
+/// ```text
+/// scatter time  = (lws-1) * B / intra_bw
+/// p2p time      = B / nic_bw
+/// reduce budget = scatter - p2p  =>  reduce_bw >= bytes_red / budget
+/// ```
+///
+/// On H800 that threshold is ~470 GB/s => <= 15 SMs.
+pub fn reduce_sms_for_balance(hw: &HardwareModel, lws: usize) -> u32 {
+    let b = 1.0; // per-rank chunk volume cancels out
+    let scatter_t = (lws as f64 - 1.0) * b / hw.intra_bw;
+    let p2p_t = b / hw.nic_bw;
+    // When scatter dominates (the paper's 8xH800 case) the reduction must
+    // fit in scatter_t - p2p_t. When the NIC dominates, the reduction only
+    // needs to hide under a fraction of the P2P window.
+    let budget = (scatter_t - p2p_t).max(0.3 * p2p_t);
+    // the reduction reads lws copies and writes one (~lws * B bytes moved)
+    let need_bw = lws as f64 * b / budget;
+    let sms = (need_bw / hw.sm_reduce_bw).ceil() as u32;
+    sms.clamp(1, hw.sms / 4)
+}
+
+/// The paper's inter-node GEMM+RS partition on a given device.
+pub fn plan_inter_rs(hw: &HardwareModel, lws: usize) -> Partition {
+    let reduce1 = reduce_sms_for_balance(hw, lws);
+    let p2p = 1;
+    let gemm = hw.sms - reduce1 - p2p;
+    Partition {
+        gemm_sms: gemm,
+        p2p_sms: p2p,
+        reduce1_sms: reduce1,
+        reduce2_sms: hw.sms,
+    }
+}
+
+/// Intra-node AG+GEMM partition: communication is entirely on the copy
+/// engine, so the GEMM owns the whole device.
+pub fn plan_intra_ag(hw: &HardwareModel) -> Partition {
+    Partition {
+        gemm_sms: hw.sms,
+        p2p_sms: 0,
+        reduce1_sms: 0,
+        reduce2_sms: 0,
+    }
+}
+
+/// Inter-node AG+GEMM: `lws-1 + n_nodes-1` one-SM comm blocks (Fig. 4
+/// grid) + the GEMM on the rest.
+pub fn plan_inter_ag(hw: &HardwareModel, lws: usize, n_nodes: usize) -> Partition {
+    let comm = (lws - 1 + n_nodes - 1) as u32;
+    Partition {
+        gemm_sms: hw.sms - comm,
+        p2p_sms: comm,
+        reduce1_sms: 0,
+        reduce2_sms: 0,
+    }
+}
+
+impl Partition {
+    /// Concurrent phase-1 demand must fit the device (§3.8's constraint).
+    pub fn fits(&self, hw: &HardwareModel) -> bool {
+        self.gemm_sms + self.p2p_sms + self.reduce1_sms <= hw.sms
+            && self.reduce2_sms <= hw.sms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareModel;
+
+    #[test]
+    fn h800_matches_paper_numbers() {
+        let hw = HardwareModel::h800();
+        let p = plan_inter_rs(&hw, 8);
+        // §3.5/§3.8: no more than 15 SMs for the overlapped reduction,
+        // 1 SM for P2P, GEMM keeps ~116.
+        assert!(p.reduce1_sms <= 15, "{p:?}");
+        assert_eq!(p.p2p_sms, 1);
+        assert!(p.gemm_sms >= 116, "{p:?}");
+        assert_eq!(p.reduce2_sms, 132);
+        assert!(p.fits(&hw));
+    }
+
+    #[test]
+    fn balance_budget_always_positive_and_fits() {
+        for hw in [
+            HardwareModel::h800(),
+            HardwareModel::mi308x(),
+            HardwareModel::l20(),
+        ] {
+            for lws in [2usize, 4, 8, 16] {
+                let sms = reduce_sms_for_balance(&hw, lws);
+                assert!(sms >= 1 && sms <= hw.sms / 4, "{:?} lws={lws}: {sms}", hw.kind);
+            }
+        }
+    }
+
+    #[test]
+    fn intra_ag_gives_gemm_everything() {
+        let hw = HardwareModel::h800();
+        let p = plan_intra_ag(&hw);
+        assert_eq!(p.gemm_sms, 132);
+        assert_eq!(p.p2p_sms, 0);
+    }
+
+    #[test]
+    fn inter_ag_matches_fig4_grid() {
+        let hw = HardwareModel::h800();
+        let p = plan_inter_ag(&hw, 8, 2);
+        assert_eq!(p.p2p_sms, 8); // lws-1 + n_nodes-1 = 7 + 1
+        assert_eq!(p.gemm_sms, 124);
+        assert!(p.fits(&hw));
+    }
+
+    #[test]
+    fn partitions_fit_all_hw() {
+        for hw in [
+            HardwareModel::h800(),
+            HardwareModel::mi308x(),
+            HardwareModel::l20(),
+        ] {
+            assert!(plan_inter_rs(&hw, 8).fits(&hw), "{:?}", hw.kind);
+            assert!(plan_intra_ag(&hw).fits(&hw));
+        }
+    }
+}

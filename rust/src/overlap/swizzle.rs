@@ -1,0 +1,198 @@
+//! Tile-swizzle planners (§3.7, Figs. 7, 8, 10).
+//!
+//! A swizzle is the order in which a consumer kernel visits data *chunks*
+//! (per-rank segments of the gathered/ scattered buffer). The right order
+//! makes each chunk's computation start the moment its communication
+//! lands, so the kernel never stalls: the paper's core overlap mechanism.
+
+/// Chunk visit order for intra-node AG+GEMM on NVSwitch (Fig. 7, push
+/// mode): start from the local chunk, then follow the *arrival* order of
+/// the push AllGather — peer `r-1`'s shard arrives first (it sends to
+/// `r` in its first step), then `r-2`, etc.
+pub fn nv_push_order(rank: usize, ws: usize) -> Vec<usize> {
+    let mut order = Vec::with_capacity(ws);
+    for i in 0..ws {
+        order.push((rank + ws - i) % ws);
+    }
+    order
+}
+
+/// Chunk visit order for pull-mode AG+GEMM (Fig. 7, pull): rank `r`
+/// pulls `r+1, r+2, ...` itself, so compute follows ascending order.
+pub fn nv_pull_order(rank: usize, ws: usize) -> Vec<usize> {
+    (0..ws).map(|i| (rank + i) % ws).collect()
+}
+
+/// No-swizzle baseline: every rank walks chunks `0, 1, 2, ...` — what a
+/// topology-unaware consumer does (head-of-line blocking on chunk 0).
+pub fn identity_order(_rank: usize, ws: usize) -> Vec<usize> {
+    (0..ws).collect()
+}
+
+/// AMD full-mesh AG+GEMM swizzle (Fig. 8): chunks are split into
+/// `sub_chunks`; step 0 computes the local chunk while step-1 sub-chunks
+/// are gathered from *all* peers at once; each later step computes one
+/// sub-chunk slice across all peers. Returns `(chunk, sub)` pairs in
+/// visit order.
+pub fn amd_subchunk_order(rank: usize, ws: usize, sub_chunks: usize) -> Vec<(usize, usize)> {
+    let mut order = Vec::with_capacity(ws * sub_chunks);
+    // local chunk first (all its sub-chunks are resident)
+    for s in 0..sub_chunks {
+        order.push((rank, s));
+    }
+    // then sub-chunk s of every peer, peers rank-shifted for link balance
+    for s in 0..sub_chunks {
+        for i in 1..ws {
+            order.push(((rank + i) % ws, s));
+        }
+    }
+    order
+}
+
+/// Inter-node GEMM+RS chunk order (Fig. 10): each rank starts computing
+/// the chunks *the other node needs* (so inter-node P2P starts early) and
+/// within a node group starts at `local_rank + 1` (so the local copy of
+/// the intra-node scatter lands last). Returns global chunk ids in
+/// compute order.
+pub fn inter_rs_order(rank: usize, nodes: usize, lws: usize) -> Vec<usize> {
+    let node = rank / lws;
+    let lr = rank % lws;
+    let mut order = Vec::with_capacity(nodes * lws);
+    for i in 0..nodes {
+        let tn = (node + 1 + i) % nodes; // other nodes first
+        for j in 0..lws {
+            let tlr = (lr + 1 + j) % lws; // own chunk last within the group
+            order.push(tn * lws + tlr);
+        }
+    }
+    order
+}
+
+/// Inter-NUMA swizzle (Table 2 row 3): reorder a peer walk so consecutive
+/// transfers alternate NUMA domains, spreading load across host links
+/// (PCIe systems). `numa_of` maps rank -> NUMA domain.
+pub fn numa_interleave(peers: &[usize], numa_of: impl Fn(usize) -> usize) -> Vec<usize> {
+    let mut by_numa: std::collections::BTreeMap<usize, std::collections::VecDeque<usize>> =
+        Default::default();
+    for &p in peers {
+        by_numa.entry(numa_of(p)).or_default().push_back(p);
+    }
+    let mut out = Vec::with_capacity(peers.len());
+    while out.len() < peers.len() {
+        for q in by_numa.values_mut() {
+            if let Some(p) = q.pop_front() {
+                out.push(p);
+            }
+        }
+    }
+    out
+}
+
+/// Validity check used by property tests: a swizzle must visit every
+/// chunk exactly once.
+pub fn is_permutation(order: &[usize], n: usize) -> bool {
+    if order.len() != n {
+        return false;
+    }
+    let mut seen = vec![false; n];
+    for &c in order {
+        if c >= n || seen[c] {
+            return false;
+        }
+        seen[c] = true;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn push_order_starts_local_follows_arrivals() {
+        assert_eq!(nv_push_order(0, 4), vec![0, 3, 2, 1]);
+        assert_eq!(nv_push_order(2, 4), vec![2, 1, 0, 3]);
+    }
+
+    #[test]
+    fn pull_order_ascends_from_local() {
+        assert_eq!(nv_pull_order(1, 4), vec![1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn orders_are_permutations() {
+        check("swizzle permutations", 128, |g| {
+            let ws = g.usize_in(1, 17);
+            let r = g.usize_in(0, ws);
+            assert!(is_permutation(&nv_push_order(r, ws), ws));
+            assert!(is_permutation(&nv_pull_order(r, ws), ws));
+            assert!(is_permutation(&identity_order(r, ws), ws));
+        });
+    }
+
+    #[test]
+    fn first_chunk_is_always_local() {
+        check("local first", 64, |g| {
+            let ws = g.usize_in(1, 17);
+            let r = g.usize_in(0, ws);
+            assert_eq!(nv_push_order(r, ws)[0], r);
+            assert_eq!(nv_pull_order(r, ws)[0], r);
+        });
+    }
+
+    #[test]
+    fn amd_order_covers_all_pairs_local_first() {
+        let order = amd_subchunk_order(1, 4, 2);
+        assert_eq!(order.len(), 8);
+        assert_eq!(&order[..2], &[(1, 0), (1, 1)]);
+        let mut set: Vec<_> = order.clone();
+        set.sort_unstable();
+        set.dedup();
+        assert_eq!(set.len(), 8);
+        // each later step touches all 3 peers (parallel links)
+        let step1: Vec<usize> = order[2..5].iter().map(|&(c, _)| c).collect();
+        assert_eq!(step1, vec![2, 3, 0]);
+    }
+
+    #[test]
+    fn inter_rs_order_matches_fig10() {
+        // 2 nodes x 4: rank 0 (node 0, lr 0) starts with node 1's chunks,
+        // beginning at local rank 1 -> global chunk 5 (the Fig. 10 text:
+        // "rank 0 starts its GEMM for the data required by rank 5")
+        let order = inter_rs_order(0, 2, 4);
+        assert_eq!(order[0], 5);
+        assert!(is_permutation(&order, 8));
+        // own chunk (0) is visited last
+        assert_eq!(*order.last().unwrap(), 0);
+        // all of node 1's chunks precede node 0's
+        let pos = |c: usize| order.iter().position(|&x| x == c).unwrap();
+        for remote in 4..8 {
+            for local in 0..4 {
+                assert!(pos(remote) < pos(local));
+            }
+        }
+    }
+
+    #[test]
+    fn numa_interleave_alternates() {
+        let peers = vec![1, 2, 3, 5, 6, 7];
+        let order = numa_interleave(&peers, |r| if r < 4 { 0 } else { 1 });
+        // alternating 0-domain, 1-domain
+        assert_eq!(order, vec![1, 5, 2, 6, 3, 7]);
+    }
+
+    #[test]
+    fn numa_interleave_is_permutation_property() {
+        check("numa interleave", 64, |g| {
+            let n = g.usize_in(1, 20);
+            let peers: Vec<usize> = g.permutation(n);
+            let out = numa_interleave(&peers, |r| r % 3);
+            let mut a = out.clone();
+            let mut b = peers.clone();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b);
+        });
+    }
+}

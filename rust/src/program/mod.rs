@@ -1,0 +1,359 @@
+//! The async-task op IR (§2.1's three concepts made executable).
+//!
+//! Every *async-task* — a communication kernel, a compute kernel, a copy
+//! stream — is a [`TaskSpec`]: a straight-line sequence of [`Op`]s bound to
+//! a rank and a resource reservation (SMs / copy engine). Collectives and
+//! overlapped kernels are *programs*: one or more tasks per rank, launched
+//! concurrently, synchronizing only through signals and barriers — exactly
+//! the paper's MPMD model.
+//!
+//! The builders in `crate::shmem` provide the Table-1 primitive names; this
+//! module is the IR they lower to and the DES engine executes.
+
+use crate::mem::Slice;
+
+/// How a signal is updated (`signal_op` semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SigOp {
+    Set,
+    Add,
+}
+
+/// Wait condition (`signal_wait_until` / `wait`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SigCond {
+    Eq,
+    Ge,
+}
+
+/// A signal cell in symmetric memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SigRef {
+    pub rank: usize,
+    pub idx: usize,
+}
+
+/// Barrier scope.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scope {
+    World,
+    Node(usize),
+}
+
+/// Analytic duration model for a compute op, evaluated against the
+/// hardware model and the owning task's SM reservation.
+#[derive(Debug, Clone)]
+pub enum ComputeCost {
+    /// Dense GEMM; `vendor` selects cuBLAS/rocBLAS efficiency instead of
+    /// Triton's (~0.95x) — used by the PyTorch and FLUX baselines.
+    Gemm { flops: f64, vendor: bool },
+    /// Elementwise reduction over `bytes` (read+add+write), SM-scaled.
+    Reduce { bytes: f64 },
+    /// Memory-bandwidth-bound kernel streaming `bytes` from HBM
+    /// (flash decoding).
+    MemBound { bytes: f64 },
+    /// Fixed duration (host-side work, protocol overheads).
+    Fixed { secs: f64 },
+}
+
+/// The real data operation attached to an op, applied by the engine at op
+/// completion when numerics are enabled.
+#[derive(Debug, Clone)]
+pub enum NumericOp {
+    None,
+    /// `dst = src` (already implied for transfer ops; explicit for local
+    /// compute-engine copies).
+    Copy { src: Slice, dst: Slice },
+    /// `dst += sum(srcs)`; if `zero_dst`, `dst` is cleared first.
+    ReduceAdd {
+        srcs: Vec<Slice>,
+        dst: Slice,
+        zero_dst: bool,
+    },
+    /// Executor call (XLA artifact or native fallback): outs = entry(args).
+    Call {
+        entry: String,
+        args: Vec<Slice>,
+        outs: Vec<Slice>,
+    },
+}
+
+/// One instruction of an async-task.
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// One-sided write `src -> dst` (ranks may differ). `bytes` is the
+    /// *timing* size (dtype-scaled; doubled for LL). Optional remote
+    /// signal update on delivery (putmem_signal). `blocking=false` is the
+    /// `_nbi` variant: the task continues immediately and `Quiet` fences.
+    Put {
+        src: Slice,
+        dst: Slice,
+        bytes: f64,
+        signal: Option<(SigRef, SigOp, u64)>,
+        blocking: bool,
+        label: &'static str,
+    },
+    /// One-sided read `src -> dst` where `src` is remote (getmem).
+    Get {
+        src: Slice,
+        dst: Slice,
+        bytes: f64,
+        blocking: bool,
+        label: &'static str,
+    },
+    /// `multimem.st`: broadcast `src` to the same symmetric slice on all
+    /// other ranks of the source's node in a single hardware op (§3.4).
+    /// With `ll`, the payload carries LL flags so receivers' `LLWait` on
+    /// the destination slice observes arrival (Alg. 4 lines 8/18).
+    MultimemSt { src: Slice, bytes: f64, ll: bool },
+    /// LL-protocol send: data+flag packed in 8-byte words, 2x payload, no
+    /// separate signal; the receiver spin-waits with `LLWait` keyed by the
+    /// destination slice.
+    LLPut { src: Slice, dst: Slice, bytes: f64 },
+    /// Spin until the LL flags for `dst` indicate arrival.
+    LLWait { dst: Slice },
+    /// Update a (possibly remote) signal: `notify` / `signal_op` /
+    /// `atomic_add` / `red_release`.
+    SetSignal {
+        sig: SigRef,
+        op: SigOp,
+        value: u64,
+    },
+    /// Spin on a *local* signal until the condition holds (`wait`,
+    /// `signal_wait_until`, `ld_acquire` loops).
+    WaitSignal {
+        idx: usize,
+        cond: SigCond,
+        value: u64,
+    },
+    /// Fence completion of this task's outstanding non-blocking transfers
+    /// (OpenSHMEM `quiet`).
+    Quiet,
+    /// Barrier over a scope (`barrier_all` / node barrier). `expect` is
+    /// the number of participating *tasks* (several async-tasks per rank
+    /// may join one barrier); the scope sets the release latency.
+    Barrier {
+        scope: Scope,
+        id: usize,
+        expect: usize,
+    },
+    /// Occupy the task's SMs for the modeled duration, then apply the
+    /// numeric op. Every tile of the consumer GEMM is one of these.
+    Compute {
+        cost: ComputeCost,
+        numeric: NumericOp,
+        label: &'static str,
+    },
+    /// Pure time (host logic, protocol constants).
+    Sleep { secs: f64 },
+}
+
+impl Op {
+    /// Short label for traces.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Op::Put { label, .. } => label,
+            Op::Get { label, .. } => label,
+            Op::MultimemSt { .. } => "multimem_st",
+            Op::LLPut { .. } => "ll_put",
+            Op::LLWait { .. } => "ll_wait",
+            Op::SetSignal { .. } => "set_signal",
+            Op::WaitSignal { .. } => "wait_signal",
+            Op::Quiet => "quiet",
+            Op::Barrier { .. } => "barrier",
+            Op::Compute { label, .. } => label,
+            Op::Sleep { .. } => "sleep",
+        }
+    }
+}
+
+/// Which execution engine an async-task is mapped onto (§3.8 resource
+/// partition): copy-engine streams need no SMs; kernels reserve SMs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineClass {
+    /// DMA stream (cudaMemcpyAsync / hipMemcpyAsync): data movement only.
+    CopyEngine,
+    /// Device kernel holding an SM reservation for its lifetime.
+    SmKernel,
+    /// Host-side logic (launch loops, stream waits).
+    Host,
+}
+
+/// One async-task: a rank-bound op sequence with a resource reservation.
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub rank: usize,
+    pub name: String,
+    pub engine: EngineClass,
+    /// SMs reserved for the task's lifetime (0 for CopyEngine/Host).
+    pub sms: u32,
+    /// Launch delay before the first op (kernel-launch overhead).
+    pub start_delay: f64,
+    pub ops: Vec<Op>,
+}
+
+/// A whole-world program: every rank's tasks, launched together at t=0.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub tasks: Vec<TaskSpec>,
+}
+
+impl Program {
+    pub fn new() -> Self {
+        Program::default()
+    }
+
+    pub fn push(&mut self, t: TaskSpec) -> usize {
+        self.tasks.push(t);
+        self.tasks.len() - 1
+    }
+
+    /// Total op count (diagnostics).
+    pub fn op_count(&self) -> usize {
+        self.tasks.iter().map(|t| t.ops.len()).sum()
+    }
+
+    /// Largest signal index referenced — the required signal-pad size.
+    pub fn max_signal_idx(&self) -> usize {
+        let mut max = 0usize;
+        for t in &self.tasks {
+            for op in &t.ops {
+                let idx = match op {
+                    Op::Put {
+                        signal: Some((s, _, _)),
+                        ..
+                    } => s.idx,
+                    Op::SetSignal { sig, .. } => sig.idx,
+                    Op::WaitSignal { idx, .. } => *idx,
+                    _ => 0,
+                };
+                max = max.max(idx);
+            }
+        }
+        max
+    }
+
+    /// SM oversubscription check per rank: the *static* reservations of
+    /// concurrently-launched kernels must fit the device (the §3.8
+    /// partition discipline).
+    pub fn peak_sm_demand(&self, rank: usize) -> u32 {
+        self.tasks
+            .iter()
+            .filter(|t| t.rank == rank)
+            .map(|t| t.sms)
+            .sum()
+    }
+}
+
+/// Fluent builder for one task.
+pub struct TaskBuilder {
+    spec: TaskSpec,
+}
+
+impl TaskBuilder {
+    pub fn new(rank: usize, name: impl Into<String>) -> Self {
+        TaskBuilder {
+            spec: TaskSpec {
+                rank,
+                name: name.into(),
+                engine: EngineClass::SmKernel,
+                sms: 0,
+                start_delay: 0.0,
+                ops: Vec::new(),
+            },
+        }
+    }
+
+    pub fn engine(mut self, e: EngineClass) -> Self {
+        self.spec.engine = e;
+        self
+    }
+
+    pub fn sms(mut self, n: u32) -> Self {
+        self.spec.sms = n;
+        self
+    }
+
+    pub fn start_delay(mut self, d: f64) -> Self {
+        self.spec.start_delay = d;
+        self
+    }
+
+    pub fn op(&mut self, op: Op) -> &mut Self {
+        self.spec.ops.push(op);
+        self
+    }
+
+    pub fn rank(&self) -> usize {
+        self.spec.rank
+    }
+
+    pub fn build(self) -> TaskSpec {
+        self.spec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::BufId;
+
+    fn slice(rank: usize) -> Slice {
+        Slice::new(rank, BufId(0), 0, 8)
+    }
+
+    #[test]
+    fn builder_collects_ops() {
+        let mut b = TaskBuilder::new(2, "t").sms(16).start_delay(1e-6);
+        b.op(Op::Sleep { secs: 1.0 });
+        b.op(Op::WaitSignal {
+            idx: 3,
+            cond: SigCond::Eq,
+            value: 1,
+        });
+        let t = b.build();
+        assert_eq!(t.rank, 2);
+        assert_eq!(t.sms, 16);
+        assert_eq!(t.ops.len(), 2);
+    }
+
+    #[test]
+    fn program_signal_pad_requirement() {
+        let mut p = Program::new();
+        let mut b = TaskBuilder::new(0, "a");
+        b.op(Op::SetSignal {
+            sig: SigRef { rank: 1, idx: 17 },
+            op: SigOp::Set,
+            value: 1,
+        });
+        p.push(b.build());
+        assert_eq!(p.max_signal_idx(), 17);
+    }
+
+    #[test]
+    fn peak_sm_demand_sums_static_reservations() {
+        let mut p = Program::new();
+        p.push(TaskBuilder::new(0, "gemm").sms(116).build());
+        p.push(TaskBuilder::new(0, "p2p").sms(1).build());
+        p.push(TaskBuilder::new(1, "gemm").sms(116).build());
+        assert_eq!(p.peak_sm_demand(0), 117);
+        assert_eq!(p.peak_sm_demand(1), 116);
+    }
+
+    #[test]
+    fn op_labels() {
+        assert_eq!(
+            Op::Put {
+                src: slice(0),
+                dst: slice(1),
+                bytes: 1.0,
+                signal: None,
+                blocking: true,
+                label: "put_chunk",
+            }
+            .label(),
+            "put_chunk"
+        );
+        assert_eq!(Op::Quiet.label(), "quiet");
+    }
+}

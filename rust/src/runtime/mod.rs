@@ -1,0 +1,350 @@
+//! PJRT runtime: load AOT artifacts (HLO **text**, see aot_recipe) and
+//! execute them from the Rust request path — zero Python at runtime.
+//!
+//! Flow: `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//! Compiled executables are cached per entry; the manifest
+//! (`artifacts/manifest.json`, written by python/compile/aot.py) supplies
+//! argument shapes/dtypes for validation and int32 argument casting.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::mem::{Slice, SymmetricHeap};
+use crate::sim::ComputeExecutor;
+use crate::util::json::{self};
+
+/// One manifest entry: arg/output signatures of an AOT artifact.
+#[derive(Debug, Clone)]
+pub struct EntrySig {
+    pub name: String,
+    pub file: String,
+    pub arg_shapes: Vec<Vec<usize>>,
+    pub arg_dtypes: Vec<String>,
+    pub out_shapes: Vec<Vec<usize>>,
+}
+
+impl EntrySig {
+    pub fn arg_len(&self, i: usize) -> usize {
+        self.arg_shapes[i].iter().product()
+    }
+
+    pub fn out_len(&self, i: usize) -> usize {
+        self.out_shapes[i].iter().product()
+    }
+}
+
+/// Parsed artifacts/manifest.json.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: HashMap<String, EntrySig>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let doc = json::parse(&text).context("parsing manifest.json")?;
+        let mut entries = HashMap::new();
+        let Some(list) = doc.get("entries").as_arr() else {
+            bail!("manifest.json has no 'entries' array");
+        };
+        for e in list {
+            let name = e
+                .get("name")
+                .as_str()
+                .context("entry missing name")?
+                .to_string();
+            let file = e
+                .get("file")
+                .as_str()
+                .context("entry missing file")?
+                .to_string();
+            let shapes = |key: &str| -> Result<(Vec<Vec<usize>>, Vec<String>)> {
+                let mut shp = Vec::new();
+                let mut dty = Vec::new();
+                for a in e.get(key).as_arr().context("bad args/outputs")? {
+                    let dims: Vec<usize> = a
+                        .get("shape")
+                        .as_arr()
+                        .context("bad shape")?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect();
+                    shp.push(dims);
+                    dty.push(a.get("dtype").as_str().unwrap_or("float32").to_string());
+                }
+                Ok((shp, dty))
+            };
+            let (arg_shapes, arg_dtypes) = shapes("args")?;
+            let (out_shapes, _) = shapes("outputs")?;
+            entries.insert(
+                name.clone(),
+                EntrySig {
+                    name,
+                    file,
+                    arg_shapes,
+                    arg_dtypes,
+                    out_shapes,
+                },
+            );
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    /// Default artifact location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        // honor ARTIFACTS_DIR, else ./artifacts next to the manifest user
+        std::env::var("ARTIFACTS_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+/// PJRT-backed executor with a compile cache.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Calls served (diagnostics / perf accounting).
+    pub calls: u64,
+}
+
+impl XlaRuntime {
+    /// Connect the CPU PJRT client and load the manifest.
+    pub fn load(dir: impl AsRef<Path>) -> Result<XlaRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(XlaRuntime {
+            client,
+            manifest,
+            cache: HashMap::new(),
+            calls: 0,
+        })
+    }
+
+    /// Try the default artifacts dir; `None` when artifacts are absent
+    /// (callers fall back to the native executor).
+    pub fn try_default() -> Option<XlaRuntime> {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            XlaRuntime::load(dir).ok()
+        } else {
+            None
+        }
+    }
+
+    pub fn has_entry(&self, name: &str) -> bool {
+        self.manifest.entries.contains_key(name)
+    }
+
+    pub fn entry_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.manifest.entries.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let sig = self
+                .manifest
+                .entries
+                .get(name)
+                .with_context(|| format!("entry '{name}' not in manifest"))?;
+            let path = self.manifest.dir.join(&sig.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling '{name}'"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(self.cache.get(name).unwrap())
+    }
+
+    /// Execute `name` on f32 buffers. Int32 arguments (per the manifest)
+    /// are cast from the f32 carrier values.
+    pub fn call_f32(&mut self, name: &str, args: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let sig = self
+            .manifest
+            .entries
+            .get(name)
+            .with_context(|| format!("entry '{name}' not in manifest"))?
+            .clone();
+        ensure!(
+            args.len() == sig.arg_shapes.len(),
+            "'{name}': {} args given, {} expected",
+            args.len(),
+            sig.arg_shapes.len()
+        );
+        let mut literals = Vec::with_capacity(args.len());
+        for (i, a) in args.iter().enumerate() {
+            ensure!(
+                a.len() == sig.arg_len(i),
+                "'{name}' arg {i}: {} elements given, {} expected",
+                a.len(),
+                sig.arg_len(i)
+            );
+            let dims: Vec<i64> = sig.arg_shapes[i].iter().map(|&d| d as i64).collect();
+            let lit = if sig.arg_dtypes[i].starts_with("int32") {
+                let ints: Vec<i32> = a.iter().map(|&x| x as i32).collect();
+                xla::Literal::vec1(&ints).reshape(&dims)?
+            } else {
+                xla::Literal::vec1(a.as_slice()).reshape(&dims)?
+            };
+            literals.push(lit);
+        }
+        self.calls += 1;
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True
+        let parts = result.to_tuple()?;
+        ensure!(
+            parts.len() == sig.out_shapes.len(),
+            "'{name}': {} outputs returned, {} expected",
+            parts.len(),
+            sig.out_shapes.len()
+        );
+        let mut outs = Vec::with_capacity(parts.len());
+        for (i, p) in parts.into_iter().enumerate() {
+            let v = p.to_vec::<f32>()?;
+            ensure!(
+                v.len() == sig.out_len(i),
+                "'{name}' out {i}: {} elements, {} expected",
+                v.len(),
+                sig.out_len(i)
+            );
+            outs.push(v);
+        }
+        Ok(outs)
+    }
+}
+
+/// Executor preferring XLA artifacts, falling back to the native
+/// reference math for entries not in the manifest (or when no artifacts
+/// were built). This is what examples and integration tests plug into
+/// the DES engine.
+pub struct HybridExecutor {
+    pub xla: Option<XlaRuntime>,
+    native: crate::kernels::NativeExecutor,
+    /// Calls that went through PJRT vs native (reported by examples).
+    pub xla_calls: u64,
+    pub native_calls: u64,
+}
+
+impl HybridExecutor {
+    /// Use artifacts from `dir`.
+    pub fn with_artifacts(dir: impl AsRef<Path>) -> Result<Self> {
+        Ok(HybridExecutor {
+            xla: Some(XlaRuntime::load(dir)?),
+            native: crate::kernels::NativeExecutor::new(),
+            xla_calls: 0,
+            native_calls: 0,
+        })
+    }
+
+    /// Probe the default artifacts dir; silently native-only when absent.
+    pub fn auto() -> Self {
+        HybridExecutor {
+            xla: XlaRuntime::try_default(),
+            native: crate::kernels::NativeExecutor::new(),
+            xla_calls: 0,
+            native_calls: 0,
+        }
+    }
+
+    /// Native-only (tests that must not depend on artifacts).
+    pub fn native_only() -> Self {
+        HybridExecutor {
+            xla: None,
+            native: crate::kernels::NativeExecutor::new(),
+            xla_calls: 0,
+            native_calls: 0,
+        }
+    }
+}
+
+impl ComputeExecutor for HybridExecutor {
+    fn call(
+        &mut self,
+        heap: &mut SymmetricHeap,
+        entry: &str,
+        args: &[Slice],
+        outs: &[Slice],
+    ) -> Result<()> {
+        if let Some(rt) = self.xla.as_mut() {
+            if rt.has_entry(entry) {
+                let inputs: Vec<Vec<f32>> = args.iter().map(|s| heap.read(*s).to_vec()).collect();
+                let results = rt.call_f32(entry, &inputs)?;
+                ensure!(
+                    results.len() == outs.len(),
+                    "'{entry}': {} outputs vs {} slices",
+                    results.len(),
+                    outs.len()
+                );
+                for (slice, vals) in outs.iter().zip(results) {
+                    heap.write(*slice, &vals);
+                }
+                self.xla_calls += 1;
+                return Ok(());
+            }
+        }
+        self.native_calls += 1;
+        self.native.call(heap, entry, args, outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_synthetic_doc() {
+        let dir = std::env::temp_dir().join(format!("tds_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"entries": [{"name": "gemm_2x2x2", "file": "gemm_2x2x2.hlo.txt",
+                "args": [{"shape": [2,2], "dtype": "float32"},
+                         {"shape": [2,2], "dtype": "float32"}],
+                "outputs": [{"shape": [2,2], "dtype": "float32"}]}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let sig = &m.entries["gemm_2x2x2"];
+        assert_eq!(sig.arg_len(0), 4);
+        assert_eq!(sig.out_len(0), 4);
+        assert_eq!(sig.arg_dtypes[1], "float32");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_missing_dir_errors() {
+        assert!(Manifest::load("/nonexistent/path").is_err());
+    }
+
+    #[test]
+    fn hybrid_native_only_runs_gemm() {
+        use crate::mem::{Slice, SymmetricHeap};
+        let mut heap = SymmetricHeap::new(1, 1);
+        let b = heap.alloc("x", 12);
+        heap.write(Slice::new(0, b, 0, 4), &[1.0, 0.0, 0.0, 1.0]);
+        heap.write(Slice::new(0, b, 4, 4), &[5.0, 6.0, 7.0, 8.0]);
+        let mut ex = HybridExecutor::native_only();
+        ex.call(
+            &mut heap,
+            "gemm_2x2x2",
+            &[Slice::new(0, b, 0, 4), Slice::new(0, b, 4, 4)],
+            &[Slice::new(0, b, 8, 4)],
+        )
+        .unwrap();
+        assert_eq!(heap.read(Slice::new(0, b, 8, 4)), &[5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(ex.native_calls, 1);
+    }
+}

@@ -1,0 +1,512 @@
+//! Table-1 primitives: the OpenSHMEM (+ auxiliary) programming surface.
+//!
+//! [`ShmemCtx`] carries the world geometry (`my_pe`, `n_pes`, node/local
+//! rank math) and [`ShmemTask`] wraps a [`TaskBuilder`] with methods named
+//! after the paper's primitives, so the collective implementations in
+//! `crate::collectives` read like the paper's pseudo-code (Algorithms
+//! 1–5). Each primitive appends ops to the task's program; the DES engine
+//! gives them their timing and (optionally) numeric semantics.
+
+use crate::config::{ClusterSpec, DType};
+use crate::mem::Slice;
+use crate::program::{
+    ComputeCost, EngineClass, NumericOp, Op, Scope, SigCond, SigOp, SigRef, TaskBuilder, TaskSpec,
+};
+
+/// World geometry, shared by every rank's builder (the "host side").
+#[derive(Debug, Clone, Copy)]
+pub struct ShmemCtx {
+    pub cluster: ClusterSpec,
+    /// Simulated payload dtype (timing only; numerics are f32).
+    pub dtype: DType,
+}
+
+impl ShmemCtx {
+    pub fn new(cluster: ClusterSpec, dtype: DType) -> Self {
+        ShmemCtx { cluster, dtype }
+    }
+
+    /// `n_pes` — world size.
+    pub fn n_pes(&self) -> usize {
+        self.cluster.world_size()
+    }
+
+    pub fn local_world_size(&self) -> usize {
+        self.cluster.gpus_per_node
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.cluster.nodes
+    }
+
+    pub fn node_of(&self, pe: usize) -> usize {
+        self.cluster.node_of(pe)
+    }
+
+    pub fn local_rank_of(&self, pe: usize) -> usize {
+        self.cluster.local_rank(pe)
+    }
+
+    /// Timing bytes for `elems` elements of the workload dtype.
+    pub fn bytes(&self, elems: usize) -> f64 {
+        (elems * self.dtype.bytes()) as f64
+    }
+
+    /// Start building a task for `pe`.
+    pub fn task(&self, pe: usize, name: impl Into<String>) -> ShmemTask {
+        ShmemTask {
+            ctx: *self,
+            pe,
+            b: TaskBuilder::new(pe, name),
+        }
+    }
+}
+
+/// A task under construction, with primitive-level methods.
+pub struct ShmemTask {
+    ctx: ShmemCtx,
+    pe: usize,
+    b: TaskBuilder,
+}
+
+impl ShmemTask {
+    /// `my_pe`.
+    pub fn my_pe(&self) -> usize {
+        self.pe
+    }
+
+    pub fn ctx(&self) -> &ShmemCtx {
+        &self.ctx
+    }
+
+    // -- task attributes -----------------------------------------------------
+
+    pub fn on_copy_engine(mut self) -> Self {
+        self.b = self.b.engine(EngineClass::CopyEngine);
+        self
+    }
+
+    pub fn on_host(mut self) -> Self {
+        self.b = self.b.engine(EngineClass::Host);
+        self
+    }
+
+    /// Reserve `n` SMs for the task's lifetime (§3.8 resource partition).
+    pub fn with_sms(mut self, n: u32) -> Self {
+        self.b = self.b.sms(n);
+        self
+    }
+
+    /// Model kernel-launch overhead before the first op.
+    pub fn launch_overhead(mut self) -> Self {
+        let oh = self.ctx.cluster.hw.launch_overhead;
+        self.b = self.b.start_delay(oh);
+        self
+    }
+
+    pub fn start_delay(mut self, d: f64) -> Self {
+        self.b = self.b.start_delay(d);
+        self
+    }
+
+    pub fn build(self) -> TaskSpec {
+        self.b.build()
+    }
+
+    // -- OpenSHMEM data movement ----------------------------------------------
+
+    /// `putmem`: blocking one-sided write of `src` (local) to `dst`
+    /// (remote symmetric address).
+    pub fn putmem(&mut self, src: Slice, dst: Slice) -> &mut Self {
+        assert_eq!(src.rank, self.pe, "putmem source must be local");
+        let bytes = self.ctx.bytes(src.len);
+        self.b.op(Op::Put {
+            src,
+            dst,
+            bytes,
+            signal: None,
+            blocking: true,
+            label: "putmem",
+        });
+        self
+    }
+
+    /// `putmem_nbi`: non-blocking put (fence with [`Self::quiet`]).
+    pub fn putmem_nbi(&mut self, src: Slice, dst: Slice) -> &mut Self {
+        assert_eq!(src.rank, self.pe);
+        let bytes = self.ctx.bytes(src.len);
+        self.b.op(Op::Put {
+            src,
+            dst,
+            bytes,
+            signal: None,
+            blocking: false,
+            label: "putmem_nbi",
+        });
+        self
+    }
+
+    /// `putmem_signal`: blocking put + remote signal update on delivery.
+    pub fn putmem_signal(
+        &mut self,
+        src: Slice,
+        dst: Slice,
+        sig_idx: usize,
+        op: SigOp,
+        value: u64,
+    ) -> &mut Self {
+        assert_eq!(src.rank, self.pe);
+        let bytes = self.ctx.bytes(src.len);
+        let sig = SigRef {
+            rank: dst.rank,
+            idx: sig_idx,
+        };
+        self.b.op(Op::Put {
+            src,
+            dst,
+            bytes,
+            signal: Some((sig, op, value)),
+            blocking: true,
+            label: "putmem_signal",
+        });
+        self
+    }
+
+    /// `putmem_signal_nbi`.
+    pub fn putmem_signal_nbi(
+        &mut self,
+        src: Slice,
+        dst: Slice,
+        sig_idx: usize,
+        op: SigOp,
+        value: u64,
+    ) -> &mut Self {
+        assert_eq!(src.rank, self.pe);
+        let bytes = self.ctx.bytes(src.len);
+        let sig = SigRef {
+            rank: dst.rank,
+            idx: sig_idx,
+        };
+        self.b.op(Op::Put {
+            src,
+            dst,
+            bytes,
+            signal: Some((sig, op, value)),
+            blocking: false,
+            label: "putmem_signal_nbi",
+        });
+        self
+    }
+
+    /// `getmem`: blocking one-sided read from remote `src` into local `dst`.
+    pub fn getmem(&mut self, src: Slice, dst: Slice) -> &mut Self {
+        assert_eq!(dst.rank, self.pe, "getmem destination must be local");
+        let bytes = self.ctx.bytes(src.len);
+        self.b.op(Op::Get {
+            src,
+            dst,
+            bytes,
+            blocking: true,
+            label: "getmem",
+        });
+        self
+    }
+
+    /// `getmem_nbi`.
+    pub fn getmem_nbi(&mut self, src: Slice, dst: Slice) -> &mut Self {
+        assert_eq!(dst.rank, self.pe);
+        let bytes = self.ctx.bytes(src.len);
+        self.b.op(Op::Get {
+            src,
+            dst,
+            bytes,
+            blocking: false,
+            label: "getmem_nbi",
+        });
+        self
+    }
+
+    /// `broadcast` to all other PEs (loop of puts; the optimized NVLink
+    /// path is [`Self::multimem_st`]).
+    pub fn broadcast(&mut self, src: Slice) -> &mut Self {
+        for r in 0..self.ctx.n_pes() {
+            if r != self.pe {
+                self.putmem_nbi(src, src.on_rank(r));
+            }
+        }
+        self.quiet()
+    }
+
+    // -- synchronization -------------------------------------------------------
+
+    /// `quiet`: fence all outstanding non-blocking transfers of this task.
+    pub fn quiet(&mut self) -> &mut Self {
+        self.b.op(Op::Quiet);
+        self
+    }
+
+    /// `fence`: ordering fence. Our DES delivers a task's transfers in
+    /// issue order per destination, so fence == quiet (conservative).
+    pub fn fence(&mut self) -> &mut Self {
+        self.quiet()
+    }
+
+    /// `barrier_all`: one task per rank participates.
+    pub fn barrier_all(&mut self, id: usize) -> &mut Self {
+        let expect = self.ctx.n_pes();
+        self.barrier_group(id, Scope::World, expect)
+    }
+
+    /// Barrier with an explicit participating-task count (several
+    /// async-tasks per rank may join one barrier).
+    pub fn barrier_group(&mut self, id: usize, scope: Scope, expect: usize) -> &mut Self {
+        self.b.op(Op::Barrier { scope, id, expect });
+        self
+    }
+
+    /// `sync_all` — identical timing model to barrier_all here.
+    pub fn sync_all(&mut self, id: usize) -> &mut Self {
+        self.barrier_all(id)
+    }
+
+    /// Node-scoped barrier (`barrier_all_intra_node`, Alg. 5): one task
+    /// per rank of this node participates.
+    pub fn barrier_node(&mut self, id: usize) -> &mut Self {
+        let expect = self.ctx.local_world_size();
+        self.barrier_group(id, Scope::Node(self.ctx.node_of(self.pe)), expect)
+    }
+
+    // -- signals ---------------------------------------------------------------
+
+    /// `int_p` / `notify` / `signal_op`: update a (possibly remote) signal.
+    pub fn notify(&mut self, pe: usize, sig_idx: usize, op: SigOp, value: u64) -> &mut Self {
+        self.b.op(Op::SetSignal {
+            sig: SigRef { rank: pe, idx: sig_idx },
+            op,
+            value,
+        });
+        self
+    }
+
+    /// `signal_wait_until(sig, EQ/GE, v)` on a local signal.
+    pub fn signal_wait_until(&mut self, sig_idx: usize, cond: SigCond, value: u64) -> &mut Self {
+        self.b.op(Op::WaitSignal {
+            idx: sig_idx,
+            cond,
+            value,
+        });
+        self
+    }
+
+    /// `wait` (+ implicit `consume_token`): local spin until equality.
+    /// The data dependency the paper builds with `consume_token` is
+    /// enforced structurally here: ops after the wait cannot start early
+    /// because tasks are sequential.
+    pub fn wait(&mut self, sig_idx: usize, value: u64) -> &mut Self {
+        self.signal_wait_until(sig_idx, SigCond::Eq, value)
+    }
+
+    /// `atomic_add` on a remote signal (used as arrival counters).
+    pub fn atomic_add(&mut self, pe: usize, sig_idx: usize, value: u64) -> &mut Self {
+        self.notify(pe, sig_idx, SigOp::Add, value)
+    }
+
+    // -- low-latency & multimem (§3.4) ------------------------------------------
+
+    /// LL-protocol send: data+flag in 8-byte granules, double wire size,
+    /// no signal round-trip. Receiver pairs with [`Self::recv_ll`].
+    pub fn ll_put(&mut self, src: Slice, dst: Slice) -> &mut Self {
+        assert_eq!(src.rank, self.pe);
+        let bytes = self.ctx.bytes(src.len);
+        self.b.op(Op::LLPut { src, dst, bytes });
+        self
+    }
+
+    /// LL-protocol receive: spin on the in-band flags of `dst`
+    /// (`recv_LL_pack` / `recv_LL_unpack`; the unpack cost is folded into
+    /// the doubled send size).
+    pub fn recv_ll(&mut self, dst: Slice) -> &mut Self {
+        assert_eq!(dst.rank, self.pe);
+        self.b.op(Op::LLWait { dst });
+        self
+    }
+
+    /// `multimem_st`: NVLink broadcast of `src` to all node peers (§3.4).
+    pub fn multimem_st(&mut self, src: Slice) -> &mut Self {
+        assert_eq!(src.rank, self.pe);
+        let bytes = self.ctx.bytes(src.len);
+        self.b.op(Op::MultimemSt { src, bytes, ll: false });
+        self
+    }
+
+    /// `multimem_st` of an LL-staged slice: payload carries in-band flags,
+    /// so receivers' [`Self::recv_ll`] on the same symmetric slice
+    /// observes arrival (Alg. 4 lines 8/18). Wire size doubles.
+    pub fn multimem_st_ll(&mut self, src: Slice) -> &mut Self {
+        assert_eq!(src.rank, self.pe);
+        let bytes = self.ctx.bytes(src.len) * 2.0;
+        self.b.op(Op::MultimemSt { src, bytes, ll: true });
+        self
+    }
+
+    /// `multimem_ld_reduce`: load the same symmetric slice from all node
+    /// peers and reduce locally. Modeled as a compute-side reduction that
+    /// reads peers over NVLink ingress: we charge a get of (peers-1) slices
+    /// plus the local add.
+    pub fn multimem_ld_reduce(&mut self, symm: Slice, dst: Slice) -> &mut Self {
+        assert_eq!(dst.rank, self.pe);
+        let node = self.ctx.node_of(self.pe);
+        let mut srcs = Vec::new();
+        for r in 0..self.ctx.n_pes() {
+            if self.ctx.node_of(r) == node {
+                srcs.push(symm.on_rank(r));
+            }
+        }
+        for s in &srcs {
+            if s.rank != self.pe {
+                self.getmem_nbi(*s, dst); // timing: pull peers' copies
+            }
+        }
+        self.quiet();
+        let bytes = self.ctx.bytes(symm.len) * srcs.len() as f64;
+        self.b.op(Op::Compute {
+            cost: ComputeCost::Reduce { bytes },
+            numeric: NumericOp::ReduceAdd {
+                srcs,
+                dst,
+                zero_dst: true,
+            },
+            label: "multimem_ld_reduce",
+        });
+        self
+    }
+
+    // -- compute ------------------------------------------------------------------
+
+    /// Raw op escape hatch (compute tiles, sleeps).
+    pub fn op(&mut self, op: Op) -> &mut Self {
+        self.b.op(op);
+        self
+    }
+
+    /// Local copy on the copy engine (cudaMemcpyAsync D2D local).
+    pub fn copy_local(&mut self, src: Slice, dst: Slice) -> &mut Self {
+        assert_eq!(src.rank, self.pe);
+        assert_eq!(dst.rank, self.pe);
+        let bytes = self.ctx.bytes(src.len);
+        self.b.op(Op::Put {
+            src,
+            dst,
+            bytes,
+            signal: None,
+            blocking: true,
+            label: "copy_local",
+        });
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+    use crate::mem::{BufId, SymmetricHeap};
+    use crate::sim::{NoopExecutor, Sim};
+    use crate::topology::Topology;
+
+    fn ctx() -> ShmemCtx {
+        ShmemCtx::new(ClusterSpec::h800(1, 4), DType::BF16)
+    }
+
+    #[test]
+    fn geometry_helpers() {
+        let c = ShmemCtx::new(ClusterSpec::h800(2, 8), DType::BF16);
+        assert_eq!(c.n_pes(), 16);
+        assert_eq!(c.local_world_size(), 8);
+        assert_eq!(c.n_nodes(), 2);
+        assert_eq!(c.node_of(10), 1);
+        assert_eq!(c.local_rank_of(10), 2);
+        assert_eq!(c.bytes(100), 200.0); // bf16
+    }
+
+    #[test]
+    fn putmem_asserts_local_source() {
+        let c = ctx();
+        let mut t = c.task(0, "t");
+        let src = Slice::new(1, BufId(0), 0, 4); // wrong rank
+        let dst = Slice::new(2, BufId(0), 0, 4);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.putmem(src, dst);
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn primitives_compose_into_working_program() {
+        // push-mode exchange: rank 0 puts with signal; rank 1 waits then
+        // pulls back. Exercises putmem_signal, signal_wait_until, getmem.
+        let c = ctx();
+        let topo = Topology::build(c.cluster);
+        let mut heap = SymmetricHeap::new(4, 16);
+        let buf = heap.alloc("x", 8);
+        heap.write(Slice::new(0, buf, 0, 4), &[5.0; 4]);
+
+        let mut prog = crate::program::Program::new();
+        let mut t0 = c.task(0, "t0").on_copy_engine();
+        t0.putmem_signal(
+            Slice::new(0, buf, 0, 4),
+            Slice::new(1, buf, 0, 4),
+            0,
+            SigOp::Set,
+            1,
+        );
+        prog.push(t0.build());
+
+        let mut t1 = c.task(1, "t1").with_sms(1);
+        t1.signal_wait_until(0, SigCond::Eq, 1);
+        t1.getmem(Slice::new(0, buf, 0, 4), Slice::new(1, buf, 4, 4));
+        prog.push(t1.build());
+
+        let sim = Sim::new(&topo);
+        sim.run(&prog, &mut heap, &mut NoopExecutor).unwrap();
+        assert_eq!(heap.read(Slice::new(1, buf, 0, 4)), &[5.0; 4]);
+        assert_eq!(heap.read(Slice::new(1, buf, 4, 4)), &[5.0; 4]);
+    }
+
+    #[test]
+    fn broadcast_reaches_all_ranks() {
+        let c = ctx();
+        let topo = Topology::build(c.cluster);
+        let mut heap = SymmetricHeap::new(4, 16);
+        let buf = heap.alloc("x", 4);
+        heap.write(Slice::new(2, buf, 0, 4), &[8.0; 4]);
+        let mut prog = crate::program::Program::new();
+        let mut t = c.task(2, "bcast").on_copy_engine();
+        t.broadcast(Slice::new(2, buf, 0, 4));
+        prog.push(t.build());
+        let sim = Sim::new(&topo);
+        sim.run(&prog, &mut heap, &mut NoopExecutor).unwrap();
+        for r in 0..4 {
+            assert_eq!(heap.read(Slice::new(r, buf, 0, 4)), &[8.0; 4]);
+        }
+    }
+
+    #[test]
+    fn multimem_ld_reduce_sums_node_copies() {
+        let c = ctx();
+        let topo = Topology::build(c.cluster);
+        let mut heap = SymmetricHeap::new(4, 16);
+        let partial = heap.alloc("partial", 2);
+        let out = heap.alloc("out", 2);
+        for r in 0..4 {
+            heap.write(Slice::new(r, partial, 0, 2), &[r as f32, 1.0]);
+        }
+        let mut prog = crate::program::Program::new();
+        let mut t = c.task(1, "ldred").with_sms(16);
+        t.multimem_ld_reduce(Slice::new(1, partial, 0, 2), Slice::new(1, out, 0, 2));
+        prog.push(t.build());
+        let sim = Sim::new(&topo);
+        sim.run(&prog, &mut heap, &mut NoopExecutor).unwrap();
+        assert_eq!(heap.read(Slice::new(1, out, 0, 2)), &[6.0, 4.0]);
+    }
+}

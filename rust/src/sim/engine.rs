@@ -1,0 +1,1139 @@
+//! The discrete-event engine: executes a [`Program`] (async-tasks made of
+//! ops) over a [`Topology`], producing virtual-time spans and — when
+//! numerics are on — really moving the bytes through the symmetric heap
+//! and really running the compute through a [`ComputeExecutor`].
+//!
+//! Determinism: events are ordered by (time, sequence-number); identical
+//! programs produce identical timelines and identical numerics.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+use crate::config::HardwareModel;
+use crate::mem::{Slice, SymmetricHeap};
+use crate::program::{ComputeCost, NumericOp, Op, Program, Scope, SigCond, SigOp, SigRef};
+use crate::sim::flow::{FlowId, FlowNet};
+use crate::topology::Topology;
+
+/// Pluggable compute backend (XLA/PJRT in `runtime`, native fallback in
+/// `kernels::exec`, or nothing for timing-only benches).
+pub trait ComputeExecutor {
+    fn call(
+        &mut self,
+        heap: &mut SymmetricHeap,
+        entry: &str,
+        args: &[Slice],
+        outs: &[Slice],
+    ) -> anyhow::Result<()>;
+}
+
+/// Timing-only executor: numeric calls are no-ops.
+pub struct NoopExecutor;
+
+impl ComputeExecutor for NoopExecutor {
+    fn call(
+        &mut self,
+        _heap: &mut SymmetricHeap,
+        _entry: &str,
+        _args: &[Slice],
+        _outs: &[Slice],
+    ) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    /// Apply real data movement + compute (false = pure timing model).
+    pub numerics: bool,
+    /// Record per-op spans for timelines/chrome traces.
+    pub trace: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            numerics: true,
+            trace: false,
+        }
+    }
+}
+
+/// One recorded op execution (for traces).
+#[derive(Debug, Clone)]
+pub struct OpSpan {
+    pub task: usize,
+    pub rank: usize,
+    pub task_name: String,
+    pub label: String,
+    pub t0: f64,
+    pub t1: f64,
+}
+
+/// Aggregate result of a simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct SimReport {
+    /// Virtual makespan: completion time of the last task, seconds.
+    pub makespan: f64,
+    /// Per-task (start, end).
+    pub task_spans: Vec<(String, usize, f64, f64)>,
+    /// Per-op spans (only when `trace`).
+    pub op_spans: Vec<OpSpan>,
+    /// Events processed (engine-perf metric).
+    pub events: u64,
+    /// Flows created (diagnostics).
+    pub flows: u64,
+}
+
+/// Simulation failure.
+#[derive(Debug, thiserror::Error)]
+pub enum SimError {
+    #[error("deadlock: {0}")]
+    Deadlock(String),
+    #[error("task '{task}' on rank {rank} requests {req} SMs > device {cap}")]
+    SmOversubscribed {
+        task: String,
+        rank: usize,
+        req: u32,
+        cap: u32,
+    },
+    #[error("numeric executor failed in '{entry}': {source}")]
+    Executor {
+        entry: String,
+        #[source]
+        source: anyhow::Error,
+    },
+}
+
+// ---------------------------------------------------------------------------
+// events
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+enum Ev {
+    Start { task: usize },
+    FlowArm { pending: usize },
+    FlowDone { flow: FlowId, gen: u64 },
+    OpDone { task: usize, gen: u64 },
+    BarrierRelease { key: (u64, usize) },
+}
+
+struct QEntry {
+    t: f64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for QEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for QEntry {}
+impl PartialOrd for QEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for QEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap: reverse on (t, seq)
+        other
+            .t
+            .partial_cmp(&self.t)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// task runtime state
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum TState {
+    NotStarted,
+    WaitingSms,
+    Running,
+    BlockedFlow,
+    BlockedSignal { idx: usize, cond: SigCond, value: u64 },
+    BlockedLL { key: LLKey },
+    BlockedBarrier,
+    WaitQuiet,
+    Computing { gen: u64 },
+    Done,
+}
+
+type LLKey = (usize, usize, usize); // (rank, buf, off)
+
+struct TaskRt {
+    pc: usize,
+    state: TState,
+    outstanding_nbi: u32,
+    t_start: f64,
+    t_end: f64,
+    op_t0: f64,
+    op_gen: u64,
+}
+
+struct FlowCtx {
+    copies: Vec<(Slice, Slice)>,
+    signal: Option<(SigRef, SigOp, u64)>,
+    ll_dsts: Vec<LLKey>,
+    resume: Option<usize>,
+    nbi_owner: Option<usize>,
+    span: Option<(usize, &'static str, f64)>,
+}
+
+struct PendingFlow {
+    links: Vec<crate::topology::LinkId>,
+    bytes: f64,
+    ctx: FlowCtx,
+}
+
+struct BarrierState {
+    arrived: Vec<usize>,
+    needed: usize,
+    released: bool,
+}
+
+fn scope_key(s: Scope) -> u64 {
+    match s {
+        Scope::World => u64::MAX,
+        Scope::Node(n) => n as u64,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the engine
+// ---------------------------------------------------------------------------
+
+/// Simulator bound to a topology.
+pub struct Sim<'a> {
+    pub topo: &'a Topology,
+    pub cfg: SimConfig,
+}
+
+impl<'a> Sim<'a> {
+    pub fn new(topo: &'a Topology) -> Self {
+        Sim {
+            topo,
+            cfg: SimConfig::default(),
+        }
+    }
+
+    pub fn with_config(topo: &'a Topology, cfg: SimConfig) -> Self {
+        Sim { topo, cfg }
+    }
+
+    /// Execute `prog` to completion.
+    pub fn run(
+        &self,
+        prog: &Program,
+        heap: &mut SymmetricHeap,
+        exec: &mut dyn ComputeExecutor,
+    ) -> Result<SimReport, SimError> {
+        Runner::new(self, prog, heap, exec).run()
+    }
+}
+
+struct Runner<'s, 'a, 'h> {
+    sim: &'s Sim<'a>,
+    prog: &'s Program,
+    heap: &'h mut SymmetricHeap,
+    exec: &'h mut dyn ComputeExecutor,
+    hw: HardwareModel,
+
+    clock: f64,
+    seq: u64,
+    events: BinaryHeap<QEntry>,
+    n_events: u64,
+    n_flows: u64,
+
+    tasks: Vec<TaskRt>,
+    flows: FlowNet,
+    flow_ctx: HashMap<usize, FlowCtx>,
+    pending: Vec<Option<PendingFlow>>,
+
+    sig_waiters: HashMap<(usize, usize), Vec<usize>>,
+    ll_arrived: HashMap<LLKey, u32>,
+    ll_waiters: HashMap<LLKey, Vec<usize>>,
+    barriers: HashMap<(u64, usize), BarrierState>,
+
+    sm_used: Vec<u32>,
+    sm_queue: Vec<VecDeque<usize>>,
+
+    report: SimReport,
+}
+
+impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
+    fn new(
+        sim: &'s Sim<'a>,
+        prog: &'s Program,
+        heap: &'h mut SymmetricHeap,
+        exec: &'h mut dyn ComputeExecutor,
+    ) -> Self {
+        let ws = sim.topo.cluster.world_size();
+        let link_bw = (0..sim.topo.link_count())
+            .map(|l| sim.topo.link(crate::topology::LinkId(l)).bw)
+            .collect();
+        Runner {
+            sim,
+            prog,
+            heap,
+            exec,
+            hw: sim.topo.cluster.hw,
+            clock: 0.0,
+            seq: 0,
+            events: BinaryHeap::new(),
+            n_events: 0,
+            n_flows: 0,
+            tasks: prog
+                .tasks
+                .iter()
+                .map(|_| TaskRt {
+                    pc: 0,
+                    state: TState::NotStarted,
+                    outstanding_nbi: 0,
+                    t_start: 0.0,
+                    t_end: 0.0,
+                    op_t0: 0.0,
+                    op_gen: 0,
+                })
+                .collect(),
+            flows: FlowNet::new(link_bw),
+            flow_ctx: HashMap::new(),
+            pending: Vec::new(),
+            sig_waiters: HashMap::new(),
+            ll_arrived: HashMap::new(),
+            ll_waiters: HashMap::new(),
+            barriers: HashMap::new(),
+            sm_used: vec![0; ws],
+            sm_queue: (0..ws).map(|_| VecDeque::new()).collect(),
+            report: SimReport::default(),
+        }
+    }
+
+    fn push(&mut self, t: f64, ev: Ev) {
+        debug_assert!(t >= self.clock - 1e-12, "event in the past: {t} < {}", self.clock);
+        self.seq += 1;
+        self.events.push(QEntry {
+            t: t.max(self.clock),
+            seq: self.seq,
+            ev,
+        });
+    }
+
+    fn span(&mut self, task: usize, label: &str, t0: f64, t1: f64) {
+        if self.sim.cfg.trace {
+            let spec = &self.prog.tasks[task];
+            self.report.op_spans.push(OpSpan {
+                task,
+                rank: spec.rank,
+                task_name: spec.name.clone(),
+                label: label.to_string(),
+                t0,
+                t1,
+            });
+        }
+    }
+
+    fn run(mut self) -> Result<SimReport, SimError> {
+        // launch every task
+        for (i, t) in self.prog.tasks.iter().enumerate() {
+            if t.sms > self.hw.sms {
+                return Err(SimError::SmOversubscribed {
+                    task: t.name.clone(),
+                    rank: t.rank,
+                    req: t.sms,
+                    cap: self.hw.sms,
+                });
+            }
+            self.push(t.start_delay, Ev::Start { task: i });
+        }
+
+        while let Some(QEntry { t, ev, .. }) = self.events.pop() {
+            self.clock = t;
+            self.n_events += 1;
+            match ev {
+                Ev::Start { task } => self.on_start(task)?,
+                Ev::FlowArm { pending } => self.on_flow_arm(pending)?,
+                Ev::FlowDone { flow, gen } => self.on_flow_done(flow, gen)?,
+                Ev::OpDone { task, gen } => self.on_op_done(task, gen)?,
+                Ev::BarrierRelease { key } => self.on_barrier_release(key)?,
+            }
+        }
+
+        // completion / deadlock check
+        let stuck: Vec<String> = self
+            .tasks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.state != TState::Done)
+            .map(|(i, t)| {
+                format!(
+                    "task '{}' (rank {}) pc={} state={:?}",
+                    self.prog.tasks[i].name, self.prog.tasks[i].rank, t.pc, t.state
+                )
+            })
+            .collect();
+        if !stuck.is_empty() {
+            return Err(SimError::Deadlock(stuck.join("; ")));
+        }
+
+        self.report.makespan = self
+            .tasks
+            .iter()
+            .map(|t| t.t_end)
+            .fold(0.0f64, f64::max);
+        self.report.task_spans = self
+            .prog
+            .tasks
+            .iter()
+            .zip(self.tasks.iter())
+            .map(|(s, rt)| (s.name.clone(), s.rank, rt.t_start, rt.t_end))
+            .collect();
+        self.report.events = self.n_events;
+        self.report.flows = self.n_flows;
+        Ok(self.report)
+    }
+
+    // -- event handlers ----------------------------------------------------
+
+    fn on_start(&mut self, task: usize) -> Result<(), SimError> {
+        let spec = &self.prog.tasks[task];
+        let rank = spec.rank;
+        if spec.sms > 0 && self.sm_used[rank] + spec.sms > self.hw.sms {
+            self.tasks[task].state = TState::WaitingSms;
+            self.sm_queue[rank].push_back(task);
+            return Ok(());
+        }
+        self.sm_used[rank] += spec.sms;
+        self.tasks[task].state = TState::Running;
+        self.tasks[task].t_start = self.clock;
+        self.advance(task)
+    }
+
+    fn on_flow_arm(&mut self, pending: usize) -> Result<(), SimError> {
+        let pf = self.pending[pending].take().expect("pending flow armed twice");
+        self.n_flows += 1;
+        let (id, update) = self.flows.add(self.clock, pf.links, pf.bytes);
+        self.flow_ctx.insert(id.0, pf.ctx);
+        for (f, gen, eta) in update.etas {
+            self.push(self.clock + eta, Ev::FlowDone { flow: f, gen });
+        }
+        Ok(())
+    }
+
+    fn on_flow_done(&mut self, flow: FlowId, gen: u64) -> Result<(), SimError> {
+        if !self.flows.is_current(flow, gen) {
+            return Ok(()); // stale event from an older rate assignment
+        }
+        debug_assert!(
+            self.flows.remaining_at(flow, self.clock) < 1e-3,
+            "current FlowDone with {} bytes left",
+            self.flows.remaining_at(flow, self.clock)
+        );
+        let update = self.flows.remove(self.clock, flow);
+        for (f, g, eta) in update.etas {
+            self.push(self.clock + eta, Ev::FlowDone { flow: f, gen: g });
+        }
+        let ctx = self.flow_ctx.remove(&flow.0).expect("missing flow ctx");
+
+        if self.sim.cfg.numerics {
+            for (src, dst) in &ctx.copies {
+                self.heap.copy(*src, *dst);
+            }
+        }
+        if let Some((sig, op, val)) = ctx.signal {
+            self.apply_signal(sig, op, val)?;
+        }
+        for key in ctx.ll_dsts {
+            *self.ll_arrived.entry(key).or_insert(0) += 1;
+            if let Some(waiters) = self.ll_waiters.remove(&key) {
+                for w in waiters {
+                    self.tasks[w].state = TState::Running;
+                    self.bump_pc_and_resume(w)?;
+                }
+            }
+        }
+        if let Some((task, label, t0)) = ctx.span {
+            self.span(task, label, t0, self.clock);
+        }
+        if let Some(owner) = ctx.nbi_owner {
+            self.tasks[owner].outstanding_nbi -= 1;
+            if self.tasks[owner].state == TState::WaitQuiet
+                && self.tasks[owner].outstanding_nbi == 0
+            {
+                self.tasks[owner].state = TState::Running;
+                self.bump_pc_and_resume(owner)?;
+            }
+        }
+        if let Some(t) = ctx.resume {
+            debug_assert_eq!(self.tasks[t].state, TState::BlockedFlow);
+            self.tasks[t].state = TState::Running;
+            self.bump_pc_and_resume(t)?;
+        }
+        Ok(())
+    }
+
+    fn on_op_done(&mut self, task: usize, gen: u64) -> Result<(), SimError> {
+        if self.tasks[task].op_gen != gen {
+            return Ok(());
+        }
+        let spec = &self.prog.tasks[task];
+        let op = spec.ops[self.tasks[task].pc].clone();
+        match &op {
+            Op::Compute { numeric, .. } => {
+                if self.sim.cfg.numerics {
+                    self.apply_numeric(numeric)?;
+                }
+            }
+            Op::Sleep { .. } => {}
+            other => unreachable!("OpDone on non-timed op {other:?}"),
+        }
+        let t0 = self.tasks[task].op_t0;
+        self.span(task, op.label(), t0, self.clock);
+        self.tasks[task].state = TState::Running;
+        self.bump_pc_and_resume(task)
+    }
+
+    fn on_barrier_release(&mut self, key: (u64, usize)) -> Result<(), SimError> {
+        let st = self.barriers.get_mut(&key).expect("missing barrier");
+        st.released = true;
+        let arrived = std::mem::take(&mut st.arrived);
+        for t in arrived {
+            self.tasks[t].state = TState::Running;
+            self.bump_pc_and_resume(t)?;
+        }
+        Ok(())
+    }
+
+    // -- op interpreter ------------------------------------------------------
+
+    fn bump_pc_and_resume(&mut self, task: usize) -> Result<(), SimError> {
+        self.tasks[task].pc += 1;
+        self.advance(task)
+    }
+
+    /// Run ops from the task's pc until it blocks or finishes.
+    fn advance(&mut self, task: usize) -> Result<(), SimError> {
+        loop {
+            let spec = &self.prog.tasks[task];
+            let pc = self.tasks[task].pc;
+            if pc >= spec.ops.len() {
+                return self.finish_task(task);
+            }
+            let op = spec.ops[pc].clone();
+            let rank = spec.rank;
+            match op {
+                Op::Put {
+                    src,
+                    dst,
+                    bytes,
+                    signal,
+                    blocking,
+                    label,
+                } => {
+                    let mut route = self.sim.topo.route(src.rank, dst.rank);
+                    if signal.is_some() {
+                        // flag packet + fence after the payload (§3.4's
+                        // "each P2P transfer requires a pair of signal
+                        // operations, causing additional overhead")
+                        route.latency += self.hw.signal_overhead;
+                    }
+                    let ctx = FlowCtx {
+                        copies: vec![(src, dst)],
+                        signal,
+                        ll_dsts: Vec::new(),
+                        resume: if blocking { Some(task) } else { None },
+                        nbi_owner: if blocking { None } else { Some(task) },
+                        span: Some((task, label, self.clock)),
+                    };
+                    self.launch_flow(route, bytes, ctx);
+                    if blocking {
+                        self.tasks[task].state = TState::BlockedFlow;
+                        return Ok(());
+                    }
+                    self.tasks[task].outstanding_nbi += 1;
+                    self.tasks[task].pc += 1;
+                }
+                Op::Get {
+                    src,
+                    dst,
+                    bytes,
+                    blocking,
+                    label,
+                } => {
+                    let mut route = self.sim.topo.route(src.rank, dst.rank);
+                    route.latency *= 2.0; // request/response round trip
+                    let ctx = FlowCtx {
+                        copies: vec![(src, dst)],
+                        signal: None,
+                        ll_dsts: Vec::new(),
+                        resume: if blocking { Some(task) } else { None },
+                        nbi_owner: if blocking { None } else { Some(task) },
+                        span: Some((task, label, self.clock)),
+                    };
+                    self.launch_flow(route, bytes, ctx);
+                    if blocking {
+                        self.tasks[task].state = TState::BlockedFlow;
+                        return Ok(());
+                    }
+                    self.tasks[task].outstanding_nbi += 1;
+                    self.tasks[task].pc += 1;
+                }
+                Op::MultimemSt { src, bytes, ll } => {
+                    let route = self
+                        .sim
+                        .topo
+                        .multimem_route(src.rank)
+                        .expect("multimem_st unsupported on this hardware");
+                    let node = self.sim.topo.cluster.node_of(src.rank);
+                    let peers: Vec<usize> = (0..self.heap.world())
+                        .filter(|&r| r != src.rank && self.sim.topo.cluster.node_of(r) == node)
+                        .collect();
+                    let copies: Vec<(Slice, Slice)> =
+                        peers.iter().map(|&r| (src, src.on_rank(r))).collect();
+                    let ll_dsts: Vec<LLKey> = if ll {
+                        peers.iter().map(|&r| (r, src.buf.0, src.off)).collect()
+                    } else {
+                        Vec::new()
+                    };
+                    let ctx = FlowCtx {
+                        copies,
+                        signal: None,
+                        ll_dsts,
+                        resume: Some(task),
+                        nbi_owner: None,
+                        span: Some((task, "multimem_st", self.clock)),
+                    };
+                    self.launch_flow(route, bytes, ctx);
+                    self.tasks[task].state = TState::BlockedFlow;
+                    return Ok(());
+                }
+                Op::LLPut { src, dst, bytes } => {
+                    let route = self.sim.topo.route(src.rank, dst.rank);
+                    let ctx = FlowCtx {
+                        copies: vec![(src, dst)],
+                        signal: None,
+                        ll_dsts: vec![(dst.rank, dst.buf.0, dst.off)],
+                        resume: None,
+                        nbi_owner: Some(task),
+                        span: Some((task, "ll_put", self.clock)),
+                    };
+                    // LL doubles the wire size (flag bytes in-band, §3.4)
+                    self.launch_flow(route, bytes * 2.0, ctx);
+                    self.tasks[task].outstanding_nbi += 1;
+                    self.tasks[task].pc += 1;
+                }
+                Op::LLWait { dst } => {
+                    let key: LLKey = (dst.rank, dst.buf.0, dst.off);
+                    if self.ll_arrived.get(&key).copied().unwrap_or(0) > 0 {
+                        self.tasks[task].pc += 1;
+                    } else {
+                        self.ll_waiters.entry(key).or_default().push(task);
+                        self.tasks[task].state = TState::BlockedLL { key };
+                        return Ok(());
+                    }
+                }
+                Op::SetSignal { sig, op, value } => {
+                    self.apply_signal(sig, op, value)?;
+                    self.tasks[task].pc += 1;
+                }
+                Op::WaitSignal { idx, cond, value } => {
+                    if sig_met(self.heap.signal(rank, idx), cond, value) {
+                        self.tasks[task].pc += 1;
+                    } else {
+                        self.sig_waiters.entry((rank, idx)).or_default().push(task);
+                        self.tasks[task].state = TState::BlockedSignal { idx, cond, value };
+                        return Ok(());
+                    }
+                }
+                Op::Quiet => {
+                    if self.tasks[task].outstanding_nbi == 0 {
+                        self.tasks[task].pc += 1;
+                    } else {
+                        self.tasks[task].state = TState::WaitQuiet;
+                        return Ok(());
+                    }
+                }
+                Op::Barrier { scope, id, expect } => {
+                    let key = (scope_key(scope), id);
+                    let st = self.barriers.entry(key).or_insert(BarrierState {
+                        arrived: Vec::new(),
+                        needed: expect,
+                        released: false,
+                    });
+                    assert_eq!(
+                        st.needed, expect,
+                        "barrier id {id} used with inconsistent expect counts"
+                    );
+                    if st.released {
+                        // reuse of a released barrier id is a program bug
+                        panic!("barrier id {id} reused after release");
+                    }
+                    st.arrived.push(task);
+                    self.tasks[task].state = TState::BlockedBarrier;
+                    if st.arrived.len() == st.needed {
+                        let lat = match scope {
+                            Scope::World if self.sim.topo.cluster.nodes > 1 => {
+                                2.0 * self.hw.inter_lat
+                            }
+                            _ => 2.0 * self.hw.intra_lat,
+                        };
+                        self.push(self.clock + lat, Ev::BarrierRelease { key });
+                    }
+                    return Ok(());
+                }
+                Op::Compute { ref cost, .. } => {
+                    let sms = self.prog.tasks[task].sms;
+                    let dur = self.cost_time(cost, sms);
+                    self.tasks[task].op_gen += 1;
+                    let gen = self.tasks[task].op_gen;
+                    self.tasks[task].op_t0 = self.clock;
+                    self.tasks[task].state = TState::Computing { gen };
+                    self.push(self.clock + dur, Ev::OpDone { task, gen });
+                    return Ok(());
+                }
+                Op::Sleep { secs } => {
+                    self.tasks[task].op_gen += 1;
+                    let gen = self.tasks[task].op_gen;
+                    self.tasks[task].op_t0 = self.clock;
+                    self.tasks[task].state = TState::Computing { gen };
+                    self.push(self.clock + secs, Ev::OpDone { task, gen });
+                    return Ok(());
+                }
+            }
+        }
+    }
+
+    fn finish_task(&mut self, task: usize) -> Result<(), SimError> {
+        self.tasks[task].state = TState::Done;
+        self.tasks[task].t_end = self.clock;
+        let spec = &self.prog.tasks[task];
+        let rank = spec.rank;
+        if spec.sms > 0 {
+            self.sm_used[rank] -= spec.sms;
+            // strict-FIFO grant to queued kernels that now fit
+            while let Some(&next) = self.sm_queue[rank].front() {
+                let need = self.prog.tasks[next].sms;
+                if self.sm_used[rank] + need <= self.hw.sms {
+                    self.sm_queue[rank].pop_front();
+                    self.sm_used[rank] += need;
+                    self.tasks[next].state = TState::Running;
+                    self.tasks[next].t_start = self.clock;
+                    self.advance(next)?;
+                } else {
+                    break;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn launch_flow(&mut self, route: crate::topology::Route, bytes: f64, ctx: FlowCtx) {
+        let bytes = bytes.max(64.0); // minimum wire granule
+        self.pending.push(Some(PendingFlow {
+            links: route.links,
+            bytes,
+            ctx,
+        }));
+        let idx = self.pending.len() - 1;
+        self.push(self.clock + route.latency, Ev::FlowArm { pending: idx });
+    }
+
+    fn apply_signal(&mut self, sig: SigRef, op: SigOp, value: u64) -> Result<(), SimError> {
+        match op {
+            SigOp::Set => self.heap.signal_set(sig.rank, sig.idx, value),
+            SigOp::Add => {
+                self.heap.signal_add(sig.rank, sig.idx, value);
+            }
+        }
+        // wake satisfied waiters (preserving FIFO order among them)
+        if let Some(waiters) = self.sig_waiters.remove(&(sig.rank, sig.idx)) {
+            let mut still = Vec::new();
+            for w in waiters {
+                let TState::BlockedSignal { idx, cond, value } = self.tasks[w].state else {
+                    continue;
+                };
+                if sig_met(self.heap.signal(sig.rank, idx), cond, value) {
+                    self.tasks[w].state = TState::Running;
+                    self.bump_pc_and_resume(w)?;
+                } else {
+                    still.push(w);
+                }
+            }
+            if !still.is_empty() {
+                self.sig_waiters.insert((sig.rank, sig.idx), still);
+            }
+        }
+        Ok(())
+    }
+
+    fn apply_numeric(&mut self, n: &NumericOp) -> Result<(), SimError> {
+        match n {
+            NumericOp::None => {}
+            NumericOp::Copy { src, dst } => self.heap.copy(*src, *dst),
+            NumericOp::ReduceAdd {
+                srcs,
+                dst,
+                zero_dst,
+            } => {
+                if *zero_dst {
+                    self.heap.write(*dst, &vec![0.0; dst.len]);
+                }
+                for s in srcs {
+                    self.heap.reduce_add(*s, *dst);
+                }
+            }
+            NumericOp::Call { entry, args, outs } => {
+                self.exec
+                    .call(self.heap, entry, args, outs)
+                    .map_err(|e| SimError::Executor {
+                        entry: entry.clone(),
+                        source: e,
+                    })?;
+            }
+        }
+        Ok(())
+    }
+
+    fn cost_time(&self, cost: &ComputeCost, sms: u32) -> f64 {
+        match cost {
+            ComputeCost::Gemm { flops, vendor } => {
+                assert!(sms > 0, "GEMM in a 0-SM task");
+                let rate = if *vendor {
+                    self.hw.vendor_gemm_flops(sms)
+                } else {
+                    self.hw.triton_gemm_flops(sms)
+                };
+                flops / rate
+            }
+            ComputeCost::Reduce { bytes } => {
+                assert!(sms > 0, "reduction in a 0-SM task");
+                bytes / self.hw.reduce_bw(sms)
+            }
+            ComputeCost::MemBound { bytes } => bytes / self.hw.hbm_bw,
+            ComputeCost::Fixed { secs } => *secs,
+        }
+    }
+}
+
+fn sig_met(cur: u64, cond: SigCond, value: u64) -> bool {
+    match cond {
+        SigCond::Eq => cur == value,
+        SigCond::Ge => cur >= value,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+    use crate::program::EngineClass;
+    use crate::program::TaskBuilder;
+
+    fn setup(nodes: usize, gpn: usize) -> (Topology, SymmetricHeap) {
+        let cluster = ClusterSpec::h800(nodes, gpn);
+        let topo = Topology::build(cluster);
+        let heap = SymmetricHeap::new(cluster.world_size(), 64);
+        (topo, heap)
+    }
+
+    #[test]
+    fn put_moves_data_and_takes_time() {
+        let (topo, mut heap) = setup(1, 2);
+        let buf = heap.alloc("x", 8);
+        heap.write(Slice::new(0, buf, 0, 4), &[1.0, 2.0, 3.0, 4.0]);
+
+        let mut prog = Program::new();
+        let mut t = TaskBuilder::new(0, "putter").engine(EngineClass::CopyEngine);
+        t.op(Op::Put {
+            src: Slice::new(0, buf, 0, 4),
+            dst: Slice::new(1, buf, 4, 4),
+            bytes: 170e9 * 1e-3, // exactly 1 ms at full NVLink egress
+            signal: None,
+            blocking: true,
+            label: "put",
+        });
+        prog.push(t.build());
+
+        let sim = Sim::new(&topo);
+        let rep = sim.run(&prog, &mut heap, &mut NoopExecutor).unwrap();
+        assert_eq!(heap.read(Slice::new(1, buf, 4, 4)), &[1.0, 2.0, 3.0, 4.0]);
+        // 1 ms transfer + 0.5us latency
+        assert!((rep.makespan - (1e-3 + 0.5e-6)).abs() < 1e-9, "{}", rep.makespan);
+    }
+
+    #[test]
+    fn put_signal_wakes_waiter() {
+        let (topo, mut heap) = setup(1, 2);
+        let buf = heap.alloc("x", 4);
+        heap.write(Slice::new(0, buf, 0, 4), &[9.0; 4]);
+
+        let mut prog = Program::new();
+        let mut prod = TaskBuilder::new(0, "producer").engine(EngineClass::CopyEngine);
+        prod.op(Op::Put {
+            src: Slice::new(0, buf, 0, 4),
+            dst: Slice::new(1, buf, 0, 4),
+            bytes: 1024.0,
+            signal: Some((SigRef { rank: 1, idx: 0 }, SigOp::Set, 1)),
+            blocking: true,
+            label: "put",
+        });
+        prog.push(prod.build());
+
+        let mut cons = TaskBuilder::new(1, "consumer").sms(4);
+        cons.op(Op::WaitSignal {
+            idx: 0,
+            cond: SigCond::Eq,
+            value: 1,
+        });
+        cons.op(Op::Compute {
+            cost: ComputeCost::Fixed { secs: 1e-6 },
+            numeric: NumericOp::None,
+            label: "work",
+        });
+        prog.push(cons.build());
+
+        let sim = Sim::new(&topo);
+        let rep = sim.run(&prog, &mut heap, &mut NoopExecutor).unwrap();
+        assert!(rep.makespan > 1e-6);
+        assert_eq!(heap.signal(1, 0), 1);
+        assert_eq!(heap.read(Slice::new(1, buf, 0, 4)), &[9.0; 4]);
+    }
+
+    #[test]
+    fn deadlock_is_detected_not_hung() {
+        let (topo, mut heap) = setup(1, 2);
+        let mut prog = Program::new();
+        let mut t = TaskBuilder::new(0, "stuck");
+        t.op(Op::WaitSignal {
+            idx: 5,
+            cond: SigCond::Eq,
+            value: 1,
+        });
+        prog.push(t.build());
+        let sim = Sim::new(&topo);
+        let err = sim.run(&prog, &mut heap, &mut NoopExecutor).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("deadlock"), "{msg}");
+        assert!(msg.contains("stuck"), "{msg}");
+    }
+
+    #[test]
+    fn barrier_synchronizes_all_ranks() {
+        let (topo, mut heap) = setup(1, 4);
+        let mut prog = Program::new();
+        for r in 0..4 {
+            let mut t = TaskBuilder::new(r, format!("t{r}"));
+            // rank r sleeps r us then barriers
+            t.op(Op::Sleep { secs: r as f64 * 1e-6 });
+            t.op(Op::Barrier {
+                scope: Scope::World,
+                id: 0,
+                expect: 4,
+            });
+            prog.push(t.build());
+        }
+        let sim = Sim::new(&topo);
+        let rep = sim.run(&prog, &mut heap, &mut NoopExecutor).unwrap();
+        // all tasks end together, after the slowest (3us) + barrier latency
+        let ends: Vec<f64> = rep.task_spans.iter().map(|s| s.3).collect();
+        for e in &ends {
+            assert!((e - ends[0]).abs() < 1e-12);
+        }
+        assert!(ends[0] >= 3e-6);
+    }
+
+    #[test]
+    fn sm_oversubscription_queues_fifo() {
+        let (topo, mut heap) = setup(1, 1);
+        let mut prog = Program::new();
+        // two kernels of 100 SMs on a 132-SM device: must serialize
+        for i in 0..2 {
+            let mut t = TaskBuilder::new(0, format!("k{i}")).sms(100);
+            t.op(Op::Compute {
+                cost: ComputeCost::Fixed { secs: 1e-3 },
+                numeric: NumericOp::None,
+                label: "w",
+            });
+            prog.push(t.build());
+        }
+        let sim = Sim::new(&topo);
+        let rep = sim.run(&prog, &mut heap, &mut NoopExecutor).unwrap();
+        assert!((rep.makespan - 2e-3).abs() < 1e-9, "{}", rep.makespan);
+    }
+
+    #[test]
+    fn sm_request_above_device_errors() {
+        let (topo, mut heap) = setup(1, 1);
+        let mut prog = Program::new();
+        prog.push(TaskBuilder::new(0, "huge").sms(200).build());
+        let sim = Sim::new(&topo);
+        assert!(matches!(
+            sim.run(&prog, &mut heap, &mut NoopExecutor),
+            Err(SimError::SmOversubscribed { .. })
+        ));
+    }
+
+    #[test]
+    fn nbi_and_quiet() {
+        let (topo, mut heap) = setup(1, 2);
+        let buf = heap.alloc("x", 16);
+        let mut prog = Program::new();
+        let mut t = TaskBuilder::new(0, "nbi").engine(EngineClass::CopyEngine);
+        for i in 0..4 {
+            t.op(Op::Put {
+                src: Slice::new(0, buf, i * 2, 2),
+                dst: Slice::new(1, buf, i * 2, 2),
+                bytes: 170e9 * 1e-4,
+                signal: None,
+                blocking: false,
+                label: "nbi_put",
+            });
+        }
+        t.op(Op::Quiet);
+        t.op(Op::SetSignal {
+            sig: SigRef { rank: 0, idx: 0 },
+            op: SigOp::Set,
+            value: 1,
+        });
+        prog.push(t.build());
+        let sim = Sim::new(&topo);
+        let rep = sim.run(&prog, &mut heap, &mut NoopExecutor).unwrap();
+        // 4 concurrent puts share the egress link: 4 * 1e-4 s total
+        assert!((rep.makespan - (4e-4 + 0.5e-6)).abs() < 1e-8, "{}", rep.makespan);
+        assert_eq!(heap.signal(0, 0), 1);
+    }
+
+    #[test]
+    fn ll_put_wakes_ll_wait() {
+        let (topo, mut heap) = setup(1, 2);
+        let buf = heap.alloc("ll", 8);
+        heap.write(Slice::new(0, buf, 0, 4), &[7.0; 4]);
+        let mut prog = Program::new();
+        let mut sender = TaskBuilder::new(0, "s").sms(1);
+        sender.op(Op::LLPut {
+            src: Slice::new(0, buf, 0, 4),
+            dst: Slice::new(1, buf, 0, 4),
+            bytes: 1024.0,
+        });
+        prog.push(sender.build());
+        let mut recv = TaskBuilder::new(1, "r").sms(1);
+        recv.op(Op::LLWait {
+            dst: Slice::new(1, buf, 0, 4),
+        });
+        prog.push(recv.build());
+        let sim = Sim::new(&topo);
+        sim.run(&prog, &mut heap, &mut NoopExecutor).unwrap();
+        assert_eq!(heap.read(Slice::new(1, buf, 0, 4)), &[7.0; 4]);
+    }
+
+    #[test]
+    fn multimem_broadcasts_within_node() {
+        let (topo, mut heap) = setup(2, 4); // 2 nodes x 4
+        let buf = heap.alloc("b", 4);
+        heap.write(Slice::new(1, buf, 0, 4), &[3.0; 4]);
+        let mut prog = Program::new();
+        let mut t = TaskBuilder::new(1, "bcast").sms(1);
+        t.op(Op::MultimemSt {
+            src: Slice::new(1, buf, 0, 4),
+            bytes: 1024.0,
+            ll: false,
+        });
+        prog.push(t.build());
+        let sim = Sim::new(&topo);
+        let rep = sim.run(&prog, &mut heap, &mut NoopExecutor).unwrap();
+        // node-0 peers got it
+        for r in [0usize, 2, 3] {
+            assert_eq!(heap.read(Slice::new(r, buf, 0, 4)), &[3.0; 4]);
+        }
+        // node-1 ranks did not
+        for r in [4usize, 5, 6, 7] {
+            assert_eq!(heap.read(Slice::new(r, buf, 0, 4)), &[0.0; 4]);
+        }
+        // multimem latency floor (1.5us)
+        assert!(rep.makespan >= 1.5e-6);
+    }
+
+    #[test]
+    fn trace_records_spans() {
+        let (topo, mut heap) = setup(1, 1);
+        let mut prog = Program::new();
+        let mut t = TaskBuilder::new(0, "k").sms(1);
+        t.op(Op::Compute {
+            cost: ComputeCost::Fixed { secs: 5e-6 },
+            numeric: NumericOp::None,
+            label: "tile",
+        });
+        prog.push(t.build());
+        let sim = Sim::with_config(
+            &topo,
+            SimConfig {
+                numerics: true,
+                trace: true,
+            },
+        );
+        let rep = sim.run(&prog, &mut heap, &mut NoopExecutor).unwrap();
+        assert_eq!(rep.op_spans.len(), 1);
+        assert_eq!(rep.op_spans[0].label, "tile");
+        assert!((rep.op_spans[0].t1 - rep.op_spans[0].t0 - 5e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn numeric_reduce_add() {
+        let (topo, mut heap) = setup(1, 1);
+        let buf = heap.alloc("x", 6);
+        heap.write(Slice::new(0, buf, 0, 2), &[1.0, 2.0]);
+        heap.write(Slice::new(0, buf, 2, 2), &[10.0, 20.0]);
+        let mut prog = Program::new();
+        let mut t = TaskBuilder::new(0, "red").sms(8);
+        t.op(Op::Compute {
+            cost: ComputeCost::Reduce { bytes: 1024.0 },
+            numeric: NumericOp::ReduceAdd {
+                srcs: vec![Slice::new(0, buf, 0, 2), Slice::new(0, buf, 2, 2)],
+                dst: Slice::new(0, buf, 4, 2),
+                zero_dst: true,
+            },
+            label: "reduce",
+        });
+        prog.push(t.build());
+        let sim = Sim::new(&topo);
+        sim.run(&prog, &mut heap, &mut NoopExecutor).unwrap();
+        assert_eq!(heap.read(Slice::new(0, buf, 4, 2)), &[11.0, 22.0]);
+    }
+
+    #[test]
+    fn deterministic_makespan() {
+        // same program twice -> identical report
+        let run_once = || {
+            let (topo, mut heap) = setup(1, 4);
+            let buf = heap.alloc("x", 64);
+            let mut prog = Program::new();
+            for r in 0..4usize {
+                let mut t =
+                    TaskBuilder::new(r, format!("t{r}")).engine(EngineClass::CopyEngine);
+                for p in 0..4usize {
+                    if p != r {
+                        t.op(Op::Put {
+                            src: Slice::new(r, buf, r * 16, 16),
+                            dst: Slice::new(p, buf, r * 16, 16),
+                            bytes: 4096.0,
+                            signal: None,
+                            blocking: false,
+                            label: "p",
+                        });
+                    }
+                }
+                t.op(Op::Quiet);
+                prog.push(t.build());
+            }
+            let sim = Sim::new(&topo);
+            sim.run(&prog, &mut heap, &mut NoopExecutor).unwrap().makespan
+        };
+        assert_eq!(run_once(), run_once());
+    }
+}

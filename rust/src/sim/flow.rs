@@ -1,0 +1,393 @@
+//! Flow network: concurrent transfers sharing link capacity.
+//!
+//! Every in-flight transfer is a *flow* occupying a set of links (its
+//! route). Rates are assigned by **max–min fairness** (progressive
+//! water-filling): repeatedly find the most-contended link, give its flows
+//! an equal share of its remaining capacity, freeze them, and continue.
+//! This is the standard fluid model for switched fabrics and matches how
+//! NVSwitch/PCIe/NIC bandwidth degrades under contention closely enough
+//! for overlap analysis (the paper's own §3.5 back-of-envelope uses the
+//! same linear bandwidth-sharing arithmetic).
+
+use crate::topology::LinkId;
+
+/// Handle to an active flow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FlowId(pub usize);
+
+#[derive(Debug, Clone)]
+struct Flow {
+    links: Vec<LinkId>,
+    bytes_left: f64,
+    rate: f64,
+    /// Generation counter: completion events carry the generation they
+    /// were scheduled under; rate changes bump it, invalidating stale
+    /// events.
+    gen: u64,
+    alive: bool,
+}
+
+/// The set of active flows plus link capacities.
+pub struct FlowNet {
+    link_bw: Vec<f64>,
+    flows: Vec<Flow>,
+    free: Vec<usize>,
+    /// Time rates were last recomputed; progress accrues between updates.
+    last_update: f64,
+    n_active: usize,
+    // --- reusable scratch for recompute (hot path; avoids per-call allocs)
+    scratch_cap: Vec<f64>,
+    scratch_link_flows: Vec<Vec<u32>>,
+    scratch_frozen: Vec<bool>,
+    scratch_active_links: Vec<u32>,
+    scratch_unfrozen: Vec<u32>,
+}
+
+/// Result of a rate recomputation: each active flow's new completion ETA.
+pub struct RateUpdate {
+    /// (flow, generation, eta_seconds_from_now)
+    pub etas: Vec<(FlowId, u64, f64)>,
+}
+
+impl FlowNet {
+    pub fn new(link_bw: Vec<f64>) -> Self {
+        let nl = link_bw.len();
+        FlowNet {
+            link_bw,
+            flows: Vec::new(),
+            free: Vec::new(),
+            last_update: 0.0,
+            n_active: 0,
+            scratch_cap: vec![0.0; nl],
+            scratch_link_flows: (0..nl).map(|_| Vec::new()).collect(),
+            scratch_frozen: Vec::new(),
+            scratch_active_links: Vec::new(),
+            scratch_unfrozen: Vec::new(),
+        }
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.n_active
+    }
+
+    /// Accrue progress for all flows up to `now` (call before any
+    /// add/remove at time `now`).
+    fn settle(&mut self, now: f64) {
+        let dt = now - self.last_update;
+        debug_assert!(dt >= -1e-12, "time went backwards: {dt}");
+        if dt > 0.0 {
+            for f in self.flows.iter_mut().filter(|f| f.alive) {
+                f.bytes_left = (f.bytes_left - f.rate * dt).max(0.0);
+            }
+        }
+        self.last_update = now;
+    }
+
+    /// Add a flow at `now`; returns its id and the rate update for ALL
+    /// active flows (the caller reschedules completion events).
+    pub fn add(&mut self, now: f64, links: Vec<LinkId>, bytes: f64) -> (FlowId, RateUpdate) {
+        self.settle(now);
+        debug_assert!(bytes > 0.0, "zero-byte flow");
+        let flow = Flow {
+            links,
+            bytes_left: bytes,
+            rate: 0.0,
+            gen: 0,
+            alive: true,
+        };
+        let id = if let Some(i) = self.free.pop() {
+            // preserve the slot's generation across reuse: completion
+            // events of the previous occupant must stay stale
+            let gen = self.flows[i].gen;
+            self.flows[i] = Flow { gen, ..flow };
+            i
+        } else {
+            self.flows.push(flow);
+            self.flows.len() - 1
+        };
+        self.n_active += 1;
+        let up = self.recompute();
+        (FlowId(id), up)
+    }
+
+    /// Remove a completed (or cancelled) flow; returns the rate update.
+    pub fn remove(&mut self, now: f64, id: FlowId) -> RateUpdate {
+        self.settle(now);
+        assert!(self.flows[id.0].alive, "double remove of flow {id:?}");
+        self.flows[id.0].alive = false;
+        self.free.push(id.0);
+        self.n_active -= 1;
+        self.recompute()
+    }
+
+    /// Is `gen` the current generation of `id`? (Stale-event filter.)
+    pub fn is_current(&self, id: FlowId, gen: u64) -> bool {
+        let f = &self.flows[id.0];
+        f.alive && f.gen == gen
+    }
+
+    /// Remaining bytes of a flow (diagnostics/tests). Reflects progress
+    /// only up to the last add/remove — see [`Self::remaining_at`].
+    pub fn bytes_left(&self, id: FlowId) -> f64 {
+        self.flows[id.0].bytes_left
+    }
+
+    /// Remaining bytes of a flow projected to time `now` (without
+    /// mutating state).
+    pub fn remaining_at(&self, id: FlowId, now: f64) -> f64 {
+        let f = &self.flows[id.0];
+        (f.bytes_left - f.rate * (now - self.last_update).max(0.0)).max(0.0)
+    }
+
+    pub fn rate(&self, id: FlowId) -> f64 {
+        self.flows[id.0].rate
+    }
+
+    /// Max–min water-filling over all alive flows.
+    ///
+    /// Completion events are only re-issued for flows whose rate actually
+    /// changed (plus fresh zero-rate flows): an unchanged rate means the
+    /// previously scheduled completion time is still exact, so the old
+    /// event stays current — this cuts event-queue churn from O(F) to
+    /// O(changed) per add/remove, the engine's hottest path.
+    fn recompute(&mut self) -> RateUpdate {
+        let nl = self.link_bw.len();
+        self.scratch_cap.clear();
+        self.scratch_cap.extend_from_slice(&self.link_bw);
+        for lf in &mut self.scratch_link_flows {
+            lf.clear();
+        }
+        self.scratch_frozen.clear();
+        self.scratch_frozen.resize(self.flows.len(), false);
+        let mut old_rates: Vec<(u32, f64)> = Vec::with_capacity(self.n_active);
+        for (i, f) in self.flows.iter().enumerate() {
+            if !f.alive {
+                continue;
+            }
+            old_rates.push((i as u32, f.rate));
+            for l in &f.links {
+                self.scratch_link_flows[l.0].push(i as u32);
+            }
+        }
+        self.scratch_active_links.clear();
+        for l in 0..nl {
+            if !self.scratch_link_flows[l].is_empty() {
+                self.scratch_active_links.push(l as u32);
+            }
+        }
+        // per-link unfrozen counts start at list lengths
+        self.scratch_unfrozen.clear();
+        self.scratch_unfrozen
+            .extend((0..nl).map(|l| self.scratch_link_flows[l].len() as u32));
+        let mut unfrozen = std::mem::take(&mut self.scratch_unfrozen);
+        let mut remaining = self.n_active;
+        while remaining > 0 {
+            // bottleneck link = min fair share among active links
+            let mut best_share = f64::INFINITY;
+            let mut best_link = usize::MAX;
+            let mut w = 0;
+            for k in 0..self.scratch_active_links.len() {
+                let l = self.scratch_active_links[k] as usize;
+                if unfrozen[l] == 0 {
+                    continue; // drop from the active list (compaction)
+                }
+                self.scratch_active_links[w] = l as u32;
+                w += 1;
+                let share = self.scratch_cap[l] / unfrozen[l] as f64;
+                if share < best_share {
+                    best_share = share;
+                    best_link = l;
+                }
+            }
+            self.scratch_active_links.truncate(w);
+            if best_link == usize::MAX {
+                // flows with no links (shouldn't happen) get infinite rate
+                for &(i, _) in &old_rates {
+                    if !self.scratch_frozen[i as usize] {
+                        self.flows[i as usize].rate = f64::INFINITY;
+                        self.scratch_frozen[i as usize] = true;
+                    }
+                }
+                break;
+            }
+            // freeze the bottleneck link's unfrozen flows at best_share
+            let list = std::mem::take(&mut self.scratch_link_flows[best_link]);
+            for &fi in &list {
+                let i = fi as usize;
+                if self.scratch_frozen[i] {
+                    continue;
+                }
+                self.flows[i].rate = best_share;
+                self.scratch_frozen[i] = true;
+                remaining -= 1;
+                for l in &self.flows[i].links {
+                    self.scratch_cap[l.0] = (self.scratch_cap[l.0] - best_share).max(0.0);
+                    unfrozen[l.0] -= 1;
+                }
+            }
+            self.scratch_link_flows[best_link] = list;
+        }
+        self.scratch_unfrozen = unfrozen;
+        // bump generations + produce ETAs only where the rate changed
+        let mut etas = Vec::new();
+        for &(i, old) in &old_rates {
+            let f = &mut self.flows[i as usize];
+            if f.rate == old && old > 0.0 {
+                continue; // previous completion event is still exact
+            }
+            f.gen += 1;
+            let eta = if f.bytes_left <= 0.0 {
+                0.0
+            } else if f.rate > 0.0 {
+                f.bytes_left / f.rate
+            } else {
+                f64::INFINITY
+            };
+            etas.push((FlowId(i as usize), f.gen, eta));
+        }
+        RateUpdate { etas }
+    }
+
+    /// Invariant check: total rate through every link <= its capacity
+    /// (within fp tolerance). Used by tests and debug assertions.
+    pub fn check_capacity(&self) -> Result<(), String> {
+        let mut used = vec![0.0f64; self.link_bw.len()];
+        for f in self.flows.iter().filter(|f| f.alive) {
+            for l in &f.links {
+                used[l.0] += f.rate;
+            }
+        }
+        for (l, (&u, &c)) in used.iter().zip(self.link_bw.iter()).enumerate() {
+            if u > c * (1.0 + 1e-9) + 1e-9 {
+                return Err(format!("link {l} oversubscribed: {u} > {c}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net(caps: &[f64]) -> FlowNet {
+        FlowNet::new(caps.to_vec())
+    }
+
+    #[test]
+    fn single_flow_gets_full_capacity() {
+        let mut n = net(&[100.0]);
+        let (id, up) = n.add(0.0, vec![LinkId(0)], 1000.0);
+        assert_eq!(n.rate(id), 100.0);
+        assert_eq!(up.etas.len(), 1);
+        assert!((up.etas[0].2 - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_flows_share_equally() {
+        let mut n = net(&[100.0]);
+        let (a, _) = n.add(0.0, vec![LinkId(0)], 1000.0);
+        let (b, up) = n.add(0.0, vec![LinkId(0)], 1000.0);
+        assert_eq!(n.rate(a), 50.0);
+        assert_eq!(n.rate(b), 50.0);
+        assert_eq!(up.etas.len(), 2);
+        n.check_capacity().unwrap();
+    }
+
+    #[test]
+    fn max_min_gives_leftover_to_unbottlenecked() {
+        // flow A uses links 0+1; flow B uses link 0 only.
+        // link0 cap 100 shared -> 50 each; link1 cap 30 limits A to 30;
+        // B then gets the leftover 70 on link 0.
+        let mut n = net(&[100.0, 30.0]);
+        let (a, _) = n.add(0.0, vec![LinkId(0), LinkId(1)], 1e9);
+        let (b, _) = n.add(0.0, vec![LinkId(0)], 1e9);
+        assert!((n.rate(a) - 30.0).abs() < 1e-9, "{}", n.rate(a));
+        assert!((n.rate(b) - 70.0).abs() < 1e-9, "{}", n.rate(b));
+        n.check_capacity().unwrap();
+    }
+
+    #[test]
+    fn progress_accrues_between_updates() {
+        let mut n = net(&[100.0]);
+        let (a, _) = n.add(0.0, vec![LinkId(0)], 1000.0);
+        // at t=5 add another flow: A should have 500 bytes left
+        let (_b, up) = n.add(5.0, vec![LinkId(0)], 1000.0);
+        assert!((n.bytes_left(a) - 500.0).abs() < 1e-9);
+        // both now at 50 B/s: A finishes in 10s, B in 20s
+        let eta_a = up.etas.iter().find(|e| e.0 == a).unwrap().2;
+        assert!((eta_a - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn remove_restores_capacity() {
+        let mut n = net(&[100.0]);
+        let (a, _) = n.add(0.0, vec![LinkId(0)], 1000.0);
+        let (b, _) = n.add(0.0, vec![LinkId(0)], 1000.0);
+        let up = n.remove(10.0, a); // each did 500 bytes by t=10
+        assert_eq!(n.n_active(), 1);
+        let eta_b = up.etas.iter().find(|e| e.0 == b).unwrap().2;
+        // b has 500 left at 100 B/s
+        assert!((eta_b - 5.0).abs() < 1e-9, "{eta_b}");
+    }
+
+    #[test]
+    fn generation_invalidates_stale_events() {
+        let mut n = net(&[100.0]);
+        let (a, up1) = n.add(0.0, vec![LinkId(0)], 1000.0);
+        let gen1 = up1.etas[0].1;
+        assert!(n.is_current(a, gen1));
+        let (_b, up2) = n.add(1.0, vec![LinkId(0)], 1000.0);
+        let gen2 = up2.etas.iter().find(|e| e.0 == a).unwrap().1;
+        assert!(!n.is_current(a, gen1));
+        assert!(n.is_current(a, gen2));
+    }
+
+    #[test]
+    fn flow_slots_are_reused_with_fresh_generations() {
+        let mut n = net(&[10.0]);
+        let (a, up_a) = n.add(0.0, vec![LinkId(0)], 10.0);
+        let gen_a = up_a.etas[0].1;
+        n.remove(1.0, a);
+        let (b, up_b) = n.add(2.0, vec![LinkId(0)], 10.0);
+        assert_eq!(a.0, b.0, "slot should be reused");
+        // the old occupant's events must NOT be current for the new flow
+        assert!(!n.is_current(b, gen_a));
+        let gen_b = up_b.etas[0].1;
+        assert!(gen_b > gen_a, "generation must be monotone per slot");
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_remove_panics() {
+        let mut n = net(&[10.0]);
+        let (a, _) = n.add(0.0, vec![LinkId(0)], 10.0);
+        n.remove(1.0, a);
+        n.remove(1.0, a);
+    }
+
+    #[test]
+    fn many_flows_fair_share_property() {
+        crate::util::prop::check("maxmin capacity", 64, |g| {
+            let nl = g.usize_in(1, 6);
+            let caps: Vec<f64> = (0..nl).map(|_| 10.0 + g.f64() * 90.0).collect();
+            let mut n = FlowNet::new(caps);
+            let nf = g.usize_in(1, 12);
+            for _ in 0..nf {
+                let mut links: Vec<LinkId> = (0..nl)
+                    .filter(|_| g.bool())
+                    .map(LinkId)
+                    .collect();
+                if links.is_empty() {
+                    links.push(LinkId(g.usize_in(0, nl)));
+                }
+                n.add(0.0, links, 100.0);
+            }
+            n.check_capacity().unwrap();
+            // every flow got a positive rate
+            for i in 0..nf {
+                assert!(n.rate(FlowId(i)) > 0.0);
+            }
+        });
+    }
+}

@@ -1,0 +1,13 @@
+//! Discrete-event cluster simulator.
+//!
+//! This is the substrate that replaces the paper's GPU cluster (DESIGN.md
+//! §1): virtual time, capacity-shared links ([`flow`]), SM pools, copy
+//! engines, signals, barriers — executing the same async-task programs the
+//! paper runs on real hardware, and optionally carrying real numerics
+//! through the symmetric heap.
+
+pub mod engine;
+pub mod flow;
+
+pub use engine::{ComputeExecutor, NoopExecutor, OpSpan, Sim, SimConfig, SimError, SimReport};
+pub use flow::{FlowId, FlowNet};

@@ -1,0 +1,308 @@
+//! Interconnect topology models (§3.7, Fig. 6).
+//!
+//! Three intra-node fabrics are modeled, matching the paper's testbeds:
+//!
+//! * **H800 / NVSwitch** — every GPU has one aggregate NVLink egress port
+//!   and one ingress port (~170 GB/s each) into a non-blocking switch.
+//! * **MI308X / full mesh** — a dedicated 50 GB/s link per ordered GPU
+//!   pair; the 350 GB/s aggregate is only reachable by using all seven
+//!   peer links simultaneously (this is what drives the Fig. 8 swizzle).
+//! * **L20 / PCIe** — per-GPU PCIe up/down links plus a shared per-NUMA
+//!   root-complex link that creates the contention the paper's PCIe
+//!   scheduling optimization must avoid.
+//!
+//! Inter-node transfers go over per-GPU NIC tx/rx links (rail-optimized,
+//! GPUDirect-style: no intra-node hop is charged). Local (same-rank)
+//! copies are charged to a per-GPU HBM read+write link.
+//!
+//! A [`Route`] is the set of links a flow occupies plus a propagation
+//! latency; the DES engine max–min fair-shares link capacity among all
+//! concurrent flows (see `sim::flow`).
+
+use crate::config::{ClusterSpec, HardwareKind};
+
+/// Index into [`Topology::links`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LinkId(pub usize);
+
+/// What a link physically is (for traces and tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkKind {
+    NvlEgress,
+    NvlIngress,
+    MeshPair,
+    PcieUp,
+    PcieDown,
+    PcieHost,
+    NicTx,
+    NicRx,
+    Hbm,
+}
+
+/// A shared, capacity-limited channel.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub kind: LinkKind,
+    /// Capacity in bytes/s.
+    pub bw: f64,
+    /// Owning rank (or NUMA id for PcieHost), for diagnostics.
+    pub owner: usize,
+}
+
+/// The links a transfer occupies and its propagation latency.
+#[derive(Debug, Clone)]
+pub struct Route {
+    pub links: Vec<LinkId>,
+    pub latency: f64,
+}
+
+/// Immutable interconnect graph for one cluster.
+pub struct Topology {
+    pub cluster: ClusterSpec,
+    links: Vec<Link>,
+    // per-rank link ids (usize::MAX = absent)
+    intra_egress: Vec<usize>,
+    intra_ingress: Vec<usize>,
+    nic_tx: Vec<usize>,
+    nic_rx: Vec<usize>,
+    hbm: Vec<usize>,
+    pcie_host: Vec<usize>, // per NUMA domain
+    mesh: std::collections::HashMap<(usize, usize), usize>,
+}
+
+impl Topology {
+    pub fn build(cluster: ClusterSpec) -> Self {
+        let ws = cluster.world_size();
+        let hw = cluster.hw;
+        let mut links = Vec::new();
+        let push = |kind: LinkKind, bw: f64, owner: usize, links: &mut Vec<Link>| {
+            links.push(Link { kind, bw, owner });
+            links.len() - 1
+        };
+
+        let mut topo = Topology {
+            cluster,
+            links: Vec::new(),
+            intra_egress: vec![usize::MAX; ws],
+            intra_ingress: vec![usize::MAX; ws],
+            nic_tx: vec![usize::MAX; ws],
+            nic_rx: vec![usize::MAX; ws],
+            hbm: vec![usize::MAX; ws],
+            pcie_host: Vec::new(),
+            mesh: Default::default(),
+        };
+
+        for r in 0..ws {
+            topo.hbm[r] = push(LinkKind::Hbm, hw.hbm_bw / 2.0, r, &mut links);
+        }
+
+        match hw.kind {
+            HardwareKind::H800 => {
+                for r in 0..ws {
+                    topo.intra_egress[r] =
+                        push(LinkKind::NvlEgress, hw.intra_bw, r, &mut links);
+                    topo.intra_ingress[r] =
+                        push(LinkKind::NvlIngress, hw.intra_bw, r, &mut links);
+                }
+            }
+            HardwareKind::MI308X => {
+                // dedicated link per ordered pair within the node
+                for a in 0..ws {
+                    for b in 0..ws {
+                        if a != b && cluster.node_of(a) == cluster.node_of(b) {
+                            let id = push(LinkKind::MeshPair, hw.intra_link_bw, a, &mut links);
+                            topo.mesh.insert((a, b), id);
+                        }
+                    }
+                }
+            }
+            HardwareKind::L20 => {
+                for r in 0..ws {
+                    topo.intra_egress[r] = push(LinkKind::PcieUp, hw.intra_bw, r, &mut links);
+                    topo.intra_ingress[r] =
+                        push(LinkKind::PcieDown, hw.intra_bw, r, &mut links);
+                }
+                // shared per-NUMA root complex: 2x a single device link
+                let numa_domains = cluster.nodes * cluster.numa_per_node;
+                for d in 0..numa_domains {
+                    let id = push(LinkKind::PcieHost, hw.intra_bw * 2.0, d, &mut links);
+                    topo.pcie_host.push(id);
+                }
+            }
+        }
+
+        if cluster.nodes > 1 {
+            for r in 0..ws {
+                topo.nic_tx[r] = push(LinkKind::NicTx, hw.nic_bw, r, &mut links);
+                topo.nic_rx[r] = push(LinkKind::NicRx, hw.nic_bw, r, &mut links);
+            }
+        }
+
+        topo.links = links;
+        topo
+    }
+
+    pub fn link(&self, id: LinkId) -> &Link {
+        &self.links[id.0]
+    }
+
+    pub fn link_count(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Route for a transfer `src -> dst` (same-rank = local HBM copy).
+    pub fn route(&self, src: usize, dst: usize) -> Route {
+        let c = &self.cluster;
+        let hw = c.hw;
+        if src == dst {
+            return Route {
+                links: vec![LinkId(self.hbm[src])],
+                latency: 0.0,
+            };
+        }
+        if c.node_of(src) != c.node_of(dst) {
+            assert!(
+                self.nic_tx[src] != usize::MAX,
+                "inter-node route on single-node cluster"
+            );
+            return Route {
+                links: vec![LinkId(self.nic_tx[src]), LinkId(self.nic_rx[dst])],
+                latency: hw.inter_lat,
+            };
+        }
+        match hw.kind {
+            HardwareKind::H800 => Route {
+                links: vec![
+                    LinkId(self.intra_egress[src]),
+                    LinkId(self.intra_ingress[dst]),
+                ],
+                latency: hw.intra_lat,
+            },
+            HardwareKind::MI308X => Route {
+                links: vec![LinkId(self.mesh[&(src, dst)])],
+                latency: hw.intra_lat,
+            },
+            HardwareKind::L20 => {
+                let mut links = vec![
+                    LinkId(self.intra_egress[src]),
+                    LinkId(self.intra_ingress[dst]),
+                ];
+                let numa_s = c.numa_of(src);
+                let numa_d = c.numa_of(dst);
+                links.push(LinkId(self.pcie_host[numa_s]));
+                if numa_d != numa_s {
+                    links.push(LinkId(self.pcie_host[numa_d]));
+                }
+                Route {
+                    links,
+                    latency: hw.intra_lat
+                        * if numa_s == numa_d { 1.0 } else { 1.6 }, // NUMA penalty
+                }
+            }
+        }
+    }
+
+    /// Route for `multimem.st`: one store fans out to every other rank in
+    /// the node (H800 only). The flow occupies the source egress and every
+    /// peer ingress; latency is the measured multimem cost (§3.4).
+    pub fn multimem_route(&self, src: usize) -> Option<Route> {
+        let hw = self.cluster.hw;
+        if hw.kind != HardwareKind::H800 {
+            return None;
+        }
+        let node = self.cluster.node_of(src);
+        let mut links = vec![LinkId(self.intra_egress[src])];
+        for r in 0..self.cluster.world_size() {
+            if r != src && self.cluster.node_of(r) == node {
+                links.push(LinkId(self.intra_ingress[r]));
+            }
+        }
+        Some(Route {
+            links,
+            latency: hw.multimem_lat,
+        })
+    }
+
+    /// Local HBM route (used for in-place reductions modeled as copies).
+    pub fn hbm_route(&self, rank: usize) -> Route {
+        Route {
+            links: vec![LinkId(self.hbm[rank])],
+            latency: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+
+    #[test]
+    fn h800_intra_route_uses_egress_and_ingress() {
+        let t = Topology::build(ClusterSpec::h800(1, 8));
+        let r = t.route(0, 3);
+        assert_eq!(r.links.len(), 2);
+        assert_eq!(t.link(r.links[0]).kind, LinkKind::NvlEgress);
+        assert_eq!(t.link(r.links[1]).kind, LinkKind::NvlIngress);
+        assert_eq!(t.link(r.links[0]).owner, 0);
+        assert_eq!(t.link(r.links[1]).owner, 3);
+        assert!((r.latency - 0.5e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn h800_inter_route_uses_nics() {
+        let t = Topology::build(ClusterSpec::h800(2, 8));
+        let r = t.route(1, 9); // rank 1 node 0 -> rank 9 node 1
+        assert_eq!(t.link(r.links[0]).kind, LinkKind::NicTx);
+        assert_eq!(t.link(r.links[1]).kind, LinkKind::NicRx);
+        assert!(r.latency > 1e-6);
+    }
+
+    #[test]
+    fn amd_mesh_has_per_pair_links() {
+        let t = Topology::build(ClusterSpec::mi308x(8));
+        let r01 = t.route(0, 1);
+        let r02 = t.route(0, 2);
+        assert_eq!(r01.links.len(), 1);
+        assert_ne!(r01.links[0], r02.links[0], "pair links must be disjoint");
+        assert_eq!(t.link(r01.links[0]).bw, 50e9);
+    }
+
+    #[test]
+    fn local_route_is_hbm() {
+        let t = Topology::build(ClusterSpec::h800(1, 8));
+        let r = t.route(5, 5);
+        assert_eq!(t.link(r.links[0]).kind, LinkKind::Hbm);
+        assert_eq!(r.latency, 0.0);
+    }
+
+    #[test]
+    fn multimem_covers_all_node_peers() {
+        let t = Topology::build(ClusterSpec::h800(2, 8));
+        let r = t.multimem_route(2).unwrap();
+        // 1 egress + 7 peer ingress links, all same node
+        assert_eq!(r.links.len(), 8);
+        assert!((r.latency - 1.5e-6).abs() < 1e-12);
+        // AMD has no multimem
+        let amd = Topology::build(ClusterSpec::mi308x(8));
+        assert!(amd.multimem_route(0).is_none());
+    }
+
+    #[test]
+    fn l20_routes_share_host_link() {
+        let t = Topology::build(ClusterSpec::l20(1, 8));
+        let r = t.route(0, 1); // same NUMA (ranks 0-3 = NUMA 0)
+        assert_eq!(r.links.len(), 3);
+        let cross = t.route(0, 5); // cross NUMA
+        assert_eq!(cross.links.len(), 4);
+        assert!(cross.latency > r.latency);
+    }
+
+    #[test]
+    #[should_panic]
+    fn inter_node_route_panics_on_single_node() {
+        let t = Topology::build(ClusterSpec::h800(1, 8));
+        // route() with ranks out of the single node is a bug in the caller
+        let _ = t.route(0, 12);
+    }
+}

@@ -1,0 +1,13 @@
+//! Shared utilities: PRNG, statistics, text tables, property testing, JSON.
+//!
+//! These are offline replacements for `rand`, `criterion`'s stats,
+//! `proptest`, and `serde_json` (none of which are vendored in this image).
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use rng::Rng;
+pub use table::Table;

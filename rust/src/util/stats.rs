@@ -1,0 +1,125 @@
+//! Small statistics helpers for the bench harness and report layer.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Geometric mean; the paper's "average speedup" aggregation. 0.0 if empty.
+/// Panics on non-positive entries (speedups are ratios > 0).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let log_sum: f64 = xs
+        .iter()
+        .map(|&x| {
+            assert!(x > 0.0, "geomean of non-positive value {x}");
+            x.ln()
+        })
+        .sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|&x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile with linear interpolation, `p` in `[0, 100]`.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&p), "percentile {p}");
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (s[hi] - s[lo]) * (rank - lo as f64)
+    }
+}
+
+/// Median (p50).
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Format seconds human-readably (ns/µs/ms/s).
+pub fn fmt_time(secs: f64) -> String {
+    let a = secs.abs();
+    if a < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if a < 1e-3 {
+        format!("{:.2}us", secs * 1e6)
+    } else if a < 1.0 {
+        format!("{:.3}ms", secs * 1e3)
+    } else {
+        format!("{:.3}s", secs)
+    }
+}
+
+/// Format bytes/sec as GB/s (decimal GB, matching NIC/link spec sheets).
+pub fn fmt_bw(bytes_per_sec: f64) -> String {
+    format!("{:.1}GB/s", bytes_per_sec / 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn geomean_of_ratios() {
+        let g = geomean(&[2.0, 8.0]);
+        assert!((g - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn geomean_rejects_nonpositive() {
+        geomean(&[1.0, 0.0]);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_odd() {
+        assert_eq!(median(&[5.0, 1.0, 3.0]), 3.0);
+    }
+
+    #[test]
+    fn stddev_constant_is_zero() {
+        assert_eq!(stddev(&[2.0, 2.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(1.5e-9).ends_with("ns"));
+        assert!(fmt_time(2.5e-6).ends_with("us"));
+        assert!(fmt_time(3.5e-3).ends_with("ms"));
+        assert!(fmt_time(1.5).ends_with('s'));
+    }
+}

@@ -1,0 +1,196 @@
+//! Numeric grids: every collective variant x topology x world size must
+//! produce exactly the reference result through the DES.
+
+use triton_dist_sim::collectives::allgather::*;
+use triton_dist_sim::collectives::alltoall::{
+    a2a_deepep, a2a_ll, fill_a2a_inputs, roundtrip_check, verify_alltoall, A2aBufs, A2aCfg,
+};
+use triton_dist_sim::collectives::baseline::*;
+use triton_dist_sim::collectives::reduce_scatter::*;
+use triton_dist_sim::collectives::*;
+use triton_dist_sim::config::{ClusterSpec, DType};
+use triton_dist_sim::mem::SymmetricHeap;
+use triton_dist_sim::shmem::ShmemCtx;
+use triton_dist_sim::sim::{NoopExecutor, Sim};
+use triton_dist_sim::topology::Topology;
+
+fn run_ag(
+    cluster: ClusterSpec,
+    shard: usize,
+    ll: bool,
+    build: impl Fn(&ShmemCtx, &AgBufs, &mut ProgBuild),
+) {
+    let ctx = ShmemCtx::new(cluster, DType::BF16);
+    let topo = Topology::build(cluster);
+    let mut heap = SymmetricHeap::new(ctx.n_pes(), 4 * ctx.n_pes().max(16));
+    let bufs = if ll {
+        AgBufs::alloc_ll(&mut heap, &ctx, shard)
+    } else {
+        AgBufs::alloc(&mut heap, &ctx, shard)
+    };
+    fill_ag_inputs(&mut heap, &bufs, 1234);
+    let expected = expected_allgather(&heap, &bufs);
+    let mut pb = ProgBuild::new();
+    build(&ctx, &bufs, &mut pb);
+    Sim::new(&topo)
+        .run(&pb.prog, &mut heap, &mut NoopExecutor)
+        .unwrap();
+    verify_allgather(&heap, &bufs, &expected).unwrap();
+}
+
+#[test]
+fn allgather_grid_h800() {
+    for gpn in [2usize, 4, 8] {
+        run_ag(ClusterSpec::h800(1, gpn), 37, false, ag_push_intra);
+        run_ag(ClusterSpec::h800(1, gpn), 37, false, ag_pull_intra);
+        run_ag(ClusterSpec::h800(1, gpn), 37, true, ag_ll_intra);
+    }
+    for (nodes, gpn) in [(2usize, 4usize), (2, 8), (4, 4), (4, 8)] {
+        run_ag(ClusterSpec::h800(nodes, gpn), 16, false, ag_inter);
+        run_ag(ClusterSpec::h800(nodes, gpn), 16, true, ag_ll_inter);
+    }
+}
+
+#[test]
+fn allgather_grid_other_platforms() {
+    for sub in [1usize, 2, 4] {
+        run_ag(ClusterSpec::mi308x(8), 32, false, |c, b, p| {
+            ag_amd_mesh(c, b, p, sub)
+        });
+    }
+    run_ag(ClusterSpec::l20(1, 8), 32, true, ag_ll_pcie);
+    run_ag(ClusterSpec::l20(2, 8), 32, true, ag_ll_pcie);
+    // baselines too
+    run_ag(ClusterSpec::h800(1, 8), 64, false, |c, b, p| {
+        nccl_allgather_ring(c, b, p, 16)
+    });
+    run_ag(ClusterSpec::l20(1, 8), 64, false, |c, b, p| {
+        nvshmem_fcollect(c, b, p, 0.2e-6)
+    });
+    run_ag(ClusterSpec::l20(1, 8), 64, false, |c, b, p| {
+        nccl_allgather_smallmsg(c, b, p, true)
+    });
+}
+
+fn run_rs(
+    cluster: ClusterSpec,
+    shard: usize,
+    build: impl Fn(&ShmemCtx, &RsBufs, &mut ProgBuild),
+) {
+    let ctx = ShmemCtx::new(cluster, DType::BF16);
+    let topo = Topology::build(cluster);
+    let mut heap = SymmetricHeap::new(ctx.n_pes(), 8 * ctx.n_pes().max(16));
+    let bufs = RsBufs::alloc(&mut heap, &ctx, shard);
+    fill_rs_inputs(&mut heap, &bufs, 4321);
+    let expected = expected_reduce_scatter(&heap, &bufs);
+    let mut pb = ProgBuild::new();
+    build(&ctx, &bufs, &mut pb);
+    Sim::new(&topo)
+        .run(&pb.prog, &mut heap, &mut NoopExecutor)
+        .unwrap();
+    verify_reduce_scatter(&heap, &bufs, &expected).unwrap();
+}
+
+#[test]
+fn reduce_scatter_grid() {
+    for gpn in [2usize, 3, 4, 8] {
+        run_rs(ClusterSpec::h800(1, gpn), 19, |c, b, p| {
+            rs_push_intra(c, b, p, 15, None)
+        });
+    }
+    // deep-pipeline ring: ws=16 regressed once on slot flow control
+    for gpn in [2usize, 4, 8, 16] {
+        run_rs(ClusterSpec::h800(1, gpn), 19, |c, b, p| {
+            nccl_reduce_scatter_ring(c, b, p, 16)
+        });
+    }
+    run_rs(ClusterSpec::h800(2, 8), 19, |c, b, p| {
+        nccl_reduce_scatter_ring(c, b, p, 16)
+    });
+    for (nodes, gpn) in [(2usize, 2usize), (2, 4), (2, 8), (4, 4)] {
+        run_rs(ClusterSpec::h800(nodes, gpn), 8, |c, b, p| {
+            rs_inter(c, b, p, 15, 120, None)
+        });
+    }
+    for ct in [1usize, 2, 4] {
+        run_rs(ClusterSpec::mi308x(8), 16, |c, b, p| {
+            rs_fused_amd(c, b, p, ct, 16, None)
+        });
+    }
+}
+
+#[test]
+fn alltoall_grid() {
+    for cluster in [
+        ClusterSpec::h800(1, 4),
+        ClusterSpec::h800(1, 8),
+        ClusterSpec::h800(2, 8),
+        ClusterSpec::h800(4, 8),
+    ] {
+        let ctx = ShmemCtx::new(cluster, DType::BF16);
+        let topo = Topology::build(cluster);
+        for cfg in [A2aCfg::ours(), A2aCfg::deepep()] {
+            let mut heap = SymmetricHeap::new(ctx.n_pes(), 4 * ctx.n_pes());
+            let bufs = A2aBufs::alloc(&mut heap, &ctx, 24);
+            fill_a2a_inputs(&mut heap, &bufs, 777);
+            let mut pb = ProgBuild::new();
+            a2a_ll(&ctx, &bufs, &mut pb, &cfg);
+            Sim::new(&topo)
+                .run(&pb.prog, &mut heap, &mut NoopExecutor)
+                .unwrap();
+            verify_alltoall(&heap, &bufs).unwrap();
+        }
+        // deepep path
+        let mut heap = SymmetricHeap::new(ctx.n_pes(), 4 * ctx.n_pes());
+        let bufs = A2aBufs::alloc(&mut heap, &ctx, 24);
+        fill_a2a_inputs(&mut heap, &bufs, 888);
+        let mut pb = ProgBuild::new();
+        a2a_deepep(&ctx, &bufs, &mut pb);
+        Sim::new(&topo)
+            .run(&pb.prog, &mut heap, &mut NoopExecutor)
+            .unwrap();
+        verify_alltoall(&heap, &bufs).unwrap();
+    }
+}
+
+#[test]
+fn alltoall_roundtrip_dispatch_combine() {
+    for cluster in [ClusterSpec::h800(1, 8), ClusterSpec::h800(2, 4)] {
+        let ctx = ShmemCtx::new(cluster, DType::BF16);
+        let topo = Topology::build(cluster);
+        let (dispatch_t, combine_t) = roundtrip_check(&ctx, &topo, 32, &A2aCfg::ours()).unwrap();
+        assert!(dispatch_t > 0.0 && combine_t > 0.0);
+    }
+}
+
+#[test]
+fn ll_allgather_beats_ring_at_small_messages_everywhere() {
+    // The Fig. 19 shape on PCIe: LL direct wins over NCCL ring for small
+    // messages at both 8 and 16 ranks.
+    for cluster in [ClusterSpec::l20(1, 8), ClusterSpec::l20(2, 8)] {
+        let ctx = ShmemCtx::new(cluster, DType::BF16);
+        let topo = Topology::build(cluster);
+        let time = |ll: bool| {
+            let mut heap = SymmetricHeap::new(ctx.n_pes(), 4 * ctx.n_pes());
+            let bufs = if ll {
+                AgBufs::alloc_ll(&mut heap, &ctx, 256)
+            } else {
+                AgBufs::alloc(&mut heap, &ctx, 256)
+            };
+            fill_ag_inputs(&mut heap, &bufs, 3);
+            let mut pb = ProgBuild::new();
+            if ll {
+                ag_ll_pcie(&ctx, &bufs, &mut pb);
+            } else {
+                nccl_allgather_ring(&ctx, &bufs, &mut pb, 16);
+            }
+            Sim::new(&topo)
+                .run(&pb.prog, &mut heap, &mut NoopExecutor)
+                .unwrap()
+                .makespan
+        };
+        let ll = time(true);
+        let ring = time(false);
+        assert!(ll < ring, "ll {ll} vs ring {ring} on {:?}", cluster.nodes);
+    }
+}

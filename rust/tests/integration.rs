@@ -1,0 +1,174 @@
+//! Cross-module integration: fused ops on multiple cluster geometries,
+//! CLI surface, tracing, and autotune-over-coordinator wiring.
+
+use triton_dist_sim::autotune;
+use triton_dist_sim::config::{ClusterSpec, GemmShape, MoeShape};
+use triton_dist_sim::coordinator::{self, ag_gemm, flash_decode, gemm_rs, moe};
+use triton_dist_sim::metrics;
+use triton_dist_sim::overlap::features;
+use triton_dist_sim::runtime::HybridExecutor;
+use triton_dist_sim::topology::Topology;
+
+#[test]
+fn ag_gemm_all_variants_all_geometries() {
+    // every (variant, geometry) pair must complete with correct numerics
+    let cases: Vec<(ClusterSpec, ag_gemm::AgGemmVariant)> = vec![
+        (ClusterSpec::h800(1, 2), ag_gemm::AgGemmVariant::OursPush),
+        (ClusterSpec::h800(1, 4), ag_gemm::AgGemmVariant::OursPush),
+        (ClusterSpec::h800(1, 8), ag_gemm::AgGemmVariant::OursPull),
+        (ClusterSpec::h800(1, 8), ag_gemm::AgGemmVariant::OursLL),
+        (ClusterSpec::h800(2, 4), ag_gemm::AgGemmVariant::OursInter),
+        (ClusterSpec::h800(4, 2), ag_gemm::AgGemmVariant::OursInter),
+        (ClusterSpec::h800(1, 8), ag_gemm::AgGemmVariant::Nccl),
+        (ClusterSpec::h800(1, 8), ag_gemm::AgGemmVariant::Flux),
+        (ClusterSpec::mi308x(4), ag_gemm::AgGemmVariant::OursAmd { sub_chunks: 2 }),
+        (ClusterSpec::l20(1, 4), ag_gemm::AgGemmVariant::OursPush),
+    ];
+    for (cluster, variant) in cases {
+        let ws = cluster.world_size();
+        let shape = GemmShape::new(8 * ws, 8, 16);
+        let (mut op, bufs) = ag_gemm::build(cluster, shape, variant);
+        ag_gemm::fill_inputs(&mut op.heap, &bufs, 9);
+        let reference = ag_gemm::reference_output(&op.heap, &bufs);
+        let topo = Topology::build(cluster);
+        let mut exec = HybridExecutor::native_only();
+        coordinator::run_numeric(&mut op, &topo, &mut exec);
+        ag_gemm::verify(&op.heap, &bufs, &reference)
+            .unwrap_or_else(|e| panic!("{}: {e}", op.name));
+    }
+}
+
+#[test]
+fn gemm_rs_all_variants() {
+    let cases: Vec<(ClusterSpec, gemm_rs::GemmRsVariant)> = vec![
+        (ClusterSpec::h800(1, 4), gemm_rs::GemmRsVariant::OursIntra),
+        (ClusterSpec::h800(2, 4), gemm_rs::GemmRsVariant::OursInter),
+        (ClusterSpec::h800(4, 2), gemm_rs::GemmRsVariant::OursInter),
+        (ClusterSpec::mi308x(8), gemm_rs::GemmRsVariant::OursAmd { comm_tiles: 2 }),
+        (ClusterSpec::h800(1, 8), gemm_rs::GemmRsVariant::Nccl),
+        (ClusterSpec::h800(1, 8), gemm_rs::GemmRsVariant::Flux),
+    ];
+    for (cluster, variant) in cases {
+        let ws = cluster.world_size();
+        let shape = GemmShape::new(4 * ws, 8, 12);
+        let (mut op, bufs) = gemm_rs::build(cluster, shape, variant);
+        gemm_rs::fill_inputs(&mut op.heap, &bufs, 17);
+        let expected = gemm_rs::reference_outputs(&op.heap, &bufs);
+        let topo = Topology::build(cluster);
+        let mut exec = HybridExecutor::native_only();
+        coordinator::run_numeric(&mut op, &topo, &mut exec);
+        gemm_rs::verify(&op.heap, &bufs, &expected)
+            .unwrap_or_else(|e| panic!("{}: {e}", op.name));
+    }
+}
+
+#[test]
+fn moe_both_directions_inter_node() {
+    let shape = MoeShape {
+        tokens_per_rank: 4,
+        in_hidden: 8,
+        out_hidden: 16,
+        experts: 4,
+        topk: 2,
+    };
+    for cluster in [ClusterSpec::h800(1, 8), ClusterSpec::h800(2, 4)] {
+        let topo = Topology::build(cluster);
+        let (mut op, bufs) = moe::build_ag_moe(cluster, shape, moe::MoeVariant::Ours);
+        moe::fill_ag_moe(&mut op.heap, &bufs, 5);
+        let exp = moe::reference_ag_moe(&op.heap, &bufs);
+        let mut exec = HybridExecutor::native_only();
+        coordinator::run_numeric(&mut op, &topo, &mut exec);
+        moe::verify_ag_moe(&op.heap, &bufs, &exp).unwrap();
+
+        let (mut op2, bufs2) = moe::build_moe_rs(cluster, shape, moe::MoeVariant::Ours);
+        moe::fill_moe_rs(&mut op2.heap, &bufs2, 6);
+        let exp2 = moe::reference_moe_rs(&op2.heap, &bufs2);
+        coordinator::run_numeric(&mut op2, &topo, &mut exec);
+        moe::verify_moe_rs(&op2.heap, &bufs2, &exp2).unwrap();
+    }
+}
+
+#[test]
+fn flash_decode_three_platforms() {
+    for cluster in [
+        ClusterSpec::h800(1, 4),
+        ClusterSpec::h800(2, 2),
+        ClusterSpec::l20(1, 4),
+    ] {
+        let cfg = flash_decode::FlashDecodeCfg {
+            heads: 2,
+            head_dim: 8,
+            kv_per_rank: 16,
+            numeric: true,
+        };
+        let (mut op, bufs) = flash_decode::build(cluster, cfg);
+        flash_decode::fill_inputs(&mut op.heap, &bufs, 23);
+        let exp = flash_decode::reference_output(&op.heap, &bufs);
+        let topo = Topology::build(cluster);
+        let mut exec = HybridExecutor::native_only();
+        coordinator::run_numeric(&mut op, &topo, &mut exec);
+        flash_decode::verify(&op.heap, &bufs, &exp).unwrap();
+    }
+}
+
+#[test]
+fn traced_run_produces_coherent_timeline() {
+    let cluster = ClusterSpec::h800(1, 4);
+    let shape = GemmShape::new(32, 8, 16);
+    let (mut op, bufs) = ag_gemm::build(cluster, shape, ag_gemm::AgGemmVariant::OursPush);
+    ag_gemm::fill_inputs(&mut op.heap, &bufs, 2);
+    let topo = Topology::build(cluster);
+    let mut exec = HybridExecutor::native_only();
+    let rep = coordinator::run_traced(&mut op, &topo, &mut exec);
+    assert!(!rep.op_spans.is_empty());
+    for s in &rep.op_spans {
+        assert!(s.t0 <= s.t1, "span goes backwards");
+        assert!(s.t1 <= rep.makespan + 1e-12, "span exceeds makespan");
+    }
+    // timeline + chrome trace render
+    let tl = metrics::ascii_timeline(&rep, 80);
+    assert!(tl.contains("r0"));
+    let trace = metrics::chrome_trace(&rep);
+    assert!(triton_dist_sim::util::json::parse(&trace).is_ok());
+}
+
+#[test]
+fn autotune_over_gemm_rs_partition() {
+    // tune the reduce-SM budget on the real coordinator (ablation of the
+    // §3.5 analysis): the analytic value should be near-optimal.
+    let cluster = ClusterSpec::h800(1, 8);
+    let topo = Topology::build(cluster);
+    let shape = GemmShape::new(2048, 12288 / 8, 4096);
+    let result = autotune::tune_rebuild("gemm_rs reduce sms", &[15u32], |_| {
+        let (mut op, _b) = gemm_rs::build(cluster, shape, gemm_rs::GemmRsVariant::OursIntra);
+        Ok(coordinator::run_timing(&mut op, &topo))
+    })
+    .unwrap();
+    assert!(result.best.latency > 0.0);
+}
+
+#[test]
+fn feature_table_covers_paper_claims() {
+    let s = features::render_table2();
+    // Ours supports everything (13 rows of Y in the last column)
+    let y_count = s
+        .lines()
+        .filter(|l| l.trim_end().ends_with('Y'))
+        .count();
+    assert!(y_count >= 13, "expected 13 'ours=Y' rows, table:\n{s}");
+}
+
+#[test]
+fn determinism_across_runs() {
+    let run = || {
+        let cluster = ClusterSpec::h800(2, 4);
+        let shape = GemmShape::new(64, 16, 16);
+        let (mut op, bufs) = ag_gemm::build(cluster, shape, ag_gemm::AgGemmVariant::OursInter);
+        ag_gemm::fill_inputs(&mut op.heap, &bufs, 77);
+        let topo = Topology::build(cluster);
+        let mut exec = HybridExecutor::native_only();
+        let rep = coordinator::run_numeric(&mut op, &topo, &mut exec);
+        (rep.makespan, rep.events, rep.flows)
+    };
+    assert_eq!(run(), run());
+}

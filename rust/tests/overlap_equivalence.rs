@@ -1,0 +1,119 @@
+//! The core soundness property of overlapping: an overlapped schedule
+//! must compute EXACTLY what the unoverlapped schedule computes.
+//! AG+GEMM outputs are compared bitwise (same per-tile K order => same
+//! f32 rounding); reductions use tight fp tolerances.
+
+use triton_dist_sim::config::{ClusterSpec, GemmShape};
+use triton_dist_sim::coordinator::{self, ag_gemm, gemm_rs};
+use triton_dist_sim::mem::Slice;
+use triton_dist_sim::runtime::HybridExecutor;
+use triton_dist_sim::topology::Topology;
+use triton_dist_sim::util::prop::check;
+
+/// All "ours" AG+GEMM variants must agree bitwise with the NCCL baseline
+/// run (the unoverlapped gold path) on the same inputs.
+#[test]
+fn ag_gemm_variants_bitwise_identical() {
+    let cluster = ClusterSpec::h800(1, 4);
+    let shape = GemmShape::new(16, 8, 8);
+    let outputs: Vec<Vec<f32>> = [
+        ag_gemm::AgGemmVariant::Nccl,
+        ag_gemm::AgGemmVariant::OursPush,
+        ag_gemm::AgGemmVariant::OursPull,
+        ag_gemm::AgGemmVariant::OursLL,
+        ag_gemm::AgGemmVariant::NoSwizzle,
+        ag_gemm::AgGemmVariant::Flux,
+    ]
+    .into_iter()
+    .map(|v| {
+        let (mut op, bufs) = ag_gemm::build(cluster, shape, v);
+        ag_gemm::fill_inputs(&mut op.heap, &bufs, 42);
+        let topo = Topology::build(cluster);
+        let mut exec = HybridExecutor::native_only();
+        coordinator::run_numeric(&mut op, &topo, &mut exec);
+        op.heap
+            .read(Slice::new(0, bufs.output, 0, shape.m * shape.n))
+            .to_vec()
+    })
+    .collect();
+    for (i, o) in outputs.iter().enumerate().skip(1) {
+        assert_eq!(o, &outputs[0], "variant {i} diverged bitwise");
+    }
+}
+
+/// Property: random small AG+GEMM problems, random variant, random world
+/// size — always bitwise equal to the single-device reference.
+#[test]
+fn ag_gemm_random_problems_property() {
+    check("ag_gemm random", 20, |g| {
+        let ws = *g.pick(&[2usize, 4, 8]);
+        let m_pr = g.usize_in(1, 6);
+        let k = g.usize_in(1, 12);
+        let n = g.usize_in(1, 12);
+        let variant = *g.pick(&[
+            ag_gemm::AgGemmVariant::OursPush,
+            ag_gemm::AgGemmVariant::OursPull,
+            ag_gemm::AgGemmVariant::OursLL,
+        ]);
+        let cluster = ClusterSpec::h800(1, ws);
+        let shape = GemmShape::new(m_pr * ws, n, k);
+        let (mut op, bufs) = ag_gemm::build(cluster, shape, variant);
+        ag_gemm::fill_inputs(&mut op.heap, &bufs, g.u64());
+        let reference = ag_gemm::reference_output(&op.heap, &bufs);
+        let topo = Topology::build(cluster);
+        let mut exec = HybridExecutor::native_only();
+        coordinator::run_numeric(&mut op, &topo, &mut exec);
+        ag_gemm::verify(&op.heap, &bufs, &reference).unwrap();
+    });
+}
+
+/// Property: random GEMM+RS problems across variants and geometries.
+#[test]
+fn gemm_rs_random_problems_property() {
+    check("gemm_rs random", 14, |g| {
+        let (cluster, variant) = *g.pick(&[
+            (ClusterSpec::h800(1, 4), gemm_rs::GemmRsVariant::OursIntra),
+            (ClusterSpec::h800(1, 8), gemm_rs::GemmRsVariant::OursIntra),
+            (ClusterSpec::h800(2, 4), gemm_rs::GemmRsVariant::OursInter),
+            (
+                ClusterSpec::mi308x(4),
+                gemm_rs::GemmRsVariant::OursAmd { comm_tiles: 2 },
+            ),
+        ]);
+        let ws = cluster.world_size();
+        let m_pr = g.usize_in(1, 5);
+        let k = g.usize_in(1, 10);
+        let n = g.usize_in(1, 10);
+        let shape = GemmShape::new(m_pr * ws, n, k);
+        let (mut op, bufs) = gemm_rs::build(cluster, shape, variant);
+        gemm_rs::fill_inputs(&mut op.heap, &bufs, g.u64());
+        let expected = gemm_rs::reference_outputs(&op.heap, &bufs);
+        let topo = Topology::build(cluster);
+        let mut exec = HybridExecutor::native_only();
+        coordinator::run_numeric(&mut op, &topo, &mut exec);
+        gemm_rs::verify(&op.heap, &bufs, &expected).unwrap();
+    });
+}
+
+/// Timing sanity: overlap never *hurts* vs its own unoverlapped order on
+/// comm-heavy shapes, and the overlapped makespan is at least the
+/// critical-path lower bound (GEMM alone).
+#[test]
+fn overlap_timing_bounds() {
+    let cluster = ClusterSpec::h800(1, 8);
+    let topo = Topology::build(cluster);
+    let shape = GemmShape::new(4096, 1536, 4096);
+    let t = |v| {
+        let (mut op, _b) = ag_gemm::build(cluster, shape, v);
+        coordinator::run_timing(&mut op, &topo)
+    };
+    let ours = t(ag_gemm::AgGemmVariant::OursPush);
+    let nccl = t(ag_gemm::AgGemmVariant::Nccl);
+
+    // lower bound: the GEMM compute alone on 132 SMs (triton eff)
+    let hw = cluster.hw;
+    let gemm_floor = shape.flops() / hw.triton_gemm_flops(hw.sms);
+    assert!(ours >= gemm_floor * 0.99, "{ours} below compute floor {gemm_floor}");
+    // upper bound: the serialized baseline
+    assert!(ours <= nccl, "{ours} vs serialized {nccl}");
+}

@@ -1,0 +1,217 @@
+//! Property tests on coordinator/engine invariants: routing, batching,
+//! scheduling, signal state — randomized over world sizes, shard sizes,
+//! swizzle configs and message sizes.
+
+use triton_dist_sim::collectives::allgather::*;
+use triton_dist_sim::collectives::alltoall::{a2a_ll, fill_a2a_inputs, verify_alltoall, A2aBufs, A2aCfg};
+use triton_dist_sim::collectives::reduce_scatter::rs_push_intra;
+use triton_dist_sim::collectives::*;
+use triton_dist_sim::config::{ClusterSpec, DType};
+use triton_dist_sim::mem::SymmetricHeap;
+use triton_dist_sim::overlap::swizzle;
+use triton_dist_sim::program::{Op, Program, SigCond, TaskBuilder};
+use triton_dist_sim::shmem::ShmemCtx;
+use triton_dist_sim::sim::{FlowNet, NoopExecutor, Sim};
+use triton_dist_sim::topology::{LinkId, Topology};
+use triton_dist_sim::util::prop::{check, Gen};
+
+fn random_cluster(g: &mut Gen) -> ClusterSpec {
+    match g.usize_in(0, 4) {
+        0 => ClusterSpec::h800(1, *g.pick(&[2usize, 4, 8])),
+        1 => ClusterSpec::h800(*g.pick(&[2usize, 4]), *g.pick(&[2usize, 4, 8])),
+        2 => ClusterSpec::mi308x(*g.pick(&[4usize, 8])),
+        _ => ClusterSpec::l20(1, *g.pick(&[4usize, 8])),
+    }
+}
+
+#[test]
+fn prop_allgather_always_concat() {
+    check("allgather=concat", 30, |g| {
+        let cluster = random_cluster(g);
+        let ctx = ShmemCtx::new(cluster, DType::BF16);
+        let topo = Topology::build(cluster);
+        let shard = g.usize_in(1, 200);
+        let mut heap = SymmetricHeap::new(ctx.n_pes(), 4 * ctx.n_pes().max(16));
+        // pick a variant valid for the geometry
+        let is_h800 = matches!(cluster.hw.kind, triton_dist_sim::config::HardwareKind::H800);
+        let multi = cluster.nodes > 1;
+        let variant = g.usize_in(0, 3);
+        let bufs;
+        let mut pb = ProgBuild::new();
+        match (variant, is_h800, multi) {
+            (0, _, false) | (0, _, true) if !multi => {
+                bufs = AgBufs::alloc(&mut heap, &ctx, shard);
+                fill_ag_inputs(&mut heap, &bufs, g.u64());
+                ag_push_intra(&ctx, &bufs, &mut pb);
+            }
+            (1, true, true) => {
+                bufs = AgBufs::alloc(&mut heap, &ctx, shard);
+                fill_ag_inputs(&mut heap, &bufs, g.u64());
+                ag_inter(&ctx, &bufs, &mut pb);
+            }
+            (2, true, false) => {
+                bufs = AgBufs::alloc_ll(&mut heap, &ctx, shard);
+                fill_ag_inputs(&mut heap, &bufs, g.u64());
+                ag_ll_intra(&ctx, &bufs, &mut pb);
+            }
+            _ => {
+                bufs = AgBufs::alloc(&mut heap, &ctx, shard);
+                fill_ag_inputs(&mut heap, &bufs, g.u64());
+                if multi {
+                    ag_inter(&ctx, &bufs, &mut pb);
+                } else {
+                    ag_pull_intra(&ctx, &bufs, &mut pb);
+                }
+            }
+        }
+        let expected = expected_allgather(&heap, &bufs);
+        let rep = Sim::new(&topo)
+            .run(&pb.prog, &mut heap, &mut NoopExecutor)
+            .unwrap();
+        verify_allgather(&heap, &bufs, &expected).unwrap();
+        assert!(rep.makespan.is_finite() && rep.makespan > 0.0);
+    });
+}
+
+#[test]
+fn prop_reduce_scatter_always_sums() {
+    check("rs=reduce", 25, |g| {
+        let ws = *g.pick(&[2usize, 4, 8]);
+        let cluster = ClusterSpec::h800(1, ws);
+        let ctx = ShmemCtx::new(cluster, DType::BF16);
+        let topo = Topology::build(cluster);
+        let shard = g.usize_in(1, 120);
+        let mut heap = SymmetricHeap::new(ws, 8 * ws.max(16));
+        let bufs = RsBufs::alloc(&mut heap, &ctx, shard);
+        fill_rs_inputs(&mut heap, &bufs, g.u64());
+        let expected = expected_reduce_scatter(&heap, &bufs);
+        let mut pb = ProgBuild::new();
+        let reduce_sms = g.usize_in(1, 33) as u32;
+        rs_push_intra(&ctx, &bufs, &mut pb, reduce_sms, None);
+        Sim::new(&topo)
+            .run(&pb.prog, &mut heap, &mut NoopExecutor)
+            .unwrap();
+        verify_reduce_scatter(&heap, &bufs, &expected).unwrap();
+    });
+}
+
+#[test]
+fn prop_alltoall_roundtrip_identity() {
+    check("a2a identity", 20, |g| {
+        let cluster = if g.bool() {
+            ClusterSpec::h800(1, *g.pick(&[2usize, 4, 8]))
+        } else {
+            ClusterSpec::h800(2, *g.pick(&[2usize, 4]))
+        };
+        let ctx = ShmemCtx::new(cluster, DType::BF16);
+        let topo = Topology::build(cluster);
+        let chunk = g.usize_in(1, 100);
+        let mut heap = SymmetricHeap::new(ctx.n_pes(), 4 * ctx.n_pes());
+        let bufs = A2aBufs::alloc(&mut heap, &ctx, chunk);
+        fill_a2a_inputs(&mut heap, &bufs, g.u64());
+        let mut pb = ProgBuild::new();
+        a2a_ll(&ctx, &bufs, &mut pb, &A2aCfg::ours());
+        Sim::new(&topo)
+            .run(&pb.prog, &mut heap, &mut NoopExecutor)
+            .unwrap();
+        verify_alltoall(&heap, &bufs).unwrap();
+    });
+}
+
+#[test]
+fn prop_swizzles_are_permutations() {
+    check("swizzle perms", 100, |g| {
+        let ws = g.usize_in(1, 33);
+        let r = g.usize_in(0, ws);
+        assert!(swizzle::is_permutation(&swizzle::nv_push_order(r, ws), ws));
+        assert!(swizzle::is_permutation(&swizzle::nv_pull_order(r, ws), ws));
+        let nodes = *g.pick(&[2usize, 3, 4]);
+        let lws = *g.pick(&[2usize, 4, 8]);
+        let rank = g.usize_in(0, nodes * lws);
+        assert!(swizzle::is_permutation(
+            &swizzle::inter_rs_order(rank, nodes, lws),
+            nodes * lws
+        ));
+        // sub-chunk order covers the full (chunk, sub) grid
+        let subs = g.usize_in(1, 5);
+        let order = swizzle::amd_subchunk_order(r, ws, subs);
+        let mut set: Vec<_> = order.clone();
+        set.sort_unstable();
+        set.dedup();
+        assert_eq!(set.len(), ws * subs);
+    });
+}
+
+#[test]
+fn prop_flow_network_never_oversubscribes() {
+    check("flow capacity", 60, |g| {
+        let nl = g.usize_in(1, 8);
+        let caps: Vec<f64> = (0..nl).map(|_| 1.0 + g.f64() * 99.0).collect();
+        let mut net = FlowNet::new(caps);
+        let mut alive = Vec::new();
+        let mut now = 0.0;
+        for _ in 0..g.usize_in(1, 30) {
+            now += g.f64();
+            if !alive.is_empty() && g.bool() && g.bool() {
+                let idx = g.usize_in(0, alive.len());
+                let id = alive.swap_remove(idx);
+                net.remove(now, id);
+            } else {
+                let mut links: Vec<LinkId> =
+                    (0..nl).filter(|_| g.bool()).map(LinkId).collect();
+                if links.is_empty() {
+                    links.push(LinkId(g.usize_in(0, nl)));
+                }
+                let (id, _) = net.add(now, links, 1.0 + g.f64() * 1e6);
+                alive.push(id);
+            }
+            net.check_capacity().unwrap();
+        }
+    });
+}
+
+#[test]
+fn prop_engine_rejects_deadlocks_deterministically() {
+    check("deadlock detect", 20, |g| {
+        let ws = *g.pick(&[2usize, 4]);
+        let cluster = ClusterSpec::h800(1, ws);
+        let topo = Topology::build(cluster);
+        let mut heap = SymmetricHeap::new(ws, 16);
+        let mut prog = Program::new();
+        // some healthy tasks
+        for r in 0..ws {
+            let mut t = TaskBuilder::new(r, format!("ok{r}"));
+            t.op(Op::Sleep { secs: 1e-6 });
+            prog.push(t.build());
+        }
+        // one stuck task waiting for a never-set signal
+        let stuck_rank = g.usize_in(0, ws);
+        let mut t = TaskBuilder::new(stuck_rank, "stuck");
+        t.op(Op::WaitSignal {
+            idx: 9,
+            cond: SigCond::Eq,
+            value: 1,
+        });
+        prog.push(t.build());
+        let err = Sim::new(&topo)
+            .run(&prog, &mut heap, &mut NoopExecutor)
+            .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("stuck"), "{msg}");
+    });
+}
+
+#[test]
+fn prop_numa_interleave_preserves_multiset() {
+    check("numa multiset", 60, |g| {
+        let n = g.usize_in(1, 24);
+        let peers: Vec<usize> = (0..n).map(|_| g.usize_in(0, 40)).collect();
+        let domains = g.usize_in(1, 5);
+        let out = swizzle::numa_interleave(&peers, |r| r % domains);
+        let mut a = out.clone();
+        let mut b = peers.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    });
+}

@@ -1,0 +1,164 @@
+//! PJRT runtime round-trip: load every AOT artifact, execute through the
+//! CPU PJRT client, and cross-check against the native Rust reference
+//! math. Skips (loudly) when `make artifacts` hasn't been run.
+
+use triton_dist_sim::kernels::exec::eval_named;
+use triton_dist_sim::runtime::XlaRuntime;
+use triton_dist_sim::util::Rng;
+
+fn runtime() -> Option<XlaRuntime> {
+    match XlaRuntime::try_default() {
+        Some(rt) => Some(rt),
+        None => {
+            eprintln!("SKIP: no artifacts (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn close(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        if (x - y).abs() > tol {
+            return Err(format!("elem {i}: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn every_artifact_matches_native_reference() {
+    let Some(mut rt) = runtime() else { return };
+    let mut rng = Rng::new(0xA0A0);
+    let mut checked = 0;
+    for name in rt.entry_names() {
+        let Some(sig) = rt_sig(&rt, &name) else {
+            continue;
+        };
+        // random f32 inputs (int32 args: small non-negative values)
+        let args: Vec<Vec<f32>> = sig
+            .iter()
+            .map(|(len, is_int, int_cap)| {
+                if *is_int {
+                    (0..*len).map(|_| rng.usize_in(0, *int_cap) as f32).collect()
+                } else {
+                    rng.normal_vec(*len)
+                }
+            })
+            .collect();
+        let xla_out = rt
+            .call_f32(&name, &args)
+            .unwrap_or_else(|e| panic!("xla call '{name}' failed: {e:#}"));
+        let native_out = eval_named(&name, &args)
+            .unwrap_or_else(|e| panic!("native eval '{name}' failed: {e:#}"));
+        assert_eq!(xla_out.len(), native_out.len(), "{name}: output arity");
+        for (i, (x, n)) in xla_out.iter().zip(&native_out).enumerate() {
+            close(x, n, 2e-3, 2e-3)
+                .unwrap_or_else(|e| panic!("'{name}' output {i} mismatch: {e}"));
+        }
+        checked += 1;
+    }
+    assert!(checked >= 10, "only {checked} artifacts verified");
+    println!("verified {checked} artifacts against native reference");
+}
+
+/// (len, is_int, int_value_cap) per argument, reading the manifest
+/// through the public API; int caps derived from entry names (expert
+/// counts for moe topk indices).
+fn rt_sig(rt: &XlaRuntime, name: &str) -> Option<Vec<(usize, bool, usize)>> {
+    use triton_dist_sim::kernels::names::Entry;
+    let parsed = Entry::parse(name)?;
+    let int_cap = match parsed {
+        Entry::MoeFfn { e, .. } => e,
+        _ => 1,
+    };
+    // arg lens from the native entry's expectations: probe the manifest
+    // via a tiny helper — we re-derive from the parsed entry directly.
+    let lens: Vec<(usize, bool, usize)> = match parsed {
+        Entry::Gemm { m, k, n } => vec![(m * k, false, 0), (k * n, false, 0)],
+        Entry::GroupGemm { e, c, h, f } => vec![(e * c * h, false, 0), (e * h * f, false, 0)],
+        Entry::DecodePartial { h, s, d } => vec![
+            (h * d, false, 0),
+            (h * s * d, false, 0),
+            (h * s * d, false, 0),
+        ],
+        Entry::DecodeCombine { h, p, d } => {
+            vec![(h * p * d, false, 0), (h * p, false, 0), (h * p, false, 0)]
+        }
+        Entry::DecodeCombineSeg { h, p, d } => vec![(h * (d + 2), false, 0); p],
+        Entry::MoeFfn { t, h, f, e, k, .. } => vec![
+            (t * h, false, 0),
+            (t * k, true, int_cap),
+            (t * k, false, 0),
+            (e * h * f, false, 0),
+        ],
+        Entry::TpMlpShard { t, h, f } => {
+            vec![(t * h, false, 0), (h * f, false, 0), (f * h, false, 0)]
+        }
+        Entry::TpAttnShard { t, h, nh, hd, s } => vec![
+            (t * h, false, 0),
+            (h * nh * hd, false, 0),
+            (h * nh * hd, false, 0),
+            (h * nh * hd, false, 0),
+            (nh * hd * h, false, 0),
+            (nh * s * hd, false, 0),
+            (nh * s * hd, false, 0),
+        ],
+    };
+    let _ = rt;
+    Some(lens)
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(mut rt) = runtime() else { return };
+    let name = "gemm_64x64x64";
+    if !rt.has_entry(name) {
+        panic!("catalog must include {name}");
+    }
+    let mut rng = Rng::new(7);
+    let x = rng.normal_vec(64 * 64);
+    let w = rng.normal_vec(64 * 64);
+    let a = rt.call_f32(name, &[x.clone(), w.clone()]).unwrap();
+    let b = rt.call_f32(name, &[x, w]).unwrap();
+    assert_eq!(a, b, "cached executable must be deterministic");
+    assert_eq!(rt.calls, 2);
+}
+
+#[test]
+fn hybrid_executor_prefers_xla_in_fused_op() {
+    // Run a full AG+GEMM with shapes matching the artifact catalog and
+    // confirm the consumer tiles went through PJRT.
+    if XlaRuntime::try_default().is_none() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    use triton_dist_sim::config::{ClusterSpec, GemmShape};
+    use triton_dist_sim::coordinator::{self, ag_gemm};
+    use triton_dist_sim::runtime::HybridExecutor;
+    use triton_dist_sim::topology::Topology;
+    // catalog has gemm_64x64x64: m_per_rank=64 (ws=4, M=256), k=n=64
+    let cluster = ClusterSpec::h800(1, 4);
+    let shape = GemmShape::new(256, 64, 64);
+    let (mut op, bufs) = ag_gemm::build(cluster, shape, ag_gemm::AgGemmVariant::OursPush);
+    ag_gemm::fill_inputs(&mut op.heap, &bufs, 5);
+    let reference = ag_gemm::reference_output(&op.heap, &bufs);
+    let topo = Topology::build(cluster);
+    let mut exec = HybridExecutor::auto();
+    coordinator::run_numeric(&mut op, &topo, &mut exec);
+    assert!(exec.xla_calls > 0, "no tile went through PJRT");
+    // PJRT f32 matmul on CPU may reassociate; tolerance check vs reference
+    let got = op
+        .heap
+        .read(triton_dist_sim::mem::Slice::new(0, bufs.output, 0, reference.len()));
+    for (i, (g, e)) in got.iter().zip(&reference).enumerate() {
+        assert!(
+            (g - e).abs() <= 1e-3 + 1e-3 * e.abs(),
+            "elem {i}: {g} vs {e}"
+        );
+    }
+    println!("AG+GEMM numerics via PJRT: {} xla calls", exec.xla_calls);
+}
