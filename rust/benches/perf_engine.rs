@@ -1,6 +1,17 @@
 //! §Perf: wall-clock performance of the DES engine itself (the L3 hot
 //! path). Reports events/second on representative workloads; tracked in
-//! EXPERIMENTS.md §Perf with the optimization log.
+//! EXPERIMENTS.md §Perf with the optimization log, and emitted as
+//! machine-readable `BENCH_engine.json` so the perf trajectory is
+//! comparable across PRs.
+//!
+//! Scenarios:
+//! * `alltoall-64rank`   — 8x8 LL AllToAll: many concurrent flows + LL
+//!   waits; the historical headline number.
+//! * `alltoall-256rank`  — 32x8 LL AllToAll: the scaling scenario the
+//!   incremental flow solver + event coalescing exist for (65k flows).
+//! * `ag_gemm-build+run` — single-node AG+GEMM, program build + engine.
+//! * `ag_gemm-multinode` — 4x8 inter-node AG+GEMM (NIC contention path).
+//! * `ag_gemm-numerics(native)` — data movement through the heap.
 
 use triton_dist_sim::bench::{banner, bench_wall};
 use triton_dist_sim::collectives::alltoall::{a2a_ll, A2aBufs, A2aCfg};
@@ -8,33 +19,76 @@ use triton_dist_sim::collectives::ProgBuild;
 use triton_dist_sim::config::{ClusterSpec, DType, GemmShape};
 use triton_dist_sim::coordinator::ag_gemm;
 use triton_dist_sim::mem::SymmetricHeap;
+use triton_dist_sim::metrics::{engine_bench_json, EngineBenchRecord};
 use triton_dist_sim::shmem::ShmemCtx;
 use triton_dist_sim::sim::{NoopExecutor, Sim, SimConfig};
 use triton_dist_sim::topology::Topology;
 
-fn main() {
-    banner("engine performance (wall clock)");
+/// Timing-only AllToAll over a prebuilt cluster; returns events
+/// processed. Topology/ctx construction stays OUTSIDE the timed closure
+/// (matching the original 64-rank measurement) so events/s numbers stay
+/// comparable across PRs.
+fn run_a2a(ctx: &ShmemCtx, topo: &Topology) -> u64 {
+    let ws = ctx.n_pes();
+    let mut heap = SymmetricHeap::new(ws, 4 * ws);
+    let bufs = A2aBufs::alloc(&mut heap, ctx, 64);
+    let mut pb = ProgBuild::new();
+    a2a_ll(ctx, &bufs, &mut pb, &A2aCfg::ours());
+    let sim = Sim::with_config(
+        topo,
+        SimConfig {
+            numerics: false,
+            trace: false,
+        },
+    );
+    let rep = sim.run(&pb.prog, &mut heap, &mut NoopExecutor).unwrap();
+    rep.events
+}
 
-    // 64-rank AllToAll: many concurrent flows + LL waits
-    let cluster = ClusterSpec::h800(8, 8);
-    let ctx = ShmemCtx::new(cluster, DType::BF16);
-    let topo = Topology::build(cluster);
-    let mut events = 0u64;
-    let stat = bench_wall("alltoall-64rank", 1, 5, || {
-        let mut heap = SymmetricHeap::new(64, 256);
-        let bufs = A2aBufs::alloc(&mut heap, &ctx, 64);
-        let mut pb = ProgBuild::new();
-        a2a_ll(&ctx, &bufs, &mut pb, &A2aCfg::ours());
-        let sim = Sim::with_config(&topo, SimConfig { numerics: false, trace: false });
-        let rep = sim.run(&pb.prog, &mut heap, &mut NoopExecutor).unwrap();
-        events = rep.events;
-    });
-    println!("{}", stat.render());
+fn report(
+    records: &mut Vec<EngineBenchRecord>,
+    name: &str,
+    events: u64,
+    stat: &triton_dist_sim::bench::WallStat,
+) {
     println!(
         "  {} events -> {:.2} M events/s",
         events,
-        events as f64 / stat.median_s / 1e6
+        stat.per_sec(events) / 1e6
     );
+    records.push(EngineBenchRecord {
+        scenario: name.to_string(),
+        events,
+        median_wall_s: stat.median_s,
+    });
+}
+
+fn main() {
+    banner("engine performance (wall clock)");
+    let mut records = Vec::new();
+
+    // 64-rank AllToAll: many concurrent flows + LL waits
+    let cluster64 = ClusterSpec::h800(8, 8);
+    let ctx64 = ShmemCtx::new(cluster64, DType::BF16);
+    let topo64 = Topology::build(cluster64);
+    let mut events = 0u64;
+    let stat = bench_wall("alltoall-64rank", 1, 5, || {
+        events = run_a2a(&ctx64, &topo64);
+    });
+    println!("{}", stat.render());
+    report(&mut records, "alltoall-64rank", events, &stat);
+
+    // 256-rank AllToAll: the scaling scenario (65k flows, one shared
+    // component on the NIC fabric). Must complete well under 10 s.
+    let cluster256 = ClusterSpec::h800(32, 8);
+    let ctx256 = ShmemCtx::new(cluster256, DType::BF16);
+    let topo256 = Topology::build(cluster256);
+    let mut events256 = 0u64;
+    let stat256 = bench_wall("alltoall-256rank", 0, 1, || {
+        events256 = run_a2a(&ctx256, &topo256);
+    });
+    println!("{}", stat256.render());
+    report(&mut records, "alltoall-256rank", events256, &stat256);
 
     // AG+GEMM with numerics off — program-build + engine cost
     let cluster = ClusterSpec::h800(1, 8);
@@ -43,27 +97,58 @@ fn main() {
     let mut events2 = 0u64;
     let stat2 = bench_wall("ag_gemm-build+run", 1, 10, || {
         let (mut op, _b) = ag_gemm::build(cluster, shape, ag_gemm::AgGemmVariant::OursPush);
-        let sim = Sim::with_config(&topo8, SimConfig { numerics: false, trace: false });
+        let sim = Sim::with_config(
+            &topo8,
+            SimConfig {
+                numerics: false,
+                trace: false,
+            },
+        );
         let rep = sim.run(&op.prog, &mut op.heap, &mut NoopExecutor).unwrap();
         events2 = rep.events;
     });
     println!("{}", stat2.render());
-    println!(
-        "  {} events -> {:.2} M events/s",
-        events2,
-        events2 as f64 / stat2.median_s / 1e6
-    );
+    report(&mut records, "ag_gemm-build+run", events2, &stat2);
+
+    // multi-node AG+GEMM: inter-node NIC contention + overlap scheduling
+    let mcluster = ClusterSpec::h800(4, 8);
+    let mtopo = Topology::build(mcluster);
+    let mshape = GemmShape::new(8192, 6144, 8192);
+    let mut events3 = 0u64;
+    let stat3 = bench_wall("ag_gemm-multinode", 1, 5, || {
+        let (mut op, _b) = ag_gemm::build(mcluster, mshape, ag_gemm::AgGemmVariant::OursInter);
+        let sim = Sim::with_config(
+            &mtopo,
+            SimConfig {
+                numerics: false,
+                trace: false,
+            },
+        );
+        let rep = sim.run(&op.prog, &mut op.heap, &mut NoopExecutor).unwrap();
+        events3 = rep.events;
+    });
+    println!("{}", stat3.render());
+    report(&mut records, "ag_gemm-multinode", events3, &stat3);
 
     // numerics path: data movement through the heap
-    let mut stat3_events = 0u64;
-    let stat3 = bench_wall("ag_gemm-numerics(native)", 1, 3, || {
+    let mut events4 = 0u64;
+    let stat4 = bench_wall("ag_gemm-numerics(native)", 1, 3, || {
         let small = GemmShape::new(512, 64, 64);
         let (mut op, bufs) = ag_gemm::build(cluster, small, ag_gemm::AgGemmVariant::OursPush);
         ag_gemm::fill_inputs(&mut op.heap, &bufs, 1);
         let sim = Sim::new(&topo8);
         let mut exec = triton_dist_sim::runtime::HybridExecutor::native_only();
         let rep = sim.run(&op.prog, &mut op.heap, &mut exec).unwrap();
-        stat3_events = rep.events;
+        events4 = rep.events;
     });
-    println!("{}", stat3.render());
+    println!("{}", stat4.render());
+    report(&mut records, "ag_gemm-numerics(native)", events4, &stat4);
+
+    // machine-readable trajectory for cross-PR tracking
+    let json = engine_bench_json(&records);
+    let path = std::env::var("BENCH_ENGINE_JSON").unwrap_or_else(|_| "BENCH_engine.json".into());
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
 }

@@ -22,6 +22,12 @@ pub struct WallStat {
 }
 
 impl WallStat {
+    /// Throughput of `count` items against the median elapsed time
+    /// (e.g. events/s for the engine-perf scenarios).
+    pub fn per_sec(&self, count: u64) -> f64 {
+        count as f64 / self.median_s.max(1e-12)
+    }
+
     pub fn render(&self) -> String {
         format!(
             "{:<40} iters={:<4} mean={:<10} median={:<10} stddev={}",
@@ -80,6 +86,7 @@ mod tests {
         assert_eq!(s.iters, 5);
         assert!(s.mean_s >= 0.0);
         assert!(s.render().contains("noop"));
+        assert!(s.per_sec(100) > 0.0);
     }
 
     #[test]

@@ -109,6 +109,47 @@ pub fn fig1_summary(reports: &[(&str, f64)]) -> String {
 }
 
 // ---------------------------------------------------------------------------
+// engine-perf trajectory (EXPERIMENTS.md §Perf)
+// ---------------------------------------------------------------------------
+
+/// One wall-clock engine measurement: a scenario of `perf_engine` (events
+/// processed, median elapsed seconds).
+#[derive(Debug, Clone)]
+pub struct EngineBenchRecord {
+    pub scenario: String,
+    pub events: u64,
+    pub median_wall_s: f64,
+}
+
+impl EngineBenchRecord {
+    /// Same guard as `bench::WallStat::per_sec` so the printed and
+    /// JSON-recorded throughput always agree.
+    pub fn events_per_s(&self) -> f64 {
+        self.events as f64 / self.median_wall_s.max(1e-12)
+    }
+}
+
+/// Render engine-perf records as a machine-readable JSON document
+/// (`BENCH_engine.json`): scenario -> {events, median_wall_s,
+/// events_per_s}. Tracked across PRs to catch engine regressions.
+pub fn engine_bench_json(records: &[EngineBenchRecord]) -> String {
+    use crate::util::json::Json;
+    let mut scenarios = std::collections::BTreeMap::new();
+    for r in records {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("events".into(), Json::Num(r.events as f64));
+        obj.insert("median_wall_s".into(), Json::Num(r.median_wall_s));
+        obj.insert("events_per_s".into(), Json::Num(r.events_per_s()));
+        scenarios.insert(r.scenario.clone(), Json::Obj(obj));
+    }
+    let mut root = std::collections::BTreeMap::new();
+    root.insert("bench".into(), Json::Str("perf_engine".into()));
+    root.insert("unit".into(), Json::Str("events_per_s".into()));
+    root.insert("scenarios".into(), Json::Obj(scenarios));
+    Json::Obj(root).to_string()
+}
+
+// ---------------------------------------------------------------------------
 // timelines
 // ---------------------------------------------------------------------------
 
@@ -260,6 +301,20 @@ mod tests {
         let s = chrome_trace(&demo_report());
         let doc = crate::util::json::parse(&s).unwrap();
         assert_eq!(doc.get("traceEvents").as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn engine_bench_json_round_trips() {
+        let recs = vec![EngineBenchRecord {
+            scenario: "alltoall-64rank".into(),
+            events: 1000,
+            median_wall_s: 0.5,
+        }];
+        let s = engine_bench_json(&recs);
+        let doc = crate::util::json::parse(&s).unwrap();
+        let sc = doc.get("scenarios").get("alltoall-64rank");
+        assert_eq!(sc.get("events").as_usize(), Some(1000));
+        assert_eq!(sc.get("events_per_s").as_f64(), Some(2000.0));
     }
 
     #[test]

@@ -106,6 +106,11 @@ impl Manifest {
 }
 
 /// PJRT-backed executor with a compile cache.
+///
+/// Compiled only with the `xla` cargo feature (the `xla` crate is not
+/// vendored in the offline image); see the stub below for the default
+/// build.
+#[cfg(feature = "xla")]
 pub struct XlaRuntime {
     client: xla::PjRtClient,
     manifest: Manifest,
@@ -114,6 +119,7 @@ pub struct XlaRuntime {
     pub calls: u64,
 }
 
+#[cfg(feature = "xla")]
 impl XlaRuntime {
     /// Connect the CPU PJRT client and load the manifest.
     pub fn load(dir: impl AsRef<Path>) -> Result<XlaRuntime> {
@@ -223,6 +229,43 @@ impl XlaRuntime {
             outs.push(v);
         }
         Ok(outs)
+    }
+}
+
+/// Stub standing in for [`XlaRuntime`] when the `xla` feature is off
+/// (the default: the `xla` crate is not vendored offline). Loading
+/// always fails, probing always reports "no artifacts", so every caller
+/// falls back to the native reference executor.
+#[cfg(not(feature = "xla"))]
+pub struct XlaRuntime {
+    /// Calls served (always 0 in the stub).
+    pub calls: u64,
+}
+
+#[cfg(not(feature = "xla"))]
+impl XlaRuntime {
+    pub fn load(dir: impl AsRef<Path>) -> Result<XlaRuntime> {
+        bail!(
+            "built without the `xla` feature; cannot load artifacts from {}",
+            dir.as_ref().display()
+        )
+    }
+
+    /// Always `None`: without PJRT there is nothing to execute with.
+    pub fn try_default() -> Option<XlaRuntime> {
+        None
+    }
+
+    pub fn has_entry(&self, _name: &str) -> bool {
+        false
+    }
+
+    pub fn entry_names(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    pub fn call_f32(&mut self, name: &str, _args: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        bail!("built without the `xla` feature; cannot execute '{name}'")
     }
 }
 

@@ -4,7 +4,16 @@
 //! and really running the compute through a [`ComputeExecutor`].
 //!
 //! Determinism: events are ordered by (time, sequence-number); identical
-//! programs produce identical timelines and identical numerics.
+//! programs produce identical timelines and identical numerics. Event
+//! times must never be NaN — [`f64::total_cmp`] keeps the heap ordering
+//! total and a debug assertion rejects NaN at push time.
+//!
+//! Hot-path scheduling: consecutive flow events carrying the same
+//! virtual timestamp (collectives issue many puts at identical times)
+//! are coalesced into a single batched [`FlowNet::update`], so N
+//! simultaneous arms/completions cost one component-scoped rate
+//! recompute instead of N global ones. Flow contexts and signal waiters
+//! are slab/`Vec`-indexed — no hashing on the event path.
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
@@ -138,12 +147,10 @@ impl PartialOrd for QEntry {
 }
 impl Ord for QEntry {
     fn cmp(&self, other: &Self) -> Ordering {
-        // min-heap: reverse on (t, seq)
-        other
-            .t
-            .partial_cmp(&self.t)
-            .unwrap_or(Ordering::Equal)
-            .then(other.seq.cmp(&self.seq))
+        // min-heap: reverse on (t, seq). total_cmp keeps the order total
+        // (NaN would silently break (time, seq) determinism with
+        // partial_cmp; push() debug-asserts it never gets here).
+        other.t.total_cmp(&self.t).then(other.seq.cmp(&self.seq))
     }
 }
 
@@ -253,10 +260,18 @@ struct Runner<'s, 'a, 'h> {
 
     tasks: Vec<TaskRt>,
     flows: FlowNet,
-    flow_ctx: HashMap<usize, FlowCtx>,
+    /// Flow contexts, slab-indexed by `FlowId` (slots are recycled in
+    /// lockstep with `FlowNet`'s free list).
+    flow_ctx: Vec<Option<FlowCtx>>,
     pending: Vec<Option<PendingFlow>>,
+    pending_free: Vec<usize>,
+    /// Same-timestamp flow events being coalesced (reused buffers).
+    batch_arms: Vec<usize>,
+    batch_dones: Vec<(FlowId, u64)>,
 
-    sig_waiters: HashMap<(usize, usize), Vec<usize>>,
+    /// Signal waiters, flat-indexed by `rank * sig_pad + idx`.
+    sig_waiters: Vec<Vec<usize>>,
+    sig_pad: usize,
     ll_arrived: HashMap<LLKey, u32>,
     ll_waiters: HashMap<LLKey, Vec<usize>>,
     barriers: HashMap<(u64, usize), BarrierState>,
@@ -278,6 +293,8 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
         let link_bw = (0..sim.topo.link_count())
             .map(|l| sim.topo.link(crate::topology::LinkId(l)).bw)
             .collect();
+        let sig_pad = heap.signal_pad();
+        let sig_world = heap.world();
         Runner {
             sim,
             prog,
@@ -303,9 +320,13 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                 })
                 .collect(),
             flows: FlowNet::new(link_bw),
-            flow_ctx: HashMap::new(),
+            flow_ctx: Vec::new(),
             pending: Vec::new(),
-            sig_waiters: HashMap::new(),
+            pending_free: Vec::new(),
+            batch_arms: Vec::new(),
+            batch_dones: Vec::new(),
+            sig_waiters: vec![Vec::new(); sig_world * sig_pad],
+            sig_pad,
             ll_arrived: HashMap::new(),
             ll_waiters: HashMap::new(),
             barriers: HashMap::new(),
@@ -316,6 +337,7 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
     }
 
     fn push(&mut self, t: f64, ev: Ev) {
+        debug_assert!(!t.is_nan(), "NaN event time for {ev:?}");
         debug_assert!(t >= self.clock - 1e-12, "event in the past: {t} < {}", self.clock);
         self.seq += 1;
         self.events.push(QEntry {
@@ -358,8 +380,16 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
             self.n_events += 1;
             match ev {
                 Ev::Start { task } => self.on_start(task)?,
-                Ev::FlowArm { pending } => self.on_flow_arm(pending)?,
-                Ev::FlowDone { flow, gen } => self.on_flow_done(flow, gen)?,
+                Ev::FlowArm { pending } => {
+                    self.batch_arms.push(pending);
+                    self.drain_flow_events_at(t);
+                    self.on_flow_batch()?;
+                }
+                Ev::FlowDone { flow, gen } => {
+                    self.batch_dones.push((flow, gen));
+                    self.drain_flow_events_at(t);
+                    self.on_flow_batch()?;
+                }
                 Ev::OpDone { task, gen } => self.on_op_done(task, gen)?,
                 Ev::BarrierRelease { key } => self.on_barrier_release(key)?,
             }
@@ -415,32 +445,91 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
         self.advance(task)
     }
 
-    fn on_flow_arm(&mut self, pending: usize) -> Result<(), SimError> {
-        let pf = self.pending[pending].take().expect("pending flow armed twice");
-        self.n_flows += 1;
-        let (id, update) = self.flows.add(self.clock, pf.links, pf.bytes);
-        self.flow_ctx.insert(id.0, pf.ctx);
+    /// Pull every queued flow event that shares timestamp `t` into the
+    /// current batch (collectives issue many puts at identical virtual
+    /// times; their arms and completions land with equal timestamps).
+    /// Stops at the first non-flow event so ordering with Start/OpDone/
+    /// BarrierRelease handlers stays deterministic by (t, seq).
+    fn drain_flow_events_at(&mut self, t: f64) {
+        while let Some(peek) = self.events.peek() {
+            if peek.t != t || !matches!(peek.ev, Ev::FlowArm { .. } | Ev::FlowDone { .. }) {
+                break;
+            }
+            let QEntry { ev, .. } = self.events.pop().expect("peeked entry vanished");
+            self.n_events += 1;
+            match ev {
+                Ev::FlowArm { pending } => self.batch_arms.push(pending),
+                Ev::FlowDone { flow, gen } => self.batch_dones.push((flow, gen)),
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    /// Apply one coalesced batch of flow arms + completions: a single
+    /// component-scoped `FlowNet::update`, then the completion
+    /// side-effects in event order.
+    fn on_flow_batch(&mut self) -> Result<(), SimError> {
+        let arms = std::mem::take(&mut self.batch_arms);
+        let dones = std::mem::take(&mut self.batch_dones);
+
+        // stale-filter completions against current generations
+        let mut remove_ids: Vec<FlowId> = Vec::with_capacity(dones.len());
+        for &(flow, gen) in &dones {
+            if self.flows.is_current(flow, gen) {
+                debug_assert!(
+                    self.flows.remaining_at(flow, self.clock) < 1e-3,
+                    "current FlowDone with {} bytes left",
+                    self.flows.remaining_at(flow, self.clock)
+                );
+                remove_ids.push(flow);
+            }
+        }
+
+        // collect armed flows (recycling their pending slots)
+        let mut adds = Vec::with_capacity(arms.len());
+        let mut add_ctxs = Vec::with_capacity(arms.len());
+        for &p in &arms {
+            let pf = self.pending[p].take().expect("pending flow armed twice");
+            self.pending_free.push(p);
+            adds.push((pf.links, pf.bytes));
+            add_ctxs.push(pf.ctx);
+        }
+        self.n_flows += add_ctxs.len() as u64;
+
+        // take completed contexts BEFORE the update recycles their slots
+        let mut done_ctxs = Vec::with_capacity(remove_ids.len());
+        for id in &remove_ids {
+            done_ctxs.push(self.flow_ctx[id.0].take().expect("missing flow ctx"));
+        }
+
+        let (ids, update) = self.flows.update(self.clock, &remove_ids, adds);
+        for (id, ctx) in ids.iter().zip(add_ctxs) {
+            if self.flow_ctx.len() <= id.0 {
+                self.flow_ctx.resize_with(id.0 + 1, || None);
+            }
+            debug_assert!(self.flow_ctx[id.0].is_none(), "flow ctx slot collision");
+            self.flow_ctx[id.0] = Some(ctx);
+        }
         for (f, gen, eta) in update.etas {
             self.push(self.clock + eta, Ev::FlowDone { flow: f, gen });
         }
+        for ctx in done_ctxs {
+            self.finish_flow(ctx)?;
+        }
+
+        // hand the (emptied) batch buffers back for reuse
+        let mut arms = arms;
+        let mut dones = dones;
+        arms.clear();
+        dones.clear();
+        self.batch_arms = arms;
+        self.batch_dones = dones;
         Ok(())
     }
 
-    fn on_flow_done(&mut self, flow: FlowId, gen: u64) -> Result<(), SimError> {
-        if !self.flows.is_current(flow, gen) {
-            return Ok(()); // stale event from an older rate assignment
-        }
-        debug_assert!(
-            self.flows.remaining_at(flow, self.clock) < 1e-3,
-            "current FlowDone with {} bytes left",
-            self.flows.remaining_at(flow, self.clock)
-        );
-        let update = self.flows.remove(self.clock, flow);
-        for (f, g, eta) in update.etas {
-            self.push(self.clock + eta, Ev::FlowDone { flow: f, gen: g });
-        }
-        let ctx = self.flow_ctx.remove(&flow.0).expect("missing flow ctx");
-
+    /// Completion side-effects of one flow: data movement, signal,
+    /// LL-flag arrivals, trace span, nbi/blocking wakeups.
+    fn finish_flow(&mut self, ctx: FlowCtx) -> Result<(), SimError> {
         if self.sim.cfg.numerics {
             for (src, dst) in &ctx.copies {
                 self.heap.copy(*src, *dst);
@@ -646,7 +735,8 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                     if sig_met(self.heap.signal(rank, idx), cond, value) {
                         self.tasks[task].pc += 1;
                     } else {
-                        self.sig_waiters.entry((rank, idx)).or_default().push(task);
+                        debug_assert!(idx < self.sig_pad, "signal idx out of pad");
+                        self.sig_waiters[rank * self.sig_pad + idx].push(task);
                         self.tasks[task].state = TState::BlockedSignal { idx, cond, value };
                         return Ok(());
                     }
@@ -735,12 +825,18 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
 
     fn launch_flow(&mut self, route: crate::topology::Route, bytes: f64, ctx: FlowCtx) {
         let bytes = bytes.max(64.0); // minimum wire granule
-        self.pending.push(Some(PendingFlow {
+        let pf = PendingFlow {
             links: route.links,
             bytes,
             ctx,
-        }));
-        let idx = self.pending.len() - 1;
+        };
+        let idx = if let Some(i) = self.pending_free.pop() {
+            self.pending[i] = Some(pf);
+            i
+        } else {
+            self.pending.push(Some(pf));
+            self.pending.len() - 1
+        };
         self.push(self.clock + route.latency, Ev::FlowArm { pending: idx });
     }
 
@@ -752,7 +848,9 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
             }
         }
         // wake satisfied waiters (preserving FIFO order among them)
-        if let Some(waiters) = self.sig_waiters.remove(&(sig.rank, sig.idx)) {
+        let key = sig.rank * self.sig_pad + sig.idx;
+        if !self.sig_waiters[key].is_empty() {
+            let waiters = std::mem::take(&mut self.sig_waiters[key]);
             let mut still = Vec::new();
             for w in waiters {
                 let TState::BlockedSignal { idx, cond, value } = self.tasks[w].state else {
@@ -766,7 +864,11 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                 }
             }
             if !still.is_empty() {
-                self.sig_waiters.insert((sig.rank, sig.idx), still);
+                // resumed tasks may have re-blocked on this same signal;
+                // keep them (FIFO: previously blocked first)
+                let slot = &mut self.sig_waiters[key];
+                still.append(slot);
+                *slot = still;
             }
         }
         Ok(())

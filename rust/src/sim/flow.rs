@@ -8,6 +8,31 @@
 //! NVSwitch/PCIe/NIC bandwidth degrades under contention closely enough
 //! for overlap analysis (the paper's own §3.5 back-of-envelope uses the
 //! same linear bandwidth-sharing arithmetic).
+//!
+//! # Incremental recomputation
+//!
+//! Max–min allocation decomposes exactly over connected components of the
+//! bipartite flow↔link incidence graph: water-filling never moves
+//! capacity between links that share no flow (transitively), so an
+//! add/remove can only change rates inside the component of the touched
+//! flow. [`FlowNet::update`] exploits this:
+//!
+//! * a persistent link→flows incidence index (swap-remove with per-flow
+//!   position back-pointers) makes component discovery O(component);
+//! * progress accrual is lazy per flow (`last_settle` timestamps), so an
+//!   update touches only the component instead of sweeping all F flows;
+//! * the water-filling pass runs over the component's links/flows with the
+//!   same arithmetic (same iteration order, same freeze order) as a
+//!   from-scratch global pass, so rates are **bit-identical** to a full
+//!   recompute — `tests/flow_equivalence.rs` proves this on randomized
+//!   traces;
+//! * flows in untouched components keep their rates *and* their scheduled
+//!   completion events (the generation mechanism leaves them current).
+//!
+//! Batching: the DES engine coalesces all adds/removes carrying the same
+//! virtual timestamp into a single `update` call, so the N simultaneous
+//! puts a collective issues cost one component recompute instead of N
+//! global ones.
 
 use crate::topology::LinkId;
 
@@ -15,11 +40,16 @@ use crate::topology::LinkId;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct FlowId(pub usize);
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 struct Flow {
     links: Vec<LinkId>,
+    /// Position of this flow inside `incidence[links[k]]` (swap-remove
+    /// back-pointers; parallel to `links`).
+    pos: Vec<u32>,
     bytes_left: f64,
     rate: f64,
+    /// Time `bytes_left` was last accrued (per-flow lazy settle).
+    last_settle: f64,
     /// Generation counter: completion events carry the generation they
     /// were scheduled under; rate changes bump it, invalidating stale
     /// events.
@@ -30,20 +60,31 @@ struct Flow {
 /// The set of active flows plus link capacities.
 pub struct FlowNet {
     link_bw: Vec<f64>,
+    /// Alive flows currently occupying each link (unordered; positions
+    /// are tracked by the flows themselves).
+    incidence: Vec<Vec<u32>>,
     flows: Vec<Flow>,
     free: Vec<usize>,
-    /// Time rates were last recomputed; progress accrues between updates.
-    last_update: f64,
+    /// Latest update time seen (monotonicity checks only; progress is
+    /// accrued per flow, not globally).
+    last_now: f64,
     n_active: usize,
-    // --- reusable scratch for recompute (hot path; avoids per-call allocs)
+    // --- reusable scratch for update (hot path; avoids per-call allocs)
     scratch_cap: Vec<f64>,
-    scratch_link_flows: Vec<Vec<u32>>,
-    scratch_frozen: Vec<bool>,
-    scratch_active_links: Vec<u32>,
+    scratch_fill: Vec<Vec<u32>>,
     scratch_unfrozen: Vec<u32>,
+    scratch_link_seen: Vec<bool>,
+    scratch_flow_seen: Vec<bool>,
+    scratch_frozen: Vec<bool>,
+    scratch_comp_links: Vec<u32>,
+    scratch_comp_flows: Vec<u32>,
+    scratch_active: Vec<u32>,
+    scratch_old_rates: Vec<(u32, f64)>,
 }
 
-/// Result of a rate recomputation: each active flow's new completion ETA.
+/// Result of a rate recomputation: each affected flow's new completion
+/// ETA. Flows whose rate did not change are absent — their previously
+/// scheduled completion events remain exact and current.
 pub struct RateUpdate {
     /// (flow, generation, eta_seconds_from_now)
     pub etas: Vec<(FlowId, u64, f64)>,
@@ -54,15 +95,21 @@ impl FlowNet {
         let nl = link_bw.len();
         FlowNet {
             link_bw,
+            incidence: (0..nl).map(|_| Vec::new()).collect(),
             flows: Vec::new(),
             free: Vec::new(),
-            last_update: 0.0,
+            last_now: 0.0,
             n_active: 0,
             scratch_cap: vec![0.0; nl],
-            scratch_link_flows: (0..nl).map(|_| Vec::new()).collect(),
+            scratch_fill: (0..nl).map(|_| Vec::new()).collect(),
+            scratch_unfrozen: vec![0; nl],
+            scratch_link_seen: vec![false; nl],
+            scratch_flow_seen: Vec::new(),
             scratch_frozen: Vec::new(),
-            scratch_active_links: Vec::new(),
-            scratch_unfrozen: Vec::new(),
+            scratch_comp_links: Vec::new(),
+            scratch_comp_flows: Vec::new(),
+            scratch_active: Vec::new(),
+            scratch_old_rates: Vec::new(),
         }
     }
 
@@ -70,148 +117,273 @@ impl FlowNet {
         self.n_active
     }
 
-    /// Accrue progress for all flows up to `now` (call before any
-    /// add/remove at time `now`).
-    fn settle(&mut self, now: f64) {
-        let dt = now - self.last_update;
-        debug_assert!(dt >= -1e-12, "time went backwards: {dt}");
-        if dt > 0.0 {
-            for f in self.flows.iter_mut().filter(|f| f.alive) {
-                f.bytes_left = (f.bytes_left - f.rate * dt).max(0.0);
-            }
-        }
-        self.last_update = now;
-    }
-
-    /// Add a flow at `now`; returns its id and the rate update for ALL
-    /// active flows (the caller reschedules completion events).
+    /// Add a flow at `now`; returns its id and the rate update for every
+    /// flow whose rate changed (the caller reschedules completion
+    /// events).
     pub fn add(&mut self, now: f64, links: Vec<LinkId>, bytes: f64) -> (FlowId, RateUpdate) {
-        self.settle(now);
-        debug_assert!(bytes > 0.0, "zero-byte flow");
-        let flow = Flow {
-            links,
-            bytes_left: bytes,
-            rate: 0.0,
-            gen: 0,
-            alive: true,
-        };
-        let id = if let Some(i) = self.free.pop() {
-            // preserve the slot's generation across reuse: completion
-            // events of the previous occupant must stay stale
-            let gen = self.flows[i].gen;
-            self.flows[i] = Flow { gen, ..flow };
-            i
-        } else {
-            self.flows.push(flow);
-            self.flows.len() - 1
-        };
-        self.n_active += 1;
-        let up = self.recompute();
-        (FlowId(id), up)
+        let (ids, up) = self.update(now, &[], vec![(links, bytes)]);
+        (ids[0], up)
     }
 
     /// Remove a completed (or cancelled) flow; returns the rate update.
     pub fn remove(&mut self, now: f64, id: FlowId) -> RateUpdate {
-        self.settle(now);
-        assert!(self.flows[id.0].alive, "double remove of flow {id:?}");
-        self.flows[id.0].alive = false;
-        self.free.push(id.0);
-        self.n_active -= 1;
-        self.recompute()
+        self.update(now, &[id], Vec::new()).1
     }
 
-    /// Is `gen` the current generation of `id`? (Stale-event filter.)
-    pub fn is_current(&self, id: FlowId, gen: u64) -> bool {
-        let f = &self.flows[id.0];
-        f.alive && f.gen == gen
+    /// Batched add/remove at one timestamp: all removals and additions
+    /// are applied, then rates are recomputed **once**, scoped to the
+    /// connected component(s) of links reachable from the touched flows.
+    /// Returns the new flows' ids (in `adds` order) and the rate update.
+    ///
+    /// Equivalent to performing the operations one at a time (final
+    /// rates depend only on the final flow set), but N simultaneous puts
+    /// cost one water-filling pass instead of N.
+    pub fn update(
+        &mut self,
+        now: f64,
+        removes: &[FlowId],
+        adds: Vec<(Vec<LinkId>, f64)>,
+    ) -> (Vec<FlowId>, RateUpdate) {
+        debug_assert!(
+            now >= self.last_now - 1e-12,
+            "time went backwards: {now} < {}",
+            self.last_now
+        );
+        if now > self.last_now {
+            self.last_now = now;
+        }
+
+        // 1. insert the new flows (into slots + incidence) so they bridge
+        //    components during discovery
+        let mut new_ids = Vec::with_capacity(adds.len());
+        for (links, bytes) in adds {
+            debug_assert!(bytes > 0.0, "zero-byte flow");
+            debug_assert!(
+                links.iter().enumerate().all(|(k, a)| links[..k].iter().all(|b| a != b)),
+                "route visits a link twice: {links:?}"
+            );
+            let flow = Flow {
+                links,
+                pos: Vec::new(),
+                bytes_left: bytes,
+                rate: 0.0,
+                last_settle: now,
+                gen: 0,
+                alive: true,
+            };
+            let i = if let Some(i) = self.free.pop() {
+                // preserve the slot's generation across reuse: completion
+                // events of the previous occupant must stay stale
+                let gen = self.flows[i].gen;
+                self.flows[i] = Flow { gen, ..flow };
+                i
+            } else {
+                self.flows.push(flow);
+                self.flows.len() - 1
+            };
+            self.link_into_incidence(i);
+            self.n_active += 1;
+            new_ids.push(FlowId(i));
+        }
+        if self.scratch_flow_seen.len() < self.flows.len() {
+            self.scratch_flow_seen.resize(self.flows.len(), false);
+            self.scratch_frozen.resize(self.flows.len(), false);
+        }
+
+        // 2. discover the touched component(s): BFS over the bipartite
+        //    flow↔link graph seeded at every removed and added flow
+        self.scratch_comp_flows.clear();
+        self.scratch_comp_links.clear();
+        for id in removes {
+            assert!(self.flows[id.0].alive, "double remove of flow {id:?}");
+            if !self.scratch_flow_seen[id.0] {
+                self.scratch_flow_seen[id.0] = true;
+                self.scratch_comp_flows.push(id.0 as u32);
+            }
+        }
+        for id in &new_ids {
+            if !self.scratch_flow_seen[id.0] {
+                self.scratch_flow_seen[id.0] = true;
+                self.scratch_comp_flows.push(id.0 as u32);
+            }
+        }
+        let mut qi = 0;
+        while qi < self.scratch_comp_flows.len() {
+            let fi = self.scratch_comp_flows[qi] as usize;
+            qi += 1;
+            for k in 0..self.flows[fi].links.len() {
+                let l = self.flows[fi].links[k].0;
+                if self.scratch_link_seen[l] {
+                    continue;
+                }
+                self.scratch_link_seen[l] = true;
+                self.scratch_comp_links.push(l as u32);
+                for j in 0..self.incidence[l].len() {
+                    let f2 = self.incidence[l][j] as usize;
+                    if !self.scratch_flow_seen[f2] {
+                        self.scratch_flow_seen[f2] = true;
+                        self.scratch_comp_flows.push(f2 as u32);
+                    }
+                }
+            }
+        }
+
+        // 3. apply removals (after discovery: the pre-removal component
+        //    is the superset that must be refilled if it splits)
+        for id in removes {
+            self.flows[id.0].alive = false;
+            self.unlink_from_incidence(id.0);
+            self.free.push(id.0);
+            self.n_active -= 1;
+        }
+
+        // 4. lazily accrue progress — only for the touched component
+        for k in 0..self.scratch_comp_flows.len() {
+            let fi = self.scratch_comp_flows[k] as usize;
+            let f = &mut self.flows[fi];
+            if !f.alive {
+                continue;
+            }
+            let dt = now - f.last_settle;
+            if dt > 0.0 {
+                f.bytes_left = (f.bytes_left - f.rate * dt).max(0.0);
+            }
+            f.last_settle = now;
+        }
+
+        // 5. water-fill the component; flows elsewhere keep their rates
+        //    and their scheduled completion events
+        let mut comp_flows = std::mem::take(&mut self.scratch_comp_flows);
+        let mut comp_links = std::mem::take(&mut self.scratch_comp_links);
+        comp_flows.sort_unstable();
+        comp_links.sort_unstable();
+        let etas = self.refill_component(&comp_flows, &comp_links);
+
+        // 6. reset the visit stamps for the next call
+        for &fi in &comp_flows {
+            self.scratch_flow_seen[fi as usize] = false;
+        }
+        for &l in &comp_links {
+            self.scratch_link_seen[l as usize] = false;
+        }
+        self.scratch_comp_flows = comp_flows;
+        self.scratch_comp_links = comp_links;
+
+        (new_ids, RateUpdate { etas })
     }
 
-    /// Remaining bytes of a flow (diagnostics/tests). Reflects progress
-    /// only up to the last add/remove — see [`Self::remaining_at`].
-    pub fn bytes_left(&self, id: FlowId) -> f64 {
-        self.flows[id.0].bytes_left
+    /// Append flow `fi` to the incidence list of each of its links,
+    /// recording the swap-remove back-pointers.
+    fn link_into_incidence(&mut self, fi: usize) {
+        let links = std::mem::take(&mut self.flows[fi].links);
+        let mut pos = std::mem::take(&mut self.flows[fi].pos);
+        pos.clear();
+        for &l in &links {
+            let list = &mut self.incidence[l.0];
+            pos.push(list.len() as u32);
+            list.push(fi as u32);
+        }
+        self.flows[fi].links = links;
+        self.flows[fi].pos = pos;
     }
 
-    /// Remaining bytes of a flow projected to time `now` (without
-    /// mutating state).
-    pub fn remaining_at(&self, id: FlowId, now: f64) -> f64 {
-        let f = &self.flows[id.0];
-        (f.bytes_left - f.rate * (now - self.last_update).max(0.0)).max(0.0)
+    /// Remove flow `fi` from every incidence list in O(route length),
+    /// patching the back-pointer of whichever flow gets swapped into the
+    /// vacated slot.
+    fn unlink_from_incidence(&mut self, fi: usize) {
+        let links = std::mem::take(&mut self.flows[fi].links);
+        let pos = std::mem::take(&mut self.flows[fi].pos);
+        for (k, &l) in links.iter().enumerate() {
+            let p = pos[k] as usize;
+            let list = &mut self.incidence[l.0];
+            debug_assert_eq!(list[p] as usize, fi, "incidence index corrupt");
+            list.swap_remove(p);
+            if p < list.len() {
+                let moved = list[p] as usize;
+                let mf = &mut self.flows[moved];
+                let idx = mf
+                    .links
+                    .iter()
+                    .position(|&ml| ml == l)
+                    .expect("incidence index corrupt");
+                mf.pos[idx] = p as u32;
+            }
+        }
+        self.flows[fi].links = links;
+        self.flows[fi].pos = pos;
     }
 
-    pub fn rate(&self, id: FlowId) -> f64 {
-        self.flows[id.0].rate
-    }
-
-    /// Max–min water-filling over all alive flows.
+    /// Max–min water-filling over one connected component.
+    ///
+    /// `comp_flows`/`comp_links` must be sorted ascending: the pass then
+    /// performs the identical floating-point operations, in the identical
+    /// order, as a from-scratch global water-fill restricted to this
+    /// component (which is all a global fill ever does to it), keeping
+    /// incremental rates bit-identical to a full recompute.
     ///
     /// Completion events are only re-issued for flows whose rate actually
     /// changed (plus fresh zero-rate flows): an unchanged rate means the
     /// previously scheduled completion time is still exact, so the old
     /// event stays current — this cuts event-queue churn from O(F) to
-    /// O(changed) per add/remove, the engine's hottest path.
-    fn recompute(&mut self) -> RateUpdate {
-        let nl = self.link_bw.len();
-        self.scratch_cap.clear();
-        self.scratch_cap.extend_from_slice(&self.link_bw);
-        for lf in &mut self.scratch_link_flows {
-            lf.clear();
-        }
-        self.scratch_frozen.clear();
-        self.scratch_frozen.resize(self.flows.len(), false);
-        let mut old_rates: Vec<(u32, f64)> = Vec::with_capacity(self.n_active);
-        for (i, f) in self.flows.iter().enumerate() {
-            if !f.alive {
-                continue;
-            }
-            old_rates.push((i as u32, f.rate));
-            for l in &f.links {
-                self.scratch_link_flows[l.0].push(i as u32);
+    /// O(changed) per update.
+    fn refill_component(
+        &mut self,
+        comp_flows: &[u32],
+        comp_links: &[u32],
+    ) -> Vec<(FlowId, u64, f64)> {
+        let mut remaining = 0usize;
+        self.scratch_old_rates.clear();
+        for &fi in comp_flows {
+            let f = &self.flows[fi as usize];
+            if f.alive {
+                self.scratch_frozen[fi as usize] = false;
+                self.scratch_old_rates.push((fi, f.rate));
+                remaining += 1;
+            } else {
+                self.scratch_frozen[fi as usize] = true;
             }
         }
-        self.scratch_active_links.clear();
-        for l in 0..nl {
-            if !self.scratch_link_flows[l].is_empty() {
-                self.scratch_active_links.push(l as u32);
-            }
+        for &l in comp_links {
+            let l = l as usize;
+            self.scratch_cap[l] = self.link_bw[l];
+            self.scratch_fill[l].clone_from(&self.incidence[l]);
+            self.scratch_fill[l].sort_unstable();
+            self.scratch_unfrozen[l] = self.incidence[l].len() as u32;
         }
-        // per-link unfrozen counts start at list lengths
-        self.scratch_unfrozen.clear();
-        self.scratch_unfrozen
-            .extend((0..nl).map(|l| self.scratch_link_flows[l].len() as u32));
-        let mut unfrozen = std::mem::take(&mut self.scratch_unfrozen);
-        let mut remaining = self.n_active;
+        self.scratch_active.clear();
+        self.scratch_active.extend_from_slice(comp_links);
+
         while remaining > 0 {
-            // bottleneck link = min fair share among active links
+            // bottleneck link = min fair share among the component's links
             let mut best_share = f64::INFINITY;
             let mut best_link = usize::MAX;
             let mut w = 0;
-            for k in 0..self.scratch_active_links.len() {
-                let l = self.scratch_active_links[k] as usize;
-                if unfrozen[l] == 0 {
+            for k in 0..self.scratch_active.len() {
+                let l = self.scratch_active[k] as usize;
+                if self.scratch_unfrozen[l] == 0 {
                     continue; // drop from the active list (compaction)
                 }
-                self.scratch_active_links[w] = l as u32;
+                self.scratch_active[w] = l as u32;
                 w += 1;
-                let share = self.scratch_cap[l] / unfrozen[l] as f64;
+                let share = self.scratch_cap[l] / self.scratch_unfrozen[l] as f64;
                 if share < best_share {
                     best_share = share;
                     best_link = l;
                 }
             }
-            self.scratch_active_links.truncate(w);
+            self.scratch_active.truncate(w);
             if best_link == usize::MAX {
                 // flows with no links (shouldn't happen) get infinite rate
-                for &(i, _) in &old_rates {
-                    if !self.scratch_frozen[i as usize] {
-                        self.flows[i as usize].rate = f64::INFINITY;
-                        self.scratch_frozen[i as usize] = true;
+                for &fi in comp_flows {
+                    if !self.scratch_frozen[fi as usize] {
+                        self.flows[fi as usize].rate = f64::INFINITY;
+                        self.scratch_frozen[fi as usize] = true;
                     }
                 }
                 break;
             }
             // freeze the bottleneck link's unfrozen flows at best_share
-            let list = std::mem::take(&mut self.scratch_link_flows[best_link]);
+            let list = std::mem::take(&mut self.scratch_fill[best_link]);
             for &fi in &list {
                 let i = fi as usize;
                 if self.scratch_frozen[i] {
@@ -222,16 +394,17 @@ impl FlowNet {
                 remaining -= 1;
                 for l in &self.flows[i].links {
                     self.scratch_cap[l.0] = (self.scratch_cap[l.0] - best_share).max(0.0);
-                    unfrozen[l.0] -= 1;
+                    self.scratch_unfrozen[l.0] -= 1;
                 }
             }
-            self.scratch_link_flows[best_link] = list;
+            self.scratch_fill[best_link] = list;
         }
-        self.scratch_unfrozen = unfrozen;
+
         // bump generations + produce ETAs only where the rate changed
         let mut etas = Vec::new();
-        for &(i, old) in &old_rates {
-            let f = &mut self.flows[i as usize];
+        for k in 0..self.scratch_old_rates.len() {
+            let (fi, old) = self.scratch_old_rates[k];
+            let f = &mut self.flows[fi as usize];
             if f.rate == old && old > 0.0 {
                 continue; // previous completion event is still exact
             }
@@ -243,9 +416,104 @@ impl FlowNet {
             } else {
                 f64::INFINITY
             };
-            etas.push((FlowId(i as usize), f.gen, eta));
+            etas.push((FlowId(fi as usize), f.gen, eta));
         }
-        RateUpdate { etas }
+        etas
+    }
+
+    /// Is `gen` the current generation of `id`? (Stale-event filter.)
+    pub fn is_current(&self, id: FlowId, gen: u64) -> bool {
+        let f = &self.flows[id.0];
+        f.alive && f.gen == gen
+    }
+
+    /// Remaining bytes of a flow (diagnostics/tests). Reflects progress
+    /// only up to the flow's last settle — see [`Self::remaining_at`].
+    pub fn bytes_left(&self, id: FlowId) -> f64 {
+        self.flows[id.0].bytes_left
+    }
+
+    /// Remaining bytes of a flow projected to time `now` (without
+    /// mutating state).
+    pub fn remaining_at(&self, id: FlowId, now: f64) -> f64 {
+        let f = &self.flows[id.0];
+        (f.bytes_left - f.rate * (now - f.last_settle).max(0.0)).max(0.0)
+    }
+
+    pub fn rate(&self, id: FlowId) -> f64 {
+        self.flows[id.0].rate
+    }
+
+    /// Current max–min rates recomputed from scratch over the whole
+    /// network, ignoring all incremental state (reference for the
+    /// equivalence suite; O(F·L) — never on the hot path).
+    pub fn reference_rates(&self) -> Vec<(FlowId, f64)> {
+        let nl = self.link_bw.len();
+        let mut cap = self.link_bw.clone();
+        let mut link_flows: Vec<Vec<u32>> = (0..nl).map(|_| Vec::new()).collect();
+        let mut ids = Vec::new();
+        for (i, f) in self.flows.iter().enumerate() {
+            if !f.alive {
+                continue;
+            }
+            ids.push(i as u32);
+            for l in &f.links {
+                link_flows[l.0].push(i as u32);
+            }
+        }
+        let mut rates: Vec<f64> = vec![0.0; self.flows.len()];
+        let mut frozen = vec![false; self.flows.len()];
+        let mut unfrozen: Vec<u32> = link_flows.iter().map(|lf| lf.len() as u32).collect();
+        let mut active: Vec<u32> = (0..nl as u32)
+            .filter(|&l| !link_flows[l as usize].is_empty())
+            .collect();
+        let mut remaining = ids.len();
+        while remaining > 0 {
+            let mut best_share = f64::INFINITY;
+            let mut best_link = usize::MAX;
+            let mut w = 0;
+            for k in 0..active.len() {
+                let l = active[k] as usize;
+                if unfrozen[l] == 0 {
+                    continue;
+                }
+                active[w] = l as u32;
+                w += 1;
+                let share = cap[l] / unfrozen[l] as f64;
+                if share < best_share {
+                    best_share = share;
+                    best_link = l;
+                }
+            }
+            active.truncate(w);
+            if best_link == usize::MAX {
+                for &fi in &ids {
+                    if !frozen[fi as usize] {
+                        rates[fi as usize] = f64::INFINITY;
+                        frozen[fi as usize] = true;
+                    }
+                }
+                break;
+            }
+            let list = std::mem::take(&mut link_flows[best_link]);
+            for &fi in &list {
+                let i = fi as usize;
+                if frozen[i] {
+                    continue;
+                }
+                rates[i] = best_share;
+                frozen[i] = true;
+                remaining -= 1;
+                for l in &self.flows[i].links {
+                    cap[l.0] = (cap[l.0] - best_share).max(0.0);
+                    unfrozen[l.0] -= 1;
+                }
+            }
+            link_flows[best_link] = list;
+        }
+        ids.into_iter()
+            .map(|fi| (FlowId(fi as usize), rates[fi as usize]))
+            .collect()
     }
 
     /// Invariant check: total rate through every link <= its capacity
@@ -260,6 +528,39 @@ impl FlowNet {
         for (l, (&u, &c)) in used.iter().zip(self.link_bw.iter()).enumerate() {
             if u > c * (1.0 + 1e-9) + 1e-9 {
                 return Err(format!("link {l} oversubscribed: {u} > {c}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Structural invariant check for the persistent incidence index
+    /// (tests only): every alive flow's back-pointers are consistent and
+    /// every incidence entry points at an alive flow that lists the link.
+    pub fn check_incidence(&self) -> Result<(), String> {
+        for (i, f) in self.flows.iter().enumerate() {
+            if !f.alive {
+                continue;
+            }
+            if f.links.len() != f.pos.len() {
+                return Err(format!("flow {i}: links/pos length mismatch"));
+            }
+            for (k, &l) in f.links.iter().enumerate() {
+                let p = f.pos[k] as usize;
+                match self.incidence[l.0].get(p) {
+                    Some(&fi) if fi as usize == i => {}
+                    _ => return Err(format!("flow {i} pos for link {} is stale", l.0)),
+                }
+            }
+        }
+        for (l, list) in self.incidence.iter().enumerate() {
+            for &fi in list {
+                let f = &self.flows[fi as usize];
+                if !f.alive {
+                    return Err(format!("link {l} lists dead flow {fi}"));
+                }
+                if !f.links.contains(&LinkId(l)) {
+                    return Err(format!("link {l} lists flow {fi} that doesn't use it"));
+                }
             }
         }
         Ok(())
@@ -292,6 +593,7 @@ mod tests {
         assert_eq!(n.rate(b), 50.0);
         assert_eq!(up.etas.len(), 2);
         n.check_capacity().unwrap();
+        n.check_incidence().unwrap();
     }
 
     #[test]
@@ -344,6 +646,83 @@ mod tests {
     }
 
     #[test]
+    fn untouched_component_keeps_rates_and_events() {
+        // flows on disjoint links are separate components: adding or
+        // removing on link 1 must not disturb the flow on link 0 at all
+        let mut n = net(&[100.0, 80.0]);
+        let (a, up_a) = n.add(0.0, vec![LinkId(0)], 1e6);
+        let gen_a = up_a.etas[0].1;
+        let (b, up_b) = n.add(1.0, vec![LinkId(1)], 1e6);
+        assert!(n.is_current(a, gen_a), "a's completion event must survive");
+        assert_eq!(n.rate(a), 100.0);
+        assert_eq!(n.rate(b), 80.0);
+        // b's update must not mention a at all
+        assert!(up_b.etas.iter().all(|e| e.0 != a));
+        let up_rm = n.remove(2.0, b);
+        assert!(up_rm.etas.is_empty(), "removing b touches nobody else");
+        assert!(n.is_current(a, gen_a));
+        n.check_incidence().unwrap();
+    }
+
+    #[test]
+    fn bridge_flow_merges_components() {
+        let mut n = net(&[100.0, 100.0]);
+        let (a, _) = n.add(0.0, vec![LinkId(0)], 1e6);
+        let (b, _) = n.add(0.0, vec![LinkId(1)], 1e6);
+        // c spans both links: all three now share one component
+        let (c, up) = n.add(0.0, vec![LinkId(0), LinkId(1)], 1e6);
+        let touched: Vec<FlowId> = up.etas.iter().map(|e| e.0).collect();
+        assert!(touched.contains(&a) && touched.contains(&b) && touched.contains(&c));
+        assert_eq!(n.rate(a), 50.0);
+        assert_eq!(n.rate(b), 50.0);
+        assert_eq!(n.rate(c), 50.0);
+        n.check_capacity().unwrap();
+    }
+
+    #[test]
+    fn batched_update_equals_sequential() {
+        let links = |v: &[usize]| v.iter().map(|&l| LinkId(l)).collect::<Vec<_>>();
+        let mut seq = net(&[100.0, 60.0, 40.0]);
+        let mut bat = net(&[100.0, 60.0, 40.0]);
+        let (s0, _) = seq.add(0.0, links(&[0, 1]), 500.0);
+        let (b0, _) = bat.add(0.0, links(&[0, 1]), 500.0);
+        // sequential: two adds + one remove, each with its own recompute
+        seq.remove(1.0, s0);
+        let (s1, _) = seq.add(1.0, links(&[0]), 300.0);
+        let (s2, _) = seq.add(1.0, links(&[1, 2]), 400.0);
+        // batched: one update call at the same timestamp
+        let (ids, _) = bat.update(1.0, &[b0], vec![(links(&[0]), 300.0), (links(&[1, 2]), 400.0)]);
+        assert_eq!(
+            seq.rate(s1).to_bits(),
+            bat.rate(ids[0]).to_bits(),
+            "batched rates must be bit-identical to sequential"
+        );
+        assert_eq!(seq.rate(s2).to_bits(), bat.rate(ids[1]).to_bits());
+        bat.check_capacity().unwrap();
+        bat.check_incidence().unwrap();
+    }
+
+    #[test]
+    fn incremental_matches_reference_fill() {
+        let mut n = net(&[100.0, 60.0, 40.0, 80.0]);
+        let mut ids = Vec::new();
+        for (ls, bytes) in [
+            (vec![0usize, 1], 1e5),
+            (vec![1, 2], 2e5),
+            (vec![3], 3e5),
+            (vec![0, 3], 4e5),
+            (vec![2], 5e5),
+        ] {
+            let (id, _) = n.add(0.0, ls.into_iter().map(LinkId).collect(), bytes);
+            ids.push(id);
+        }
+        n.remove(1.0, ids[1]);
+        for (id, r) in n.reference_rates() {
+            assert_eq!(n.rate(id).to_bits(), r.to_bits(), "flow {id:?}");
+        }
+    }
+
+    #[test]
     fn flow_slots_are_reused_with_fresh_generations() {
         let mut n = net(&[10.0]);
         let (a, up_a) = n.add(0.0, vec![LinkId(0)], 10.0);
@@ -374,16 +753,14 @@ mod tests {
             let mut n = FlowNet::new(caps);
             let nf = g.usize_in(1, 12);
             for _ in 0..nf {
-                let mut links: Vec<LinkId> = (0..nl)
-                    .filter(|_| g.bool())
-                    .map(LinkId)
-                    .collect();
+                let mut links: Vec<LinkId> = (0..nl).filter(|_| g.bool()).map(LinkId).collect();
                 if links.is_empty() {
                     links.push(LinkId(g.usize_in(0, nl)));
                 }
                 n.add(0.0, links, 100.0);
             }
             n.check_capacity().unwrap();
+            n.check_incidence().unwrap();
             // every flow got a positive rate
             for i in 0..nf {
                 assert!(n.rate(FlowId(i)) > 0.0);

@@ -10,4 +10,4 @@ pub mod engine;
 pub mod flow;
 
 pub use engine::{ComputeExecutor, NoopExecutor, OpSpan, Sim, SimConfig, SimError, SimReport};
-pub use flow::{FlowId, FlowNet};
+pub use flow::{FlowId, FlowNet, RateUpdate};

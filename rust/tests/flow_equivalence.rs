@@ -1,0 +1,215 @@
+//! Exact-equivalence suite for the incremental max–min flow solver.
+//!
+//! The `FlowNet` hot path recomputes rates incrementally, scoped to the
+//! connected component of links reachable from the touched flows, with
+//! per-flow lazy progress accrual. These properties pin the contract:
+//! after **every** step of a randomized add/remove trace, the
+//! incremental rates are **bit-identical** to a from-scratch global
+//! water-fill over the whole network ([`FlowNet::reference_rates`]),
+//! batched updates are bit-identical to sequential ones, and completion
+//! events of untouched components survive updates elsewhere.
+
+use triton_dist_sim::sim::FlowNet;
+use triton_dist_sim::topology::LinkId;
+use triton_dist_sim::util::prop::{check, Gen};
+
+/// Random route: a non-empty subset of links drawn from `lo..hi`.
+fn random_route(g: &mut Gen, lo: usize, hi: usize) -> Vec<LinkId> {
+    let mut links: Vec<LinkId> = (lo..hi).filter(|_| g.bool()).map(LinkId).collect();
+    if links.is_empty() {
+        links.push(LinkId(lo + g.usize_in(0, hi - lo)));
+    }
+    links
+}
+
+fn assert_rates_match_reference(n: &FlowNet, step: usize) {
+    for (id, want) in n.reference_rates() {
+        assert_eq!(
+            n.rate(id).to_bits(),
+            want.to_bits(),
+            "step {step}: flow {id:?} incremental rate {} != reference {want}",
+            n.rate(id)
+        );
+    }
+}
+
+/// Incremental component-scoped refills are bit-identical to a global
+/// from-scratch water-fill after every single step of a randomized
+/// add/remove trace (40 cases x 30 steps = 1200 steps).
+#[test]
+fn prop_incremental_matches_global_refill() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static STEPS: AtomicUsize = AtomicUsize::new(0);
+    STEPS.store(0, Ordering::SeqCst);
+    check("incremental = global water-fill", 40, |g| {
+        let nl = g.usize_in(2, 10);
+        let caps: Vec<f64> = (0..nl).map(|_| 1.0 + g.f64() * 99.0).collect();
+        let mut n = FlowNet::new(caps);
+        let mut alive = Vec::new();
+        let mut now = 0.0;
+        for step in 0..30 {
+            // time sometimes stands still (batch-like), sometimes moves
+            if g.bool() {
+                now += g.f64() * 2.0;
+            }
+            let do_remove = !alive.is_empty() && g.usize_in(0, 3) == 0;
+            if do_remove {
+                let k = g.usize_in(0, alive.len());
+                let id = alive.swap_remove(k);
+                n.remove(now, id);
+            } else {
+                let links = random_route(g, 0, nl);
+                let bytes = 1.0 + g.f64() * 1e6;
+                let (id, _) = n.add(now, links, bytes);
+                alive.push(id);
+            }
+            assert_rates_match_reference(&n, step);
+            n.check_capacity().unwrap();
+            n.check_incidence().unwrap();
+            STEPS.fetch_add(1, Ordering::SeqCst);
+        }
+    });
+    let total = STEPS.load(Ordering::SeqCst);
+    assert!(total >= 1000, "suite must cover >= 1000 steps, ran {total}");
+}
+
+/// One batched `update` is bit-identical (rates) to performing the same
+/// removes and adds one at a time at the same timestamp.
+#[test]
+fn prop_batched_matches_sequential() {
+    check("batched = sequential", 60, |g| {
+        let nl = g.usize_in(2, 8);
+        let caps: Vec<f64> = (0..nl).map(|_| 1.0 + g.f64() * 99.0).collect();
+        let mut seq = FlowNet::new(caps.clone());
+        let mut bat = FlowNet::new(caps);
+        // identical preamble on both nets
+        let mut seq_alive = Vec::new();
+        let mut bat_alive = Vec::new();
+        for _ in 0..g.usize_in(0, 10) {
+            let links = random_route(g, 0, nl);
+            let bytes = 1.0 + g.f64() * 1e6;
+            let (a, _) = seq.add(0.0, links.clone(), bytes);
+            let (b, _) = bat.add(0.0, links, bytes);
+            seq_alive.push(a);
+            bat_alive.push(b);
+        }
+        let now = g.f64() * 3.0;
+        // pick removals (indices into the alive lists) and fresh adds
+        let n_rm = g.usize_in(0, seq_alive.len() + 1);
+        let mut rm_idx: Vec<usize> = (0..seq_alive.len()).collect();
+        g.shuffle(&mut rm_idx);
+        rm_idx.truncate(n_rm);
+        rm_idx.sort_unstable();
+        let adds: Vec<(Vec<LinkId>, f64)> = (0..g.usize_in(1, 6))
+            .map(|_| (random_route(g, 0, nl), 1.0 + g.f64() * 1e6))
+            .collect();
+
+        // sequential: one FlowNet call per operation
+        for &i in &rm_idx {
+            seq.remove(now, seq_alive[i]);
+        }
+        let mut seq_new = Vec::new();
+        for (links, bytes) in &adds {
+            let (id, _) = seq.add(now, links.clone(), *bytes);
+            seq_new.push(id);
+        }
+        // batched: everything in one update
+        let bat_rm: Vec<_> = rm_idx.iter().map(|&i| bat_alive[i]).collect();
+        let (bat_new, _) = bat.update(now, &bat_rm, adds);
+
+        // survivors + new flows must agree bit-for-bit on rates
+        for (k, (&s, &b)) in seq_alive.iter().zip(&bat_alive).enumerate() {
+            if rm_idx.contains(&k) {
+                continue;
+            }
+            assert_eq!(seq.rate(s).to_bits(), bat.rate(b).to_bits(), "survivor {k}");
+            let db = (seq.remaining_at(s, now) - bat.remaining_at(b, now)).abs();
+            assert!(db <= 1e-6 * seq.remaining_at(s, now).max(1.0), "bytes {k}: {db}");
+        }
+        for (k, (&s, &b)) in seq_new.iter().zip(&bat_new).enumerate() {
+            assert_eq!(seq.rate(s).to_bits(), bat.rate(b).to_bits(), "new flow {k}");
+        }
+        assert_eq!(seq.n_active(), bat.n_active());
+        bat.check_capacity().unwrap();
+        bat.check_incidence().unwrap();
+        assert_rates_match_reference(&bat, 0);
+    });
+}
+
+/// With no elapsed virtual time, ETAs are exact: every update reports
+/// `bytes / rate` computed from the same bits the reference fill yields.
+#[test]
+fn prop_same_time_etas_exact() {
+    check("same-time etas exact", 40, |g| {
+        let nl = g.usize_in(1, 6);
+        let caps: Vec<f64> = (0..nl).map(|_| 1.0 + g.f64() * 99.0).collect();
+        let mut n = FlowNet::new(caps);
+        let mut bytes_of = std::collections::HashMap::new();
+        let mut alive = Vec::new();
+        for _ in 0..20 {
+            let up = if !alive.is_empty() && g.usize_in(0, 3) == 0 {
+                let k = g.usize_in(0, alive.len());
+                let id = alive.swap_remove(k);
+                bytes_of.remove(&id.0);
+                n.remove(0.0, id)
+            } else {
+                let links = random_route(g, 0, nl);
+                let bytes = 1.0 + g.f64() * 1e6;
+                let (id, up) = n.add(0.0, links, bytes);
+                bytes_of.insert(id.0, bytes);
+                alive.push(id);
+                up
+            };
+            for (id, _gen, eta) in &up.etas {
+                let want = bytes_of[&id.0] / n.rate(*id);
+                assert_eq!(eta.to_bits(), want.to_bits(), "flow {id:?} eta");
+            }
+        }
+    });
+}
+
+/// Updates in one connected component never invalidate the scheduled
+/// completion events of flows in another: their generation stays
+/// current, so the DES engine keeps their events instead of churning
+/// the queue.
+#[test]
+fn prop_untouched_component_events_survive() {
+    check("untouched events survive", 40, |g| {
+        // two halves of the link space never share a flow => at least
+        // two independent component groups
+        let half = g.usize_in(1, 4);
+        let caps: Vec<f64> = (0..2 * half).map(|_| 1.0 + g.f64() * 99.0).collect();
+        let mut n = FlowNet::new(caps);
+        // population of the left half, recording each flow's latest gen
+        let mut left = std::collections::HashMap::new();
+        for _ in 0..g.usize_in(1, 5) {
+            let (id, up) = n.add(0.0, random_route(g, 0, half), 1e5);
+            for (f, gen, _) in &up.etas {
+                if left.contains_key(&f.0) || *f == id {
+                    left.insert(f.0, *gen);
+                }
+            }
+        }
+        // churn the right half
+        let mut right = Vec::new();
+        for _ in 0..10 {
+            if !right.is_empty() && g.bool() {
+                let k = g.usize_in(0, right.len());
+                let id: triton_dist_sim::sim::FlowId = right.swap_remove(k);
+                let up = n.remove(0.0, id);
+                assert!(up.etas.iter().all(|(f, _, _)| !left.contains_key(&f.0)));
+            } else {
+                let (id, up) = n.add(0.0, random_route(g, half, 2 * half), 1e5);
+                assert!(up.etas.iter().all(|(f, _, _)| !left.contains_key(&f.0)));
+                right.push(id);
+            }
+            // every left-half completion event is still current
+            for (&f, &gen) in &left {
+                assert!(
+                    n.is_current(triton_dist_sim::sim::FlowId(f), gen),
+                    "left flow {f} event was invalidated by right-half churn"
+                );
+            }
+        }
+    });
+}
