@@ -23,8 +23,8 @@ fn main() {
     println!(
         "analytic §3.5 balance: reduce needs {} SMs (<=15 per the paper); \n\
          inter partition: {:?}\n",
-        reduce_sms_for_balance(&hw, 8),
-        plan_inter_rs(&hw, 8)
+        reduce_sms_for_balance(&hw, 8, hw.nic_bw),
+        plan_inter_rs(&hw, 8, hw.nic_bw)
     );
 
     // standalone RS: reduce-SM sweep

@@ -12,7 +12,7 @@ fn main() {
     banner("Fig 14: inter-node GEMM+RS, 16x H800 (2 nodes)");
     let cluster = ClusterSpec::h800(2, 8);
     let topo = Topology::build(cluster);
-    let part = plan_inter_rs(&cluster.hw, 8);
+    let part = plan_inter_rs(&cluster.hw, 8, topo.inter_path_bw());
     let mut fig = FigureReport::new("Fig 14");
     for m in [1024usize, 2048, 4096, 8192] {
         for (n, k, tag) in [(49152 / 16, 8192, "mlp"), (8192, 8192 / 16, "attn")] {

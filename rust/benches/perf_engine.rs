@@ -9,6 +9,10 @@
 //!   waits; the historical headline number.
 //! * `alltoall-256rank`  — 32x8 LL AllToAll: the scaling scenario the
 //!   incremental flow solver + event coalescing exist for (65k flows).
+//! * `alltoall-512rank-spine` — 64x8 LL AllToAll on a 2-rail, 2:1
+//!   oversubscribed leaf/spine fabric: ~260k flows sharing the spine
+//!   planes, one world-spanning component — the dirty-set priority
+//!   refill's target scenario.
 //! * `ag_gemm-build+run` — single-node AG+GEMM, program build + engine.
 //! * `ag_gemm-multinode` — 4x8 inter-node AG+GEMM (NIC contention path).
 //! * `ag_gemm-numerics(native)` — data movement through the heap.
@@ -16,7 +20,7 @@
 use triton_dist_sim::bench::{banner, bench_wall};
 use triton_dist_sim::collectives::alltoall::{a2a_ll, A2aBufs, A2aCfg};
 use triton_dist_sim::collectives::ProgBuild;
-use triton_dist_sim::config::{ClusterSpec, DType, GemmShape};
+use triton_dist_sim::config::{ClusterSpec, DType, FabricSpec, GemmShape};
 use triton_dist_sim::coordinator::ag_gemm;
 use triton_dist_sim::mem::SymmetricHeap;
 use triton_dist_sim::metrics::{engine_bench_json, EngineBenchRecord};
@@ -84,11 +88,26 @@ fn main() {
     let ctx256 = ShmemCtx::new(cluster256, DType::BF16);
     let topo256 = Topology::build(cluster256);
     let mut events256 = 0u64;
-    let stat256 = bench_wall("alltoall-256rank", 0, 1, || {
+    // warmup + median over 3 iters: a single cold sample is too noisy
+    // for the CI >20% regression gate
+    let stat256 = bench_wall("alltoall-256rank", 1, 3, || {
         events256 = run_a2a(&ctx256, &topo256);
     });
     println!("{}", stat256.render());
     report(&mut records, "alltoall-256rank", events256, &stat256);
+
+    // 512-rank AllToAll on a spine-contended fabric: every inter-node
+    // flow shares one of two spine planes, so the whole world is one
+    // flow component — the dirty-set priority refill's target scenario.
+    let cluster512 = ClusterSpec::h800(64, 8).with_fabric(FabricSpec::rail_optimized(2, 2.0));
+    let ctx512 = ShmemCtx::new(cluster512, DType::BF16);
+    let topo512 = Topology::build(cluster512);
+    let mut events512 = 0u64;
+    let stat512 = bench_wall("alltoall-512rank-spine", 1, 3, || {
+        events512 = run_a2a(&ctx512, &topo512);
+    });
+    println!("{}", stat512.render());
+    report(&mut records, "alltoall-512rank-spine", events512, &stat512);
 
     // AG+GEMM with numerics off — program-build + engine cost
     let cluster = ClusterSpec::h800(1, 8);

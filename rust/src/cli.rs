@@ -64,6 +64,15 @@ impl Args {
         }
     }
 
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
@@ -94,6 +103,15 @@ mod tests {
         assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
         let b = parse(&["x", "--n", "abc"]);
         assert!(b.usize_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn f64_parsing_and_defaults() {
+        let a = parse(&["x", "--oversub", "2.5"]);
+        assert_eq!(a.f64_or("oversub", 1.0).unwrap(), 2.5);
+        assert_eq!(a.f64_or("missing", 1.0).unwrap(), 1.0);
+        let b = parse(&["x", "--oversub", "xyz"]);
+        assert!(b.f64_or("oversub", 1.0).is_err());
     }
 
     #[test]

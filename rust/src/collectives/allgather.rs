@@ -17,6 +17,7 @@ use super::{AgBufs, ProgBuild};
 /// the Fig. 7 consumer swizzle exploits.
 pub fn ag_push_intra(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild) {
     let ws = ctx.n_pes();
+    pb.claim_sigs("ag_push_intra", bufs.sig_base, ws);
     for r in 0..ws {
         let mut t = ctx.task(r, format!("ag_push[{r}]")).on_copy_engine().launch_overhead();
         // local shard is ready by definition
@@ -42,6 +43,7 @@ pub fn ag_push_intra(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild) {
 /// order its swizzled consumer wants.
 pub fn ag_pull_intra(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild) {
     let ws = ctx.n_pes();
+    pb.claim_sigs("ag_pull_intra", bufs.sig_base, ws);
     let bid = pb.fresh_barrier();
     for r in 0..ws {
         let mut t = ctx.task(r, format!("ag_pull[{r}]")).on_copy_engine().launch_overhead();
@@ -58,12 +60,15 @@ pub fn ag_pull_intra(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild) {
 
 /// Fig. 4 — inter-node AllGather: `local_world_size - 1` intra-forward
 /// blocks and `n_nodes - 1` inter-send blocks per rank, running in
-/// parallel so NVLink forwarding hides NIC transfers.
+/// parallel so NVLink forwarding hides NIC transfers. Inter-node sends
+/// are striped round-robin across NIC rails (one rail per peer-node
+/// stream) so a multi-rail fabric runs all planes concurrently.
 pub fn ag_inter(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild) {
     let ws = ctx.n_pes();
     let lws = ctx.local_world_size();
     let n_nodes = ctx.n_nodes();
     assert!(n_nodes > 1, "ag_inter requires multiple nodes");
+    pb.claim_sigs("ag_inter", bufs.sig_base, ws);
 
     for r in 0..ws {
         let node = ctx.node_of(r);
@@ -75,7 +80,7 @@ pub fn ag_inter(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild) {
         pb.prog.push(init.build());
 
         // inter-node senders: own segment to the same local rank of every
-        // other node (Fig. 4 "inter-node send" blocks)
+        // other node (Fig. 4 "inter-node send" blocks), one rail each
         for pid in 0..n_nodes - 1 {
             let peer_node = (node + pid + 1) % n_nodes;
             let peer = peer_node * lws + lr;
@@ -83,6 +88,7 @@ pub fn ag_inter(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild) {
                 .task(r, format!("ag_inter_send[{r}->{peer}]"))
                 .with_sms(1)
                 .launch_overhead();
+            t.on_rail(pid);
             t.signal_wait_until(bufs.sig(r), SigCond::Eq, 1);
             t.putmem_signal(bufs.seg(r, r), bufs.seg(r, peer), bufs.sig(r), SigOp::Set, 1);
             pb.prog.push(t.build());
@@ -147,6 +153,7 @@ pub fn ag_ll_inter_gated(
     let n_nodes = ctx.n_nodes();
     assert!(n_nodes > 1, "ag_ll_inter requires multiple nodes");
     assert!(bufs.ll.is_some(), "LL AllGather needs an LL staging buffer");
+    pb.claim_sigs("ag_ll_inter", bufs.sig_base, ws);
     let shard_bytes = ctx.bytes(bufs.shard);
 
     for r in 0..ws {
@@ -169,6 +176,8 @@ pub fn ag_ll_inter_gated(
                 for i in 1..n_nodes {
                     let pn = (node + i) % n_nodes;
                     let peer = pn * lws + lr;
+                    // stripe the LL sends round-robin across NIC rails
+                    t.on_rail(i - 1);
                     t.ll_put(bufs.ll_seg(r, r), bufs.ll_seg(r, peer));
                 }
                 t.multimem_st_ll(bufs.ll_seg(r, r));
@@ -223,6 +232,7 @@ pub fn ag_ll_intra_gated(
 ) {
     let ws = ctx.n_pes();
     assert_eq!(ctx.n_nodes(), 1, "ag_ll_intra is single-node");
+    pb.claim_sigs("ag_ll_intra", bufs.sig_base, ws);
     let shard_bytes = ctx.bytes(bufs.shard);
     for r in 0..ws {
         let mut own = ctx
@@ -261,6 +271,7 @@ pub fn ag_ll_intra_gated(
 /// the same step.
 pub fn ag_ll_pcie(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild) {
     let ws = ctx.n_pes();
+    pb.claim_sigs("ag_ll_pcie", bufs.sig_base, ws);
     let shard_bytes = ctx.bytes(bufs.shard);
     for r in 0..ws {
         let mut send = ctx
@@ -269,8 +280,15 @@ pub fn ag_ll_pcie(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild) {
             .launch_overhead();
         ll_repack(&mut send, bufs.seg(r, r), bufs.ll_seg(r, r), shard_bytes, "ll_pack");
         send.notify(r, bufs.sig(r), SigOp::Set, 1);
+        let mut inter_idx = 0usize;
         for i in 1..ws {
             let peer = (r + i) % ws;
+            if ctx.node_of(peer) != ctx.node_of(r) {
+                // stripe inter-node LL sends round-robin across rails
+                // (intra-node routes ignore the rail pin)
+                send.on_rail(inter_idx);
+                inter_idx += 1;
+            }
             send.ll_put(bufs.ll_seg(r, r), bufs.ll_seg(r, peer));
         }
         send.quiet();
@@ -299,6 +317,7 @@ pub fn ag_ll_pcie(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild) {
 /// (autotunable, decoupled from the compute tile).
 pub fn ag_amd_mesh(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild, sub_chunks: usize) {
     let ws = ctx.n_pes();
+    pb.claim_sigs("ag_amd_mesh", bufs.sig_base, ws);
     assert!(sub_chunks >= 1 && bufs.shard % sub_chunks == 0,
             "sub_chunks must divide the shard");
     let sub = bufs.shard / sub_chunks;

@@ -73,6 +73,8 @@ pub fn allreduce_push(
     producer_sig: Option<usize>,
 ) {
     let ws = ctx.n_pes();
+    // footprint: scatter sigs [0, ws), done sigs [ws, 2*ws)
+    pb.claim_sigs("allreduce_push", bufs.sig_base, 2 * ws);
     for r in 0..ws {
         // scatter stream: push chunk c to rank c's scatter slot
         let mut scat = ctx

@@ -102,6 +102,7 @@ impl A2aCfg {
 /// to every peer (shifted walk) and hosts `ws-1` receive blocks.
 pub fn a2a_ll(ctx: &ShmemCtx, bufs: &A2aBufs, pb: &mut ProgBuild, cfg: &A2aCfg) {
     let ws = ctx.n_pes();
+    pb.claim_sigs("a2a_ll", bufs.sig_base, ws);
     let chunk_bytes = ctx.bytes(bufs.chunk);
 
     for r in 0..ws {
@@ -122,14 +123,18 @@ pub fn a2a_ll(ctx: &ShmemCtx, bufs: &A2aBufs, pb: &mut ProgBuild, cfg: &A2aCfg) 
             label: "a2a_self_copy",
         });
         send.notify(r, bufs.sig(r), SigOp::Set, 1);
+        let mut inter_idx = 0usize;
         for i in 1..ws {
             let dst = (r + i) % ws;
             let inter = ctx.node_of(dst) != node;
             if inter {
-                // IBRC/IBGDA post cost, serialized in the sender
+                // IBRC/IBGDA post cost, serialized in the sender; stripe
+                // the messages round-robin across NIC rails
                 send.op(Op::Sleep {
                     secs: cfg.inter_msg_overhead,
                 });
+                send.on_rail(inter_idx);
+                inter_idx += 1;
             }
             if cfg.queue_overhead > 0.0 {
                 send.op(Op::Sleep {
@@ -188,6 +193,7 @@ pub fn a2a_deepep(ctx: &ShmemCtx, bufs: &A2aBufs, pb: &mut ProgBuild) {
 pub fn a2a_deepep_cfg(ctx: &ShmemCtx, bufs: &A2aBufs, pb: &mut ProgBuild, cfg: &A2aCfg) {
     let cfg = *cfg;
     let ws = ctx.n_pes();
+    pb.claim_sigs("a2a_deepep", bufs.sig_base, ws);
     let chunk_bytes = ctx.bytes(bufs.chunk);
     let hw = ctx.cluster.hw;
 
@@ -208,6 +214,7 @@ pub fn a2a_deepep_cfg(ctx: &ShmemCtx, bufs: &A2aBufs, pb: &mut ProgBuild, cfg: &
             label: "a2a_self_copy",
         });
         send.notify(r, bufs.sig(r), SigOp::Set, 1);
+        let mut inter_idx = 0usize;
         for i in 1..ws {
             let dst = (r + i) % ws;
             let inter = ctx.node_of(dst) != node;
@@ -215,6 +222,9 @@ pub fn a2a_deepep_cfg(ctx: &ShmemCtx, bufs: &A2aBufs, pb: &mut ProgBuild, cfg: &
                 secs: cfg.inter_msg_overhead + cfg.queue_overhead,
             });
             if inter {
+                // IBGDA posts stripe across rails like ours does
+                send.on_rail(inter_idx);
+                inter_idx += 1;
                 send.ll_put(bufs.send_chunk(dst, r), bufs.ll_slot(r, dst));
             } else {
                 // intra chunk forced through the IB loopback: charge the
@@ -228,6 +238,7 @@ pub fn a2a_deepep_cfg(ctx: &ShmemCtx, bufs: &A2aBufs, pb: &mut ProgBuild, cfg: &
                     src: bufs.send_chunk(dst, r),
                     dst: bufs.ll_slot(r, dst),
                     bytes: chunk_bytes + penalty_bytes,
+                    tc: Default::default(),
                 });
             }
         }

@@ -20,15 +20,21 @@ pub fn nccl_allgather_ring(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild, sm
     nccl_allgather_ring_done(ctx, bufs, pb, sms, None)
 }
 
+/// Hard cap on [`nccl_channels`]: bounds the ring baselines' signal
+/// footprint (8 signals per channel for the RS ring, `ws` per channel
+/// for the AG ring) so coordinators can place producer signal ranges
+/// above it — see `collectives::rs_sig_span`.
+pub(crate) const MAX_RING_CHANNELS: usize = 4;
+
 /// NCCL channel count: multiple parallel rings so multi-node traffic uses
 /// every NIC and full-mesh traffic uses several links — modeling NCCL's
 /// multi-channel rings (a single ring would unfairly bottleneck the
 /// baseline on one NIC / one mesh link).
 fn nccl_channels(ctx: &ShmemCtx) -> usize {
     if ctx.n_nodes() > 1 {
-        ctx.local_world_size().min(4)
+        ctx.local_world_size().min(MAX_RING_CHANNELS)
     } else {
-        4.min(ctx.n_pes() - 1).max(1)
+        MAX_RING_CHANNELS.min(ctx.n_pes() - 1).max(1)
     }
 }
 
@@ -68,6 +74,9 @@ pub fn nccl_allgather_ring_done(
 ) {
     let ws = ctx.n_pes();
     let channels = nccl_channels(ctx).min(bufs.shard); // sub-shard must be non-empty
+    // footprint: per-segment counters [0, ws), the done slot at ws, and
+    // the per-channel spaces [ws + 1, ws + 1 + channels*ws)
+    pb.claim_sigs("nccl_ag_ring", bufs.sig_base, ws + 1 + channels * ws);
     let enter = pb.fresh_barrier();
     let exit = pb.fresh_barrier();
     let expect = ws * channels;
@@ -132,6 +141,8 @@ pub fn nccl_reduce_scatter_ring(ctx: &ShmemCtx, bufs: &RsBufs, pb: &mut ProgBuil
     let ws = ctx.n_pes();
     assert!(ws >= 2);
     let channels = nccl_channels(ctx).min(bufs.shard);
+    // footprint: 8-wide arr/ack block per channel
+    pb.claim_sigs("nccl_rs_ring", bufs.sig_base, 8 * channels);
     let enter = pb.fresh_barrier();
     let exit = pb.fresh_barrier();
     let expect = ws * channels;
@@ -198,6 +209,7 @@ pub fn nccl_reduce_scatter_ring(ctx: &ShmemCtx, bufs: &RsBufs, pb: &mut ProgBuil
                         1,
                     )),
                     blocking: true,
+                    tc: Default::default(),
                     label: "ring_fwd",
                 });
                 if s > 0 {
@@ -238,6 +250,7 @@ pub fn nvshmem_fcollect(
     granule_overhead: f64,
 ) {
     let ws = ctx.n_pes();
+    pb.claim_sigs("nvshmem_fcollect", bufs.sig_base, ws);
     let enter = pb.fresh_barrier();
     let exit = pb.fresh_barrier();
     for r in 0..ws {

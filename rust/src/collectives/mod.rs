@@ -16,10 +16,18 @@ use crate::program::Program;
 use crate::shmem::ShmemCtx;
 use crate::util::Rng;
 
-/// A program under construction plus collision-free barrier-id allocation.
+/// A program under construction plus collision-free barrier-id allocation
+/// and a signal-range collision audit.
 pub struct ProgBuild {
     pub prog: Program,
     next_barrier: usize,
+    /// Claimed signal-id ranges `[start, end)` with the claiming builder's
+    /// name. Signal ids live in one flat per-rank pad, so two collectives
+    /// composed on the same heap alias each other's synchronization if
+    /// their ranges overlap — a silent-corruption class of bug (a stray
+    /// `Set` satisfies someone else's wait). Builders declare their
+    /// footprint via [`Self::claim_sigs`], which panics on overlap.
+    sig_claims: Vec<(usize, usize, &'static str)>,
 }
 
 impl Default for ProgBuild {
@@ -33,6 +41,7 @@ impl ProgBuild {
         ProgBuild {
             prog: Program::new(),
             next_barrier: 0,
+            sig_claims: Vec::new(),
         }
     }
 
@@ -43,6 +52,38 @@ impl ProgBuild {
         self.next_barrier += 1;
         self.next_barrier - 1
     }
+
+    /// Declare that `who` owns the signal ids `[base, base + count)` on
+    /// this program's heap. Panics if the range collides with one claimed
+    /// earlier — the latent aliasing hazard when a coordinator composes
+    /// multiple collectives (each with its own `sig_base`) on one heap.
+    pub fn claim_sigs(&mut self, who: &'static str, base: usize, count: usize) {
+        if count == 0 {
+            return;
+        }
+        let end = base + count;
+        for &(b, e, w) in &self.sig_claims {
+            assert!(
+                end <= b || e <= base,
+                "signal-id range collision: {who} claims [{base}, {end}) but \
+                 {w} already owns [{b}, {e}) on this heap"
+            );
+        }
+        self.sig_claims.push((base, end, who));
+    }
+}
+
+/// Upper bound of the signal footprint any ReduceScatter variant claims
+/// above [`RsBufs::sig_base`]: the intra scatter claims `ws`
+/// (`rs_push_intra`), `rs_inter` claims `lws + 2 * n_nodes`, and the
+/// NCCL ring baseline claims 8 signals per channel (at most
+/// [`baseline::MAX_RING_CHANNELS`]). Coordinators that gate a
+/// ReduceScatter on producer signals place their range at or above
+/// `rs.sig_base + rs_sig_span(ctx)`.
+pub fn rs_sig_span(ctx: &ShmemCtx) -> usize {
+    ctx.n_pes()
+        .max(ctx.local_world_size() + 2 * ctx.n_nodes())
+        .max(8 * baseline::MAX_RING_CHANNELS)
 }
 
 /// AllGather working set: symmetric buffer of `world * shard` elements;
@@ -323,5 +364,33 @@ mod tests {
         let a = pb.fresh_barrier();
         let b = pb.fresh_barrier();
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn disjoint_sig_claims_compose() {
+        let mut pb = ProgBuild::new();
+        pb.claim_sigs("ag", 0, 8);
+        pb.claim_sigs("producer", 8, 4);
+        pb.claim_sigs("empty", 100, 0); // zero-width claims are free
+        pb.claim_sigs("above", 12, 1); // adjacent ranges don't collide
+    }
+
+    #[test]
+    fn rs_sig_span_covers_every_variant() {
+        // single node: the intra scatter's ws and the ring's 8/channel
+        let intra = ShmemCtx::new(ClusterSpec::h800(1, 8), DType::BF16);
+        assert!(rs_sig_span(&intra) >= 8);
+        assert!(rs_sig_span(&intra) >= 8 * baseline::MAX_RING_CHANNELS);
+        // many nodes: rs_inter's lws + 2 * n_nodes dominates
+        let wide = ShmemCtx::new(ClusterSpec::h800(64, 8), DType::BF16);
+        assert!(rs_sig_span(&wide) >= 8 + 2 * 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "signal-id range collision")]
+    fn overlapping_sig_claims_panic() {
+        let mut pb = ProgBuild::new();
+        pb.claim_sigs("ag", 0, 8);
+        pb.claim_sigs("rs", 4, 2);
     }
 }

@@ -24,6 +24,7 @@ pub fn rs_push_intra(
 ) {
     let ws = ctx.n_pes();
     assert_eq!(ctx.n_nodes(), 1, "rs_push_intra is single-node");
+    pb.claim_sigs("rs_push_intra", bufs.sig_base, ws);
 
     for r in 0..ws {
         // Stream 1: scatter each chunk to its destination (shifted walk).
@@ -161,6 +162,9 @@ pub fn rs_inter(
     let lws = ctx.local_world_size();
     let n_nodes = ctx.n_nodes();
     assert!(n_nodes > 1, "rs_inter requires multiple nodes");
+    // footprint: scatter sigs [0, lws), partial sigs [lws, lws+n), stage
+    // sigs [lws+n, lws+2n)
+    pb.claim_sigs("rs_inter", bufs.sig_base, lws + 2 * n_nodes);
 
     // one barrier id per iteration; joined by scatter + reduce + p2p of
     // every rank in the node (3 tasks per rank)
@@ -242,8 +246,11 @@ pub fn rs_inter(
 
             // p2p: ship the staged partial to the peer rank of node tn;
             // delivery sets the *arrival* signal for this sender's node.
+            // Iterations stripe round-robin across NIC rails so the
+            // serialized P2P stream still exercises every plane.
             if tn != node {
                 let target = tn * lws + lr;
+                p2p.on_rail(it);
                 p2p.signal_wait_until(bufs.stage_sig(tn, lws, n_nodes), SigCond::Ge, 1);
                 p2p.putmem_signal(
                     bufs.stage_slot(tn, r),

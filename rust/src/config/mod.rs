@@ -137,6 +137,130 @@ impl HardwareModel {
     }
 }
 
+/// Inter-node fabric description: how the per-GPU NIC bandwidth is
+/// physically organized into rails and switch tiers.
+///
+/// The default (`rails = 1`, `oversub = 1.0`) is a flat, non-blocking
+/// fabric: every GPU owns one NIC pair and the switch can never be a
+/// bottleneck — exactly the model the seed topology hard-coded. Routes on
+/// a non-blocking fabric contain only the NIC endpoint links, so the
+/// default reproduces the old flat-NIC makespans bit-identically.
+///
+/// With `rails > 1` each GPU's `nic_bw` is split across `rails`
+/// rail-optimized NIC planes (per-rail bandwidth `nic_bw / rails`); a
+/// message pinned to one rail only gets that rail's share, so collectives
+/// must stripe (see `TrafficClass`). With `oversub > 1.0` the leaf→spine
+/// uplinks are thinner than the sum of their downlinks by that ratio and
+/// the switch tiers are materialized as shared links contended by every
+/// inter-node flow of the same (node, rail) / rail.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FabricSpec {
+    /// NIC rails per GPU (>= 1). Per-rail bandwidth is `nic_bw / rails`.
+    pub rails: usize,
+    /// Leaf→spine oversubscription ratio (>= 1.0; 1.0 = non-blocking).
+    pub oversub: f64,
+    /// Spine-core thinning relative to the sum of the leaf uplinks
+    /// feeding each plane (>= 1.0). At 1.0 (the default) the spine is a
+    /// non-blocking core: it merges every node into one flow component
+    /// and adds `spine_lat`, but the max–min bottleneck is always a leaf
+    /// or NIC link (a plane's capacity equals the sum of its feeds, so by
+    /// the mediant inequality its fair share never undercuts every
+    /// leaf's). Above 1.0 the spine itself becomes a genuine bottleneck.
+    pub spine_taper: f64,
+    /// Extra propagation latency per leaf-switch hop, s (default 0: the
+    /// calibrated `inter_lat` already covers the default switched path).
+    pub leaf_lat: f64,
+    /// Extra propagation latency per spine-plane traversal, s.
+    pub spine_lat: f64,
+}
+
+impl Default for FabricSpec {
+    fn default() -> Self {
+        FabricSpec {
+            rails: 1,
+            oversub: 1.0,
+            spine_taper: 1.0,
+            leaf_lat: 0.0,
+            spine_lat: 0.0,
+        }
+    }
+}
+
+impl FabricSpec {
+    /// The seed's flat per-GPU NIC model (non-blocking, single rail).
+    pub fn flat() -> Self {
+        FabricSpec::default()
+    }
+
+    /// A rail-optimized multi-rail fabric with a given leaf→spine
+    /// oversubscription ratio.
+    pub fn rail_optimized(rails: usize, oversub: f64) -> Self {
+        assert!(rails >= 1, "fabric needs at least one rail");
+        assert!(oversub > 0.0, "oversubscription ratio must be positive");
+        FabricSpec {
+            rails,
+            oversub,
+            ..FabricSpec::default()
+        }
+    }
+
+    /// Thin the spine core by `taper` relative to its leaf-uplink feed
+    /// (makes the spine plane itself a genuine max–min bottleneck).
+    pub fn with_spine_taper(mut self, taper: f64) -> Self {
+        assert!(taper >= 1.0, "spine taper must be >= 1.0");
+        self.spine_taper = taper;
+        self
+    }
+
+    /// Does the switch tier constrain traffic at all? Non-blocking
+    /// fabrics (`oversub <= 1.0` and no spine taper) provably never
+    /// bottleneck below the NIC endpoints, so their tier links are
+    /// elided from routes.
+    pub fn is_blocking(&self) -> bool {
+        self.oversub > 1.0 || self.spine_taper > 1.0
+    }
+
+    /// Per-rail NIC bandwidth given the device's aggregate `nic_bw`.
+    pub fn rail_bw(&self, nic_bw: f64) -> f64 {
+        nic_bw / self.rails as f64
+    }
+
+    /// Effective per-GPU inter-node bandwidth under uniform all-rail
+    /// load: the most-thinned tier caps each GPU's fair share —
+    /// `nic_bw / oversub` at the leaf uplink, further divided by
+    /// `spine_taper` when the spine core is thinned. Assumes the sender
+    /// keeps *every* rail busy simultaneously.
+    pub fn effective_inter_bw(&self, nic_bw: f64) -> f64 {
+        nic_bw / (self.oversub.max(1.0) * self.spine_taper.max(1.0))
+    }
+
+    /// Drain rate of a *serialized* inter-node stream: one message in
+    /// flight at a time, pinned to a single rail (what `rs_inter`'s
+    /// 1-SM P2P block does), through the thinned tiers. This — not
+    /// [`Self::effective_inter_bw`] — is what the §3.5 bandwidth-balance
+    /// budgets must use: a single message only ever sees one rail's
+    /// share of the NIC (see `Topology::inter_path_bw`).
+    pub fn rail_path_bw(&self, nic_bw: f64) -> f64 {
+        self.effective_inter_bw(nic_bw) / self.rails as f64
+    }
+}
+
+/// Which fabric path a message should take (the router's input alongside
+/// the endpoints). Collectives stripe inter-node traffic by pinning
+/// messages round-robin across rails.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TrafficClass {
+    /// Router picks a deterministic rail from the endpoints' local ranks.
+    #[default]
+    Auto,
+    /// Pin the message to rail `r % rails` end-to-end (rail-optimized
+    /// same-rail path).
+    Rail(u32),
+    /// Explicit tx/rx rails; unequal planes cross both spines
+    /// (spine-crossing path).
+    Rails { tx: u32, rx: u32 },
+}
+
 /// A cluster: `nodes` x `gpus_per_node` devices of one hardware kind.
 #[derive(Debug, Clone, Copy)]
 pub struct ClusterSpec {
@@ -145,6 +269,8 @@ pub struct ClusterSpec {
     pub gpus_per_node: usize,
     /// NUMA domains per node (affects PCIe/NIC locality; §3.1 inter-NUMA).
     pub numa_per_node: usize,
+    /// Inter-node fabric organization (rails + switch tiers).
+    pub fabric: FabricSpec,
 }
 
 impl ClusterSpec {
@@ -154,6 +280,7 @@ impl ClusterSpec {
             nodes,
             gpus_per_node,
             numa_per_node: 2,
+            fabric: FabricSpec::default(),
         }
     }
 
@@ -163,6 +290,7 @@ impl ClusterSpec {
             nodes: 1,
             gpus_per_node,
             numa_per_node: 2,
+            fabric: FabricSpec::default(),
         }
     }
 
@@ -172,7 +300,17 @@ impl ClusterSpec {
             nodes,
             gpus_per_node,
             numa_per_node: 2,
+            fabric: FabricSpec::default(),
         }
+    }
+
+    /// Replace the inter-node fabric description.
+    pub fn with_fabric(mut self, fabric: FabricSpec) -> Self {
+        assert!(fabric.rails >= 1, "fabric needs at least one rail");
+        assert!(fabric.oversub > 0.0, "oversubscription must be positive");
+        assert!(fabric.spine_taper >= 1.0, "spine taper must be >= 1.0");
+        self.fabric = fabric;
+        self
     }
 
     pub fn world_size(&self) -> usize {
@@ -298,5 +436,57 @@ mod tests {
     fn dtype_bytes() {
         assert_eq!(DType::BF16.bytes(), 2);
         assert_eq!(DType::F32.bytes(), 4);
+    }
+
+    #[test]
+    fn default_fabric_is_flat_and_exact() {
+        let f = FabricSpec::default();
+        assert_eq!(f.rails, 1);
+        assert!(!f.is_blocking());
+        let hw = HardwareModel::h800();
+        // bit-exact identities the flat-NIC equivalence relies on
+        assert_eq!(f.rail_bw(hw.nic_bw).to_bits(), hw.nic_bw.to_bits());
+        assert_eq!(
+            f.effective_inter_bw(hw.nic_bw).to_bits(),
+            hw.nic_bw.to_bits()
+        );
+    }
+
+    #[test]
+    fn rail_fabric_splits_and_oversub_caps() {
+        let f = FabricSpec::rail_optimized(4, 2.0);
+        assert!(f.is_blocking());
+        assert!((f.rail_bw(400e9) - 100e9).abs() < 1.0);
+        assert!((f.effective_inter_bw(400e9) - 200e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn spine_taper_thins_the_core() {
+        let f = FabricSpec::rail_optimized(1, 1.0).with_spine_taper(2.0);
+        assert!(f.is_blocking(), "a tapered spine is a blocking fabric");
+        assert!((f.effective_inter_bw(400e9) - 200e9).abs() < 1.0);
+        // taper composes with leaf oversubscription
+        let g = FabricSpec::rail_optimized(1, 2.0).with_spine_taper(2.0);
+        assert!((g.effective_inter_bw(400e9) - 100e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn serialized_stream_sees_one_rail() {
+        // a single in-flight message rides one of 4 rails through a 2:1
+        // leaf: 400 / 4 / 2 = 50 GB/s
+        let f = FabricSpec::rail_optimized(4, 2.0);
+        assert!((f.rail_path_bw(400e9) - 50e9).abs() < 1.0);
+        // flat single-rail fabric: bit-identical to the raw NIC speed
+        let flat = FabricSpec::default();
+        assert_eq!(flat.rail_path_bw(400e9).to_bits(), 400e9_f64.to_bits());
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_rail_fabric_rejected() {
+        let _ = ClusterSpec::h800(2, 8).with_fabric(FabricSpec {
+            rails: 0,
+            ..FabricSpec::default()
+        });
     }
 }

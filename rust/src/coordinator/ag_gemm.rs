@@ -241,6 +241,7 @@ pub fn build(cluster: ClusterSpec, shape: GemmShape, variant: AgGemmVariant) -> 
 /// engine), signaling per chunk.
 fn flux_sm_pull_ag(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild, pull_sms: u32) {
     let ws = ctx.n_pes();
+    pb.claim_sigs("flux_sm_pull_ag", bufs.sig_base, ws);
     let bid = pb.fresh_barrier();
     for r in 0..ws {
         let mut pub_t = ctx.task(r, format!("flux_pub[{r}]")).on_host();

@@ -35,7 +35,9 @@ pub struct FlashDecodeBufs {
     pub cfg: FlashDecodeCfg,
 }
 
-/// Signal set by the partial kernel when this rank's partial is ready.
+/// Floor for the readiness signal set by the partial kernel; the actual
+/// id is raised above the AllGather's `[0, ws)` segment signals at build
+/// time so large worlds can't alias it.
 const READY_SIG: usize = 90;
 
 /// Segment layout helpers.
@@ -72,7 +74,8 @@ pub fn build(cluster: ClusterSpec, cfg: FlashDecodeCfg) -> (BuiltOp, FlashDecode
     let d = cfg.head_dim;
     let hw = cluster.hw;
 
-    let mut heap = SymmetricHeap::new(ws, 96 + ws);
+    let ready_sig = READY_SIG.max(ws);
+    let mut heap = SymmetricHeap::new(ws, ready_sig + 8);
     let kv_elems = if cfg.numeric { h * cfg.kv_per_rank * d } else { 1 };
     let q = heap.alloc("q", h * d);
     let k = heap.alloc("k_cache", kv_elems);
@@ -82,6 +85,8 @@ pub fn build(cluster: ClusterSpec, cfg: FlashDecodeCfg) -> (BuiltOp, FlashDecode
     let bufs = FlashDecodeBufs { q, k, v, ag, out, cfg };
 
     let mut pb = ProgBuild::new();
+    // the readiness gate lives above the AG segment signals [0, ws)
+    pb.claim_sigs("flash_decode_ready", ready_sig, 1);
     let kv_bytes = (h * cfg.kv_per_rank * d) as f64 * ctx.dtype.bytes() as f64;
 
     // -- partial attention per rank (bandwidth-bound kernel)
@@ -107,24 +112,24 @@ pub fn build(cluster: ClusterSpec, cfg: FlashDecodeCfg) -> (BuiltOp, FlashDecode
             },
             label: "decode_partial",
         });
-        t.notify(r, READY_SIG, SigOp::Set, 1);
+        t.notify(r, ready_sig, SigOp::Set, 1);
         pb.prog.push(t.build());
     }
 
     // -- low-latency AllGather of the partials, gated on readiness
     match (hw.kind, ctx.n_nodes()) {
         (crate::config::HardwareKind::H800, 1) => {
-            ag_ll_intra_gated(&ctx, &bufs.ag, &mut pb, Some(READY_SIG))
+            ag_ll_intra_gated(&ctx, &bufs.ag, &mut pb, Some(ready_sig))
         }
         (crate::config::HardwareKind::H800, _) => {
-            ag_ll_inter_gated(&ctx, &bufs.ag, &mut pb, Some(READY_SIG))
+            ag_ll_inter_gated(&ctx, &bufs.ag, &mut pb, Some(ready_sig))
         }
         _ => {
             // PCIe/AMD path: direct LL puts; gating folded in by making
             // the send task wait first (pcie variant packs immediately, so
             // prepend a wait via a wrapper task is overkill — the pcie
             // variant's send task starts with a pack; add the gate there)
-            ag_ll_pcie_gated(&ctx, &bufs.ag, &mut pb)
+            ag_ll_pcie_gated(&ctx, &bufs.ag, &mut pb, ready_sig)
         }
     }
 
@@ -165,13 +170,18 @@ pub fn build(cluster: ClusterSpec, cfg: FlashDecodeCfg) -> (BuiltOp, FlashDecode
 }
 
 /// PCIe LL AllGather with the readiness gate folded into the senders.
-fn ag_ll_pcie_gated(ctx: &crate::shmem::ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild) {
+fn ag_ll_pcie_gated(
+    ctx: &crate::shmem::ShmemCtx,
+    bufs: &AgBufs,
+    pb: &mut ProgBuild,
+    ready_sig: usize,
+) {
     let before = pb.prog.tasks.len();
     ag_ll_pcie(ctx, bufs, pb);
     for task in pb.prog.tasks.iter_mut().skip(before) {
         if task.name.starts_with("ag_ll_send") {
             let mut ops = vec![Op::WaitSignal {
-                idx: READY_SIG,
+                idx: ready_sig,
                 cond: SigCond::Ge,
                 value: 1,
             }];

@@ -60,7 +60,10 @@ pub struct GemmRsBufs {
     pub n: usize,
 }
 
-/// Producer signal base: chunk `c` ready on this rank.
+/// Producer signal base floor: chunk `c` ready on this rank. The actual
+/// base is raised above every ReduceScatter signal footprint at build
+/// time (see [`build`]) so large clusters can't alias producer signals
+/// with RS stage/partial signals.
 const PROD_SIG_BASE: usize = 100;
 
 /// Build the program. `shape.m` is global M; `shape.k` is the *local* K
@@ -70,14 +73,16 @@ pub fn build(
     shape: GemmShape,
     variant: GemmRsVariant,
 ) -> (BuiltOp, GemmRsBufs) {
-    let (ctx, _topo) = setup(cluster);
+    let (ctx, topo) = setup(cluster);
     let ws = ctx.n_pes();
     assert!(shape.m % ws == 0);
     let m_per_rank = shape.m / ws;
     let shard = m_per_rank * shape.n;
     let hw = cluster.hw;
 
-    let mut heap = SymmetricHeap::new(ws, PROD_SIG_BASE + ws + 8);
+    // chunk-ready signals live above every RS variant's footprint
+    let prod_sig_base = PROD_SIG_BASE.max(crate::collectives::rs_sig_span(&ctx));
+    let mut heap = SymmetricHeap::new(ws, prod_sig_base + ws + 8);
     let act = heap.alloc("act", shape.m * shape.k);
     let weight = heap.alloc("weight", shape.k * shape.n);
     let rs = RsBufs::alloc(&mut heap, &ctx, shard);
@@ -91,9 +96,12 @@ pub fn build(
     };
 
     let mut pb = ProgBuild::new();
+    pb.claim_sigs("gemm_rs_producer", prod_sig_base, ws);
     let chunk_flops = 2.0 * m_per_rank as f64 * shape.n as f64 * shape.k as f64;
     let gemm_entry = Entry::gemm_name(m_per_rank, shape.k, shape.n);
-    let part = plan_inter_rs(&hw, ctx.local_world_size());
+    // §3.5 balance from the *routed* inter-node path capacity (fair
+    // share through the leaf/spine tiers), not the raw NIC speed
+    let part = plan_inter_rs(&hw, ctx.local_world_size(), topo.inter_path_bw());
 
     // ---- producer GEMM -------------------------------------------------------
     let (gemm_sms, vendor, fused_store) = match variant {
@@ -153,10 +161,11 @@ pub fn build(
                         1,
                     )),
                     blocking: false,
+                    tc: Default::default(),
                     label: "flux_fused_store",
                 });
             } else {
-                t.notify(r, PROD_SIG_BASE + chunk, SigOp::Set, 1);
+                t.notify(r, prod_sig_base + chunk, SigOp::Set, 1);
             }
         }
         pb.prog.push(t.build());
@@ -165,7 +174,7 @@ pub fn build(
     // ---- reduce-scatter part ---------------------------------------------------
     match variant {
         GemmRsVariant::OursIntra | GemmRsVariant::NoSwizzle => {
-            rs_push_intra(&ctx, &bufs.rs, &mut pb, 15, Some(PROD_SIG_BASE));
+            rs_push_intra(&ctx, &bufs.rs, &mut pb, 15, Some(prod_sig_base));
         }
         GemmRsVariant::OursInter => {
             // Alg. 5 pipeline, chunk-gated on the producer GEMM: the Fig. 10
@@ -177,18 +186,20 @@ pub fn build(
                 &mut pb,
                 part.reduce1_sms,
                 part.reduce2_sms,
-                Some(PROD_SIG_BASE),
+                Some(prod_sig_base),
             );
         }
         GemmRsVariant::OursAmd { comm_tiles } => {
-            rs_fused_amd(&ctx, &bufs.rs, &mut pb, comm_tiles, 16, Some(PROD_SIG_BASE));
+            rs_fused_amd(&ctx, &bufs.rs, &mut pb, comm_tiles, 16, Some(prod_sig_base));
         }
         GemmRsVariant::Nccl => {
             // operator-level: ring RS runs after the full GEMM
-            gate_ring_on_producer(&ctx, &bufs, &mut pb, ws);
+            gate_ring_on_producer(&ctx, &bufs, &mut pb, ws, prod_sig_base);
         }
         GemmRsVariant::Flux => {
-            // global sync then full-device reduction (no overlap)
+            // global sync then full-device reduction (no overlap); the
+            // fused stores own the scatter-arrival signal range
+            pb.claim_sigs("flux_scatter", bufs.rs.sig_base, ws);
             let bid = pb.fresh_barrier();
             for r in 0..ws {
                 let mut red = ctx
@@ -231,6 +242,7 @@ fn gate_ring_on_producer(
     bufs: &GemmRsBufs,
     pb: &mut ProgBuild,
     ws: usize,
+    prod_sig_base: usize,
 ) {
     // adapter tasks turn "all chunks ready" into one gate signal...
     // simpler: ring tasks themselves wait all producer signals first.
@@ -239,7 +251,7 @@ fn gate_ring_on_producer(
     for task in pb.prog.tasks.iter_mut().skip(before) {
         let mut gates: Vec<crate::program::Op> = (0..ws)
             .map(|c| crate::program::Op::WaitSignal {
-                idx: PROD_SIG_BASE + c,
+                idx: prod_sig_base + c,
                 cond: SigCond::Eq,
                 value: 1,
             })

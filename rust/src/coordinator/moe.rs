@@ -276,7 +276,7 @@ const PROD_SIG_BASE: usize = 100;
 /// Build MoE+RS: each rank computes partial expert outputs for all tokens
 /// with its in-hidden weight shard; ReduceScatter sums and scatters.
 pub fn build_moe_rs(cluster: ClusterSpec, shape: MoeShape, variant: MoeVariant) -> (BuiltOp, MoeRsBufs) {
-    let (ctx, _t) = setup(cluster);
+    let (ctx, topo) = setup(cluster);
     let ws = ctx.n_pes();
     let t_pr = shape.tokens_per_rank;
     let t_total = t_pr * ws;
@@ -285,7 +285,9 @@ pub fn build_moe_rs(cluster: ClusterSpec, shape: MoeShape, variant: MoeVariant) 
     let cap = capacity(t_pr, shape.topk, shape.experts);
     let hw = cluster.hw;
 
-    let mut heap = SymmetricHeap::new(ws, PROD_SIG_BASE + ws + 8);
+    // chunk-ready signals live above every RS variant's footprint
+    let prod_sig_base = PROD_SIG_BASE.max(crate::collectives::rs_sig_span(&ctx));
+    let mut heap = SymmetricHeap::new(ws, prod_sig_base + ws + 8);
     let tokens = heap.alloc("tokens", t_total * h_local);
     let idx = heap.alloc("topk_idx", t_total * shape.topk);
     let gate = heap.alloc("topk_gate", t_total * shape.topk);
@@ -304,10 +306,11 @@ pub fn build_moe_rs(cluster: ClusterSpec, shape: MoeShape, variant: MoeVariant) 
     };
 
     let mut pb = ProgBuild::new();
+    pb.claim_sigs("moe_rs_producer", prod_sig_base, ws);
     let util = group_gemm_utilization((t_pr * shape.topk) as f64 / shape.experts as f64);
     let chunk_flops = 2.0 * (t_pr * shape.topk) as f64 * h_local as f64 * f as f64 / util;
     let entry = Entry::moe_ffn_name(t_pr, h_local, f, shape.experts, shape.topk, cap);
-    let part = plan_inter_rs(&hw, ctx.local_world_size());
+    let part = plan_inter_rs(&hw, ctx.local_world_size(), topo.inter_path_bw());
 
     // producer GroupGEMM per chunk
     for r in 0..ws {
@@ -352,7 +355,7 @@ pub fn build_moe_rs(cluster: ClusterSpec, shape: MoeShape, variant: MoeVariant) 
                 },
                 label: "moe_chunk",
             });
-            t.notify(r, PROD_SIG_BASE + chunk, SigOp::Set, 1);
+            t.notify(r, prod_sig_base + chunk, SigOp::Set, 1);
         }
         pb.prog.push(t.build());
     }
@@ -366,10 +369,10 @@ pub fn build_moe_rs(cluster: ClusterSpec, shape: MoeShape, variant: MoeVariant) 
                     &mut pb,
                     part.reduce1_sms,
                     part.reduce2_sms,
-                    Some(PROD_SIG_BASE),
+                    Some(prod_sig_base),
                 );
             } else {
-                rs_push_intra(&ctx, &bufs.rs, &mut pb, part.reduce1_sms, Some(PROD_SIG_BASE));
+                rs_push_intra(&ctx, &bufs.rs, &mut pb, part.reduce1_sms, Some(prod_sig_base));
             }
         }
         MoeVariant::Torch => {
@@ -378,7 +381,7 @@ pub fn build_moe_rs(cluster: ClusterSpec, shape: MoeShape, variant: MoeVariant) 
             for task in pb.prog.tasks.iter_mut().skip(before) {
                 let mut gates: Vec<Op> = (0..ws)
                     .map(|c| Op::WaitSignal {
-                        idx: PROD_SIG_BASE + c,
+                        idx: prod_sig_base + c,
                         cond: SigCond::Eq,
                         value: 1,
                     })

@@ -2,8 +2,11 @@
 //! a simulated cluster, print timelines and figure-style reports.
 
 use triton_dist_sim::cli::Args;
-use triton_dist_sim::config::{ClusterSpec, GemmShape, MoeShape};
+use triton_dist_sim::collectives::alltoall::{a2a_deepep_cfg, a2a_ll, A2aBufs, A2aCfg};
+use triton_dist_sim::collectives::ProgBuild;
+use triton_dist_sim::config::{ClusterSpec, DType, FabricSpec, GemmShape, MoeShape};
 use triton_dist_sim::coordinator::{self, ag_gemm, flash_decode, gemm_rs, moe};
+use triton_dist_sim::mem::SymmetricHeap;
 use triton_dist_sim::metrics;
 use triton_dist_sim::overlap::features;
 use triton_dist_sim::runtime::HybridExecutor;
@@ -20,6 +23,7 @@ COMMANDS:
   ag-gemm                     run AG+GEMM (ours vs nccl vs flux)
   gemm-rs                     run GEMM+RS (ours vs nccl vs flux)
   ag-moe                      run AG+MoE (ours vs pytorch)
+  alltoall                    run low-latency EP AllToAll (ours vs deepep)
   flash-decode                run distributed flash decoding
   timeline                    print an ASCII timeline of AG+GEMM
   artifacts                   list loaded AOT artifacts (PJRT manifest)
@@ -27,6 +31,9 @@ COMMANDS:
 COMMON OPTIONS:
   --nodes N       (default 1)        --gpus N   per node (default 8)
   --hw  h800|mi308x|l20 (default h800)
+  --rails N       NIC rails per GPU (default 1)
+  --oversub R     leaf/spine oversubscription ratio (default 1.0)
+  --spine-taper R spine-core thinning vs its leaf feed (default 1.0)
   --m/--n/--k     GEMM dims          --trace    write chrome trace JSON
   --numeric       run real numerics through PJRT/native executors
 ";
@@ -34,12 +41,28 @@ COMMON OPTIONS:
 fn cluster_from(args: &Args) -> Result<ClusterSpec, String> {
     let nodes = args.usize_or("nodes", 1)?;
     let gpus = args.usize_or("gpus", 8)?;
-    Ok(match args.get_or("hw", "h800") {
+    let rails = args.usize_or("rails", 1)?;
+    let oversub = args.f64_or("oversub", 1.0)?;
+    let spine_taper = args.f64_or("spine-taper", 1.0)?;
+    if rails == 0 {
+        return Err("--rails must be >= 1".into());
+    }
+    // `!(x >= 1.0)` instead of `x < 1.0` so NaN is rejected too
+    if !(oversub >= 1.0) {
+        return Err("--oversub must be >= 1.0".into());
+    }
+    if !(spine_taper >= 1.0) {
+        return Err("--spine-taper must be >= 1.0".into());
+    }
+    let cluster = match args.get_or("hw", "h800") {
         "h800" => ClusterSpec::h800(nodes, gpus),
         "mi308x" => ClusterSpec::mi308x(gpus),
         "l20" => ClusterSpec::l20(nodes, gpus),
         other => return Err(format!("unknown --hw '{other}'")),
-    })
+    };
+    Ok(cluster.with_fabric(
+        FabricSpec::rail_optimized(rails, oversub).with_spine_taper(spine_taper),
+    ))
 }
 
 fn main() {
@@ -177,6 +200,53 @@ fn run(args: &Args) -> Result<(), String> {
                 let t = coordinator::run_timing(&mut op, &topo);
                 println!("{:<24} {}", op.name, fmt_time(t));
             }
+            Ok(())
+        }
+        Some("alltoall") => {
+            // Fig. 16's workload, reachable from the CLI: low-latency EP
+            // dispatch/combine vs the DeepEP-like baseline.
+            let cluster = cluster_from(args)?;
+            let ws = cluster.world_size();
+            let chunk = args.usize_or("chunk", (128 * 7168 / ws).max(64))?;
+            let topo = Topology::build(cluster);
+            let run = |deepep: Option<A2aCfg>, chunk_elems: usize| -> f64 {
+                let ctx = triton_dist_sim::shmem::ShmemCtx::new(cluster, DType::BF16);
+                let mut heap = SymmetricHeap::new(ws, 4 * ws.max(16));
+                let bufs = A2aBufs::alloc(&mut heap, &ctx, chunk_elems);
+                let mut pb = ProgBuild::new();
+                match deepep {
+                    Some(cfg) => a2a_deepep_cfg(&ctx, &bufs, &mut pb, &cfg),
+                    None => a2a_ll(&ctx, &bufs, &mut pb, &A2aCfg::ours()),
+                }
+                coordinator::run_timing(
+                    &mut coordinator::BuiltOp {
+                        ctx,
+                        heap,
+                        prog: pb.prog,
+                        name: "AllToAll".into(),
+                    },
+                    &topo,
+                )
+            };
+            let mut report = metrics::FigureReport::new("Low-latency AllToAll");
+            let deepep_combine = A2aCfg {
+                queue_overhead: A2aCfg::deepep().queue_overhead * 3.0,
+                ..A2aCfg::deepep()
+            };
+            for (tag, chunk_elems, base_cfg) in [
+                ("dispatch", chunk, A2aCfg::deepep()),
+                ("combine", chunk * 2, deepep_combine),
+            ] {
+                let ours = run(None, chunk_elems);
+                let deepep = run(Some(base_cfg), chunk_elems);
+                println!("{tag:<10} ours {:<12} deepep {}", fmt_time(ours), fmt_time(deepep));
+                report.push(metrics::SpeedupRow {
+                    workload: format!("{tag} {ws} GPUs chunk={chunk_elems}"),
+                    ours,
+                    baselines: vec![("deepep".into(), deepep)],
+                });
+            }
+            println!("{}", report.render());
             Ok(())
         }
         Some("flash-decode") => {

@@ -23,15 +23,24 @@ pub struct Partition {
 ///
 /// ```text
 /// scatter time  = (lws-1) * B / intra_bw
-/// p2p time      = B / nic_bw
+/// p2p time      = B / inter_bw
 /// reduce budget = scatter - p2p  =>  reduce_bw >= bytes_red / budget
 /// ```
 ///
-/// On H800 that threshold is ~470 GB/s => <= 15 SMs.
-pub fn reduce_sms_for_balance(hw: &HardwareModel, lws: usize) -> u32 {
+/// `inter_bw` is the *routed* capacity of one serialized P2P stream
+/// (`Topology::inter_path_bw` / `FabricSpec::rail_path_bw`), not the raw
+/// NIC speed: the Alg. 5 P2P block sends one message at a time, so on a
+/// multi-rail fabric it only sees one rail's share (`nic_bw / rails`),
+/// further thinned by leaf/spine oversubscription. Sizing the budget
+/// from the scalar `hw.nic_bw` would mis-provision the reduction on
+/// exactly those fabrics. On a flat single-rail fabric the two are
+/// bit-identical.
+///
+/// On H800 (flat fabric) that threshold is ~470 GB/s => <= 15 SMs.
+pub fn reduce_sms_for_balance(hw: &HardwareModel, lws: usize, inter_bw: f64) -> u32 {
     let b = 1.0; // per-rank chunk volume cancels out
     let scatter_t = (lws as f64 - 1.0) * b / hw.intra_bw;
-    let p2p_t = b / hw.nic_bw;
+    let p2p_t = b / inter_bw;
     // When scatter dominates (the paper's 8xH800 case) the reduction must
     // fit in scatter_t - p2p_t. When the NIC dominates, the reduction only
     // needs to hide under a fraction of the P2P window.
@@ -43,8 +52,10 @@ pub fn reduce_sms_for_balance(hw: &HardwareModel, lws: usize) -> u32 {
 }
 
 /// The paper's inter-node GEMM+RS partition on a given device.
-pub fn plan_inter_rs(hw: &HardwareModel, lws: usize) -> Partition {
-    let reduce1 = reduce_sms_for_balance(hw, lws);
+/// `inter_bw` is the routed inter-node path capacity (see
+/// [`reduce_sms_for_balance`]).
+pub fn plan_inter_rs(hw: &HardwareModel, lws: usize, inter_bw: f64) -> Partition {
+    let reduce1 = reduce_sms_for_balance(hw, lws, inter_bw);
     let p2p = 1;
     let gemm = hw.sms - reduce1 - p2p;
     Partition {
@@ -94,7 +105,7 @@ mod tests {
     #[test]
     fn h800_matches_paper_numbers() {
         let hw = HardwareModel::h800();
-        let p = plan_inter_rs(&hw, 8);
+        let p = plan_inter_rs(&hw, 8, hw.nic_bw);
         // §3.5/§3.8: no more than 15 SMs for the overlapped reduction,
         // 1 SM for P2P, GEMM keeps ~116.
         assert!(p.reduce1_sms <= 15, "{p:?}");
@@ -112,10 +123,23 @@ mod tests {
             HardwareModel::l20(),
         ] {
             for lws in [2usize, 4, 8, 16] {
-                let sms = reduce_sms_for_balance(&hw, lws);
-                assert!(sms >= 1 && sms <= hw.sms / 4, "{:?} lws={lws}: {sms}", hw.kind);
+                for oversub in [1.0, 2.0, 4.0] {
+                    let sms = reduce_sms_for_balance(&hw, lws, hw.nic_bw / oversub);
+                    assert!(sms >= 1 && sms <= hw.sms / 4, "{:?} lws={lws}: {sms}", hw.kind);
+                }
             }
         }
+    }
+
+    #[test]
+    fn oversubscribed_fabric_resizes_reduce_budget() {
+        // The §3.5 balance must be computed from the *routed* path
+        // capacity: quartering the effective inter-node bandwidth moves
+        // the P2P drain into the dominant regime and changes the SM split.
+        let hw = HardwareModel::h800();
+        let flat = reduce_sms_for_balance(&hw, 8, hw.nic_bw);
+        let contended = reduce_sms_for_balance(&hw, 8, hw.nic_bw / 4.0);
+        assert_ne!(flat, contended);
     }
 
     #[test]
@@ -142,7 +166,8 @@ mod tests {
             HardwareModel::mi308x(),
             HardwareModel::l20(),
         ] {
-            assert!(plan_inter_rs(&hw, 8).fits(&hw), "{:?}", hw.kind);
+            assert!(plan_inter_rs(&hw, 8, hw.nic_bw).fits(&hw), "{:?}", hw.kind);
+            assert!(plan_inter_rs(&hw, 8, hw.nic_bw / 2.0).fits(&hw), "{:?}", hw.kind);
             assert!(plan_intra_ag(&hw).fits(&hw));
         }
     }

@@ -10,6 +10,7 @@
 //! The builders in `crate::shmem` provide the Table-1 primitive names; this
 //! module is the IR they lower to and the DES engine executes.
 
+use crate::config::TrafficClass;
 use crate::mem::Slice;
 
 /// How a signal is updated (`signal_op` semantics).
@@ -91,6 +92,8 @@ pub enum Op {
         bytes: f64,
         signal: Option<(SigRef, SigOp, u64)>,
         blocking: bool,
+        /// Fabric path selection (rail pinning for inter-node routes).
+        tc: TrafficClass,
         label: &'static str,
     },
     /// One-sided read `src -> dst` where `src` is remote (getmem).
@@ -99,6 +102,7 @@ pub enum Op {
         dst: Slice,
         bytes: f64,
         blocking: bool,
+        tc: TrafficClass,
         label: &'static str,
     },
     /// `multimem.st`: broadcast `src` to the same symmetric slice on all
@@ -109,7 +113,12 @@ pub enum Op {
     /// LL-protocol send: data+flag packed in 8-byte words, 2x payload, no
     /// separate signal; the receiver spin-waits with `LLWait` keyed by the
     /// destination slice.
-    LLPut { src: Slice, dst: Slice, bytes: f64 },
+    LLPut {
+        src: Slice,
+        dst: Slice,
+        bytes: f64,
+        tc: TrafficClass,
+    },
     /// Spin until the LL flags for `dst` indicate arrival.
     LLWait { dst: Slice },
     /// Update a (possibly remote) signal: `notify` / `signal_op` /
@@ -349,6 +358,7 @@ mod tests {
                 bytes: 1.0,
                 signal: None,
                 blocking: true,
+                tc: Default::default(),
                 label: "put_chunk",
             }
             .label(),

@@ -7,7 +7,7 @@
 //! 1–5). Each primitive appends ops to the task's program; the DES engine
 //! gives them their timing and (optionally) numeric semantics.
 
-use crate::config::{ClusterSpec, DType};
+use crate::config::{ClusterSpec, DType, TrafficClass};
 use crate::mem::Slice;
 use crate::program::{
     ComputeCost, EngineClass, NumericOp, Op, Scope, SigCond, SigOp, SigRef, TaskBuilder, TaskSpec,
@@ -58,6 +58,7 @@ impl ShmemCtx {
             ctx: *self,
             pe,
             b: TaskBuilder::new(pe, name),
+            tc: TrafficClass::Auto,
         }
     }
 }
@@ -67,6 +68,10 @@ pub struct ShmemTask {
     ctx: ShmemCtx,
     pe: usize,
     b: TaskBuilder,
+    /// Fabric path for subsequent data-movement ops (stream-modal, like a
+    /// CUDA stream's NIC binding): set with [`Self::on_rail`], cleared
+    /// with [`Self::auto_rail`].
+    tc: TrafficClass,
 }
 
 impl ShmemTask {
@@ -113,6 +118,32 @@ impl ShmemTask {
         self.b.build()
     }
 
+    // -- fabric path selection -------------------------------------------------
+
+    /// Pin subsequent transfers to NIC rail `rail % rails` (rail-optimized
+    /// same-rail path). Collectives stripe inter-node segments round-robin
+    /// with this. No-op on intra-node routes and single-rail fabrics.
+    pub fn on_rail(&mut self, rail: usize) -> &mut Self {
+        self.tc = TrafficClass::Rail(rail as u32);
+        self
+    }
+
+    /// Explicit tx/rx rail planes (unequal planes take the spine-crossing
+    /// path).
+    pub fn on_rails(&mut self, tx: usize, rx: usize) -> &mut Self {
+        self.tc = TrafficClass::Rails {
+            tx: tx as u32,
+            rx: rx as u32,
+        };
+        self
+    }
+
+    /// Let the router pick the rail again (the default).
+    pub fn auto_rail(&mut self) -> &mut Self {
+        self.tc = TrafficClass::Auto;
+        self
+    }
+
     // -- OpenSHMEM data movement ----------------------------------------------
 
     /// `putmem`: blocking one-sided write of `src` (local) to `dst`
@@ -126,6 +157,7 @@ impl ShmemTask {
             bytes,
             signal: None,
             blocking: true,
+            tc: self.tc,
             label: "putmem",
         });
         self
@@ -141,6 +173,7 @@ impl ShmemTask {
             bytes,
             signal: None,
             blocking: false,
+            tc: self.tc,
             label: "putmem_nbi",
         });
         self
@@ -167,6 +200,7 @@ impl ShmemTask {
             bytes,
             signal: Some((sig, op, value)),
             blocking: true,
+            tc: self.tc,
             label: "putmem_signal",
         });
         self
@@ -193,6 +227,7 @@ impl ShmemTask {
             bytes,
             signal: Some((sig, op, value)),
             blocking: false,
+            tc: self.tc,
             label: "putmem_signal_nbi",
         });
         self
@@ -207,6 +242,7 @@ impl ShmemTask {
             dst,
             bytes,
             blocking: true,
+            tc: self.tc,
             label: "getmem",
         });
         self
@@ -221,6 +257,7 @@ impl ShmemTask {
             dst,
             bytes,
             blocking: false,
+            tc: self.tc,
             label: "getmem_nbi",
         });
         self
@@ -318,7 +355,12 @@ impl ShmemTask {
     pub fn ll_put(&mut self, src: Slice, dst: Slice) -> &mut Self {
         assert_eq!(src.rank, self.pe);
         let bytes = self.ctx.bytes(src.len);
-        self.b.op(Op::LLPut { src, dst, bytes });
+        self.b.op(Op::LLPut {
+            src,
+            dst,
+            bytes,
+            tc: self.tc,
+        });
         self
     }
 
@@ -400,6 +442,7 @@ impl ShmemTask {
             bytes,
             signal: None,
             blocking: true,
+            tc: self.tc,
             label: "copy_local",
         });
         self

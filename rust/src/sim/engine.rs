@@ -623,9 +623,10 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                     bytes,
                     signal,
                     blocking,
+                    tc,
                     label,
                 } => {
-                    let mut route = self.sim.topo.route(src.rank, dst.rank);
+                    let mut route = self.sim.topo.route_tc(src.rank, dst.rank, tc);
                     if signal.is_some() {
                         // flag packet + fence after the payload (§3.4's
                         // "each P2P transfer requires a pair of signal
@@ -653,9 +654,10 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                     dst,
                     bytes,
                     blocking,
+                    tc,
                     label,
                 } => {
-                    let mut route = self.sim.topo.route(src.rank, dst.rank);
+                    let mut route = self.sim.topo.route_tc(src.rank, dst.rank, tc);
                     route.latency *= 2.0; // request/response round trip
                     let ctx = FlowCtx {
                         copies: vec![(src, dst)],
@@ -702,8 +704,8 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                     self.tasks[task].state = TState::BlockedFlow;
                     return Ok(());
                 }
-                Op::LLPut { src, dst, bytes } => {
-                    let route = self.sim.topo.route(src.rank, dst.rank);
+                Op::LLPut { src, dst, bytes, tc } => {
+                    let route = self.sim.topo.route_tc(src.rank, dst.rank, tc);
                     let ctx = FlowCtx {
                         copies: vec![(src, dst)],
                         signal: None,
@@ -958,6 +960,7 @@ mod tests {
             bytes: 170e9 * 1e-3, // exactly 1 ms at full NVLink egress
             signal: None,
             blocking: true,
+            tc: Default::default(),
             label: "put",
         });
         prog.push(t.build());
@@ -983,6 +986,7 @@ mod tests {
             bytes: 1024.0,
             signal: Some((SigRef { rank: 1, idx: 0 }, SigOp::Set, 1)),
             blocking: true,
+            tc: Default::default(),
             label: "put",
         });
         prog.push(prod.build());
@@ -1094,6 +1098,7 @@ mod tests {
                 bytes: 170e9 * 1e-4,
                 signal: None,
                 blocking: false,
+                tc: Default::default(),
                 label: "nbi_put",
             });
         }
@@ -1122,6 +1127,7 @@ mod tests {
             src: Slice::new(0, buf, 0, 4),
             dst: Slice::new(1, buf, 0, 4),
             bytes: 1024.0,
+            tc: Default::default(),
         });
         prog.push(sender.build());
         let mut recv = TaskBuilder::new(1, "r").sms(1);
@@ -1226,6 +1232,7 @@ mod tests {
                             bytes: 4096.0,
                             signal: None,
                             blocking: false,
+                            tc: Default::default(),
                             label: "p",
                         });
                     }

@@ -21,18 +21,44 @@
 //!   position back-pointers) makes component discovery O(component);
 //! * progress accrual is lazy per flow (`last_settle` timestamps), so an
 //!   update touches only the component instead of sweeping all F flows;
-//! * the water-filling pass runs over the component's links/flows with the
-//!   same arithmetic (same iteration order, same freeze order) as a
-//!   from-scratch global pass, so rates are **bit-identical** to a full
-//!   recompute — `tests/flow_equivalence.rs` proves this on randomized
-//!   traces;
+//! * the water-filling pass performs the identical floating-point
+//!   operations as a from-scratch global pass restricted to the
+//!   component, so rates are **bit-identical** to a full recompute —
+//!   `tests/flow_equivalence.rs` proves this on randomized traces;
 //! * flows in untouched components keep their rates *and* their scheduled
 //!   completion events (the generation mechanism leaves them current).
+//!
+//! # Dirty-set priority refill
+//!
+//! Routed fabrics (leaf/spine tiers) put thousands of flows on a few
+//! shared switch links, so one connected component can span the whole
+//! world (a 512-rank AllToAll ≈ 260k flows on one spine plane). The
+//! water-fill therefore avoids every per-component linear rescan:
+//!
+//! * bottleneck selection pops a **lazy min-heap** keyed
+//!   `(share, link)` instead of scanning all component links per freeze
+//!   round; entries are invalidated by comparing their recorded
+//!   `(capacity, unfrozen)` against the link's current state;
+//! * each freeze round re-arms only the **dirty set** — links whose fill
+//!   level actually changed because one of their flows froze;
+//! * freeze order within a bottleneck link follows the persistent
+//!   incidence list directly (no per-update clone + sort): every flow of
+//!   the round receives the same `share`, and the links they touch see
+//!   the same chain of identical subtractions in any order, so the
+//!   resulting rates are unchanged bit-for-bit.
+//!
+//! The heap pops the smallest share and breaks ties by link index —
+//! exactly the link the ascending linear scan with a strict `<` would
+//! have chosen — so incremental results remain bit-identical to
+//! [`FlowNet::reference_rates`].
 //!
 //! Batching: the DES engine coalesces all adds/removes carrying the same
 //! virtual timestamp into a single `update` call, so the N simultaneous
 //! puts a collective issues cost one component recompute instead of N
 //! global ones.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
 
 use crate::topology::LinkId;
 
@@ -57,6 +83,37 @@ struct Flow {
     alive: bool,
 }
 
+/// One lazy-heap entry of the priority refill: the fair share a link
+/// offered when it was (re-)armed, plus the `(cap, unfrozen)` snapshot
+/// that validates freshness at pop time. Ordered by `(share, link)` so
+/// the pop order matches an ascending linear scan with a strict `<`.
+#[derive(Debug, Clone, Copy)]
+struct ShareEnt {
+    share: f64,
+    cap: f64,
+    unfrozen: u32,
+    link: u32,
+}
+
+impl PartialEq for ShareEnt {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for ShareEnt {}
+impl PartialOrd for ShareEnt {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for ShareEnt {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.share
+            .total_cmp(&other.share)
+            .then(self.link.cmp(&other.link))
+    }
+}
+
 /// The set of active flows plus link capacities.
 pub struct FlowNet {
     link_bw: Vec<f64>,
@@ -71,15 +128,18 @@ pub struct FlowNet {
     n_active: usize,
     // --- reusable scratch for update (hot path; avoids per-call allocs)
     scratch_cap: Vec<f64>,
-    scratch_fill: Vec<Vec<u32>>,
     scratch_unfrozen: Vec<u32>,
     scratch_link_seen: Vec<bool>,
     scratch_flow_seen: Vec<bool>,
     scratch_frozen: Vec<bool>,
     scratch_comp_links: Vec<u32>,
     scratch_comp_flows: Vec<u32>,
-    scratch_active: Vec<u32>,
     scratch_old_rates: Vec<(u32, f64)>,
+    /// Lazy bottleneck heap of the priority refill.
+    scratch_heap: BinaryHeap<Reverse<ShareEnt>>,
+    /// Links whose fill level changed this freeze round (the dirty set).
+    scratch_dirty: Vec<u32>,
+    scratch_dirty_flag: Vec<bool>,
 }
 
 /// Result of a rate recomputation: each affected flow's new completion
@@ -101,15 +161,16 @@ impl FlowNet {
             last_now: 0.0,
             n_active: 0,
             scratch_cap: vec![0.0; nl],
-            scratch_fill: (0..nl).map(|_| Vec::new()).collect(),
             scratch_unfrozen: vec![0; nl],
             scratch_link_seen: vec![false; nl],
             scratch_flow_seen: Vec::new(),
             scratch_frozen: Vec::new(),
             scratch_comp_links: Vec::new(),
             scratch_comp_flows: Vec::new(),
-            scratch_active: Vec::new(),
             scratch_old_rates: Vec::new(),
+            scratch_heap: BinaryHeap::new(),
+            scratch_dirty: Vec::new(),
+            scratch_dirty_flag: vec![false; nl],
         }
     }
 
@@ -313,13 +374,20 @@ impl FlowNet {
         self.flows[fi].pos = pos;
     }
 
-    /// Max–min water-filling over one connected component.
+    /// Max–min water-filling over one connected component, with the
+    /// dirty-set priority refill (see the module doc): bottleneck
+    /// selection pops a lazy min-heap keyed `(share, link)` instead of
+    /// rescanning every component link per freeze round, and only links
+    /// whose fill level changed in a round are re-armed.
     ///
-    /// `comp_flows`/`comp_links` must be sorted ascending: the pass then
-    /// performs the identical floating-point operations, in the identical
-    /// order, as a from-scratch global water-fill restricted to this
-    /// component (which is all a global fill ever does to it), keeping
-    /// incremental rates bit-identical to a full recompute.
+    /// Bit-identity with a from-scratch fill (`reference_rates`) holds
+    /// because (a) a validated heap entry's `(cap, unfrozen)` snapshot is
+    /// the link's current state, so its share is the very division the
+    /// linear scan would compute, and the `(share, link)` order picks the
+    /// same link a strict-`<` ascending scan picks; (b) every flow of a
+    /// freeze round receives the identical `best_share`, so the chain of
+    /// same-valued subtractions any other link sees is order-independent
+    /// bit-for-bit.
     ///
     /// Completion events are only re-issued for flows whose rate actually
     /// changed (plus fresh zero-rate flows): an unchanged rate means the
@@ -343,36 +411,43 @@ impl FlowNet {
                 self.scratch_frozen[fi as usize] = true;
             }
         }
+        self.scratch_heap.clear();
         for &l in comp_links {
             let l = l as usize;
             self.scratch_cap[l] = self.link_bw[l];
-            self.scratch_fill[l].clone_from(&self.incidence[l]);
-            self.scratch_fill[l].sort_unstable();
-            self.scratch_unfrozen[l] = self.incidence[l].len() as u32;
+            let unfrozen = self.incidence[l].len() as u32;
+            self.scratch_unfrozen[l] = unfrozen;
+            if unfrozen > 0 {
+                self.scratch_heap.push(Reverse(ShareEnt {
+                    share: self.scratch_cap[l] / unfrozen as f64,
+                    cap: self.scratch_cap[l],
+                    unfrozen,
+                    link: l as u32,
+                }));
+            }
         }
-        self.scratch_active.clear();
-        self.scratch_active.extend_from_slice(comp_links);
 
         while remaining > 0 {
-            // bottleneck link = min fair share among the component's links
-            let mut best_share = f64::INFINITY;
-            let mut best_link = usize::MAX;
-            let mut w = 0;
-            for k in 0..self.scratch_active.len() {
-                let l = self.scratch_active[k] as usize;
-                if self.scratch_unfrozen[l] == 0 {
-                    continue; // drop from the active list (compaction)
+            // bottleneck link = fresh minimum of the lazy heap; stale
+            // entries (whose snapshot no longer matches the link) are
+            // discarded on pop. Invariant: every link with unfrozen > 0
+            // has exactly one fresh entry (armed at init or at its last
+            // dirty-set re-arm), so an empty heap means the remaining
+            // flows traverse no capacity-constrained link at all.
+            let best = loop {
+                match self.scratch_heap.pop() {
+                    None => break None,
+                    Some(Reverse(e)) => {
+                        let l = e.link as usize;
+                        if self.scratch_unfrozen[l] == e.unfrozen
+                            && self.scratch_cap[l].to_bits() == e.cap.to_bits()
+                        {
+                            break Some(e);
+                        }
+                    }
                 }
-                self.scratch_active[w] = l as u32;
-                w += 1;
-                let share = self.scratch_cap[l] / self.scratch_unfrozen[l] as f64;
-                if share < best_share {
-                    best_share = share;
-                    best_link = l;
-                }
-            }
-            self.scratch_active.truncate(w);
-            if best_link == usize::MAX {
+            };
+            let Some(ent) = best else {
                 // flows with no links (shouldn't happen) get infinite rate
                 for &fi in comp_flows {
                     if !self.scratch_frozen[fi as usize] {
@@ -381,9 +456,13 @@ impl FlowNet {
                     }
                 }
                 break;
-            }
-            // freeze the bottleneck link's unfrozen flows at best_share
-            let list = std::mem::take(&mut self.scratch_fill[best_link]);
+            };
+            let best_link = ent.link as usize;
+            let best_share = ent.share;
+            // freeze the bottleneck link's unfrozen flows at best_share,
+            // walking the persistent incidence list directly (taken out
+            // of `self` for the borrow, restored after)
+            let list = std::mem::take(&mut self.incidence[best_link]);
             for &fi in &list {
                 let i = fi as usize;
                 if self.scratch_frozen[i] {
@@ -393,11 +472,31 @@ impl FlowNet {
                 self.scratch_frozen[i] = true;
                 remaining -= 1;
                 for l in &self.flows[i].links {
-                    self.scratch_cap[l.0] = (self.scratch_cap[l.0] - best_share).max(0.0);
-                    self.scratch_unfrozen[l.0] -= 1;
+                    let l = l.0;
+                    self.scratch_cap[l] = (self.scratch_cap[l] - best_share).max(0.0);
+                    self.scratch_unfrozen[l] -= 1;
+                    if !self.scratch_dirty_flag[l] {
+                        self.scratch_dirty_flag[l] = true;
+                        self.scratch_dirty.push(l as u32);
+                    }
                 }
             }
-            self.scratch_fill[best_link] = list;
+            self.incidence[best_link] = list;
+            // re-arm only the links whose fill level changed this round
+            for k in 0..self.scratch_dirty.len() {
+                let l = self.scratch_dirty[k] as usize;
+                self.scratch_dirty_flag[l] = false;
+                let unfrozen = self.scratch_unfrozen[l];
+                if unfrozen > 0 {
+                    self.scratch_heap.push(Reverse(ShareEnt {
+                        share: self.scratch_cap[l] / unfrozen as f64,
+                        cap: self.scratch_cap[l],
+                        unfrozen,
+                        link: l as u32,
+                    }));
+                }
+            }
+            self.scratch_dirty.clear();
         }
 
         // bump generations + produce ETAs only where the rate changed

@@ -1,4 +1,5 @@
-//! Interconnect topology models (§3.7, Fig. 6).
+//! Interconnect topology models (§3.7, Fig. 6) and the routed
+//! inter-node fabric graph.
 //!
 //! Three intra-node fabrics are modeled, matching the paper's testbeds:
 //!
@@ -11,15 +12,49 @@
 //!   root-complex link that creates the contention the paper's PCIe
 //!   scheduling optimization must avoid.
 //!
-//! Inter-node transfers go over per-GPU NIC tx/rx links (rail-optimized,
-//! GPUDirect-style: no intra-node hop is charged). Local (same-rank)
-//! copies are charged to a per-GPU HBM read+write link.
+//! # The inter-node fabric graph
+//!
+//! Inter-node transfers traverse a hierarchical, rail-optimized fabric
+//! described by [`crate::config::FabricSpec`]:
+//!
+//! * **NIC tier** — per `(gpu, rail)` tx/rx links of `nic_bw / rails`
+//!   each (GPUDirect-style: no intra-node hop is charged).
+//! * **Leaf tier** — per `(node, rail)` up/down links aggregating the
+//!   node's NICs of that rail; capacity
+//!   `gpus_per_node * rail_bw / oversub` (the oversubscription ratio is
+//!   the classic downlink:uplink thinning at the leaf).
+//! * **Spine tier** — one plane per rail, capacity
+//!   `nodes * leaf_bw / spine_taper`, shared by every same-rail
+//!   inter-node flow; cross-rail ("spine-crossing") routes traverse
+//!   *both* planes. With the default `spine_taper = 1.0` a plane's
+//!   capacity equals the sum of the leaf uplinks feeding it, so by the
+//!   mediant inequality it can never be the *strict* max–min bottleneck:
+//!   oversubscription contention then materializes at the leaf up/down
+//!   links, and the spine's role is merging every node into one flow
+//!   component (plus `spine_lat`). Set `spine_taper > 1.0` to make the
+//!   spine core itself the binding constraint.
+//!
+//! The router maps `(src_pe, dst_pe, TrafficClass)` to a multi-hop
+//! [`Route`]: `TrafficClass::Rail(r)` pins a message to plane `r`
+//! end-to-end (the rail-optimized path collectives stripe over);
+//! `Rails { tx, rx }` with unequal planes produces a spine-crossing
+//! path; `Auto` derives a deterministic rail from the endpoints.
+//!
+//! **Exactness:** on a non-blocking fabric (`oversub <= 1.0`) the switch
+//! tiers can never be the max–min bottleneck (each tier's capacity is at
+//! least the sum of the NIC endpoint capacities feeding it), so their
+//! links are elided from routes. With the default `FabricSpec`
+//! (`rails = 1`, `oversub = 1.0`) the link set, routes, and latencies are
+//! exactly the seed's flat per-GPU `[nic_tx, nic_rx]` model — makespans
+//! are bit-identical.
+//!
+//! Local (same-rank) copies are charged to a per-GPU HBM read+write link.
 //!
 //! A [`Route`] is the set of links a flow occupies plus a propagation
 //! latency; the DES engine max–min fair-shares link capacity among all
 //! concurrent flows (see `sim::flow`).
 
-use crate::config::{ClusterSpec, HardwareKind};
+use crate::config::{ClusterSpec, HardwareKind, TrafficClass};
 
 /// Index into [`Topology::links`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -36,6 +71,12 @@ pub enum LinkKind {
     PcieHost,
     NicTx,
     NicRx,
+    /// Leaf-switch uplink toward the spine, per (node, rail).
+    LeafUp,
+    /// Leaf-switch downlink from the spine, per (node, rail).
+    LeafDown,
+    /// Spine plane, per rail.
+    Spine,
     Hbm,
 }
 
@@ -45,7 +86,8 @@ pub struct Link {
     pub kind: LinkKind,
     /// Capacity in bytes/s.
     pub bw: f64,
-    /// Owning rank (or NUMA id for PcieHost), for diagnostics.
+    /// Owning rank (NUMA id for PcieHost, `node*rails+rail` for leaf
+    /// links, rail for Spine), for diagnostics.
     pub owner: usize,
 }
 
@@ -63,8 +105,15 @@ pub struct Topology {
     // per-rank link ids (usize::MAX = absent)
     intra_egress: Vec<usize>,
     intra_ingress: Vec<usize>,
+    /// Per (rank, rail): `rank * rails + rail`.
     nic_tx: Vec<usize>,
     nic_rx: Vec<usize>,
+    /// Per (node, rail): `node * rails + rail` (empty on non-blocking
+    /// fabrics — see the module doc's exactness note).
+    leaf_up: Vec<usize>,
+    leaf_down: Vec<usize>,
+    /// Per rail (empty on non-blocking fabrics).
+    spine: Vec<usize>,
     hbm: Vec<usize>,
     pcie_host: Vec<usize>, // per NUMA domain
     mesh: std::collections::HashMap<(usize, usize), usize>,
@@ -74,6 +123,8 @@ impl Topology {
     pub fn build(cluster: ClusterSpec) -> Self {
         let ws = cluster.world_size();
         let hw = cluster.hw;
+        let fabric = cluster.fabric;
+        let rails = fabric.rails;
         let mut links = Vec::new();
         let push = |kind: LinkKind, bw: f64, owner: usize, links: &mut Vec<Link>| {
             links.push(Link { kind, bw, owner });
@@ -85,8 +136,11 @@ impl Topology {
             links: Vec::new(),
             intra_egress: vec![usize::MAX; ws],
             intra_ingress: vec![usize::MAX; ws],
-            nic_tx: vec![usize::MAX; ws],
-            nic_rx: vec![usize::MAX; ws],
+            nic_tx: vec![usize::MAX; ws * rails],
+            nic_rx: vec![usize::MAX; ws * rails],
+            leaf_up: Vec::new(),
+            leaf_down: Vec::new(),
+            spine: Vec::new(),
             hbm: vec![usize::MAX; ws],
             pcie_host: Vec::new(),
             mesh: Default::default(),
@@ -132,9 +186,31 @@ impl Topology {
         }
 
         if cluster.nodes > 1 {
+            let rail_bw = fabric.rail_bw(hw.nic_bw);
             for r in 0..ws {
-                topo.nic_tx[r] = push(LinkKind::NicTx, hw.nic_bw, r, &mut links);
-                topo.nic_rx[r] = push(LinkKind::NicRx, hw.nic_bw, r, &mut links);
+                for rail in 0..rails {
+                    topo.nic_tx[r * rails + rail] =
+                        push(LinkKind::NicTx, rail_bw, r, &mut links);
+                    topo.nic_rx[r * rails + rail] =
+                        push(LinkKind::NicRx, rail_bw, r, &mut links);
+                }
+            }
+            if fabric.is_blocking() {
+                let leaf_bw = cluster.gpus_per_node as f64 * rail_bw / fabric.oversub;
+                for node in 0..cluster.nodes {
+                    for rail in 0..rails {
+                        let owner = node * rails + rail;
+                        topo.leaf_up
+                            .push(push(LinkKind::LeafUp, leaf_bw, owner, &mut links));
+                        topo.leaf_down
+                            .push(push(LinkKind::LeafDown, leaf_bw, owner, &mut links));
+                    }
+                }
+                let spine_bw = cluster.nodes as f64 * leaf_bw / fabric.spine_taper;
+                for rail in 0..rails {
+                    topo.spine
+                        .push(push(LinkKind::Spine, spine_bw, rail, &mut links));
+                }
             }
         }
 
@@ -150,8 +226,34 @@ impl Topology {
         self.links.len()
     }
 
-    /// Route for a transfer `src -> dst` (same-rank = local HBM copy).
+    /// Resolve a traffic class into concrete (tx_rail, rx_rail) planes.
+    fn resolve_rails(&self, src: usize, dst: usize, tc: TrafficClass) -> (usize, usize) {
+        let rails = self.cluster.fabric.rails;
+        match tc {
+            TrafficClass::Auto => {
+                let r = (self.cluster.local_rank(src) + self.cluster.local_rank(dst)) % rails;
+                (r, r)
+            }
+            TrafficClass::Rail(r) => {
+                let r = r as usize % rails;
+                (r, r)
+            }
+            TrafficClass::Rails { tx, rx } => (tx as usize % rails, rx as usize % rails),
+        }
+    }
+
+    /// Route for a transfer `src -> dst` (same-rank = local HBM copy),
+    /// letting the router pick the rail.
     pub fn route(&self, src: usize, dst: usize) -> Route {
+        self.route_tc(src, dst, TrafficClass::Auto)
+    }
+
+    /// Route for a transfer `src -> dst` under an explicit traffic class.
+    ///
+    /// Intra-node paths ignore the class; inter-node paths resolve it to
+    /// NIC rails and, on a blocking fabric, thread the leaf/spine tier
+    /// links between the endpoints.
+    pub fn route_tc(&self, src: usize, dst: usize, tc: TrafficClass) -> Route {
         let c = &self.cluster;
         let hw = c.hw;
         if src == dst {
@@ -161,13 +263,27 @@ impl Topology {
             };
         }
         if c.node_of(src) != c.node_of(dst) {
+            let fabric = c.fabric;
+            let rails = fabric.rails;
+            let (rt, rr) = self.resolve_rails(src, dst, tc);
             assert!(
-                self.nic_tx[src] != usize::MAX,
+                self.nic_tx[src * rails + rt] != usize::MAX,
                 "inter-node route on single-node cluster"
             );
+            let mut links = vec![LinkId(self.nic_tx[src * rails + rt])];
+            let spine_hops = if rt == rr { 1.0 } else { 2.0 };
+            if fabric.is_blocking() {
+                links.push(LinkId(self.leaf_up[c.node_of(src) * rails + rt]));
+                links.push(LinkId(self.spine[rt]));
+                if rr != rt {
+                    links.push(LinkId(self.spine[rr]));
+                }
+                links.push(LinkId(self.leaf_down[c.node_of(dst) * rails + rr]));
+            }
+            links.push(LinkId(self.nic_rx[dst * rails + rr]));
             return Route {
-                links: vec![LinkId(self.nic_tx[src]), LinkId(self.nic_rx[dst])],
-                latency: hw.inter_lat,
+                links,
+                latency: hw.inter_lat + 2.0 * fabric.leaf_lat + spine_hops * fabric.spine_lat,
             };
         }
         match hw.kind {
@@ -200,6 +316,16 @@ impl Topology {
                 }
             }
         }
+    }
+
+    /// Routed capacity of one serialized inter-node P2P stream: a single
+    /// message rides one rail (`nic_bw / rails`) through the thinned
+    /// switch tiers. This is the §3.5 bandwidth-balance drain rate —
+    /// `rs_inter`'s 1-SM P2P block sends one message per iteration, so
+    /// sizing from the all-rail aggregate would overestimate the drain
+    /// by a factor of `rails` on multi-rail fabrics.
+    pub fn inter_path_bw(&self) -> f64 {
+        self.cluster.fabric.rail_path_bw(self.cluster.hw.nic_bw)
     }
 
     /// Route for `multimem.st`: one store fans out to every other rank in
@@ -235,7 +361,7 @@ impl Topology {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::ClusterSpec;
+    use crate::config::{ClusterSpec, FabricSpec};
 
     #[test]
     fn h800_intra_route_uses_egress_and_ingress() {
@@ -253,6 +379,7 @@ mod tests {
     fn h800_inter_route_uses_nics() {
         let t = Topology::build(ClusterSpec::h800(2, 8));
         let r = t.route(1, 9); // rank 1 node 0 -> rank 9 node 1
+        assert_eq!(r.links.len(), 2, "non-blocking fabric elides tier links");
         assert_eq!(t.link(r.links[0]).kind, LinkKind::NicTx);
         assert_eq!(t.link(r.links[1]).kind, LinkKind::NicRx);
         assert!(r.latency > 1e-6);
@@ -304,5 +431,119 @@ mod tests {
         let t = Topology::build(ClusterSpec::h800(1, 8));
         // route() with ranks out of the single node is a bug in the caller
         let _ = t.route(0, 12);
+    }
+
+    // -- routed fabric ------------------------------------------------------
+
+    fn railed(nodes: usize, gpn: usize, rails: usize, oversub: f64) -> Topology {
+        Topology::build(
+            ClusterSpec::h800(nodes, gpn)
+                .with_fabric(FabricSpec::rail_optimized(rails, oversub)),
+        )
+    }
+
+    #[test]
+    fn blocking_fabric_materializes_tiers() {
+        let t = railed(4, 8, 2, 2.0);
+        let r = t.route_tc(1, 9, crate::config::TrafficClass::Rail(0));
+        let kinds: Vec<LinkKind> = r.links.iter().map(|&l| t.link(l).kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                LinkKind::NicTx,
+                LinkKind::LeafUp,
+                LinkKind::Spine,
+                LinkKind::LeafDown,
+                LinkKind::NicRx,
+            ]
+        );
+        // per-tier capacities: rail_bw = nic_bw/2, leaf = 8*rail_bw/2,
+        // spine = 4 nodes * leaf
+        let hw = t.cluster.hw;
+        let rail_bw = hw.nic_bw / 2.0;
+        assert_eq!(t.link(r.links[0]).bw.to_bits(), rail_bw.to_bits());
+        let leaf = t.link(r.links[1]);
+        assert!((leaf.bw - 8.0 * rail_bw / 2.0).abs() < 1.0, "{}", leaf.bw);
+        let spine = t.link(r.links[2]);
+        assert!((spine.bw - 4.0 * leaf.bw).abs() < 1.0, "{}", spine.bw);
+    }
+
+    #[test]
+    fn spine_taper_thins_the_plane() {
+        let t = Topology::build(
+            ClusterSpec::h800(4, 8)
+                .with_fabric(FabricSpec::rail_optimized(2, 2.0).with_spine_taper(2.0)),
+        );
+        let r = t.route_tc(0, 9, crate::config::TrafficClass::Rail(0));
+        let leaf = t.link(r.links[1]);
+        let spine = t.link(r.links[2]);
+        assert_eq!(spine.kind, LinkKind::Spine);
+        assert!((spine.bw - 4.0 * leaf.bw / 2.0).abs() < 1.0, "{}", spine.bw);
+    }
+
+    #[test]
+    fn cross_rail_route_crosses_both_spines() {
+        let t = railed(2, 8, 2, 2.0);
+        let same = t.route_tc(0, 8, crate::config::TrafficClass::Rail(1));
+        let cross = t.route_tc(
+            0,
+            8,
+            crate::config::TrafficClass::Rails { tx: 0, rx: 1 },
+        );
+        let spines = |r: &Route| {
+            r.links
+                .iter()
+                .filter(|&&l| t.link(l).kind == LinkKind::Spine)
+                .count()
+        };
+        assert_eq!(spines(&same), 1, "rail-optimized path stays in one plane");
+        assert_eq!(spines(&cross), 2, "spine-crossing path pays both planes");
+    }
+
+    #[test]
+    fn rails_use_disjoint_nic_links() {
+        let t = railed(2, 8, 2, 1.0);
+        let r0 = t.route_tc(0, 8, crate::config::TrafficClass::Rail(0));
+        let r1 = t.route_tc(0, 8, crate::config::TrafficClass::Rail(1));
+        assert_ne!(r0.links[0], r1.links[0], "tx rails disjoint");
+        assert_ne!(r0.links[1], r1.links[1], "rx rails disjoint");
+        // each rail carries half the aggregate NIC bandwidth
+        assert_eq!(
+            t.link(r0.links[0]).bw.to_bits(),
+            (t.cluster.hw.nic_bw / 2.0).to_bits()
+        );
+    }
+
+    #[test]
+    fn nonblocking_fabric_matches_flat_link_set() {
+        // rails=1, oversub=1.0 must produce the seed's exact link set and
+        // routes: same count, same kinds, same capacities, same latency.
+        let flat = Topology::build(ClusterSpec::h800(2, 8));
+        let routed = Topology::build(
+            ClusterSpec::h800(2, 8).with_fabric(FabricSpec::flat()),
+        );
+        assert_eq!(flat.link_count(), routed.link_count());
+        for (a, b) in [(0usize, 9usize), (3, 12), (1, 1), (0, 5)] {
+            let ra = flat.route(a, b);
+            let rb = routed.route(a, b);
+            assert_eq!(ra.links, rb.links);
+            assert_eq!(ra.latency.to_bits(), rb.latency.to_bits());
+        }
+        assert_eq!(
+            flat.inter_path_bw().to_bits(),
+            flat.cluster.hw.nic_bw.to_bits()
+        );
+    }
+
+    #[test]
+    fn auto_rail_is_deterministic_and_in_range() {
+        let t = railed(2, 8, 4, 1.0);
+        for s in 0..8usize {
+            for d in 8..16usize {
+                let r1 = t.route(s, d);
+                let r2 = t.route(s, d);
+                assert_eq!(r1.links, r2.links);
+            }
+        }
     }
 }
