@@ -13,14 +13,20 @@
 //!   oversubscribed leaf/spine fabric: ~260k flows sharing the spine
 //!   planes, one world-spanning component — the dirty-set priority
 //!   refill's target scenario.
+//! * `alltoall-adaptive-skew` — 4x8 size-skewed AllToAll on a 2-rail
+//!   fabric under the congestion-aware router (`RailPolicy::Adaptive`):
+//!   every route decision consults the live `LinkOccupancy`, so this
+//!   tracks the router's overhead on the event path; the run also prints
+//!   the static-vs-adaptive virtual makespans (adaptive must be strictly
+//!   lower — pinned by `tests/fabric_equivalence.rs`).
 //! * `ag_gemm-build+run` — single-node AG+GEMM, program build + engine.
 //! * `ag_gemm-multinode` — 4x8 inter-node AG+GEMM (NIC contention path).
 //! * `ag_gemm-numerics(native)` — data movement through the heap.
 
 use triton_dist_sim::bench::{banner, bench_wall};
-use triton_dist_sim::collectives::alltoall::{a2a_ll, A2aBufs, A2aCfg};
+use triton_dist_sim::collectives::alltoall::{a2a_ll, a2a_skew, A2aBufs, A2aCfg};
 use triton_dist_sim::collectives::ProgBuild;
-use triton_dist_sim::config::{ClusterSpec, DType, FabricSpec, GemmShape};
+use triton_dist_sim::config::{ClusterSpec, DType, FabricSpec, GemmShape, RailPolicy};
 use triton_dist_sim::coordinator::ag_gemm;
 use triton_dist_sim::mem::SymmetricHeap;
 use triton_dist_sim::metrics::{engine_bench_json, EngineBenchRecord};
@@ -108,6 +114,45 @@ fn main() {
     });
     println!("{}", stat512.render());
     report(&mut records, "alltoall-512rank-spine", events512, &stat512);
+
+    // size-skewed AllToAll under the congestion-aware router: every Auto
+    // route consults the live LinkOccupancy, so this prices the adaptive
+    // decision on the event path (and demonstrates the makespan win).
+    let skew_run = |policy: RailPolicy| -> (u64, f64) {
+        let cluster = ClusterSpec::h800(4, 8)
+            .with_fabric(FabricSpec::rail_optimized(2, 1.0).with_rail_policy(policy));
+        let ctx = ShmemCtx::new(cluster, DType::BF16);
+        let topo = Topology::build(cluster);
+        let mut heap = SymmetricHeap::new(ctx.n_pes(), 4 * ctx.n_pes());
+        let bufs = A2aBufs::alloc(&mut heap, &ctx, 4096);
+        let mut pb = ProgBuild::new();
+        a2a_skew(&ctx, &bufs, &mut pb, &A2aCfg::ours(), 8.0);
+        let sim = Sim::with_config(
+            &topo,
+            SimConfig {
+                numerics: false,
+                trace: false,
+            },
+        );
+        let rep = sim.run(&pb.prog, &mut heap, &mut NoopExecutor).unwrap();
+        (rep.events, rep.makespan)
+    };
+    let (_, static_makespan) = skew_run(RailPolicy::Static);
+    let mut events_skew = 0u64;
+    let mut adaptive_makespan = 0.0f64;
+    let stat_skew = bench_wall("alltoall-adaptive-skew", 1, 5, || {
+        let (ev, ms) = skew_run(RailPolicy::Adaptive);
+        events_skew = ev;
+        adaptive_makespan = ms;
+    });
+    println!("{}", stat_skew.render());
+    println!(
+        "  virtual makespan: static {:.3} us vs adaptive {:.3} us ({:.2}x)",
+        static_makespan * 1e6,
+        adaptive_makespan * 1e6,
+        static_makespan / adaptive_makespan
+    );
+    report(&mut records, "alltoall-adaptive-skew", events_skew, &stat_skew);
 
     // AG+GEMM with numerics off — program-build + engine cost
     let cluster = ClusterSpec::h800(1, 8);

@@ -8,6 +8,7 @@
 //! (3) aggregate a single globally-unified best configuration across
 //! ranks. This module implements those semantics over the DES.
 
+use crate::config::RailPolicy;
 use crate::mem::SymmetricHeap;
 
 /// One evaluated configuration.
@@ -122,6 +123,24 @@ pub fn tune_rebuild<C: Clone + std::fmt::Debug>(
     })
 }
 
+/// Tune the fabric's rail-selection policy (§3.8 made fabric-aware): the
+/// [`RailPolicy`] is a tunable axis exactly like tile sizes or the SM
+/// partition — the evaluator rebuilds and runs the whole target function
+/// under each policy (rebuilding the cluster with
+/// `FabricSpec::with_rail_policy`) and the globally-best configuration
+/// wins. Static round-robin striping wins on uniform traffic (no
+/// occupancy tracking noise, perfect balance by construction); the
+/// congestion-aware router wins when message sizes or destinations are
+/// skewed (see `collectives::alltoall::a2a_skew`).
+pub fn tune_rail_policy(
+    name: &str,
+    mut eval: impl FnMut(RailPolicy) -> Result<f64, String>,
+) -> Result<TuneResult<RailPolicy>, String> {
+    tune_rebuild(name, &[RailPolicy::Static, RailPolicy::Adaptive], |p| {
+        eval(*p)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -176,6 +195,47 @@ mod tests {
         let s = r.render();
         assert!(s.contains('*'));
         assert!(s.contains("demo"));
+    }
+
+    #[test]
+    fn rail_policy_is_a_tunable_axis() {
+        // On the deliberately skewed AllToAll the congestion-aware router
+        // must win; the tuner should discover that from the trials alone.
+        use crate::collectives::alltoall::{a2a_skew, A2aBufs, A2aCfg};
+        use crate::collectives::ProgBuild;
+        use crate::config::{ClusterSpec, DType, FabricSpec};
+        use crate::mem::SymmetricHeap;
+        use crate::shmem::ShmemCtx;
+        use crate::sim::{NoopExecutor, Sim, SimConfig};
+        use crate::topology::Topology;
+        let r = tune_rail_policy("rail policy (skewed a2a)", |policy| {
+            let cluster = ClusterSpec::h800(2, 8)
+                .with_fabric(FabricSpec::rail_optimized(2, 1.0).with_rail_policy(policy));
+            let ctx = ShmemCtx::new(cluster, DType::BF16);
+            let topo = Topology::build(cluster);
+            let mut heap = SymmetricHeap::new(ctx.n_pes(), 4 * ctx.n_pes());
+            let bufs = A2aBufs::alloc(&mut heap, &ctx, 8192);
+            let mut pb = ProgBuild::new();
+            a2a_skew(&ctx, &bufs, &mut pb, &A2aCfg::ours(), 8.0);
+            let sim = Sim::with_config(
+                &topo,
+                SimConfig {
+                    numerics: false,
+                    trace: false,
+                },
+            );
+            sim.run(&pb.prog, &mut heap, &mut NoopExecutor)
+                .map(|rep| rep.makespan)
+                .map_err(|e| e.to_string())
+        })
+        .unwrap();
+        assert_eq!(r.trials.len(), 2);
+        assert_eq!(
+            r.best.config,
+            RailPolicy::Adaptive,
+            "adaptive must win the skewed workload: {:?}",
+            r.trials
+        );
     }
 
     #[test]

@@ -73,6 +73,26 @@ impl Args {
         }
     }
 
+    /// Constrained-choice option: the value (or `default` when absent)
+    /// must be one of `allowed`, otherwise a usage error names the valid
+    /// choices (e.g. `--router static|adaptive`).
+    pub fn choice_or<'a>(
+        &'a self,
+        name: &str,
+        default: &'a str,
+        allowed: &[&str],
+    ) -> Result<&'a str, String> {
+        let v = self.get_or(name, default);
+        if allowed.contains(&v) {
+            Ok(v)
+        } else {
+            Err(format!(
+                "--{name} expects one of {}, got '{v}'",
+                allowed.join("|")
+            ))
+        }
+    }
+
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
@@ -112,6 +132,18 @@ mod tests {
         assert_eq!(a.f64_or("missing", 1.0).unwrap(), 1.0);
         let b = parse(&["x", "--oversub", "xyz"]);
         assert!(b.f64_or("oversub", 1.0).is_err());
+    }
+
+    #[test]
+    fn choice_validates_against_allowed_set() {
+        let allowed = ["static", "adaptive"];
+        let a = parse(&["x", "--router", "adaptive"]);
+        assert_eq!(a.choice_or("router", "static", &allowed).unwrap(), "adaptive");
+        assert_eq!(a.choice_or("missing", "static", &allowed).unwrap(), "static");
+        let b = parse(&["x", "--router", "sometimes"]);
+        let err = b.choice_or("router", "static", &allowed);
+        assert!(err.is_err());
+        assert!(err.unwrap_err().contains("static|adaptive"));
     }
 
     #[test]

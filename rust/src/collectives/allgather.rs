@@ -61,8 +61,9 @@ pub fn ag_pull_intra(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild) {
 /// Fig. 4 — inter-node AllGather: `local_world_size - 1` intra-forward
 /// blocks and `n_nodes - 1` inter-send blocks per rank, running in
 /// parallel so NVLink forwarding hides NIC transfers. Inter-node sends
-/// are striped round-robin across NIC rails (one rail per peer-node
-/// stream) so a multi-rail fabric runs all planes concurrently.
+/// are striped across NIC rails (one rail per peer-node stream under
+/// `RailPolicy::Static`, emptiest-plane-per-message under `Adaptive`)
+/// so a multi-rail fabric runs all planes concurrently.
 pub fn ag_inter(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild) {
     let ws = ctx.n_pes();
     let lws = ctx.local_world_size();
@@ -88,7 +89,7 @@ pub fn ag_inter(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild) {
                 .task(r, format!("ag_inter_send[{r}->{peer}]"))
                 .with_sms(1)
                 .launch_overhead();
-            t.on_rail(pid);
+            t.stripe_rail(pid);
             t.signal_wait_until(bufs.sig(r), SigCond::Eq, 1);
             t.putmem_signal(bufs.seg(r, r), bufs.seg(r, peer), bufs.sig(r), SigOp::Set, 1);
             pb.prog.push(t.build());
@@ -176,8 +177,9 @@ pub fn ag_ll_inter_gated(
                 for i in 1..n_nodes {
                     let pn = (node + i) % n_nodes;
                     let peer = pn * lws + lr;
-                    // stripe the LL sends round-robin across NIC rails
-                    t.on_rail(i - 1);
+                    // stripe the LL sends across NIC rails (round-robin,
+                    // or adaptively under RailPolicy::Adaptive)
+                    t.stripe_rail(i - 1);
                     t.ll_put(bufs.ll_seg(r, r), bufs.ll_seg(r, peer));
                 }
                 t.multimem_st_ll(bufs.ll_seg(r, r));
@@ -284,9 +286,9 @@ pub fn ag_ll_pcie(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild) {
         for i in 1..ws {
             let peer = (r + i) % ws;
             if ctx.node_of(peer) != ctx.node_of(r) {
-                // stripe inter-node LL sends round-robin across rails
-                // (intra-node routes ignore the rail pin)
-                send.on_rail(inter_idx);
+                // stripe inter-node LL sends across rails (intra-node
+                // routes ignore the rail pin)
+                send.stripe_rail(inter_idx);
                 inter_idx += 1;
             }
             send.ll_put(bufs.ll_seg(r, r), bufs.ll_seg(r, peer));

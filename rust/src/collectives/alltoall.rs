@@ -13,7 +13,7 @@
 
 use crate::mem::{BufId, Slice, SymmetricHeap};
 use crate::program::{ComputeCost, NumericOp, Op, SigOp};
-use crate::shmem::ShmemCtx;
+use crate::shmem::{ShmemCtx, ShmemTask};
 use crate::topology::Topology;
 
 use super::ProgBuild;
@@ -97,18 +97,28 @@ impl A2aCfg {
     }
 }
 
-/// Build one direction of the low-latency AllToAll (dispatch; combine is
-/// the same program with swapped buffers). Every rank LL-sends its chunk
-/// to every peer (shifted walk) and hosts `ws-1` receive blocks.
-pub fn a2a_ll(ctx: &ShmemCtx, bufs: &A2aBufs, pb: &mut ProgBuild, cfg: &A2aCfg) {
+/// Shared LL AllToAll program body: per rank, a self-copy, a shifted send
+/// walk whose inter-node messages get a per-message plane assignment via
+/// `plane(task, src, dst, inter_idx)`, a quiet fence, and `ws - 1`
+/// receive/unpack blocks. [`a2a_ll`] stripes through the fabric's rail
+/// policy; [`a2a_ep_rails`] pins explicit (possibly asymmetric) planes.
+fn a2a_ll_body(
+    ctx: &ShmemCtx,
+    bufs: &A2aBufs,
+    pb: &mut ProgBuild,
+    cfg: &A2aCfg,
+    who: &'static str,
+    prefix: &str,
+    mut plane: impl FnMut(&mut ShmemTask, usize, usize, usize),
+) {
     let ws = ctx.n_pes();
-    pb.claim_sigs("a2a_ll", bufs.sig_base, ws);
+    pb.claim_sigs(who, bufs.sig_base, ws);
     let chunk_bytes = ctx.bytes(bufs.chunk);
 
     for r in 0..ws {
         let node = ctx.node_of(r);
         let mut send = ctx
-            .task(r, format!("a2a_send[{r}]"))
+            .task(r, format!("{prefix}_send[{r}]"))
             .with_sms(1)
             .launch_overhead();
         // self chunk: local copy, immediately available
@@ -126,14 +136,13 @@ pub fn a2a_ll(ctx: &ShmemCtx, bufs: &A2aBufs, pb: &mut ProgBuild, cfg: &A2aCfg) 
         let mut inter_idx = 0usize;
         for i in 1..ws {
             let dst = (r + i) % ws;
-            let inter = ctx.node_of(dst) != node;
-            if inter {
-                // IBRC/IBGDA post cost, serialized in the sender; stripe
-                // the messages round-robin across NIC rails
+            if ctx.node_of(dst) != node {
+                // IBRC/IBGDA post cost, serialized in the sender, then
+                // the message's fabric plane assignment
                 send.op(Op::Sleep {
                     secs: cfg.inter_msg_overhead,
                 });
-                send.on_rail(inter_idx);
+                plane(&mut send, r, dst, inter_idx);
                 inter_idx += 1;
             }
             if cfg.queue_overhead > 0.0 {
@@ -152,7 +161,7 @@ pub fn a2a_ll(ctx: &ShmemCtx, bufs: &A2aBufs, pb: &mut ProgBuild, cfg: &A2aCfg) 
                 continue;
             }
             let mut t = ctx
-                .task(r, format!("a2a_recv[{r}<-{src}]"))
+                .task(r, format!("{prefix}_recv[{r}<-{src}]"))
                 .with_sms(1)
                 .launch_overhead();
             t.recv_ll(bufs.ll_slot(src, r));
@@ -175,6 +184,17 @@ pub fn a2a_ll(ctx: &ShmemCtx, bufs: &A2aBufs, pb: &mut ProgBuild, cfg: &A2aCfg) 
             pb.prog.push(t.build());
         }
     }
+}
+
+/// Build one direction of the low-latency AllToAll (dispatch; combine is
+/// the same program with swapped buffers). Every rank LL-sends its chunk
+/// to every peer (shifted walk) and hosts `ws-1` receive blocks.
+/// Inter-node messages stripe across NIC rails (round-robin, or by live
+/// congestion under `RailPolicy::Adaptive`).
+pub fn a2a_ll(ctx: &ShmemCtx, bufs: &A2aBufs, pb: &mut ProgBuild, cfg: &A2aCfg) {
+    a2a_ll_body(ctx, bufs, pb, cfg, "a2a_ll", "a2a", |t, _src, _dst, idx| {
+        t.stripe_rail(idx);
+    })
 }
 
 /// Force-intra-via-NIC variant used by the DeepEP baseline: identical
@@ -223,7 +243,7 @@ pub fn a2a_deepep_cfg(ctx: &ShmemCtx, bufs: &A2aBufs, pb: &mut ProgBuild, cfg: &
             });
             if inter {
                 // IBGDA posts stripe across rails like ours does
-                send.on_rail(inter_idx);
+                send.stripe_rail(inter_idx);
                 inter_idx += 1;
                 send.ll_put(bufs.send_chunk(dst, r), bufs.ll_slot(r, dst));
             } else {
@@ -270,6 +290,104 @@ pub fn a2a_deepep_cfg(ctx: &ShmemCtx, bufs: &A2aBufs, pb: &mut ProgBuild, cfg: &
             t.notify(r, bufs.sig(src), SigOp::Set, 1);
             pb.prog.push(t.build());
         }
+    }
+}
+
+/// Direction of the expert-parallel AllToAll (token routing to experts
+/// vs gathering partials back).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum A2aEpDir {
+    /// Tokens to experts: every message pinned to the **sender's** home
+    /// plane end-to-end (rail-optimized, no spine crossing).
+    Dispatch,
+    /// Expert outputs back to token owners: sender's home plane out,
+    /// **receiver's** home plane in — a `TrafficClass::Rails { tx, rx }`
+    /// spine-crossing path whenever the two home planes differ.
+    Combine,
+}
+
+/// Expert-parallel AllToAll with **asymmetric tx/rx plane assignment** —
+/// the first collective to emit `TrafficClass::Rails { tx, rx }`
+/// end-to-end (ROADMAP open item).
+///
+/// A GPU's *home plane* is `local_rank % rails` (the NIC plane its
+/// rail-optimized leaf port belongs to). Dispatch pins each message to
+/// the sender's home plane on both ends: messages from different senders
+/// leave on disjoint planes and never cross the spine. Combine routes
+/// each message out of the sender's home plane *into the receiver's home
+/// plane*, so any pair whose local ranks land on different planes takes
+/// the spine-crossing path — under a tapered spine
+/// (`FabricSpec::with_spine_taper`) those transfers contend on **both**
+/// planes' cores, which is exactly the asymmetry this variant exists to
+/// model.
+///
+/// Program structure (LL protocol, send/recv blocks, overheads) matches
+/// [`a2a_ll`] exactly — they share one program builder; only the
+/// per-message plane assignment differs.
+pub fn a2a_ep_rails(
+    ctx: &ShmemCtx,
+    bufs: &A2aBufs,
+    pb: &mut ProgBuild,
+    cfg: &A2aCfg,
+    dir: A2aEpDir,
+) {
+    let rails = ctx.cluster.fabric.rails;
+    let home = |pe: usize| ctx.local_rank_of(pe) % rails;
+    a2a_ll_body(ctx, bufs, pb, cfg, "a2a_ep_rails", "a2a_ep", |t, src, dst, _idx| {
+        match dir {
+            A2aEpDir::Dispatch => t.on_rails(home(src), home(src)),
+            A2aEpDir::Combine => t.on_rails(home(src), home(dst)),
+        };
+    })
+}
+
+/// Deliberately **skewed** inter-node traffic (timing-only senders, no
+/// receive blocks): in every sender's shifted destination walk, each
+/// even-indexed message is `skew`x bigger than an odd-indexed one, so
+/// message *size correlates with destination parity*. Static round-robin
+/// striping maps parity straight onto planes — every big message of a
+/// sender lands on plane 0 while plane 1 drains the small ones — whereas
+/// the adaptive router sees the committed bytes and re-balances, cutting
+/// the makespan. This is the `alltoall-adaptive-skew` scenario of the
+/// perf suite and the workload `autotune::tune_rail_policy` tunes over.
+pub fn a2a_skew(ctx: &ShmemCtx, bufs: &A2aBufs, pb: &mut ProgBuild, cfg: &A2aCfg, skew: f64) {
+    let ws = ctx.n_pes();
+    assert!(ctx.n_nodes() > 1, "a2a_skew is an inter-node scenario");
+    assert!(skew >= 1.0, "skew is a size multiplier");
+    let chunk_bytes = ctx.bytes(bufs.chunk);
+
+    for r in 0..ws {
+        let node = ctx.node_of(r);
+        let mut send = ctx
+            .task(r, format!("a2a_skew_send[{r}]"))
+            .with_sms(1)
+            .launch_overhead();
+        let mut inter_idx = 0usize;
+        for i in 1..ws {
+            let dst = (r + i) % ws;
+            if ctx.node_of(dst) == node {
+                continue;
+            }
+            send.op(Op::Sleep {
+                secs: cfg.inter_msg_overhead,
+            });
+            send.stripe_rail(inter_idx);
+            let bytes = if inter_idx % 2 == 0 {
+                chunk_bytes * skew
+            } else {
+                chunk_bytes
+            };
+            let tc = send.tc();
+            send.op(Op::LLPut {
+                src: bufs.send_chunk(dst, r),
+                dst: bufs.ll_slot(r, dst),
+                bytes,
+                tc,
+            });
+            inter_idx += 1;
+        }
+        send.quiet();
+        pb.prog.push(send.build());
     }
 }
 
@@ -396,6 +514,50 @@ mod tests {
         let ctx = ShmemCtx::new(cluster, DType::BF16);
         let topo = Topology::build(cluster);
         roundtrip_check(&ctx, &topo, 16, &A2aCfg::ours()).unwrap();
+    }
+
+    #[test]
+    fn ep_rails_dispatch_and_combine_correct_on_railed_fabric() {
+        use crate::config::FabricSpec;
+        let cluster = ClusterSpec::h800(2, 8)
+            .with_fabric(FabricSpec::rail_optimized(2, 2.0).with_spine_taper(2.0));
+        for dir in [A2aEpDir::Dispatch, A2aEpDir::Combine] {
+            run_a2a(cluster, 32, |c, b, p| {
+                a2a_ep_rails(c, b, p, &A2aCfg::ours(), dir)
+            });
+        }
+    }
+
+    #[test]
+    fn ep_combine_emits_asymmetric_rails() {
+        use crate::config::{FabricSpec, TrafficClass};
+        let cluster = ClusterSpec::h800(2, 8).with_fabric(FabricSpec::rail_optimized(2, 2.0));
+        let ctx = ShmemCtx::new(cluster, DType::BF16);
+        let mut heap = SymmetricHeap::new(ctx.n_pes(), 4 * ctx.n_pes());
+        let bufs = A2aBufs::alloc(&mut heap, &ctx, 16);
+        let collect_tcs = |dir: A2aEpDir| {
+            let mut pb = ProgBuild::new();
+            a2a_ep_rails(&ctx, &bufs, &mut pb, &A2aCfg::ours(), dir);
+            pb.prog
+                .tasks
+                .iter()
+                .flat_map(|t| &t.ops)
+                .filter_map(|o| match o {
+                    crate::program::Op::LLPut { tc, .. } => Some(*tc),
+                    _ => None,
+                })
+                .collect::<Vec<_>>()
+        };
+        // dispatch: every explicit assignment stays in one plane
+        assert!(collect_tcs(A2aEpDir::Dispatch)
+            .iter()
+            .all(|tc| !matches!(tc, TrafficClass::Rails { tx, rx } if tx != rx)));
+        // combine: differing home planes produce spine-crossing classes
+        let crossing = collect_tcs(A2aEpDir::Combine)
+            .iter()
+            .filter(|tc| matches!(tc, TrafficClass::Rails { tx, rx } if tx != rx))
+            .count();
+        assert!(crossing > 0, "combine must emit Rails{{tx != rx}}");
     }
 
     #[test]

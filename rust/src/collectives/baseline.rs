@@ -20,7 +20,7 @@ pub fn nccl_allgather_ring(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild, sm
     nccl_allgather_ring_done(ctx, bufs, pb, sms, None)
 }
 
-/// Hard cap on [`nccl_channels`]: bounds the ring baselines' signal
+/// Hard cap on `nccl_channels`: bounds the ring baselines' signal
 /// footprint (8 signals per channel for the RS ring, `ws` per channel
 /// for the AG ring) so coordinators can place producer signal ranges
 /// above it — see `collectives::rs_sig_span`.
@@ -38,7 +38,7 @@ fn nccl_channels(ctx: &ShmemCtx) -> usize {
     }
 }
 
-/// Position -> rank mapping of ring `c` (see [`nccl_channels`]): rotated
+/// Position -> rank mapping of ring `c` (see `nccl_channels`): rotated
 /// local ranks across nodes (distinct NIC crossing pairs), or stride
 /// rings on a single node (distinct mesh links).
 fn ring_perm(ctx: &ShmemCtx, c: usize) -> Vec<usize> {

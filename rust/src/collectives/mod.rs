@@ -77,7 +77,7 @@ impl ProgBuild {
 /// above [`RsBufs::sig_base`]: the intra scatter claims `ws`
 /// (`rs_push_intra`), `rs_inter` claims `lws + 2 * n_nodes`, and the
 /// NCCL ring baseline claims 8 signals per channel (at most
-/// [`baseline::MAX_RING_CHANNELS`]). Coordinators that gate a
+/// `baseline::MAX_RING_CHANNELS`). Coordinators that gate a
 /// ReduceScatter on producer signals place their range at or above
 /// `rs.sig_base + rs_sig_span(ctx)`.
 pub fn rs_sig_span(ctx: &ShmemCtx) -> usize {

@@ -246,11 +246,12 @@ pub fn rs_inter(
 
             // p2p: ship the staged partial to the peer rank of node tn;
             // delivery sets the *arrival* signal for this sender's node.
-            // Iterations stripe round-robin across NIC rails so the
-            // serialized P2P stream still exercises every plane.
+            // Iterations stripe across NIC rails (round-robin, or
+            // adaptively) so the serialized P2P stream still exercises
+            // every plane.
             if tn != node {
                 let target = tn * lws + lr;
-                p2p.on_rail(it);
+                p2p.stripe_rail(it);
                 p2p.signal_wait_until(bufs.stage_sig(tn, lws, n_nodes), SigCond::Ge, 1);
                 p2p.putmem_signal(
                     bufs.stage_slot(tn, r),

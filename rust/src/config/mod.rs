@@ -137,6 +137,46 @@ impl HardwareModel {
     }
 }
 
+/// How `TrafficClass::Auto` messages are mapped onto NIC rails — the
+/// router's rail-selection policy (ROADMAP "adaptive rail selection").
+///
+/// * [`RailPolicy::Static`] (the default) resolves `Auto` to a
+///   deterministic rail derived from the endpoints' local ranks, and the
+///   collective builders stripe their inter-node segments round-robin
+///   (`shmem::ShmemTask::stripe_rail` pins each stream). This reproduces
+///   the pre-policy behavior bit-identically.
+/// * [`RailPolicy::Adaptive`] defers the decision to simulation time:
+///   the router picks the *emptiest* plane per message from the live
+///   per-link committed-bytes / in-flight-flow occupancy the DES engine
+///   feeds back on every flow post and completion
+///   (`topology::LinkOccupancy`). Collective builders emit `Auto`
+///   instead of hard rail pins, closing the model→decision feedback
+///   loop the §3.8 autotuner can then tune over
+///   (`autotune::tune_rail_policy`).
+///
+/// Explicit pins (`TrafficClass::Rail` / `TrafficClass::Rails`) are
+/// always honored regardless of policy.
+///
+/// ```
+/// use triton_dist_sim::config::{ClusterSpec, FabricSpec, RailPolicy};
+///
+/// let fabric = FabricSpec::rail_optimized(2, 2.0)
+///     .with_rail_policy(RailPolicy::Adaptive);
+/// let cluster = ClusterSpec::h800(4, 8).with_fabric(fabric);
+/// assert_eq!(cluster.fabric.rail_policy, RailPolicy::Adaptive);
+/// // the default policy is Static — PR-2 behavior, bit-identical
+/// assert_eq!(FabricSpec::default().rail_policy, RailPolicy::Static);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum RailPolicy {
+    /// Deterministic round-robin striping decided at program-build time.
+    #[default]
+    Static,
+    /// Congestion-aware: pick the emptiest plane per message at
+    /// simulation time from live link occupancy.
+    Adaptive,
+}
+
 /// Inter-node fabric description: how the per-GPU NIC bandwidth is
 /// physically organized into rails and switch tiers.
 ///
@@ -149,10 +189,22 @@ impl HardwareModel {
 /// With `rails > 1` each GPU's `nic_bw` is split across `rails`
 /// rail-optimized NIC planes (per-rail bandwidth `nic_bw / rails`); a
 /// message pinned to one rail only gets that rail's share, so collectives
-/// must stripe (see `TrafficClass`). With `oversub > 1.0` the leaf→spine
+/// must stripe (see [`TrafficClass`]) or let the router balance
+/// (see [`RailPolicy`]). With `oversub > 1.0` the leaf→spine
 /// uplinks are thinner than the sum of their downlinks by that ratio and
 /// the switch tiers are materialized as shared links contended by every
 /// inter-node flow of the same (node, rail) / rail.
+///
+/// ```
+/// use triton_dist_sim::config::FabricSpec;
+///
+/// // 2 NIC rails per GPU behind a 2:1 oversubscribed leaf tier
+/// let f = FabricSpec::rail_optimized(2, 2.0);
+/// assert!(f.is_blocking());
+/// assert_eq!(f.rail_bw(400e9), 200e9); // each rail gets half the NIC
+/// // the flat default can never bottleneck below the NIC endpoints
+/// assert!(!FabricSpec::flat().is_blocking());
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FabricSpec {
     /// NIC rails per GPU (>= 1). Per-rail bandwidth is `nic_bw / rails`.
@@ -172,6 +224,9 @@ pub struct FabricSpec {
     pub leaf_lat: f64,
     /// Extra propagation latency per spine-plane traversal, s.
     pub spine_lat: f64,
+    /// How `TrafficClass::Auto` messages are mapped onto rails (static
+    /// round-robin vs congestion-aware; see [`RailPolicy`]).
+    pub rail_policy: RailPolicy,
 }
 
 impl Default for FabricSpec {
@@ -182,6 +237,7 @@ impl Default for FabricSpec {
             spine_taper: 1.0,
             leaf_lat: 0.0,
             spine_lat: 0.0,
+            rail_policy: RailPolicy::Static,
         }
     }
 }
@@ -209,6 +265,14 @@ impl FabricSpec {
     pub fn with_spine_taper(mut self, taper: f64) -> Self {
         assert!(taper >= 1.0, "spine taper must be >= 1.0");
         self.spine_taper = taper;
+        self
+    }
+
+    /// Select the rail-selection policy for `TrafficClass::Auto` traffic
+    /// (see [`RailPolicy`]). `Static` — the default — is bit-identical to
+    /// the pre-policy round-robin striping.
+    pub fn with_rail_policy(mut self, policy: RailPolicy) -> Self {
+        self.rail_policy = policy;
         self
     }
 
@@ -246,18 +310,32 @@ impl FabricSpec {
 }
 
 /// Which fabric path a message should take (the router's input alongside
-/// the endpoints). Collectives stripe inter-node traffic by pinning
-/// messages round-robin across rails.
+/// the endpoints). Under [`RailPolicy::Static`] collectives stripe
+/// inter-node traffic by pinning messages round-robin across rails;
+/// under [`RailPolicy::Adaptive`] they emit [`TrafficClass::Auto`] and
+/// the router balances planes per message from live occupancy.
+///
+/// ```
+/// use triton_dist_sim::config::TrafficClass;
+///
+/// // rail-optimized same-plane path vs spine-crossing asymmetric path
+/// let pinned = TrafficClass::Rail(1);
+/// let crossing = TrafficClass::Rails { tx: 0, rx: 1 };
+/// assert_ne!(pinned, crossing);
+/// assert_eq!(TrafficClass::default(), TrafficClass::Auto);
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum TrafficClass {
-    /// Router picks a deterministic rail from the endpoints' local ranks.
+    /// Defer rail selection to the router's [`RailPolicy`]: a
+    /// deterministic rail from the endpoints' local ranks (`Static`), or
+    /// the emptiest plane by live link occupancy (`Adaptive`).
     #[default]
     Auto,
     /// Pin the message to rail `r % rails` end-to-end (rail-optimized
-    /// same-rail path).
+    /// same-rail path). Always honored, regardless of policy.
     Rail(u32),
     /// Explicit tx/rx rails; unequal planes cross both spines
-    /// (spine-crossing path).
+    /// (spine-crossing path). Always honored, regardless of policy.
     Rails { tx: u32, rx: u32 },
 }
 
@@ -479,6 +557,23 @@ mod tests {
         // flat single-rail fabric: bit-identical to the raw NIC speed
         let flat = FabricSpec::default();
         assert_eq!(flat.rail_path_bw(400e9).to_bits(), 400e9_f64.to_bits());
+    }
+
+    #[test]
+    fn rail_policy_defaults_static_and_threads_through() {
+        assert_eq!(RailPolicy::default(), RailPolicy::Static);
+        assert_eq!(FabricSpec::default().rail_policy, RailPolicy::Static);
+        // the policy is orthogonal to the blocking/bandwidth math
+        let f = FabricSpec::rail_optimized(2, 2.0).with_rail_policy(RailPolicy::Adaptive);
+        assert_eq!(f.rail_policy, RailPolicy::Adaptive);
+        assert!(f.is_blocking());
+        assert_eq!(
+            f.rail_bw(400e9).to_bits(),
+            FabricSpec::rail_optimized(2, 2.0).rail_bw(400e9).to_bits(),
+            "policy must not perturb per-rail bandwidth"
+        );
+        let c = ClusterSpec::h800(2, 8).with_fabric(f);
+        assert_eq!(c.fabric.rail_policy, RailPolicy::Adaptive);
     }
 
     #[test]

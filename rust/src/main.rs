@@ -4,7 +4,7 @@
 use triton_dist_sim::cli::Args;
 use triton_dist_sim::collectives::alltoall::{a2a_deepep_cfg, a2a_ll, A2aBufs, A2aCfg};
 use triton_dist_sim::collectives::ProgBuild;
-use triton_dist_sim::config::{ClusterSpec, DType, FabricSpec, GemmShape, MoeShape};
+use triton_dist_sim::config::{ClusterSpec, DType, FabricSpec, GemmShape, MoeShape, RailPolicy};
 use triton_dist_sim::coordinator::{self, ag_gemm, flash_decode, gemm_rs, moe};
 use triton_dist_sim::mem::SymmetricHeap;
 use triton_dist_sim::metrics;
@@ -34,6 +34,9 @@ COMMON OPTIONS:
   --rails N       NIC rails per GPU (default 1)
   --oversub R     leaf/spine oversubscription ratio (default 1.0)
   --spine-taper R spine-core thinning vs its leaf feed (default 1.0)
+  --router static|adaptive   rail selection for un-pinned traffic
+                  (default static: deterministic round-robin striping;
+                  adaptive: emptiest plane per message by live occupancy)
   --m/--n/--k     GEMM dims          --trace    write chrome trace JSON
   --numeric       run real numerics through PJRT/native executors
 ";
@@ -54,14 +57,19 @@ fn cluster_from(args: &Args) -> Result<ClusterSpec, String> {
     if !(spine_taper >= 1.0) {
         return Err("--spine-taper must be >= 1.0".into());
     }
-    let cluster = match args.get_or("hw", "h800") {
-        "h800" => ClusterSpec::h800(nodes, gpus),
+    let policy = match args.choice_or("router", "static", &["static", "adaptive"])? {
+        "adaptive" => RailPolicy::Adaptive,
+        _ => RailPolicy::Static,
+    };
+    let cluster = match args.choice_or("hw", "h800", &["h800", "mi308x", "l20"])? {
         "mi308x" => ClusterSpec::mi308x(gpus),
         "l20" => ClusterSpec::l20(nodes, gpus),
-        other => return Err(format!("unknown --hw '{other}'")),
+        _ => ClusterSpec::h800(nodes, gpus),
     };
     Ok(cluster.with_fabric(
-        FabricSpec::rail_optimized(rails, oversub).with_spine_taper(spine_taper),
+        FabricSpec::rail_optimized(rails, oversub)
+            .with_spine_taper(spine_taper)
+            .with_rail_policy(policy),
     ))
 }
 

@@ -92,7 +92,10 @@ pub enum Op {
         bytes: f64,
         signal: Option<(SigRef, SigOp, u64)>,
         blocking: bool,
-        /// Fabric path selection (rail pinning for inter-node routes).
+        /// Fabric path selection for inter-node routes: explicit rail
+        /// pins pass through the router verbatim; `Auto` is resolved per
+        /// message at simulation time under the fabric's `RailPolicy`
+        /// (deterministic hash, or emptiest plane by live occupancy).
         tc: TrafficClass,
         label: &'static str,
     },

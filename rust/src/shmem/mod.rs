@@ -6,8 +6,27 @@
 //! `crate::collectives` read like the paper's pseudo-code (Algorithms
 //! 1–5). Each primitive appends ops to the task's program; the DES engine
 //! gives them their timing and (optionally) numeric semantics.
+//!
+//! Fabric path selection is stream-modal, like a CUDA stream's NIC
+//! binding: [`ShmemTask::on_rail`] / [`ShmemTask::on_rails`] pin
+//! subsequent transfers to explicit plane(s), [`ShmemTask::auto_rail`]
+//! defers to the fabric's [`RailPolicy`], and collectives stripe through
+//! [`ShmemTask::stripe_rail`] so one call site serves both the static
+//! round-robin and the congestion-aware adaptive router:
+//!
+//! ```
+//! use triton_dist_sim::config::{ClusterSpec, DType};
+//! use triton_dist_sim::shmem::ShmemCtx;
+//!
+//! let ctx = ShmemCtx::new(ClusterSpec::h800(2, 8), DType::BF16);
+//! let mut t = ctx.task(0, "sender");
+//! t.on_rails(0, 1); // asymmetric planes: the spine-crossing path
+//! t.auto_rail();    // back to policy-resolved routing
+//! let spec = t.build();
+//! assert_eq!(spec.rank, 0);
+//! ```
 
-use crate::config::{ClusterSpec, DType, TrafficClass};
+use crate::config::{ClusterSpec, DType, RailPolicy, TrafficClass};
 use crate::mem::Slice;
 use crate::program::{
     ComputeCost, EngineClass, NumericOp, Op, Scope, SigCond, SigOp, SigRef, TaskBuilder, TaskSpec,
@@ -119,17 +138,36 @@ impl ShmemTask {
     }
 
     // -- fabric path selection -------------------------------------------------
+    //
+    // These are stream-modal, like a CUDA stream's NIC binding: the chosen
+    // `TrafficClass` applies to every subsequent data-movement op of this
+    // task until changed.
+    //
+    // ```
+    // use triton_dist_sim::config::{ClusterSpec, DType};
+    // use triton_dist_sim::shmem::ShmemCtx;
+    //
+    // let ctx = ShmemCtx::new(ClusterSpec::h800(2, 8), DType::BF16);
+    // let mut t = ctx.task(0, "sender");
+    // t.on_rail(1);      // pin to plane 1 end-to-end
+    // t.on_rails(0, 1);  // asymmetric planes: spine-crossing path
+    // t.auto_rail();     // defer to the fabric's RailPolicy
+    // ```
 
     /// Pin subsequent transfers to NIC rail `rail % rails` (rail-optimized
-    /// same-rail path). Collectives stripe inter-node segments round-robin
-    /// with this. No-op on intra-node routes and single-rail fabrics.
+    /// same-rail path), regardless of the fabric's `RailPolicy`. No-op on
+    /// intra-node routes and single-rail fabrics. Collectives should
+    /// prefer [`Self::stripe_rail`], which defers to the congestion-aware
+    /// router when the fabric asks for it.
     pub fn on_rail(&mut self, rail: usize) -> &mut Self {
         self.tc = TrafficClass::Rail(rail as u32);
         self
     }
 
     /// Explicit tx/rx rail planes (unequal planes take the spine-crossing
-    /// path).
+    /// path), regardless of the fabric's `RailPolicy`. This is how the
+    /// expert-parallel `a2a_ep_rails` pins its combine direction into the
+    /// receiver's home plane.
     pub fn on_rails(&mut self, tx: usize, rx: usize) -> &mut Self {
         self.tc = TrafficClass::Rails {
             tx: tx as u32,
@@ -138,10 +176,35 @@ impl ShmemTask {
         self
     }
 
-    /// Let the router pick the rail again (the default).
+    /// Let the router pick the rail again (the default). Resolution
+    /// happens per message at simulation time under the fabric's
+    /// [`RailPolicy`]: a deterministic endpoint hash under
+    /// `RailPolicy::Static`, the emptiest plane by live link occupancy
+    /// under `RailPolicy::Adaptive`.
     pub fn auto_rail(&mut self) -> &mut Self {
         self.tc = TrafficClass::Auto;
         self
+    }
+
+    /// Rail striping hint for collective builders: under
+    /// `RailPolicy::Static` this pins to `rail % rails` exactly like
+    /// [`Self::on_rail`] (the deterministic round-robin stripe), while
+    /// under `RailPolicy::Adaptive` it defers to the congestion-aware
+    /// router ([`Self::auto_rail`]) so the plane is chosen per message
+    /// from live occupancy. Every hard-striping collective
+    /// (`ag_inter`, `ag_ll_inter`, `ag_ll_pcie`, `rs_inter`, `a2a_ll`,
+    /// `a2a_deepep`) routes its inter-node segments through this.
+    pub fn stripe_rail(&mut self, rail: usize) -> &mut Self {
+        match self.ctx.cluster.fabric.rail_policy {
+            RailPolicy::Static => self.on_rail(rail),
+            RailPolicy::Adaptive => self.auto_rail(),
+        }
+    }
+
+    /// The traffic class subsequent data-movement ops will carry (for
+    /// builders assembling raw [`Op`]s alongside the primitives).
+    pub fn tc(&self) -> TrafficClass {
+        self.tc
     }
 
     // -- OpenSHMEM data movement ----------------------------------------------
@@ -470,6 +533,35 @@ mod tests {
         assert_eq!(c.node_of(10), 1);
         assert_eq!(c.local_rank_of(10), 2);
         assert_eq!(c.bytes(100), 200.0); // bf16
+    }
+
+    #[test]
+    fn stripe_rail_follows_the_fabric_policy() {
+        use crate::config::{FabricSpec, RailPolicy};
+        let static_ctx = ShmemCtx::new(
+            ClusterSpec::h800(2, 8).with_fabric(FabricSpec::rail_optimized(2, 1.0)),
+            DType::BF16,
+        );
+        let mut t = static_ctx.task(0, "t");
+        t.stripe_rail(1);
+        assert_eq!(t.tc(), TrafficClass::Rail(1), "static policy pins");
+
+        let adaptive_ctx = ShmemCtx::new(
+            ClusterSpec::h800(2, 8).with_fabric(
+                FabricSpec::rail_optimized(2, 1.0).with_rail_policy(RailPolicy::Adaptive),
+            ),
+            DType::BF16,
+        );
+        let mut t = adaptive_ctx.task(0, "t");
+        t.stripe_rail(1);
+        assert_eq!(
+            t.tc(),
+            TrafficClass::Auto,
+            "adaptive policy defers to the router"
+        );
+        // explicit pins are never rewritten by the policy
+        t.on_rails(0, 1);
+        assert_eq!(t.tc(), TrafficClass::Rails { tx: 0, rx: 1 });
     }
 
     #[test]

@@ -14,15 +14,26 @@
 //! simultaneous arms/completions cost one component-scoped rate
 //! recompute instead of N global ones. Flow contexts and signal waiters
 //! are slab/`Vec`-indexed — no hashing on the event path.
+//!
+//! Congestion feedback: transfers are routed through a
+//! [`Router`] that, under `RailPolicy::Adaptive`, resolves
+//! `TrafficClass::Auto` to the emptiest NIC plane using the live
+//! [`LinkOccupancy`] this engine maintains — committed wire bytes and
+//! in-flight flow counts per link, bumped when a transfer is posted
+//! (its `FlowArm` is scheduled) and released on `FlowDone`. The
+//! occupancy view is pure bookkeeping: the max–min solver is never
+//! re-entered, the counters are not even maintained under
+//! `RailPolicy::Static` (the default), and static routing is
+//! bit-identical to calling [`Topology::route_tc`] directly.
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 
-use crate::config::HardwareModel;
+use crate::config::{HardwareModel, RailPolicy};
 use crate::mem::{Slice, SymmetricHeap};
 use crate::program::{ComputeCost, NumericOp, Op, Program, Scope, SigCond, SigOp, SigRef};
 use crate::sim::flow::{FlowId, FlowNet};
-use crate::topology::Topology;
+use crate::topology::{LinkOccupancy, Router, Topology};
 
 /// Pluggable compute backend (XLA/PJRT in `runtime`, native fallback in
 /// `kernels::exec`, or nothing for timing-only benches).
@@ -191,6 +202,9 @@ struct FlowCtx {
     resume: Option<usize>,
     nbi_owner: Option<usize>,
     span: Option<(usize, &'static str, f64)>,
+    /// Wire bytes committed to `LinkOccupancy` at post time (released
+    /// verbatim at completion). Set by `launch_flow`.
+    wire_bytes: f64,
 }
 
 struct PendingFlow {
@@ -260,6 +274,14 @@ struct Runner<'s, 'a, 'h> {
 
     tasks: Vec<TaskRt>,
     flows: FlowNet,
+    /// Rail resolution for `TrafficClass::Auto` (policy from the fabric).
+    router: Router<'a>,
+    /// Live per-link committed-bytes / in-flight counters the adaptive
+    /// router reads; bumped at post time, released at completion.
+    occ: LinkOccupancy,
+    /// Occupancy is only ever read under `RailPolicy::Adaptive`; skip the
+    /// per-flow bookkeeping entirely on the (default) static hot path.
+    track_occ: bool,
     /// Flow contexts, slab-indexed by `FlowId` (slots are recycled in
     /// lockstep with `FlowNet`'s free list).
     flow_ctx: Vec<Option<FlowCtx>>,
@@ -320,6 +342,9 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                 })
                 .collect(),
             flows: FlowNet::new(link_bw),
+            router: Router::new(sim.topo),
+            occ: LinkOccupancy::new(sim.topo.link_count()),
+            track_occ: sim.topo.cluster.fabric.rail_policy == RailPolicy::Adaptive,
             flow_ctx: Vec::new(),
             pending: Vec::new(),
             pending_free: Vec::new(),
@@ -501,6 +526,14 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
         for id in &remove_ids {
             done_ctxs.push(self.flow_ctx[id.0].take().expect("missing flow ctx"));
         }
+        // release the completed flows' occupancy shares (links are still
+        // resolvable until the update below recycles the slots)
+        if self.track_occ {
+            for (id, ctx) in remove_ids.iter().zip(&done_ctxs) {
+                let links: &[crate::topology::LinkId] = self.flows.links_of(*id);
+                self.occ.release(links, ctx.wire_bytes);
+            }
+        }
 
         let (ids, update) = self.flows.update(self.clock, &remove_ids, adds);
         for (id, ctx) in ids.iter().zip(add_ctxs) {
@@ -626,7 +659,7 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                     tc,
                     label,
                 } => {
-                    let mut route = self.sim.topo.route_tc(src.rank, dst.rank, tc);
+                    let mut route = self.router.route(src.rank, dst.rank, tc, &self.occ);
                     if signal.is_some() {
                         // flag packet + fence after the payload (§3.4's
                         // "each P2P transfer requires a pair of signal
@@ -640,6 +673,7 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                         resume: if blocking { Some(task) } else { None },
                         nbi_owner: if blocking { None } else { Some(task) },
                         span: Some((task, label, self.clock)),
+                        wire_bytes: 0.0,
                     };
                     self.launch_flow(route, bytes, ctx);
                     if blocking {
@@ -657,7 +691,7 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                     tc,
                     label,
                 } => {
-                    let mut route = self.sim.topo.route_tc(src.rank, dst.rank, tc);
+                    let mut route = self.router.route(src.rank, dst.rank, tc, &self.occ);
                     route.latency *= 2.0; // request/response round trip
                     let ctx = FlowCtx {
                         copies: vec![(src, dst)],
@@ -666,6 +700,7 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                         resume: if blocking { Some(task) } else { None },
                         nbi_owner: if blocking { None } else { Some(task) },
                         span: Some((task, label, self.clock)),
+                        wire_bytes: 0.0,
                     };
                     self.launch_flow(route, bytes, ctx);
                     if blocking {
@@ -699,13 +734,14 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                         resume: Some(task),
                         nbi_owner: None,
                         span: Some((task, "multimem_st", self.clock)),
+                        wire_bytes: 0.0,
                     };
                     self.launch_flow(route, bytes, ctx);
                     self.tasks[task].state = TState::BlockedFlow;
                     return Ok(());
                 }
                 Op::LLPut { src, dst, bytes, tc } => {
-                    let route = self.sim.topo.route_tc(src.rank, dst.rank, tc);
+                    let route = self.router.route(src.rank, dst.rank, tc, &self.occ);
                     let ctx = FlowCtx {
                         copies: vec![(src, dst)],
                         signal: None,
@@ -713,6 +749,7 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                         resume: None,
                         nbi_owner: Some(task),
                         span: Some((task, "ll_put", self.clock)),
+                        wire_bytes: 0.0,
                     };
                     // LL doubles the wire size (flag bytes in-band, §3.4)
                     self.launch_flow(route, bytes * 2.0, ctx);
@@ -827,10 +864,16 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
 
     fn launch_flow(&mut self, route: crate::topology::Route, bytes: f64, ctx: FlowCtx) {
         let bytes = bytes.max(64.0); // minimum wire granule
+        // congestion feedback: the transfer holds plane capacity from the
+        // moment it is posted (adaptive rail picks see bursts in flight
+        // before their first arm)
+        if self.track_occ {
+            self.occ.commit(&route.links, bytes);
+        }
         let pf = PendingFlow {
             links: route.links,
             bytes,
-            ctx,
+            ctx: FlowCtx { wire_bytes: bytes, ..ctx },
         };
         let idx = if let Some(i) = self.pending_free.pop() {
             self.pending[i] = Some(pf);

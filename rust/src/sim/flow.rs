@@ -526,6 +526,16 @@ impl FlowNet {
         f.alive && f.gen == gen
     }
 
+    /// The links an alive flow occupies (its route). The engine uses this
+    /// at completion time to release the flow's
+    /// [`LinkOccupancy`](crate::topology::LinkOccupancy) share — the
+    /// congestion feedback the adaptive rail router reads — without
+    /// cloning routes into its per-flow contexts.
+    pub fn links_of(&self, id: FlowId) -> &[LinkId] {
+        debug_assert!(self.flows[id.0].alive, "links_of on a dead flow");
+        &self.flows[id.0].links
+    }
+
     /// Remaining bytes of a flow (diagnostics/tests). Reflects progress
     /// only up to the flow's last settle — see [`Self::remaining_at`].
     pub fn bytes_left(&self, id: FlowId) -> f64 {
@@ -833,6 +843,13 @@ mod tests {
         assert!(!n.is_current(b, gen_a));
         let gen_b = up_b.etas[0].1;
         assert!(gen_b > gen_a, "generation must be monotone per slot");
+    }
+
+    #[test]
+    fn links_of_reports_the_route() {
+        let mut n = net(&[10.0, 20.0]);
+        let (a, _) = n.add(0.0, vec![LinkId(0), LinkId(1)], 10.0);
+        assert_eq!(n.links_of(a), &[LinkId(0), LinkId(1)]);
     }
 
     #[test]

@@ -34,11 +34,17 @@
 //!   component (plus `spine_lat`). Set `spine_taper > 1.0` to make the
 //!   spine core itself the binding constraint.
 //!
-//! The router maps `(src_pe, dst_pe, TrafficClass)` to a multi-hop
+//! The [`Router`] maps `(src_pe, dst_pe, TrafficClass)` to a multi-hop
 //! [`Route`]: `TrafficClass::Rail(r)` pins a message to plane `r`
 //! end-to-end (the rail-optimized path collectives stripe over);
 //! `Rails { tx, rx }` with unequal planes produces a spine-crossing
-//! path; `Auto` derives a deterministic rail from the endpoints.
+//! path; `Auto` resolves through the fabric's
+//! [`RailPolicy`](crate::config::RailPolicy) — a deterministic rail
+//! derived from the endpoints (`Static`), or the **emptiest plane** by
+//! live [`LinkOccupancy`] (`Adaptive`): the DES engine feeds per-link
+//! committed-bytes / in-flight-flow counters back to the router on every
+//! flow post and completion, so rail selection reacts to the congestion
+//! the flow solver models without ever re-entering the solver.
 //!
 //! **Exactness:** on a non-blocking fabric (`oversub <= 1.0`) the switch
 //! tiers can never be the max–min bottleneck (each tier's capacity is at
@@ -54,9 +60,9 @@
 //! latency; the DES engine max–min fair-shares link capacity among all
 //! concurrent flows (see `sim::flow`).
 
-use crate::config::{ClusterSpec, HardwareKind, TrafficClass};
+use crate::config::{ClusterSpec, HardwareKind, RailPolicy, TrafficClass};
 
-/// Index into [`Topology::links`].
+/// Index into the [`Topology`]'s link table (see [`Topology::link`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct LinkId(pub usize);
 
@@ -96,6 +102,72 @@ pub struct Link {
 pub struct Route {
     pub links: Vec<LinkId>,
     pub latency: f64,
+}
+
+/// Live per-link occupancy the DES engine feeds back to the [`Router`]:
+/// wire bytes committed (posted but not yet delivered) and in-flight flow
+/// counts, indexed by [`LinkId`].
+///
+/// The engine calls [`LinkOccupancy::commit`] when a transfer is posted
+/// (the route is chosen and the flow's arm event is scheduled) and
+/// [`LinkOccupancy::release`] when the flow completes, so the view always
+/// reflects every transfer currently holding capacity **including** those
+/// still in their propagation-latency window — exactly what a sender
+/// posting a burst needs to balance its own messages. Updates are O(route
+/// length) counter bumps; the max–min solver is never re-entered.
+///
+/// ```
+/// use triton_dist_sim::topology::{LinkId, LinkOccupancy};
+///
+/// let mut occ = LinkOccupancy::new(4);
+/// occ.commit(&[LinkId(0), LinkId(2)], 4096.0);
+/// assert_eq!(occ.committed_bytes(LinkId(0)), 4096.0);
+/// assert_eq!(occ.in_flight(LinkId(2)), 1);
+/// occ.release(&[LinkId(0), LinkId(2)], 4096.0);
+/// assert_eq!(occ.in_flight(LinkId(0)), 0);
+/// ```
+#[derive(Debug, Clone)]
+pub struct LinkOccupancy {
+    committed: Vec<f64>,
+    flows: Vec<u32>,
+}
+
+impl LinkOccupancy {
+    /// Empty occupancy for a topology with `n_links` links.
+    pub fn new(n_links: usize) -> Self {
+        LinkOccupancy {
+            committed: vec![0.0; n_links],
+            flows: vec![0; n_links],
+        }
+    }
+
+    /// A transfer of `bytes` wire bytes was posted on `links`.
+    pub fn commit(&mut self, links: &[LinkId], bytes: f64) {
+        for l in links {
+            self.committed[l.0] += bytes;
+            self.flows[l.0] += 1;
+        }
+    }
+
+    /// The transfer completed; release its committed bytes. Clamped at
+    /// zero: releases replay the exact commit values, but cross-flow
+    /// float accumulation may leave dust.
+    pub fn release(&mut self, links: &[LinkId], bytes: f64) {
+        for l in links {
+            self.committed[l.0] = (self.committed[l.0] - bytes).max(0.0);
+            self.flows[l.0] = self.flows[l.0].saturating_sub(1);
+        }
+    }
+
+    /// Wire bytes currently committed to link `l`.
+    pub fn committed_bytes(&self, l: LinkId) -> f64 {
+        self.committed[l.0]
+    }
+
+    /// Transfers currently in flight over link `l`.
+    pub fn in_flight(&self, l: LinkId) -> u32 {
+        self.flows[l.0]
+    }
 }
 
 /// Immutable interconnect graph for one cluster.
@@ -358,6 +430,122 @@ impl Topology {
     }
 }
 
+/// The rail router: resolves a transfer's [`TrafficClass`] into a
+/// concrete [`Route`] under the fabric's
+/// [`RailPolicy`](crate::config::RailPolicy).
+///
+/// * `Static` (the default) delegates straight to
+///   [`Topology::route_tc`]: `Auto` hashes the endpoints onto a rail and
+///   explicit pins pass through — bit-identical to the policy-less
+///   behavior.
+/// * `Adaptive` resolves `Auto` inter-node transfers to the **emptiest
+///   plane**: each candidate rail's path (NIC tx/rx plus, on blocking
+///   fabrics, its leaf up/down and spine links) is scored by its
+///   most-loaded link — committed wire bytes normalized by link capacity
+///   — from the live [`LinkOccupancy`] the engine maintains; ties fall
+///   back to fewest in-flight flows, then lowest rail index, so routing
+///   stays fully deterministic. Explicit `Rail`/`Rails` pins are always
+///   honored.
+///
+/// ```
+/// use triton_dist_sim::config::{ClusterSpec, FabricSpec, RailPolicy, TrafficClass};
+/// use triton_dist_sim::topology::{LinkOccupancy, Router, Topology};
+///
+/// let cluster = ClusterSpec::h800(2, 8).with_fabric(
+///     FabricSpec::rail_optimized(2, 1.0).with_rail_policy(RailPolicy::Adaptive),
+/// );
+/// let topo = Topology::build(cluster);
+/// let router = Router::new(&topo);
+/// let mut occ = LinkOccupancy::new(topo.link_count());
+///
+/// // empty fabric: rail 0 wins the tie
+/// let r0 = router.route(0, 9, TrafficClass::Auto, &occ);
+/// // load rail 0's NIC pair; the next message balances onto rail 1
+/// occ.commit(&r0.links, 1e9);
+/// let r1 = router.route(0, 9, TrafficClass::Auto, &occ);
+/// assert_ne!(r0.links[0], r1.links[0], "adaptive router moved planes");
+/// ```
+pub struct Router<'t> {
+    topo: &'t Topology,
+    policy: RailPolicy,
+}
+
+impl<'t> Router<'t> {
+    /// Router with the policy recorded in the topology's fabric spec.
+    pub fn new(topo: &'t Topology) -> Self {
+        Router {
+            topo,
+            policy: topo.cluster.fabric.rail_policy,
+        }
+    }
+
+    /// Router with an explicit policy override, independent of what the
+    /// topology's fabric spec records (tests and analysis tools compare
+    /// policies over one built topology this way; the engine itself
+    /// always uses [`Router::new`]).
+    pub fn with_policy(topo: &'t Topology, policy: RailPolicy) -> Self {
+        Router { topo, policy }
+    }
+
+    pub fn policy(&self) -> RailPolicy {
+        self.policy
+    }
+
+    /// Resolve `tc` and route `src -> dst` under live occupancy.
+    pub fn route(&self, src: usize, dst: usize, tc: TrafficClass, occ: &LinkOccupancy) -> Route {
+        if self.policy == RailPolicy::Adaptive
+            && tc == TrafficClass::Auto
+            && src != dst
+            && self.topo.cluster.fabric.rails > 1
+            && self.topo.cluster.node_of(src) != self.topo.cluster.node_of(dst)
+        {
+            let rail = self.pick_rail(src, dst, occ);
+            return self.topo.route_tc(src, dst, TrafficClass::Rail(rail));
+        }
+        self.topo.route_tc(src, dst, tc)
+    }
+
+    /// The emptiest plane for `src -> dst`: minimize the candidate path's
+    /// bottleneck fill (committed bytes / capacity over its NIC and, on
+    /// blocking fabrics, leaf/spine links), breaking ties by in-flight
+    /// flow count and then rail index.
+    fn pick_rail(&self, src: usize, dst: usize, occ: &LinkOccupancy) -> u32 {
+        let t = self.topo;
+        let c = &t.cluster;
+        let fabric = c.fabric;
+        let rails = fabric.rails;
+        let blocking = fabric.is_blocking();
+        let mut best = 0u32;
+        let mut best_fill = f64::INFINITY;
+        let mut best_flows = u32::MAX;
+        for rail in 0..rails {
+            let mut fill = 0.0f64;
+            let mut flows = 0u32;
+            let mut scan = |lid: usize| {
+                let id = LinkId(lid);
+                let f = occ.committed_bytes(id) / t.links[lid].bw;
+                if f > fill {
+                    fill = f;
+                }
+                flows += occ.in_flight(id);
+            };
+            scan(t.nic_tx[src * rails + rail]);
+            if blocking {
+                scan(t.leaf_up[c.node_of(src) * rails + rail]);
+                scan(t.spine[rail]);
+                scan(t.leaf_down[c.node_of(dst) * rails + rail]);
+            }
+            scan(t.nic_rx[dst * rails + rail]);
+            if fill < best_fill || (fill == best_fill && flows < best_flows) {
+                best = rail as u32;
+                best_fill = fill;
+                best_flows = flows;
+            }
+        }
+        best
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -545,5 +733,86 @@ mod tests {
                 assert_eq!(r1.links, r2.links);
             }
         }
+    }
+
+    // -- rail router --------------------------------------------------------
+
+    use crate::config::RailPolicy;
+
+    #[test]
+    fn static_router_is_route_tc_passthrough() {
+        let t = railed(2, 8, 2, 2.0);
+        let router = Router::new(&t); // fabric policy defaults to Static
+        assert_eq!(router.policy(), RailPolicy::Static);
+        let mut occ = LinkOccupancy::new(t.link_count());
+        // even under heavy recorded load, Static ignores occupancy
+        occ.commit(&t.route_tc(0, 8, TrafficClass::Rail(0)).links, 1e12);
+        for tc in [
+            TrafficClass::Auto,
+            TrafficClass::Rail(1),
+            TrafficClass::Rails { tx: 0, rx: 1 },
+        ] {
+            let a = router.route(1, 9, tc, &occ);
+            let b = t.route_tc(1, 9, tc);
+            assert_eq!(a.links, b.links);
+            assert_eq!(a.latency.to_bits(), b.latency.to_bits());
+        }
+    }
+
+    #[test]
+    fn adaptive_router_moves_off_loaded_plane() {
+        let t = railed(2, 8, 2, 1.0);
+        let router = Router::with_policy(&t, RailPolicy::Adaptive);
+        let mut occ = LinkOccupancy::new(t.link_count());
+        // empty fabric: deterministic tie-break to rail 0
+        let r0 = router.route(0, 8, TrafficClass::Auto, &occ);
+        assert_eq!(t.link(r0.links[0]).kind, LinkKind::NicTx);
+        occ.commit(&r0.links, 1e9);
+        // rail 0 now carries a committed flow; the next pick balances
+        let r1 = router.route(0, 8, TrafficClass::Auto, &occ);
+        assert_ne!(r0.links[0], r1.links[0]);
+        occ.commit(&r1.links, 1e9);
+        // equal fills: tie-break back to rail 0
+        let r2 = router.route(0, 8, TrafficClass::Auto, &occ);
+        assert_eq!(r2.links[0], r0.links[0]);
+        // explicit pins are honored regardless of load
+        let pinned = router.route(0, 8, TrafficClass::Rail(0), &occ);
+        assert_eq!(pinned.links[0], r0.links[0]);
+    }
+
+    #[test]
+    fn adaptive_router_sees_shared_tier_congestion() {
+        // load rail 0's *spine plane* through a different endpoint pair;
+        // the adaptive pick for (0 -> 8) must still avoid plane 0 even
+        // though 0's own NIC links are idle.
+        let t = railed(4, 8, 2, 2.0);
+        let router = Router::with_policy(&t, RailPolicy::Adaptive);
+        let mut occ = LinkOccupancy::new(t.link_count());
+        let other = t.route_tc(17, 25, TrafficClass::Rail(0));
+        occ.commit(&other.links, 1e9);
+        let r = router.route(0, 8, TrafficClass::Auto, &occ);
+        let spine_owner = r
+            .links
+            .iter()
+            .find(|&&l| t.link(l).kind == LinkKind::Spine)
+            .map(|&l| t.link(l).owner)
+            .expect("blocking route must cross a spine plane");
+        assert_eq!(spine_owner, 1, "router should pick the empty plane 1");
+    }
+
+    #[test]
+    fn occupancy_release_clamps_and_counts() {
+        let mut occ = LinkOccupancy::new(2);
+        occ.commit(&[LinkId(0)], 100.0);
+        occ.commit(&[LinkId(0)], 50.0);
+        assert_eq!(occ.in_flight(LinkId(0)), 2);
+        occ.release(&[LinkId(0)], 100.0);
+        occ.release(&[LinkId(0)], 50.0);
+        assert_eq!(occ.committed_bytes(LinkId(0)), 0.0);
+        assert_eq!(occ.in_flight(LinkId(0)), 0);
+        // dust never goes negative
+        occ.release(&[LinkId(1)], 1.0);
+        assert_eq!(occ.committed_bytes(LinkId(1)), 0.0);
+        assert_eq!(occ.in_flight(LinkId(1)), 0);
     }
 }

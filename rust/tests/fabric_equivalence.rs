@@ -9,12 +9,21 @@
 //!    a 64-device AG+GEMM slows down vs the non-blocking fabric.
 //! 3. Collectives must stay numerically correct when their traffic is
 //!    rail-striped across a blocking multi-rail fabric.
+//! 4. The congestion-aware router (`RailPolicy::Adaptive`): with a single
+//!    flow it reproduces `Static` makespans bit-identically (no
+//!    contention means every plane is equivalent), it strictly beats
+//!    `Static` on deliberately skewed traffic, it keeps collectives
+//!    numerically correct, and the `a2a_ep_rails` asymmetric
+//!    `Rails { tx, rx }` routes land on exactly the claimed planes.
 
-use triton_dist_sim::collectives::alltoall::{a2a_ll, verify_alltoall, A2aBufs, A2aCfg};
+use triton_dist_sim::collectives::alltoall::{
+    a2a_ep_rails, a2a_ll, a2a_skew, verify_alltoall, A2aBufs, A2aCfg, A2aEpDir,
+};
 use triton_dist_sim::collectives::ProgBuild;
-use triton_dist_sim::config::{ClusterSpec, DType, FabricSpec, GemmShape};
+use triton_dist_sim::config::{ClusterSpec, DType, FabricSpec, GemmShape, RailPolicy, TrafficClass};
 use triton_dist_sim::coordinator::{ag_gemm, gemm_rs, run_timing};
 use triton_dist_sim::mem::SymmetricHeap;
+use triton_dist_sim::program::Op;
 use triton_dist_sim::shmem::ShmemCtx;
 use triton_dist_sim::sim::{NoopExecutor, Sim, SimConfig};
 use triton_dist_sim::topology::{LinkKind, Topology};
@@ -177,6 +186,185 @@ fn ag_inter_correct_on_railed_blocking_fabric() {
     let sim = Sim::new(&topo);
     sim.run(&pb.prog, &mut heap, &mut NoopExecutor).unwrap();
     verify_allgather(&heap, &bufs, &expected).unwrap();
+}
+
+// -- congestion-aware rail router -------------------------------------------
+
+/// The `rail_policy` field must be inert under `Static`: a railed fabric
+/// with the policy spelled out reproduces the PR-2 (policy-less) railed
+/// makespans bit-identically on the fig13 AG+GEMM and fig16 AllToAll
+/// shapes.
+#[test]
+fn explicit_static_policy_bit_identical_on_fig_shapes() {
+    let railed = ClusterSpec::h800(2, 8).with_fabric(FabricSpec::rail_optimized(2, 2.0));
+    let spelled = ClusterSpec::h800(2, 8)
+        .with_fabric(FabricSpec::rail_optimized(2, 2.0).with_rail_policy(RailPolicy::Static));
+    let shape = GemmShape::new(16 * 64, 128, 256);
+    assert_eq!(
+        ag_gemm_makespan(railed, shape).to_bits(),
+        ag_gemm_makespan(spelled, shape).to_bits()
+    );
+    assert_eq!(
+        a2a_makespan(railed, 1024).to_bits(),
+        a2a_makespan(spelled, 1024).to_bits()
+    );
+}
+
+/// A single flow can never contend, and every plane of a rail-split NIC
+/// has identical capacity and latency — so the adaptive router's pick
+/// (emptiest plane, tie-broken to rail 0) must produce the exact same
+/// makespan bits as the static hash, whatever plane each chose.
+#[test]
+fn adaptive_single_flow_matches_static_bit_identically() {
+    let makespan = |policy: RailPolicy| -> f64 {
+        let cluster = ClusterSpec::h800(2, 8)
+            .with_fabric(FabricSpec::rail_optimized(2, 2.0).with_rail_policy(policy));
+        let ctx = ShmemCtx::new(cluster, DType::BF16);
+        let topo = Topology::build(cluster);
+        let mut heap = SymmetricHeap::new(ctx.n_pes(), 16);
+        let buf = heap.alloc("x", 4096);
+        let mut pb = ProgBuild::new();
+        // auto_rail (the default modal state) exercises the policy path
+        let mut t = ctx.task(0, "single_put").on_copy_engine();
+        t.putmem(
+            triton_dist_sim::mem::Slice::new(0, buf, 0, 4096),
+            triton_dist_sim::mem::Slice::new(9, buf, 0, 4096),
+        );
+        pb.prog.push(t.build());
+        let sim = Sim::with_config(
+            &topo,
+            SimConfig {
+                numerics: false,
+                trace: false,
+            },
+        );
+        sim.run(&pb.prog, &mut heap, &mut NoopExecutor)
+            .unwrap()
+            .makespan
+    };
+    assert_eq!(
+        makespan(RailPolicy::Static).to_bits(),
+        makespan(RailPolicy::Adaptive).to_bits()
+    );
+}
+
+fn skew_makespan(policy: RailPolicy) -> f64 {
+    let cluster = ClusterSpec::h800(2, 8)
+        .with_fabric(FabricSpec::rail_optimized(2, 1.0).with_rail_policy(policy));
+    let ctx = ShmemCtx::new(cluster, DType::BF16);
+    let topo = Topology::build(cluster);
+    let mut heap = SymmetricHeap::new(ctx.n_pes(), 4 * ctx.n_pes());
+    let bufs = A2aBufs::alloc(&mut heap, &ctx, 8192);
+    let mut pb = ProgBuild::new();
+    a2a_skew(&ctx, &bufs, &mut pb, &A2aCfg::ours(), 8.0);
+    let sim = Sim::with_config(
+        &topo,
+        SimConfig {
+            numerics: false,
+            trace: false,
+        },
+    );
+    sim.run(&pb.prog, &mut heap, &mut NoopExecutor)
+        .unwrap()
+        .makespan
+}
+
+/// Acceptance: on the size-skewed AllToAll (`alltoall-adaptive-skew`
+/// scenario) the congestion-aware router is **strictly** faster — static
+/// round-robin maps the size skew straight onto one plane while adaptive
+/// re-balances from live committed bytes.
+#[test]
+fn adaptive_strictly_beats_static_on_skewed_alltoall() {
+    let stat = skew_makespan(RailPolicy::Static);
+    let adap = skew_makespan(RailPolicy::Adaptive);
+    assert!(
+        adap < stat,
+        "adaptive {adap} must be strictly below static {stat}"
+    );
+    // and not by luck of a tie — the rebalancing is worth a real margin
+    assert!(
+        adap < stat * 0.95,
+        "expected >= 5% win, got adaptive {adap} vs static {stat}"
+    );
+}
+
+/// The adaptively-striped AllToAll stays numerically correct (the router
+/// only picks planes; delivery and signaling are untouched).
+#[test]
+fn a2a_correct_under_adaptive_router() {
+    let cluster = ClusterSpec::h800(2, 8)
+        .with_fabric(FabricSpec::rail_optimized(2, 2.0).with_rail_policy(RailPolicy::Adaptive));
+    let ctx = ShmemCtx::new(cluster, DType::BF16);
+    let topo = Topology::build(cluster);
+    let mut heap = SymmetricHeap::new(ctx.n_pes(), 4 * ctx.n_pes());
+    let bufs = A2aBufs::alloc(&mut heap, &ctx, 32);
+    triton_dist_sim::collectives::alltoall::fill_a2a_inputs(&mut heap, &bufs, 5);
+    let mut pb = ProgBuild::new();
+    a2a_ll(&ctx, &bufs, &mut pb, &A2aCfg::ours());
+    let sim = Sim::new(&topo);
+    sim.run(&pb.prog, &mut heap, &mut NoopExecutor).unwrap();
+    verify_alltoall(&heap, &bufs).unwrap();
+}
+
+/// Acceptance: `a2a_ep_rails` combine emits at least one spine-crossing
+/// `Rails { tx != rx }` class, and routing that class on a tapered
+/// blocking fabric lands on exactly the claimed planes: the tx plane's
+/// NIC/leaf on the send side, **both** spine planes, and the rx plane's
+/// leaf/NIC on the receive side.
+#[test]
+fn ep_rails_asymmetric_routes_land_on_claimed_planes() {
+    let cluster = ClusterSpec::h800(2, 8)
+        .with_fabric(FabricSpec::rail_optimized(2, 2.0).with_spine_taper(2.0));
+    let ctx = ShmemCtx::new(cluster, DType::BF16);
+    let topo = Topology::build(cluster);
+    let mut heap = SymmetricHeap::new(ctx.n_pes(), 4 * ctx.n_pes());
+    let bufs = A2aBufs::alloc(&mut heap, &ctx, 16);
+    let mut pb = ProgBuild::new();
+    a2a_ep_rails(&ctx, &bufs, &mut pb, &A2aCfg::ours(), A2aEpDir::Combine);
+
+    let mut crossing = 0usize;
+    for task in &pb.prog.tasks {
+        for op in &task.ops {
+            let Op::LLPut { src, dst, tc, .. } = op else {
+                continue;
+            };
+            if cluster.node_of(src.rank) == cluster.node_of(dst.rank) {
+                continue;
+            }
+            let TrafficClass::Rails { tx, rx } = *tc else {
+                panic!("inter-node EP message without explicit planes: {tc:?}");
+            };
+            // the claimed planes are the endpoints' home planes
+            assert_eq!(tx as usize, cluster.local_rank(src.rank) % 2);
+            assert_eq!(rx as usize, cluster.local_rank(dst.rank) % 2);
+            if tx == rx {
+                continue;
+            }
+            crossing += 1;
+            let route = topo.route_tc(src.rank, dst.rank, *tc);
+            let spine_owners: Vec<usize> = route
+                .links
+                .iter()
+                .filter(|&&l| topo.link(l).kind == LinkKind::Spine)
+                .map(|&l| topo.link(l).owner)
+                .collect();
+            assert_eq!(
+                spine_owners,
+                vec![tx as usize, rx as usize],
+                "spine-crossing path must traverse tx then rx plane"
+            );
+            // NIC endpoints belong to the transfer's endpoints
+            assert_eq!(topo.link(route.links[0]).kind, LinkKind::NicTx);
+            assert_eq!(topo.link(route.links[0]).owner, src.rank);
+            let last = *route.links.last().unwrap();
+            assert_eq!(topo.link(last).kind, LinkKind::NicRx);
+            assert_eq!(topo.link(last).owner, dst.rank);
+        }
+    }
+    assert!(
+        crossing > 0,
+        "combine direction must produce spine-crossing routes"
+    );
 }
 
 /// Splitting the NIC into rails without oversubscription keeps aggregate
