@@ -49,14 +49,13 @@ fn main() {
             )],
         });
         // combine: DeepEP's memory queue handles topk partials per token
-        let deepep_combine = A2aCfg {
-            queue_overhead: A2aCfg::deepep().queue_overhead * 3.0,
-            ..A2aCfg::deepep()
-        };
         combine.push(SpeedupRow {
             workload: format!("{ws} GPUs"),
             ours: run_cfg(cluster, comb_chunk, None),
-            baselines: vec![("deepep".into(), run_cfg(cluster, comb_chunk, Some(deepep_combine)))],
+            baselines: vec![(
+                "deepep".into(),
+                run_cfg(cluster, comb_chunk, Some(A2aCfg::deepep_combine())),
+            )],
         });
     }
     println!("{}", dispatch.render());

@@ -19,6 +19,12 @@
 //!   tracks the router's overhead on the event path; the run also prints
 //!   the static-vs-adaptive virtual makespans (adaptive must be strictly
 //!   lower — pinned by `tests/fabric_equivalence.rs`).
+//! * `moe-ep-skew` — 16-rank token-routed EP MoE on a 2-rail tapered
+//!   fabric: the routing-sized dispatch/combine programs (balanced vs
+//!   skewed expert popularity x static vs adaptive router); the run
+//!   prints the makespan matrix and the token-routed vs fixed-capacity
+//!   win (routed must be strictly lower — pinned by the coordinator's
+//!   test suite).
 //! * `ag_gemm-build+run` — single-node AG+GEMM, program build + engine.
 //! * `ag_gemm-multinode` — 4x8 inter-node AG+GEMM (NIC contention path).
 //! * `ag_gemm-numerics(native)` — data movement through the heap.
@@ -26,8 +32,8 @@
 use triton_dist_sim::bench::{banner, bench_wall};
 use triton_dist_sim::collectives::alltoall::{a2a_ll, a2a_skew, A2aBufs, A2aCfg};
 use triton_dist_sim::collectives::ProgBuild;
-use triton_dist_sim::config::{ClusterSpec, DType, FabricSpec, GemmShape, RailPolicy};
-use triton_dist_sim::coordinator::ag_gemm;
+use triton_dist_sim::config::{ClusterSpec, DType, FabricSpec, GemmShape, MoeShape, RailPolicy};
+use triton_dist_sim::coordinator::{ag_gemm, ep_moe};
 use triton_dist_sim::mem::SymmetricHeap;
 use triton_dist_sim::metrics::{engine_bench_json, EngineBenchRecord};
 use triton_dist_sim::shmem::ShmemCtx;
@@ -153,6 +159,60 @@ fn main() {
         static_makespan / adaptive_makespan
     );
     report(&mut records, "alltoall-adaptive-skew", events_skew, &stat_skew);
+
+    // token-routed EP MoE over the railed fabric: build + run of the
+    // whole pipeline (pack -> railed dispatch -> grouped FFN -> combine
+    // crossing planes -> reduction), balanced vs skewed popularity x
+    // static vs adaptive router, plus the fixed-capacity baseline race
+    let ep_run = |skew: f64, policy: RailPolicy, variant: ep_moe::EpMoeVariant| -> (u64, f64) {
+        let cluster = ClusterSpec::h800(2, 8).with_fabric(
+            FabricSpec::rail_optimized(2, 2.0)
+                .with_spine_taper(2.0)
+                .with_rail_policy(policy),
+        );
+        let shape = MoeShape {
+            tokens_per_rank: 128,
+            in_hidden: 512,
+            out_hidden: 512,
+            experts: 32,
+            topk: 4,
+            ..MoeShape::default()
+        }
+        .with_skew(skew);
+        let routing = ep_moe::routing_for(cluster, &shape, 11);
+        let topo = Topology::build(cluster);
+        let (mut op, _bufs) = ep_moe::build_ep_moe(cluster, shape, &routing, variant);
+        let sim = Sim::with_config(
+            &topo,
+            SimConfig {
+                numerics: false,
+                trace: false,
+            },
+        );
+        let rep = sim.run(&op.prog, &mut op.heap, &mut NoopExecutor).unwrap();
+        (rep.events, rep.makespan)
+    };
+    for (tag, skew, policy) in [
+        ("balanced/static", 0.0, RailPolicy::Static),
+        ("skewed/static", 1.2, RailPolicy::Static),
+        ("skewed/adaptive", 1.2, RailPolicy::Adaptive),
+    ] {
+        let (_, routed) = ep_run(skew, policy, ep_moe::EpMoeVariant::TokenRouted);
+        let (_, fixed) = ep_run(skew, policy, ep_moe::EpMoeVariant::FixedCapacity);
+        println!(
+            "  {tag:<18} token-routed {:.3} us vs fixed-capacity {:.3} us ({:.2}x)",
+            routed * 1e6,
+            fixed * 1e6,
+            fixed / routed
+        );
+    }
+    let mut events_ep = 0u64;
+    let stat_ep = bench_wall("moe-ep-skew", 1, 5, || {
+        let (ev, _) = ep_run(1.2, RailPolicy::Adaptive, ep_moe::EpMoeVariant::TokenRouted);
+        events_ep = ev;
+    });
+    println!("{}", stat_ep.render());
+    report(&mut records, "moe-ep-skew", events_ep, &stat_ep);
 
     // AG+GEMM with numerics off — program-build + engine cost
     let cluster = ClusterSpec::h800(1, 8);

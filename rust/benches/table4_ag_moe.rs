@@ -17,6 +17,7 @@ pub fn rows() -> Vec<MoeShape> {
         out_hidden: f,
         experts: e,
         topk: k,
+        ..MoeShape::default()
     };
     vec![
         mk(256, 2048, 1408, 60, 4),

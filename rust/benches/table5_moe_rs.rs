@@ -17,6 +17,7 @@ pub fn rows() -> Vec<MoeShape> {
         out_hidden: f,
         experts: e,
         topk: k,
+        ..MoeShape::default()
     };
     vec![
         mk(1536, 2048, 8, 2),

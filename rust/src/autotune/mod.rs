@@ -141,6 +141,29 @@ pub fn tune_rail_policy(
     })
 }
 
+/// Tune the EP **dispatch chunking** jointly with the rail policy: the
+/// grid is `{Static, Adaptive} x splits`, where the split factor is how
+/// many LL sub-messages each routed dispatch chunk is cut into
+/// (`A2aCfg::split` / `A2aCfg::with_split`). Splitting engages several
+/// NIC planes per logical message — a win when a sender has fewer large
+/// messages than rails — at the cost of one post overhead per piece; the
+/// tuner rebuilds and profiles the whole target function per grid point
+/// exactly like [`tune_rail_policy`] does per policy.
+pub fn tune_dispatch_chunking(
+    name: &str,
+    splits: &[usize],
+    mut eval: impl FnMut(RailPolicy, usize) -> Result<f64, String>,
+) -> Result<TuneResult<(RailPolicy, usize)>, String> {
+    assert!(splits.iter().all(|&s| s >= 1), "split factors must be >= 1");
+    let mut grid = Vec::with_capacity(2 * splits.len());
+    for policy in [RailPolicy::Static, RailPolicy::Adaptive] {
+        for &s in splits {
+            grid.push((policy, s));
+        }
+    }
+    tune_rebuild(name, &grid, |&(p, s)| eval(p, s))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -234,6 +257,46 @@ mod tests {
             r.best.config,
             RailPolicy::Adaptive,
             "adaptive must win the skewed workload: {:?}",
+            r.trials
+        );
+    }
+
+    #[test]
+    fn dispatch_chunking_is_a_tunable_axis() {
+        // one big inter-node message per sender on a 2-rail fabric: an
+        // unsplit stream rides a single plane; splitting engages both,
+        // so the tuner must discover a split factor > 1
+        use crate::collectives::alltoall::{a2a_ll, A2aBufs, A2aCfg};
+        use crate::collectives::ProgBuild;
+        use crate::config::{ClusterSpec, DType, FabricSpec};
+        use crate::shmem::ShmemCtx;
+        use crate::sim::{NoopExecutor, Sim, SimConfig};
+        use crate::topology::Topology;
+        let r = tune_dispatch_chunking("dispatch chunking (2-rail)", &[1, 2, 4], |policy, split| {
+            let cluster = ClusterSpec::h800(2, 1)
+                .with_fabric(FabricSpec::rail_optimized(2, 1.0).with_rail_policy(policy));
+            let ctx = ShmemCtx::new(cluster, DType::BF16);
+            let topo = Topology::build(cluster);
+            let mut heap = SymmetricHeap::new(ctx.n_pes(), 16);
+            let bufs = A2aBufs::alloc(&mut heap, &ctx, 1 << 16);
+            let mut pb = ProgBuild::new();
+            a2a_ll(&ctx, &bufs, &mut pb, &A2aCfg::ours().with_split(split));
+            let sim = Sim::with_config(
+                &topo,
+                SimConfig {
+                    numerics: false,
+                    trace: false,
+                },
+            );
+            sim.run(&pb.prog, &mut heap, &mut NoopExecutor)
+                .map(|rep| rep.makespan)
+                .map_err(|e| e.to_string())
+        })
+        .unwrap();
+        assert_eq!(r.trials.len(), 6);
+        assert!(
+            r.best.config.1 > 1,
+            "splitting must engage the second plane: {:?}",
             r.trials
         );
     }

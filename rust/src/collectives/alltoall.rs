@@ -10,11 +10,23 @@
 //! intra-node ones, plus a memory-queue management cost per message. This
 //! encodes exactly the structural trade the paper describes: we win up to
 //! ~32 ranks on NVLink + simplicity, IBGDA wins at 64+.
+//!
+//! **Variable-size (token-routed) family:** expert-parallel traffic is
+//! data-dependent — message sizes follow the topk routing table, not a
+//! uniform capacity. [`EpRouting`] summarizes a routing table into
+//! per-(src, dst) kept-token counts, [`A2aSizes`]/[`A2aVarBufs`] turn
+//! those into a packed wire layout, and [`a2a_ll_var`] /
+//! [`a2a_ep_rails_var`] build the same LL program over it (one shared
+//! body, [`A2aLayout`]). A uniform size table reproduces the classic
+//! fixed-chunk programs bit-identically.
 
+use crate::kernels::exec::EpPlan;
+use crate::kernels::names::EpGeom;
 use crate::mem::{BufId, Slice, SymmetricHeap};
-use crate::program::{ComputeCost, NumericOp, Op, SigOp};
+use crate::program::{ComputeCost, NumericOp, Op, SigCond, SigOp};
 use crate::shmem::{ShmemCtx, ShmemTask};
 use crate::topology::Topology;
+use crate::util::Rng;
 
 use super::ProgBuild;
 
@@ -61,6 +73,287 @@ impl A2aBufs {
     }
 }
 
+// ---------------------------------------------------------------------------
+// variable-size (token-routed) AllToAll
+// ---------------------------------------------------------------------------
+
+/// Per-(src, dst) message-size table for the variable-size AllToAll
+/// family: the wire is sized by *actual* routed elements instead of one
+/// uniform `chunk`. [`A2aSizes::uniform`] reproduces the uniform layout
+/// exactly (same offsets, same lengths), which is what keeps the uniform
+/// path bit-identical to [`a2a_ll`].
+#[derive(Debug, Clone)]
+pub struct A2aSizes {
+    ws: usize,
+    /// Elements per (src, dst) message, indexed `src * ws + dst`.
+    elems: Vec<usize>,
+}
+
+impl A2aSizes {
+    /// Explicit per-(src, dst) element counts (`elems[src * ws + dst]`).
+    pub fn new(ws: usize, elems: Vec<usize>) -> Self {
+        assert_eq!(elems.len(), ws * ws, "size table must be ws x ws");
+        A2aSizes { ws, elems }
+    }
+
+    /// Every message `chunk` elements — the classic fixed-capacity wire.
+    pub fn uniform(ws: usize, chunk: usize) -> Self {
+        A2aSizes {
+            ws,
+            elems: vec![chunk; ws * ws],
+        }
+    }
+
+    /// World size this table describes.
+    pub fn world(&self) -> usize {
+        self.ws
+    }
+
+    /// Elements routed from `src` to `dst`.
+    pub fn elems(&self, src: usize, dst: usize) -> usize {
+        self.elems[src * self.ws + dst]
+    }
+
+    /// Offset of the (src -> dst) chunk in `src`'s send buffer
+    /// (dst-ascending packing; `dst * chunk` on a uniform table).
+    pub fn send_off(&self, src: usize, dst: usize) -> usize {
+        (0..dst).map(|d| self.elems(src, d)).sum()
+    }
+
+    /// Offset of the slot for `src`'s data in `dst`'s receive buffer
+    /// (src-ascending packing; `src * chunk` on a uniform table).
+    pub fn recv_off(&self, src: usize, dst: usize) -> usize {
+        (0..src).map(|s| self.elems(s, dst)).sum()
+    }
+
+    /// Total elements `src` sends (its packed send-buffer length).
+    pub fn send_total(&self, src: usize) -> usize {
+        self.send_off(src, self.ws)
+    }
+
+    /// Total elements `dst` receives (its packed recv-buffer length).
+    pub fn recv_total(&self, dst: usize) -> usize {
+        self.recv_off(self.ws, dst)
+    }
+
+    fn max_send_total(&self) -> usize {
+        (0..self.ws).map(|s| self.send_total(s)).max().unwrap_or(0)
+    }
+
+    fn max_recv_total(&self) -> usize {
+        (0..self.ws).map(|d| self.recv_total(d)).max().unwrap_or(0)
+    }
+}
+
+/// Working set of the variable-size AllToAll: packed send/recv/LL
+/// buffers whose per-(src, dst) chunk offsets come from an [`A2aSizes`]
+/// table. The symmetric heap requires identical buffer lengths on every
+/// rank, so buffers are sized for the largest rank's packed total.
+#[derive(Debug, Clone)]
+pub struct A2aVarBufs {
+    pub send: BufId,
+    pub recv: BufId,
+    /// LL staging on the receive side (recv-packed layout).
+    pub ll: BufId,
+    pub sizes: A2aSizes,
+    pub sig_base: usize,
+}
+
+impl A2aVarBufs {
+    pub fn alloc(heap: &mut SymmetricHeap, sizes: A2aSizes) -> Self {
+        assert_eq!(sizes.world(), heap.world(), "size table world mismatch");
+        let send_len = sizes.max_send_total().max(1);
+        let recv_len = sizes.max_recv_total().max(1);
+        A2aVarBufs {
+            send: heap.alloc("a2a_var_send", send_len),
+            recv: heap.alloc("a2a_var_recv", recv_len),
+            ll: heap.alloc("a2a_var_ll", recv_len),
+            sizes,
+            sig_base: 0,
+        }
+    }
+
+    pub fn send_chunk(&self, dst: usize, on: usize) -> Slice {
+        Slice::new(on, self.send, self.sizes.send_off(on, dst), self.sizes.elems(on, dst))
+    }
+
+    pub fn recv_slot(&self, src: usize, on: usize) -> Slice {
+        Slice::new(on, self.recv, self.sizes.recv_off(src, on), self.sizes.elems(src, on))
+    }
+
+    pub fn ll_slot(&self, src: usize, on: usize) -> Slice {
+        Slice::new(on, self.ll, self.sizes.recv_off(src, on), self.sizes.elems(src, on))
+    }
+
+    /// Arrival signal for the chunk from `src`.
+    pub fn sig(&self, src: usize) -> usize {
+        self.sig_base + src
+    }
+}
+
+/// Buffer-layout view the shared LL program body builds against: the
+/// uniform [`A2aBufs`] and the routed [`A2aVarBufs`] expose identical
+/// chunk/slot/signal accessors, so one builder serves both (and the
+/// uniform case stays bit-identical by construction).
+pub trait A2aLayout {
+    /// Elements routed from `src` to `dst` (0 = no message on the wire).
+    fn elems(&self, src: usize, dst: usize) -> usize;
+    /// The (on -> dst) chunk in `on`'s send buffer.
+    fn send_chunk(&self, dst: usize, on: usize) -> Slice;
+    /// The slot for `src`'s data in `on`'s receive buffer.
+    fn recv_slot(&self, src: usize, on: usize) -> Slice;
+    /// The LL staging slot paired with [`Self::recv_slot`].
+    fn ll_slot(&self, src: usize, on: usize) -> Slice;
+    /// Arrival signal index for the chunk from `src`.
+    fn sig(&self, src: usize) -> usize;
+}
+
+impl A2aLayout for A2aBufs {
+    fn elems(&self, _src: usize, _dst: usize) -> usize {
+        self.chunk
+    }
+    fn send_chunk(&self, dst: usize, on: usize) -> Slice {
+        A2aBufs::send_chunk(self, dst, on)
+    }
+    fn recv_slot(&self, src: usize, on: usize) -> Slice {
+        A2aBufs::recv_slot(self, src, on)
+    }
+    fn ll_slot(&self, src: usize, on: usize) -> Slice {
+        A2aBufs::ll_slot(self, src, on)
+    }
+    fn sig(&self, src: usize) -> usize {
+        A2aBufs::sig(self, src)
+    }
+}
+
+impl A2aLayout for A2aVarBufs {
+    fn elems(&self, src: usize, dst: usize) -> usize {
+        self.sizes.elems(src, dst)
+    }
+    fn send_chunk(&self, dst: usize, on: usize) -> Slice {
+        A2aVarBufs::send_chunk(self, dst, on)
+    }
+    fn recv_slot(&self, src: usize, on: usize) -> Slice {
+        A2aVarBufs::recv_slot(self, src, on)
+    }
+    fn ll_slot(&self, src: usize, on: usize) -> Slice {
+        A2aVarBufs::ll_slot(self, src, on)
+    }
+    fn sig(&self, src: usize) -> usize {
+        A2aVarBufs::sig(self, src)
+    }
+}
+
+/// Expert-parallel routing summary: the topk table + gate weights that
+/// drive the variable-size wire. `tokens(src, expert)` counts the kept
+/// routed pairs, [`Self::dispatch_sizes`] / [`Self::combine_sizes`] turn
+/// the per-(src, dst) kept counts into [`A2aSizes`] tables, and the
+/// underlying [`EpPlan`] is the same one the `ep_*` kernels rebuild from
+/// the replicated table — sender, receiver, and verifier agree on every
+/// chunk size by construction.
+#[derive(Debug, Clone)]
+pub struct EpRouting {
+    /// Pipeline geometry (world, experts, topk, capacity, dims).
+    pub geom: EpGeom,
+    /// topk expert index per (rank-owned token, k) slot, `[w * t * k]`.
+    pub idx: Vec<usize>,
+    /// Gate weight per slot, same indexing.
+    pub gate: Vec<f32>,
+    plan: EpPlan,
+}
+
+impl EpRouting {
+    /// Sample a routing table with Zipf-like expert popularity
+    /// (`weight_e ∝ 1 / (e + 1)^skew`; `skew = 0` is uniform), then run
+    /// the capacity claim (`geom.c` slots per expert, global scan order).
+    pub fn generate(geom: EpGeom, skew: f64, seed: u64) -> Self {
+        assert!(geom.w > 0 && geom.t > 0 && geom.k > 0 && geom.e > 0, "empty EP geometry");
+        assert!(skew >= 0.0, "skew exponent must be >= 0");
+        let mut rng = Rng::new(seed ^ 0xE9C0_77A1);
+        let weights: Vec<f64> = (0..geom.e).map(|i| 1.0 / ((i + 1) as f64).powf(skew)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut cum = Vec::with_capacity(geom.e);
+        let mut acc = 0.0;
+        for w in &weights {
+            acc += w / total;
+            cum.push(acc);
+        }
+        let slots = geom.w * geom.t * geom.k;
+        let mut idx = Vec::with_capacity(slots);
+        let mut gate = Vec::with_capacity(slots);
+        for _ in 0..slots {
+            let u = rng.f64();
+            idx.push(cum.partition_point(|&c| c < u).min(geom.e - 1));
+            gate.push(rng.f32().max(0.05));
+        }
+        let plan = EpPlan::build(&idx, geom);
+        EpRouting { geom, idx, gate, plan }
+    }
+
+    /// Build from an explicit topk table (`idx[(src*t + ti)*k + ki]`).
+    pub fn from_table(geom: EpGeom, idx: Vec<usize>, gate: Vec<f32>) -> Self {
+        assert_eq!(gate.len(), idx.len(), "gate/idx size mismatch");
+        let plan = EpPlan::build(&idx, geom);
+        EpRouting { geom, idx, gate, plan }
+    }
+
+    /// The capacity-claimed routing plan (shared with the `ep_*` kernels).
+    pub fn plan(&self) -> &EpPlan {
+        &self.plan
+    }
+
+    /// Kept routed (token, k) pairs from `src` to `expert`.
+    pub fn tokens(&self, src: usize, expert: usize) -> usize {
+        let (t, k) = (self.geom.t, self.geom.k);
+        (0..t * k)
+            .filter(|p| {
+                let gi = src * t * k + p;
+                self.idx[gi] == expert && self.plan.dst_of(gi).is_some()
+            })
+            .count()
+    }
+
+    /// Dispatch wire sizes: kept pairs x token hidden per (src, dst).
+    pub fn dispatch_sizes(&self) -> A2aSizes {
+        let (w, h) = (self.geom.w, self.geom.h);
+        A2aSizes::new(w, (0..w * w).map(|i| self.plan.count(i / w, i % w) * h).collect())
+    }
+
+    /// Combine wire sizes: the dispatch transpose x FFN output dim —
+    /// expert rank `d` returns `count(owner, d)` rows of `f` to `owner`.
+    pub fn combine_sizes(&self) -> A2aSizes {
+        let (w, f) = (self.geom.w, self.geom.f);
+        A2aSizes::new(w, (0..w * w).map(|i| self.plan.count(i % w, i / w) * f).collect())
+    }
+
+    /// Total kept pairs across the world.
+    pub fn kept(&self) -> usize {
+        self.plan.kept()
+    }
+
+    /// Pairs dropped by the capacity claim (`--capacity-factor`
+    /// accounting).
+    pub fn dropped(&self) -> usize {
+        self.plan.dropped()
+    }
+}
+
+/// Ceil-balanced sub-ranges of `[0, elems)` for the split-factor wire
+/// (at most one piece per element; every piece non-empty).
+fn split_ranges(elems: usize, split: usize) -> Vec<(usize, usize)> {
+    let pieces = split.clamp(1, elems.max(1));
+    let base = elems / pieces;
+    let rem = elems % pieces;
+    let mut out = Vec::with_capacity(pieces);
+    let mut off = 0;
+    for i in 0..pieces {
+        let len = base + usize::from(i < rem);
+        out.push((off, len));
+        off += len;
+    }
+    out
+}
+
 /// Transport/runtime knobs distinguishing our kernel from DeepEP.
 #[derive(Debug, Clone, Copy)]
 pub struct A2aCfg {
@@ -73,6 +366,15 @@ pub struct A2aCfg {
     /// Per-message memory-queue management cost (DeepEP's queue logic;
     /// we "allocate a much larger buffer and omit the control logic").
     pub queue_overhead: f64,
+    /// Sub-messages each (src, dst) chunk is split into by the LL builder
+    /// family (`a2a_ll`, `a2a_ep_rails`, and their `_var` variable-size
+    /// forms). Every piece pays the per-message post overhead and gets
+    /// its own plane assignment, so splitting can engage several rails
+    /// per logical message at the cost of extra posts — the dispatch
+    /// chunking the §3.8 tuner explores
+    /// (`autotune::tune_dispatch_chunking`). `1` (the default) is the
+    /// unsplit wire, bit-identical to the pre-split builders.
+    pub split: usize,
 }
 
 impl A2aCfg {
@@ -84,6 +386,7 @@ impl A2aCfg {
             inter_msg_overhead: 1.45e-6,
             intra_via_nic: false,
             queue_overhead: 0.0,
+            split: 1,
         }
     }
 
@@ -93,27 +396,58 @@ impl A2aCfg {
             inter_msg_overhead: 0.15e-6,
             intra_via_nic: true,
             queue_overhead: 0.2e-6,
+            split: 1,
         }
+    }
+
+    /// DeepEP-like knobs for the **combine** direction: ~3x the queue
+    /// cost, because topk partials per token flow through the memory
+    /// queue (the ad-hoc config the CLI and fig16 bench previously built
+    /// inline).
+    pub fn deepep_combine() -> Self {
+        let base = Self::deepep();
+        A2aCfg {
+            queue_overhead: base.queue_overhead * 3.0,
+            ..base
+        }
+    }
+
+    /// Set the sub-message split factor (see [`A2aCfg::split`]).
+    pub fn with_split(mut self, split: usize) -> Self {
+        assert!(split >= 1, "split factor must be >= 1");
+        self.split = split;
+        self
     }
 }
 
-/// Shared LL AllToAll program body: per rank, a self-copy, a shifted send
-/// walk whose inter-node messages get a per-message plane assignment via
-/// `plane(task, src, dst, inter_idx)`, a quiet fence, and `ws - 1`
-/// receive/unpack blocks. [`a2a_ll`] stripes through the fabric's rail
-/// policy; [`a2a_ep_rails`] pins explicit (possibly asymmetric) planes.
-fn a2a_ll_body(
+/// Shared LL AllToAll program body, generic over the buffer layout
+/// ([`A2aLayout`]: uniform [`A2aBufs`] or token-routed [`A2aVarBufs`]):
+/// per rank, a self-copy, a shifted send walk whose inter-node messages
+/// get a per-message plane assignment via `plane(task, src, dst,
+/// inter_idx)`, a quiet fence, and `ws - 1` receive/unpack blocks.
+/// [`a2a_ll`] stripes through the fabric's rail policy; [`a2a_ep_rails`]
+/// pins explicit (possibly asymmetric) planes.
+///
+/// Variable-size extensions (all inert on the uniform path):
+/// * `gate` — the send walk first waits for local signal `gate` to reach
+///   1 (the producer's "chunks are packed" handoff).
+/// * zero-element messages put nothing on the wire; their receive block
+///   still fires the arrival signal so consumers wait uniformly.
+/// * `cfg.split > 1` splits every chunk into that many LL pieces, each
+///   paying the post overhead and taking its own plane assignment.
+#[allow(clippy::too_many_arguments)]
+fn a2a_ll_body<L: A2aLayout>(
     ctx: &ShmemCtx,
-    bufs: &A2aBufs,
+    bufs: &L,
     pb: &mut ProgBuild,
     cfg: &A2aCfg,
     who: &'static str,
     prefix: &str,
+    gate: Option<usize>,
     mut plane: impl FnMut(&mut ShmemTask, usize, usize, usize),
 ) {
     let ws = ctx.n_pes();
-    pb.claim_sigs(who, bufs.sig_base, ws);
-    let chunk_bytes = ctx.bytes(bufs.chunk);
+    pb.claim_sigs(who, bufs.sig(0), ws);
 
     for r in 0..ws {
         let node = ctx.node_of(r);
@@ -121,36 +455,52 @@ fn a2a_ll_body(
             .task(r, format!("{prefix}_send[{r}]"))
             .with_sms(1)
             .launch_overhead();
+        if let Some(g) = gate {
+            send.signal_wait_until(g, SigCond::Ge, 1);
+        }
         // self chunk: local copy, immediately available
-        send.op(Op::Compute {
-            cost: ComputeCost::MemBound {
-                bytes: chunk_bytes * 2.0,
-            },
-            numeric: NumericOp::Copy {
-                src: bufs.send_chunk(r, r),
-                dst: bufs.recv_slot(r, r),
-            },
-            label: "a2a_self_copy",
-        });
+        let self_elems = bufs.elems(r, r);
+        if self_elems > 0 {
+            send.op(Op::Compute {
+                cost: ComputeCost::MemBound {
+                    bytes: ctx.bytes(self_elems) * 2.0,
+                },
+                numeric: NumericOp::Copy {
+                    src: bufs.send_chunk(r, r),
+                    dst: bufs.recv_slot(r, r),
+                },
+                label: "a2a_self_copy",
+            });
+        }
         send.notify(r, bufs.sig(r), SigOp::Set, 1);
         let mut inter_idx = 0usize;
         for i in 1..ws {
             let dst = (r + i) % ws;
-            if ctx.node_of(dst) != node {
-                // IBRC/IBGDA post cost, serialized in the sender, then
-                // the message's fabric plane assignment
-                send.op(Op::Sleep {
-                    secs: cfg.inter_msg_overhead,
-                });
-                plane(&mut send, r, dst, inter_idx);
-                inter_idx += 1;
+            let elems = bufs.elems(r, dst);
+            if elems == 0 {
+                continue;
             }
-            if cfg.queue_overhead > 0.0 {
-                send.op(Op::Sleep {
-                    secs: cfg.queue_overhead,
-                });
+            let inter = ctx.node_of(dst) != node;
+            for (off, len) in split_ranges(elems, cfg.split) {
+                if inter {
+                    // IBRC/IBGDA post cost, serialized in the sender,
+                    // then the piece's fabric plane assignment
+                    send.op(Op::Sleep {
+                        secs: cfg.inter_msg_overhead,
+                    });
+                    plane(&mut send, r, dst, inter_idx);
+                    inter_idx += 1;
+                }
+                if cfg.queue_overhead > 0.0 {
+                    send.op(Op::Sleep {
+                        secs: cfg.queue_overhead,
+                    });
+                }
+                send.ll_put(
+                    bufs.send_chunk(dst, r).sub(off, len),
+                    bufs.ll_slot(r, dst).sub(off, len),
+                );
             }
-            send.ll_put(bufs.send_chunk(dst, r), bufs.ll_slot(r, dst));
         }
         send.quiet();
         pb.prog.push(send.build());
@@ -160,14 +510,26 @@ fn a2a_ll_body(
             if src == r {
                 continue;
             }
+            let elems = bufs.elems(src, r);
+            if elems == 0 {
+                // nothing on the wire — the arrival signal still fires
+                let mut t = ctx
+                    .task(r, format!("{prefix}_recv[{r}<-{src}]"))
+                    .with_sms(1);
+                t.notify(r, bufs.sig(src), SigOp::Set, 1);
+                pb.prog.push(t.build());
+                continue;
+            }
             let mut t = ctx
                 .task(r, format!("{prefix}_recv[{r}<-{src}]"))
                 .with_sms(1)
                 .launch_overhead();
-            t.recv_ll(bufs.ll_slot(src, r));
+            for (off, len) in split_ranges(elems, cfg.split) {
+                t.recv_ll(bufs.ll_slot(src, r).sub(off, len));
+            }
             t.op(Op::Compute {
                 cost: ComputeCost::MemBound {
-                    bytes: chunk_bytes * 2.0,
+                    bytes: ctx.bytes(elems) * 2.0,
                 },
                 numeric: NumericOp::Copy {
                     src: bufs.ll_slot(src, r),
@@ -192,7 +554,25 @@ fn a2a_ll_body(
 /// Inter-node messages stripe across NIC rails (round-robin, or by live
 /// congestion under `RailPolicy::Adaptive`).
 pub fn a2a_ll(ctx: &ShmemCtx, bufs: &A2aBufs, pb: &mut ProgBuild, cfg: &A2aCfg) {
-    a2a_ll_body(ctx, bufs, pb, cfg, "a2a_ll", "a2a", |t, _src, _dst, idx| {
+    a2a_ll_body(ctx, bufs, pb, cfg, "a2a_ll", "a2a", None, |t, _src, _dst, idx| {
+        t.stripe_rail(idx);
+    })
+}
+
+/// [`a2a_ll`] over a **variable-size** layout: per-(src, dst) message
+/// sizes come from the [`A2aSizes`] table inside `bufs` (typically an
+/// [`EpRouting`] summary). With a uniform table this emits a program
+/// bit-identical to [`a2a_ll`] on an equally-sized [`A2aBufs`]. `gate`
+/// optionally defers each rank's send walk until its local signal `gate`
+/// reaches 1 (producer handoff).
+pub fn a2a_ll_var(
+    ctx: &ShmemCtx,
+    bufs: &A2aVarBufs,
+    pb: &mut ProgBuild,
+    cfg: &A2aCfg,
+    gate: Option<usize>,
+) {
+    a2a_ll_body(ctx, bufs, pb, cfg, "a2a_ll", "a2a", gate, |t, _src, _dst, idx| {
         t.stripe_rail(idx);
     })
 }
@@ -333,7 +713,33 @@ pub fn a2a_ep_rails(
 ) {
     let rails = ctx.cluster.fabric.rails;
     let home = |pe: usize| ctx.local_rank_of(pe) % rails;
-    a2a_ll_body(ctx, bufs, pb, cfg, "a2a_ep_rails", "a2a_ep", |t, src, dst, _idx| {
+    a2a_ll_body(ctx, bufs, pb, cfg, "a2a_ep_rails", "a2a_ep", None, |t, src, dst, _idx| {
+        match dir {
+            A2aEpDir::Dispatch => t.on_rails(home(src), home(src)),
+            A2aEpDir::Combine => t.on_rails(home(src), home(dst)),
+        };
+    })
+}
+
+/// [`a2a_ep_rails`] over a **variable-size** layout — the token-routed
+/// EP dispatch/combine the MoE coordinator drives: message sizes follow
+/// the routing summary ([`EpRouting::dispatch_sizes`] /
+/// [`EpRouting::combine_sizes`]), plane assignment follows `dir`
+/// (dispatch sender-plane-pinned; combine `Rails { tx, rx }` crossing
+/// into the receiver's home plane), and `gate` defers each rank's send
+/// walk until its producer (the dispatch pack or the grouped FFN) has
+/// filled the packed send buffer.
+pub fn a2a_ep_rails_var(
+    ctx: &ShmemCtx,
+    bufs: &A2aVarBufs,
+    pb: &mut ProgBuild,
+    cfg: &A2aCfg,
+    dir: A2aEpDir,
+    gate: Option<usize>,
+) {
+    let rails = ctx.cluster.fabric.rails;
+    let home = |pe: usize| ctx.local_rank_of(pe) % rails;
+    a2a_ll_body(ctx, bufs, pb, cfg, "a2a_ep_rails", "a2a_ep", gate, |t, src, dst, _idx| {
         match dir {
             A2aEpDir::Dispatch => t.on_rails(home(src), home(src)),
             A2aEpDir::Combine => t.on_rails(home(src), home(dst)),
@@ -558,6 +964,183 @@ mod tests {
             .filter(|tc| matches!(tc, TrafficClass::Rails { tx, rx } if tx != rx))
             .count();
         assert!(crossing > 0, "combine must emit Rails{{tx != rx}}");
+    }
+
+    #[test]
+    fn split_ranges_partition_exactly() {
+        for (elems, split) in [(10usize, 1usize), (10, 3), (7, 7), (3, 8), (1, 2)] {
+            let pieces = split_ranges(elems, split);
+            assert!(pieces.len() <= split.max(1));
+            assert!(pieces.iter().all(|&(_, len)| len > 0), "no empty pieces");
+            let mut off = 0;
+            for &(o, len) in &pieces {
+                assert_eq!(o, off, "pieces must be contiguous");
+                off += len;
+            }
+            assert_eq!(off, elems, "pieces must cover the chunk");
+        }
+        // split = 1 is the identity piece (the bit-identical fast path)
+        assert_eq!(split_ranges(64, 1), vec![(0, 64)]);
+    }
+
+    #[test]
+    fn uniform_sizes_reproduce_fixed_chunk_layout() {
+        let sizes = A2aSizes::uniform(4, 8);
+        for src in 0..4 {
+            for dst in 0..4 {
+                assert_eq!(sizes.elems(src, dst), 8);
+                assert_eq!(sizes.send_off(src, dst), dst * 8);
+                assert_eq!(sizes.recv_off(src, dst), src * 8);
+            }
+            assert_eq!(sizes.send_total(src), 32);
+            assert_eq!(sizes.recv_total(src), 32);
+        }
+    }
+
+    #[test]
+    fn var_uniform_bit_identical_to_a2a_ll() {
+        // the acceptance identity: a uniform size table through the
+        // variable-size builder == the fixed-chunk builder, bit for bit
+        let cluster = ClusterSpec::h800(2, 4);
+        let ctx = ShmemCtx::new(cluster, DType::BF16);
+        let topo = Topology::build(cluster);
+        let run = |var: bool| -> f64 {
+            let mut heap = SymmetricHeap::new(ctx.n_pes(), 4 * ctx.n_pes().max(16));
+            let mut pb = ProgBuild::new();
+            if var {
+                let bufs = A2aVarBufs::alloc(&mut heap, A2aSizes::uniform(ctx.n_pes(), 64));
+                a2a_ll_var(&ctx, &bufs, &mut pb, &A2aCfg::ours(), None);
+            } else {
+                let bufs = A2aBufs::alloc(&mut heap, &ctx, 64);
+                a2a_ll(&ctx, &bufs, &mut pb, &A2aCfg::ours());
+            }
+            let sim = Sim::new(&topo);
+            sim.run(&pb.prog, &mut heap, &mut NoopExecutor).unwrap().makespan
+        };
+        assert_eq!(run(false).to_bits(), run(true).to_bits());
+    }
+
+    #[test]
+    fn var_routed_dispatch_delivers_and_conserves() {
+        // randomized routing: every kept (token, k) pair's row crosses
+        // the wire exactly once, zero-size pairs still signal
+        let cluster = ClusterSpec::h800(2, 2);
+        let ctx = ShmemCtx::new(cluster, DType::BF16);
+        let topo = Topology::build(cluster);
+        let ws = ctx.n_pes();
+        let geom = EpGeom {
+            t: 6,
+            h: 3,
+            f: 2,
+            e: 8,
+            k: 2,
+            c: 9,
+            w: ws,
+        };
+        let routing = EpRouting::generate(geom, 1.0, 42);
+        let mut heap = SymmetricHeap::new(ws, 4 * ws.max(16));
+        let bufs = A2aVarBufs::alloc(&mut heap, routing.dispatch_sizes());
+        for r in 0..ws {
+            let n = bufs.sizes.send_total(r);
+            let vals: Vec<f32> = (0..n).map(|i| (r * 1_000_000 + i) as f32).collect();
+            heap.write(Slice::new(r, bufs.send, 0, n), &vals);
+        }
+        let mut pb = ProgBuild::new();
+        a2a_ep_rails_var(&ctx, &bufs, &mut pb, &A2aCfg::ours(), A2aEpDir::Dispatch, None);
+        let sim = Sim::new(&topo);
+        sim.run(&pb.prog, &mut heap, &mut NoopExecutor).unwrap();
+        let mut delivered = 0usize;
+        for on in 0..ws {
+            for src in 0..ws {
+                let got = heap.read(bufs.recv_slot(src, on)).to_vec();
+                let want = heap.read(bufs.send_chunk(on, src)).to_vec();
+                assert_eq!(got, want, "chunk {src}->{on} must arrive verbatim");
+                delivered += got.len();
+            }
+            // arrival signals fire even for empty chunks
+            for src in 0..ws {
+                assert_eq!(heap.signal(on, bufs.sig(src)), 1, "sig {src} on {on}");
+            }
+        }
+        assert_eq!(
+            delivered,
+            routing.kept() * geom.h,
+            "every kept token delivered exactly once"
+        );
+    }
+
+    #[test]
+    fn ep_routing_sizes_are_consistent_with_the_plan() {
+        let geom = EpGeom {
+            t: 16,
+            h: 4,
+            f: 8,
+            e: 6,
+            k: 3,
+            c: 40,
+            w: 3,
+        };
+        let routing = EpRouting::generate(geom, 1.5, 7);
+        let disp = routing.dispatch_sizes();
+        let comb = routing.combine_sizes();
+        let plan = routing.plan();
+        let mut kept = 0usize;
+        for src in 0..geom.w {
+            for dst in 0..geom.w {
+                assert_eq!(disp.elems(src, dst), plan.count(src, dst) * geom.h);
+                // combine is the transpose, in FFN-output elements
+                assert_eq!(comb.elems(dst, src), plan.count(src, dst) * geom.f);
+                kept += plan.count(src, dst);
+            }
+        }
+        assert_eq!(kept + routing.dropped(), geom.w * geom.t * geom.k);
+        // tokens(src, e) aggregates to the per-destination counts
+        let e_local = plan.e_local();
+        for src in 0..geom.w {
+            for dst in 0..geom.w {
+                let by_expert: usize = (dst * e_local..((dst + 1) * e_local).min(geom.e))
+                    .map(|e| routing.tokens(src, e))
+                    .sum();
+                assert_eq!(by_expert, plan.count(src, dst));
+            }
+        }
+    }
+
+    #[test]
+    fn skew_concentrates_expert_load() {
+        let geom = EpGeom {
+            t: 64,
+            h: 1,
+            f: 1,
+            e: 8,
+            k: 2,
+            c: usize::MAX,
+            w: 4,
+        };
+        let uniform = EpRouting::generate(geom, 0.0, 3);
+        let skewed = EpRouting::generate(geom, 2.0, 3);
+        let load = |r: &EpRouting, e: usize| -> usize {
+            (0..geom.w).map(|s| r.tokens(s, e)).sum()
+        };
+        // expert 0 is the popular one under Zipf skew
+        assert!(
+            load(&skewed, 0) > 2 * load(&uniform, 0),
+            "skew must concentrate load: {} vs {}",
+            load(&skewed, 0),
+            load(&uniform, 0)
+        );
+        // no drops with unbounded capacity
+        assert_eq!(skewed.dropped(), 0);
+    }
+
+    #[test]
+    fn deepep_combine_is_the_3x_queue_config() {
+        let base = A2aCfg::deepep();
+        let comb = A2aCfg::deepep_combine();
+        assert_eq!(comb.queue_overhead, base.queue_overhead * 3.0);
+        assert_eq!(comb.inter_msg_overhead, base.inter_msg_overhead);
+        assert_eq!(comb.split, 1);
+        assert_eq!(A2aCfg::ours().with_split(4).split, 4);
     }
 
     #[test]

@@ -445,7 +445,21 @@ impl GemmShape {
     }
 }
 
-/// MoE problem, following the Table 4/5 column names.
+/// MoE problem, following the Table 4/5 column names, plus the routing
+/// knobs of the expert-parallel pipeline (`coordinator::ep_moe`): expert
+/// popularity skew and the capacity factor that bounds per-expert load.
+///
+/// ```
+/// use triton_dist_sim::config::MoeShape;
+///
+/// let shape = MoeShape::default().with_skew(1.2).with_capacity_factor(1.5);
+/// assert_eq!(shape.skew, 1.2);
+/// // balanced load is tokens*ws*topk/experts; the factor scales it
+/// assert_eq!(shape.expert_capacity(8), {
+///     let routed = (shape.tokens_per_rank * 8 * shape.topk) as f64;
+///     (1.5 * routed / shape.experts as f64).ceil() as usize
+/// });
+/// ```
 #[derive(Debug, Clone, Copy)]
 pub struct MoeShape {
     pub tokens_per_rank: usize,
@@ -453,6 +467,31 @@ pub struct MoeShape {
     pub out_hidden: usize,
     pub experts: usize,
     pub topk: usize,
+    /// Expert-popularity skew exponent: topk choices are drawn with
+    /// probability proportional to `1 / (expert + 1)^skew` (Zipf-like).
+    /// `0.0` (the default) is uniform routing.
+    pub skew: f64,
+    /// Per-expert capacity as a multiple of the balanced load
+    /// (`tokens * ws * topk / experts`); routed pairs beyond the capacity
+    /// are dropped in deterministic claim order (see
+    /// [`expert_capacity`](Self::expert_capacity)). The default `2.0`
+    /// matches the paper's generous-buffer policy.
+    pub capacity_factor: f64,
+}
+
+impl Default for MoeShape {
+    /// Table 4 row 1 (the Qwen-MoE shape), uniform routing, 2x capacity.
+    fn default() -> Self {
+        MoeShape {
+            tokens_per_rank: 256,
+            in_hidden: 2048,
+            out_hidden: 1408,
+            experts: 60,
+            topk: 4,
+            skew: 0.0,
+            capacity_factor: 2.0,
+        }
+    }
 }
 
 impl MoeShape {
@@ -462,6 +501,28 @@ impl MoeShape {
         2.0 * (self.tokens_per_rank * ws * self.topk) as f64
             * self.in_hidden as f64
             * self.out_hidden as f64
+    }
+
+    /// Set the expert-popularity skew exponent (see [`MoeShape::skew`]).
+    pub fn with_skew(mut self, skew: f64) -> Self {
+        assert!(skew >= 0.0, "skew exponent must be >= 0");
+        self.skew = skew;
+        self
+    }
+
+    /// Set the capacity factor (see [`MoeShape::capacity_factor`]).
+    pub fn with_capacity_factor(mut self, factor: f64) -> Self {
+        assert!(factor > 0.0, "capacity factor must be positive");
+        self.capacity_factor = factor;
+        self
+    }
+
+    /// Global per-expert slot count under the capacity factor: the
+    /// balanced per-expert load across a `ws`-rank world, scaled by
+    /// [`capacity_factor`](Self::capacity_factor), at least 1.
+    pub fn expert_capacity(&self, ws: usize) -> usize {
+        let routed = (self.tokens_per_rank * ws * self.topk) as f64;
+        ((self.capacity_factor * routed / self.experts as f64).ceil() as usize).max(1)
     }
 }
 
@@ -574,6 +635,19 @@ mod tests {
         );
         let c = ClusterSpec::h800(2, 8).with_fabric(f);
         assert_eq!(c.fabric.rail_policy, RailPolicy::Adaptive);
+    }
+
+    #[test]
+    fn moe_shape_routing_knobs() {
+        let s = MoeShape::default();
+        assert_eq!(s.skew, 0.0);
+        assert_eq!(s.capacity_factor, 2.0);
+        // the default factor reproduces the generous 2x balanced load
+        assert_eq!(s.expert_capacity(1), (2 * 256 * 4usize).div_ceil(60));
+        assert!(s.with_capacity_factor(0.5).expert_capacity(1) < s.expert_capacity(1));
+        assert_eq!(s.with_skew(2.0).skew, 2.0);
+        // capacity never collapses to zero
+        assert!(s.with_capacity_factor(1e-9).expert_capacity(1) >= 1);
     }
 
     #[test]

@@ -1,0 +1,491 @@
+//! Expert-parallel MoE over the railed fabric (§3.5–§3.7's flagship
+//! multi-node workload): topk routing table → **token-routed** railed
+//! dispatch (`a2a_ep_rails_var`, sender-plane-pinned) → grouped expert
+//! FFN sized by the *actual* received token counts → combine crossing
+//! into each receiver's home plane (`TrafficClass::Rails { tx, rx }`) →
+//! gate-weighted per-token reduction.
+//!
+//! Unlike `coordinator::moe` (tensor-parallel, fixed `capacity()`
+//! padding), every wire message and every FFN here is sized from the
+//! [`EpRouting`] summary — the DeepEP-style "routing drives the wire"
+//! design. [`EpMoeVariant::FixedCapacity`] keeps the old policy as the
+//! baseline: every (src, dst) message and every expert buffer padded to
+//! the capacity-factor slot count, whatever the routing says.
+//!
+//! Numerics are exact end to end: the `ep_dispatch` / `ep_ffn` /
+//! `ep_combine` kernels and [`reference_ep_moe`] replay the identical
+//! f32 operation order, so [`verify_ep_moe`] compares outputs with `==`
+//! (no tolerance) and additionally checks that every kept (token, k)
+//! pair's row crossed the dispatch wire exactly once — the token
+//! conservation proof.
+
+use crate::collectives::alltoall::{
+    a2a_ep_rails_var, A2aCfg, A2aEpDir, A2aSizes, A2aVarBufs, EpRouting,
+};
+use crate::collectives::ProgBuild;
+use crate::config::{ClusterSpec, MoeShape};
+use crate::kernels::exec::matmul;
+use crate::kernels::names::EpGeom;
+use crate::mem::{BufId, Slice, SymmetricHeap};
+use crate::program::{ComputeCost, NumericOp, Op, SigCond, SigOp};
+use crate::util::Rng;
+
+use super::moe::{group_gemm_utilization, ROUTING_OVERHEAD};
+use super::{setup, BuiltOp};
+
+/// Which wire/compute sizing policy the EP pipeline uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EpMoeVariant {
+    /// Token-routed: every message and FFN sized by the actual routing
+    /// counts (the tentpole path; full numerics).
+    TokenRouted,
+    /// Fixed-capacity baseline: every (src, dst) message padded to
+    /// `e_local * cap_src` rows and the FFN to the matching padded row
+    /// count, independent of routing (timing-only — the generous-buffer
+    /// policy `coordinator::moe::capacity` applies globally).
+    FixedCapacity,
+}
+
+/// Buffers + geometry of one built EP MoE pipeline.
+pub struct EpMoeBufs {
+    /// This rank's own tokens, `[t, h]`.
+    pub tokens: BufId,
+    /// Replicated topk expert-index table (f32-carried), `[w * t * k]`.
+    pub idx: BufId,
+    /// Replicated gate table, `[w * t * k]`.
+    pub gate: BufId,
+    /// Rank-local expert weights, `[e_local, h, f]`.
+    pub weight: BufId,
+    /// Final per-token output, `[t, f]`.
+    pub output: BufId,
+    /// Dispatch wire (token rows to expert ranks).
+    pub disp: A2aVarBufs,
+    /// Combine wire (FFN rows back to token owners).
+    pub comb: A2aVarBufs,
+    pub geom: EpGeom,
+    pub e_local: usize,
+    pub variant: EpMoeVariant,
+}
+
+/// Generate the routing summary for `cluster`/`shape` (the step that, on
+/// real hardware, the metadata exchange before dispatch performs): topk
+/// sampled with the shape's popularity skew, capacity from its
+/// capacity factor.
+pub fn routing_for(cluster: ClusterSpec, shape: &MoeShape, seed: u64) -> EpRouting {
+    let ws = cluster.world_size();
+    let geom = EpGeom {
+        t: shape.tokens_per_rank,
+        h: shape.in_hidden,
+        f: shape.out_hidden,
+        e: shape.experts,
+        k: shape.topk,
+        c: shape.expert_capacity(ws),
+        w: ws,
+    };
+    EpRouting::generate(geom, shape.skew, seed)
+}
+
+/// Build the EP MoE pipeline with the default transport knobs
+/// ([`A2aCfg::ours`]). The routing summary must match the cluster's
+/// world size (see [`routing_for`]); it sizes every wire message, the
+/// grouped FFN, and the numeric kernel entries.
+pub fn build_ep_moe(
+    cluster: ClusterSpec,
+    shape: MoeShape,
+    routing: &EpRouting,
+    variant: EpMoeVariant,
+) -> (BuiltOp, EpMoeBufs) {
+    build_ep_moe_cfg(cluster, shape, routing, variant, &A2aCfg::ours())
+}
+
+/// [`build_ep_moe`] with explicit transport knobs — notably
+/// [`A2aCfg::split`], the dispatch-chunking factor the §3.8 tuner
+/// explores (`autotune::tune_dispatch_chunking`, CLI `--split`).
+pub fn build_ep_moe_cfg(
+    cluster: ClusterSpec,
+    shape: MoeShape,
+    routing: &EpRouting,
+    variant: EpMoeVariant,
+    a2a: &A2aCfg,
+) -> (BuiltOp, EpMoeBufs) {
+    let (ctx, _t) = setup(cluster);
+    let ws = ctx.n_pes();
+    let geom = routing.geom;
+    assert_eq!(geom.w, ws, "routing table built for a different world");
+    let EpGeom { t, h, f, e, k, .. } = geom;
+    let e_local = e.div_ceil(ws);
+    let hw = cluster.hw;
+
+    // fixed-capacity baseline: DeepEP-style static per-(source, expert)
+    // slots at the shape's capacity factor
+    let cap_src = ((shape.capacity_factor * (t * k) as f64 / e as f64).ceil() as usize).max(1);
+    let (disp_sizes, comb_sizes) = match variant {
+        EpMoeVariant::TokenRouted => (routing.dispatch_sizes(), routing.combine_sizes()),
+        EpMoeVariant::FixedCapacity => (
+            A2aSizes::uniform(ws, e_local * cap_src * h),
+            A2aSizes::uniform(ws, e_local * cap_src * f),
+        ),
+    };
+
+    // signal map: [0, ws) dispatch arrivals | ws pack gate |
+    // [ws+1, 2ws+1) combine arrivals | 2ws+1 FFN gate
+    let disp_gate = ws;
+    let comb_base = ws + 1;
+    let comb_gate = 2 * ws + 1;
+
+    let mut heap = SymmetricHeap::new(ws, 2 * ws + 8);
+    let tokens = heap.alloc("ep_tokens", t * h);
+    let idx = heap.alloc("ep_topk_idx", ws * t * k);
+    let gate = heap.alloc("ep_topk_gate", ws * t * k);
+    let weight = heap.alloc("ep_w_experts", e_local * h * f);
+    let disp = A2aVarBufs::alloc(&mut heap, disp_sizes);
+    let mut comb = A2aVarBufs::alloc(&mut heap, comb_sizes);
+    comb.sig_base = comb_base;
+    let output = heap.alloc("ep_out", t * f);
+
+    let mut pb = ProgBuild::new();
+    pb.claim_sigs("ep_moe_pack_gate", disp_gate, 1);
+    pb.claim_sigs("ep_moe_ffn_gate", comb_gate, 1);
+    let cfg = *a2a;
+
+    // Static SM budget per rank (§3.8 partition discipline): the two a2a
+    // send tasks, 2*(ws-1) receive blocks, the pack task, and the final
+    // reduction all hold their reservation concurrently; the FFN takes
+    // the rest (floored so very wide worlds still fit — excess receive
+    // blocks then queue FIFO behind completed ones, which cannot
+    // deadlock because receives never wait on later-launched tasks).
+    let reserved = 2 * ws as i64 + 6;
+    let ffn_sms = ((hw.sms as i64) - reserved).max(8) as u32;
+
+    // 1. per-rank routing + dispatch pack into the packed send buffer
+    for r in 0..ws {
+        let send_elems = disp.sizes.send_total(r);
+        let mut pack = ctx
+            .task(r, format!("ep_pack[{r}]"))
+            .with_sms(1)
+            .launch_overhead();
+        pack.op(Op::Sleep {
+            secs: ROUTING_OVERHEAD,
+        });
+        pack.op(Op::Compute {
+            cost: ComputeCost::MemBound {
+                bytes: ctx.bytes(2 * send_elems),
+            },
+            numeric: match variant {
+                EpMoeVariant::TokenRouted => NumericOp::Call {
+                    entry: geom.dispatch_name(r),
+                    args: vec![
+                        Slice::new(r, tokens, 0, t * h),
+                        Slice::new(r, idx, 0, ws * t * k),
+                    ],
+                    outs: (0..ws).map(|d| disp.send_chunk(d, r)).collect(),
+                },
+                EpMoeVariant::FixedCapacity => NumericOp::None,
+            },
+            label: "ep_dispatch_pack",
+        });
+        pack.notify(r, disp_gate, SigOp::Set, 1);
+        pb.prog.push(pack.build());
+    }
+
+    // 2. railed dispatch: every message pinned to the sender's home
+    // plane end to end, sized by the routing summary
+    a2a_ep_rails_var(&ctx, &disp, &mut pb, &cfg, A2aEpDir::Dispatch, Some(disp_gate));
+
+    // 3. grouped expert FFN sized by the *actual* received token counts
+    for r in 0..ws {
+        let n_rows = disp.sizes.recv_total(r) / h.max(1);
+        let util = group_gemm_utilization(n_rows as f64 / e_local as f64);
+        let flops = 2.0 * n_rows as f64 * h as f64 * f as f64 / util;
+        let mut ffn = ctx
+            .task(r, format!("ep_ffn[{r}]"))
+            .with_sms(ffn_sms)
+            .launch_overhead();
+        for src in 0..ws {
+            ffn.signal_wait_until(disp.sig(src), SigCond::Ge, 1);
+        }
+        ffn.op(Op::Sleep {
+            secs: ROUTING_OVERHEAD,
+        });
+        ffn.op(Op::Compute {
+            cost: ComputeCost::Gemm {
+                flops,
+                vendor: false,
+            },
+            numeric: match variant {
+                EpMoeVariant::TokenRouted => NumericOp::Call {
+                    entry: geom.ffn_name(r),
+                    args: vec![
+                        Slice::new(r, disp.recv, 0, disp.sizes.recv_total(r)),
+                        Slice::new(r, idx, 0, ws * t * k),
+                        Slice::new(r, weight, 0, e_local * h * f),
+                    ],
+                    outs: vec![Slice::new(r, comb.send, 0, comb.sizes.send_total(r))],
+                },
+                EpMoeVariant::FixedCapacity => NumericOp::None,
+            },
+            label: "ep_group_ffn",
+        });
+        ffn.notify(r, comb_gate, SigOp::Set, 1);
+        pb.prog.push(ffn.build());
+    }
+
+    // 4. combine: each message leaves on the expert rank's home plane
+    // and crosses into the token owner's plane (Rails { tx, rx })
+    a2a_ep_rails_var(&ctx, &comb, &mut pb, &cfg, A2aEpDir::Combine, Some(comb_gate));
+
+    // 5. gate-weighted reduction into the token owner's output
+    for r in 0..ws {
+        let m_elems = comb.sizes.recv_total(r);
+        let mut red = ctx
+            .task(r, format!("ep_combine[{r}]"))
+            .with_sms(4)
+            .launch_overhead();
+        for src in 0..ws {
+            red.signal_wait_until(comb.sig(src), SigCond::Ge, 1);
+        }
+        red.op(Op::Compute {
+            cost: ComputeCost::Reduce {
+                bytes: ctx.bytes(m_elems + t * f),
+            },
+            numeric: match variant {
+                EpMoeVariant::TokenRouted => NumericOp::Call {
+                    entry: geom.combine_name(r),
+                    args: vec![
+                        Slice::new(r, comb.recv, 0, m_elems),
+                        Slice::new(r, idx, 0, ws * t * k),
+                        Slice::new(r, gate, 0, ws * t * k),
+                    ],
+                    outs: vec![Slice::new(r, output, 0, t * f)],
+                },
+                EpMoeVariant::FixedCapacity => NumericOp::None,
+            },
+            label: "ep_token_combine",
+        });
+        pb.prog.push(red.build());
+    }
+
+    let bufs = EpMoeBufs {
+        tokens,
+        idx,
+        gate,
+        weight,
+        output,
+        disp,
+        comb,
+        geom,
+        e_local,
+        variant,
+    };
+    let op = BuiltOp {
+        ctx,
+        heap,
+        prog: pb.prog,
+        name: format!("EP MoE {variant:?}"),
+    };
+    (op, bufs)
+}
+
+/// Seed tokens and expert weights (rank-local) and replicate the routing
+/// tables — the state the metadata exchange distributes before dispatch.
+pub fn fill_ep_moe(heap: &mut SymmetricHeap, bufs: &EpMoeBufs, routing: &EpRouting, seed: u64) {
+    let ws = heap.world();
+    let idx_f: Vec<f32> = routing.idx.iter().map(|&i| i as f32).collect();
+    for r in 0..ws {
+        heap.write(Slice::new(r, bufs.idx, 0, idx_f.len()), &idx_f);
+        heap.write(Slice::new(r, bufs.gate, 0, routing.gate.len()), &routing.gate);
+        let mut rng = Rng::new(seed ^ ((r as u64) << 17) ^ 0xE9);
+        let toks = rng.normal_vec(heap.buf_len(bufs.tokens));
+        heap.write(Slice::new(r, bufs.tokens, 0, toks.len()), &toks);
+        let w = rng.normal_vec(heap.buf_len(bufs.weight));
+        heap.write(Slice::new(r, bufs.weight, 0, w.len()), &w);
+    }
+}
+
+/// Reference output per token-owner rank, replaying the pipeline's exact
+/// f32 operation order (row GEMM per kept pair, gate-weighted
+/// accumulation in (token, k) order) — bitwise comparable.
+pub fn reference_ep_moe(
+    heap: &SymmetricHeap,
+    bufs: &EpMoeBufs,
+    routing: &EpRouting,
+) -> Vec<Vec<f32>> {
+    let g = bufs.geom;
+    let plan = routing.plan();
+    let e_local = bufs.e_local;
+    (0..g.w)
+        .map(|r| {
+            let toks = heap.read(Slice::new(r, bufs.tokens, 0, g.t * g.h));
+            let mut out = vec![0.0f32; g.t * g.f];
+            for ti in 0..g.t {
+                for ki in 0..g.k {
+                    let gi = (r * g.t + ti) * g.k + ki;
+                    let Some(d) = plan.dst_of(gi) else { continue };
+                    let el = routing.idx[gi] - d * e_local;
+                    let w = heap.read(Slice::new(d, bufs.weight, el * g.h * g.f, g.h * g.f));
+                    let row = matmul(&toks[ti * g.h..(ti + 1) * g.h], w, 1, g.h, g.f);
+                    let gv = routing.gate[gi];
+                    for (o, &v) in out[ti * g.f..(ti + 1) * g.f].iter_mut().zip(&row) {
+                        *o += gv * v;
+                    }
+                }
+            }
+            out
+        })
+        .collect()
+}
+
+/// Verify the token-routed pipeline: (1) exact token conservation — the
+/// packed dispatch landing zone of every expert rank holds precisely the
+/// kept routed rows, in plan order, each exactly once; (2) the final
+/// outputs equal [`reference_ep_moe`] with **no tolerance** (identical
+/// f32 operation order end to end).
+pub fn verify_ep_moe(
+    heap: &SymmetricHeap,
+    bufs: &EpMoeBufs,
+    routing: &EpRouting,
+    expected: &[Vec<f32>],
+) -> Result<(), String> {
+    assert_eq!(
+        bufs.variant,
+        EpMoeVariant::TokenRouted,
+        "only the token-routed variant carries numerics"
+    );
+    let g = bufs.geom;
+    let plan = routing.plan();
+    for d in 0..g.w {
+        let mut exp = Vec::new();
+        for src in 0..g.w {
+            let toks = heap.read(Slice::new(src, bufs.tokens, 0, g.t * g.h));
+            for p in 0..g.t * g.k {
+                let gi = src * g.t * g.k + p;
+                if plan.dst_of(gi) == Some(d) {
+                    let ti = p / g.k;
+                    exp.extend_from_slice(&toks[ti * g.h..(ti + 1) * g.h]);
+                }
+            }
+        }
+        let got = heap.read(Slice::new(d, bufs.disp.recv, 0, exp.len()));
+        if got != exp {
+            return Err(format!(
+                "token conservation violated: expert rank {d} landing zone \
+                 does not match the routed rows"
+            ));
+        }
+        if exp.len() != plan.recv_total(d) * g.h {
+            return Err(format!("expert rank {d} received a wrong row count"));
+        }
+    }
+    for (r, exp) in expected.iter().enumerate() {
+        let got = heap.read(Slice::new(r, bufs.output, 0, exp.len()));
+        if got != exp.as_slice() {
+            let i = got
+                .iter()
+                .zip(exp)
+                .position(|(a, b)| a != b)
+                .unwrap_or(0);
+            return Err(format!(
+                "EP MoE mismatch rank {r} elem {i}: {} vs {} (exact compare)",
+                got[i], exp[i]
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FabricSpec;
+    use crate::coordinator::{run_numeric, run_timing};
+    use crate::runtime::HybridExecutor;
+    use crate::topology::Topology;
+
+    fn small_shape() -> MoeShape {
+        MoeShape {
+            tokens_per_rank: 6,
+            in_hidden: 8,
+            out_hidden: 8,
+            experts: 8,
+            topk: 2,
+            ..MoeShape::default()
+        }
+    }
+
+    fn run_and_verify(cluster: ClusterSpec, shape: MoeShape, seed: u64) {
+        let routing = routing_for(cluster, &shape, seed);
+        let (mut op, bufs) = build_ep_moe(cluster, shape, &routing, EpMoeVariant::TokenRouted);
+        fill_ep_moe(&mut op.heap, &bufs, &routing, seed);
+        let exp = reference_ep_moe(&op.heap, &bufs, &routing);
+        let topo = Topology::build(cluster);
+        let mut exec = HybridExecutor::native_only();
+        run_numeric(&mut op, &topo, &mut exec);
+        verify_ep_moe(&op.heap, &bufs, &routing, &exp).unwrap();
+    }
+
+    #[test]
+    fn ep_moe_intra_node_exact() {
+        run_and_verify(ClusterSpec::h800(1, 4), small_shape(), 1);
+    }
+
+    #[test]
+    fn ep_moe_inter_node_exact() {
+        run_and_verify(ClusterSpec::h800(2, 2), small_shape(), 2);
+    }
+
+    #[test]
+    fn ep_moe_exact_under_skew_and_drops_on_railed_fabric() {
+        // skewed popularity + a tight capacity factor force real drops;
+        // conservation and exact numerics must hold regardless, on a
+        // blocking railed fabric with a thinned spine
+        let cluster = ClusterSpec::h800(2, 4)
+            .with_fabric(FabricSpec::rail_optimized(2, 2.0).with_spine_taper(2.0));
+        let shape = small_shape().with_skew(1.5).with_capacity_factor(0.75);
+        let routing = routing_for(cluster, &shape, 9);
+        assert!(routing.dropped() > 0, "tight capacity must drop pairs");
+        run_and_verify(cluster, shape, 9);
+    }
+
+    #[test]
+    fn token_routed_beats_fixed_capacity_under_skew() {
+        // the acceptance race: skewed popularity on the railed fabric —
+        // sizing wire + FFN from actual routed tokens beats the padded
+        // fixed-capacity baseline
+        let cluster = ClusterSpec::h800(2, 8)
+            .with_fabric(FabricSpec::rail_optimized(2, 2.0).with_spine_taper(2.0));
+        let shape = MoeShape {
+            tokens_per_rank: 64,
+            in_hidden: 256,
+            out_hidden: 256,
+            experts: 16,
+            topk: 2,
+            ..MoeShape::default()
+        }
+        .with_skew(1.2);
+        let routing = routing_for(cluster, &shape, 7);
+        let topo = Topology::build(cluster);
+        let time = |variant| {
+            let (mut op, _b) = build_ep_moe(cluster, shape, &routing, variant);
+            run_timing(&mut op, &topo)
+        };
+        let routed = time(EpMoeVariant::TokenRouted);
+        let fixed = time(EpMoeVariant::FixedCapacity);
+        assert!(
+            routed < fixed,
+            "token-routed {routed} must beat fixed-capacity {fixed}"
+        );
+    }
+
+    #[test]
+    fn capacity_factor_drop_accounting() {
+        let cluster = ClusterSpec::h800(1, 4);
+        // factor 8 means capacity == total routed pairs: a drop is
+        // impossible whatever the draw
+        let generous = routing_for(cluster, &small_shape().with_capacity_factor(8.0), 3);
+        assert_eq!(generous.dropped(), 0, "full capacity never drops");
+        let tight = routing_for(cluster, &small_shape().with_capacity_factor(0.5), 3);
+        assert!(tight.dropped() > 0);
+        let g = tight.geom;
+        assert_eq!(tight.kept() + tight.dropped(), g.w * g.t * g.k);
+    }
+}

@@ -4,6 +4,7 @@
 //! executors.
 
 pub mod ag_gemm;
+pub mod ep_moe;
 pub mod flash_decode;
 pub mod gemm_rs;
 pub mod moe;

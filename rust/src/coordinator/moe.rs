@@ -33,14 +33,15 @@ pub enum MoeVariant {
 /// Small-expert GEMM utilization: grouped GEMMs with few rows per expert
 /// underfeed the tensor cores. Rows below ~128 scale throughput down
 /// linearly (the effect behind the paper's absolute Table-4 latencies).
-fn group_gemm_utilization(rows_per_expert: f64) -> f64 {
+/// Shared with the expert-parallel pipeline (`coordinator::ep_moe`).
+pub(crate) fn group_gemm_utilization(rows_per_expert: f64) -> f64 {
     // row-count term x grouped-kernel term (per-expert tile tails,
     // routing-dependent loads keep grouped GEMMs well below dense rate)
     (rows_per_expert / 128.0).min(1.0).max(0.05) * 0.45
 }
 
 /// Fixed routing cost per chunk (topk gather/scatter + offsets kernel).
-const ROUTING_OVERHEAD: f64 = 12.0e-6;
+pub(crate) const ROUTING_OVERHEAD: f64 = 12.0e-6;
 
 /// Expert capacity used throughout (tokens routed per expert chunk).
 pub fn capacity(t_per_chunk: usize, topk: usize, experts: usize) -> usize {
@@ -475,6 +476,7 @@ mod tests {
             out_hidden: 32,
             experts: 4,
             topk: 2,
+            ..MoeShape::default()
         }
     }
 
@@ -560,6 +562,7 @@ mod tests {
             out_hidden: 1408,
             experts: 60,
             topk: 4,
+            ..MoeShape::default()
         };
         let topo = Topology::build(cluster);
         let t = |v| {

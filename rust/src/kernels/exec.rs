@@ -10,7 +10,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::mem::{Slice, SymmetricHeap};
 use crate::sim::ComputeExecutor;
 
-use super::names::Entry;
+use super::names::{Entry, EpGeom};
 
 /// Pure-Rust executor dispatching on the entry-name families.
 #[derive(Default)]
@@ -109,6 +109,85 @@ pub fn eval_entry(entry: &Entry, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
             ensure!(tokens.len() == t * h && idx.len() == t * k);
             ensure!(gate.len() == t * k && w.len() == e * h * f);
             Ok(vec![moe_ffn(tokens, idx, gate, w, t, h, f, e, k, c)])
+        }
+        Entry::EpDispatch { g, r } => {
+            ensure!(inputs.len() == 2, "ep_dispatch takes 2 args");
+            let tokens = &inputs[0];
+            ensure!(tokens.len() == g.t * g.h, "ep_dispatch token size");
+            let idx = expert_indices(&inputs[1], g)?;
+            let plan = EpPlan::build(&idx, g);
+            let mut outs = vec![Vec::new(); g.w];
+            for p in 0..g.t * g.k {
+                let gi = r * g.t * g.k + p;
+                if let Some(d) = plan.dst_of(gi) {
+                    let ti = p / g.k;
+                    outs[d].extend_from_slice(&tokens[ti * g.h..(ti + 1) * g.h]);
+                }
+            }
+            Ok(outs)
+        }
+        Entry::EpFfn { g, r } => {
+            ensure!(inputs.len() == 3, "ep_ffn takes 3 args");
+            let recv = &inputs[0];
+            let idx = expert_indices(&inputs[1], g)?;
+            let plan = EpPlan::build(&idx, g);
+            let e_local = plan.e_local();
+            let n_rows = plan.recv_total(r);
+            ensure!(recv.len() == n_rows * g.h, "ep_ffn recv size");
+            let w = &inputs[2];
+            ensure!(w.len() == e_local * g.h * g.f, "ep_ffn weight size");
+            let mut out = Vec::with_capacity(n_rows * g.f);
+            let mut row = 0usize;
+            for src in 0..g.w {
+                for p in 0..g.t * g.k {
+                    let gi = src * g.t * g.k + p;
+                    if plan.dst_of(gi) != Some(r) {
+                        continue;
+                    }
+                    // dst == r guarantees the expert is rank-local
+                    let el = idx[gi] - r * e_local;
+                    let x = &recv[row * g.h..(row + 1) * g.h];
+                    out.extend(matmul(x, &w[el * g.h * g.f..(el + 1) * g.h * g.f], 1, g.h, g.f));
+                    row += 1;
+                }
+            }
+            ensure!(row == n_rows, "ep_ffn consumed {row} of {n_rows} rows");
+            Ok(vec![out])
+        }
+        Entry::EpCombine { g, r } => {
+            ensure!(inputs.len() == 3, "ep_combine takes 3 args");
+            let crecv = &inputs[0];
+            let idx = expert_indices(&inputs[1], g)?;
+            let gate = &inputs[2];
+            ensure!(gate.len() == g.w * g.t * g.k, "ep_combine gate size");
+            let plan = EpPlan::build(&idx, g);
+            ensure!(
+                crecv.len() == plan.send_total(r) * g.f,
+                "ep_combine recv size"
+            );
+            // rows arrive grouped by expert rank (ascending), each group
+            // in this rank's (token, k) claim order — mirror that walk
+            let mut pos = vec![0usize; g.w];
+            let mut acc = 0usize;
+            for (d, p) in pos.iter_mut().enumerate() {
+                *p = acc;
+                acc += plan.count(r, d);
+            }
+            let mut out = vec![0.0f32; g.t * g.f];
+            for ti in 0..g.t {
+                for ki in 0..g.k {
+                    let gi = (r * g.t + ti) * g.k + ki;
+                    let Some(d) = plan.dst_of(gi) else { continue };
+                    let row = pos[d];
+                    pos[d] += 1;
+                    let gv = gate[gi];
+                    let src_row = &crecv[row * g.f..(row + 1) * g.f];
+                    for (o, &v) in out[ti * g.f..(ti + 1) * g.f].iter_mut().zip(src_row) {
+                        *o += gv * v;
+                    }
+                }
+            }
+            Ok(vec![out])
         }
         Entry::TpMlpShard { t, h, f } => {
             ensure!(inputs.len() == 3);
@@ -306,6 +385,117 @@ pub fn moe_ffn(
     out
 }
 
+// ---------------------------------------------------------------------------
+// expert-parallel routing plan
+// ---------------------------------------------------------------------------
+
+/// Deterministic global routing plan of the expert-parallel MoE pipeline,
+/// shared by the three `ep_*` kernel families *and* the program builders
+/// (`collectives::alltoall::EpRouting` sizes the wire from the same
+/// plan): pairs claim per-expert capacity slots in global
+/// `(src, token, k)` scan order, overflow is dropped, and expert `e` is
+/// owned by rank `e / ceil(experts / world)`.
+///
+/// Because sender, receiver, and verifier all rebuild this plan from the
+/// (replicated) routing table, the packed chunk sizes agree by
+/// construction — a size mismatch anywhere is a token-conservation bug
+/// and surfaces as a hard executor error.
+#[derive(Debug, Clone)]
+pub struct EpPlan {
+    g: EpGeom,
+    /// Destination rank per global (src, token, k) pair; `usize::MAX`
+    /// marks a pair dropped by the capacity claim.
+    dst: Vec<usize>,
+    /// Kept-pair counts per (src, dst) rank pair, indexed `src * w + dst`.
+    counts: Vec<usize>,
+}
+
+impl EpPlan {
+    /// Build the plan from the full routing table (`idx[(src*t + ti)*k + ki]`
+    /// = expert index).
+    pub fn build(idx: &[usize], g: EpGeom) -> EpPlan {
+        assert_eq!(idx.len(), g.w * g.t * g.k, "routing table size");
+        let e_local = g.e.div_ceil(g.w);
+        let mut load = vec![0usize; g.e];
+        let mut dst = vec![usize::MAX; idx.len()];
+        let mut counts = vec![0usize; g.w * g.w];
+        for src in 0..g.w {
+            for p in 0..g.t * g.k {
+                let gi = src * g.t * g.k + p;
+                let ei = idx[gi];
+                assert!(ei < g.e, "expert index {ei} out of range");
+                if load[ei] < g.c {
+                    load[ei] += 1;
+                    let d = ei / e_local;
+                    dst[gi] = d;
+                    counts[src * g.w + d] += 1;
+                }
+            }
+        }
+        EpPlan { g, dst, counts }
+    }
+
+    /// The geometry this plan was built for.
+    pub fn geom(&self) -> EpGeom {
+        self.g
+    }
+
+    /// Experts owned per rank (`ceil(e / w)`; the last rank may own fewer).
+    pub fn e_local(&self) -> usize {
+        self.g.e.div_ceil(self.g.w)
+    }
+
+    /// Destination rank of global pair `gi`, `None` if capacity-dropped.
+    pub fn dst_of(&self, gi: usize) -> Option<usize> {
+        match self.dst[gi] {
+            usize::MAX => None,
+            d => Some(d),
+        }
+    }
+
+    /// Kept (token, k) pairs routed from `src` to `dst`.
+    pub fn count(&self, src: usize, dst: usize) -> usize {
+        self.counts[src * self.g.w + dst]
+    }
+
+    /// Kept pairs leaving `src` (rows it sends at dispatch).
+    pub fn send_total(&self, src: usize) -> usize {
+        (0..self.g.w).map(|d| self.count(src, d)).sum()
+    }
+
+    /// Kept pairs arriving at expert rank `dst` (rows its FFN consumes).
+    pub fn recv_total(&self, dst: usize) -> usize {
+        (0..self.g.w).map(|s| self.count(s, dst)).sum()
+    }
+
+    /// Total kept pairs across the world.
+    pub fn kept(&self) -> usize {
+        self.counts.iter().sum()
+    }
+
+    /// Pairs dropped by the capacity claim.
+    pub fn dropped(&self) -> usize {
+        self.g.w * self.g.t * self.g.k - self.kept()
+    }
+}
+
+/// Decode an f32-carried expert-index table, validating range and
+/// integrality.
+fn expert_indices(raw: &[f32], g: EpGeom) -> Result<Vec<usize>> {
+    ensure!(raw.len() == g.w * g.t * g.k, "routing table size");
+    let mut out = Vec::with_capacity(raw.len());
+    for &v in raw {
+        let i = v as usize;
+        ensure!(
+            v >= 0.0 && v == i as f32 && i < g.e,
+            "bad expert index {v} (experts = {})",
+            g.e
+        );
+        out.push(i);
+    }
+    Ok(out)
+}
+
 /// Convenience used by tests: run an entry fully outside the heap.
 pub fn eval_named(name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
     match Entry::parse(name) {
@@ -391,6 +581,140 @@ mod tests {
         assert_eq!(out[0..2], [1.0, 0.0]);
         assert_eq!(out[2..4], [0.0, 0.0]);
         assert_eq!(out[4..6], [0.0, 0.0]);
+    }
+
+    #[test]
+    fn ep_plan_claims_capacity_in_scan_order() {
+        let g = EpGeom {
+            t: 2,
+            h: 1,
+            f: 1,
+            e: 2,
+            k: 1,
+            c: 2,
+            w: 2,
+        };
+        // all four pairs want expert 0 (owned by rank 0); capacity 2
+        let plan = EpPlan::build(&[0, 0, 0, 0], g);
+        assert_eq!(plan.dst_of(0), Some(0));
+        assert_eq!(plan.dst_of(1), Some(0));
+        assert_eq!(plan.dst_of(2), None, "overflow pair must be dropped");
+        assert_eq!(plan.dst_of(3), None);
+        assert_eq!(plan.count(0, 0), 2);
+        assert_eq!(plan.count(1, 0), 0);
+        assert_eq!(plan.kept(), 2);
+        assert_eq!(plan.dropped(), 2);
+        assert_eq!(plan.send_total(0), 2);
+        assert_eq!(plan.recv_total(0), 2);
+        assert_eq!(plan.recv_total(1), 0);
+    }
+
+    #[test]
+    fn ep_pipeline_matches_direct_reference() {
+        // dispatch -> grouped FFN -> combine, wired by hand exactly like
+        // the coordinator does, must equal the direct per-token compute
+        let g = EpGeom {
+            t: 3,
+            h: 2,
+            f: 2,
+            e: 4,
+            k: 2,
+            c: 3,
+            w: 2,
+        };
+        let mut rng = Rng::new(5);
+        let idx_f: Vec<f32> = (0..g.w * g.t * g.k)
+            .map(|_| rng.usize_in(0, g.e) as f32)
+            .collect();
+        let gate: Vec<f32> = (0..g.w * g.t * g.k).map(|_| rng.f32().max(0.05)).collect();
+        let tokens: Vec<Vec<f32>> = (0..g.w).map(|_| rng.normal_vec(g.t * g.h)).collect();
+        let e_local = g.e.div_ceil(g.w);
+        let weights: Vec<Vec<f32>> =
+            (0..g.w).map(|_| rng.normal_vec(e_local * g.h * g.f)).collect();
+        let idx: Vec<usize> = idx_f.iter().map(|&v| v as usize).collect();
+        let plan = EpPlan::build(&idx, g);
+
+        // dispatch on every rank
+        let packed: Vec<Vec<Vec<f32>>> = (0..g.w)
+            .map(|r| {
+                eval_entry(
+                    &Entry::EpDispatch { g, r },
+                    &[tokens[r].clone(), idx_f.clone()],
+                )
+                .unwrap()
+            })
+            .collect();
+        // wire: receiver d concatenates chunks by source rank
+        let recv: Vec<Vec<f32>> = (0..g.w)
+            .map(|d| (0..g.w).flat_map(|s| packed[s][d].clone()).collect())
+            .collect();
+        // grouped FFN per expert rank
+        let ffn: Vec<Vec<f32>> = (0..g.w)
+            .map(|d| {
+                eval_entry(
+                    &Entry::EpFfn { g, r: d },
+                    &[recv[d].clone(), idx_f.clone(), weights[d].clone()],
+                )
+                .unwrap()
+                .remove(0)
+            })
+            .collect();
+        // combine wire: owner r takes its block (rows grouped src-major
+        // on the expert rank) from every d
+        for r in 0..g.w {
+            let mut crecv = Vec::new();
+            for (d, rows) in ffn.iter().enumerate() {
+                let before: usize = (0..r).map(|s| plan.count(s, d)).sum();
+                let mine = plan.count(r, d);
+                crecv.extend_from_slice(&rows[before * g.f..(before + mine) * g.f]);
+            }
+            let got = eval_entry(
+                &Entry::EpCombine { g, r },
+                &[crecv, idx_f.clone(), gate.clone()],
+            )
+            .unwrap()
+            .remove(0);
+            // direct reference: gate-weighted sum of per-expert row GEMMs
+            let mut want = vec![0.0f32; g.t * g.f];
+            for ti in 0..g.t {
+                for ki in 0..g.k {
+                    let gi = (r * g.t + ti) * g.k + ki;
+                    let Some(d) = plan.dst_of(gi) else { continue };
+                    let el = idx[gi] - d * e_local;
+                    let row = matmul(
+                        &tokens[r][ti * g.h..(ti + 1) * g.h],
+                        &weights[d][el * g.h * g.f..(el + 1) * g.h * g.f],
+                        1,
+                        g.h,
+                        g.f,
+                    );
+                    for (o, &v) in want[ti * g.f..(ti + 1) * g.f].iter_mut().zip(&row) {
+                        *o += gate[gi] * v;
+                    }
+                }
+            }
+            assert_eq!(got, want, "rank {r} output must match exactly");
+        }
+        // conservation: every kept pair shows up exactly once on a wire
+        let wired: usize = recv.iter().map(|v| v.len()).sum();
+        assert_eq!(wired, plan.kept() * g.h);
+    }
+
+    #[test]
+    fn ep_entries_reject_bad_routing_tables() {
+        let g = EpGeom {
+            t: 1,
+            h: 1,
+            f: 1,
+            e: 2,
+            k: 1,
+            c: 8,
+            w: 1,
+        };
+        // out-of-range expert
+        assert!(eval_entry(&Entry::EpDispatch { g, r: 0 }, &[vec![1.0], vec![5.0]]).is_err());
+        // fractional expert index
+        assert!(eval_entry(&Entry::EpDispatch { g, r: 0 }, &[vec![1.0], vec![0.5]]).is_err());
     }
 
     #[test]

@@ -1,6 +1,53 @@
 //! Entry-name parsing/formatting shared by the PJRT runtime and the
 //! native executor.
 
+/// Geometry shared by the three expert-parallel MoE pipeline entry
+/// families (`ep_dispatch` / `ep_ffn` / `ep_combine`): one struct so the
+/// program builder and the kernels derive the *same* routing plan from
+/// the same parameters (`kernels::exec::EpPlan`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EpGeom {
+    /// Tokens per rank.
+    pub t: usize,
+    /// FFN input (token hidden) dim.
+    pub h: usize,
+    /// FFN output dim.
+    pub f: usize,
+    /// Global expert count; experts are owned in contiguous blocks of
+    /// `ceil(e / w)` per rank.
+    pub e: usize,
+    /// topk routed experts per token.
+    pub k: usize,
+    /// Global per-expert capacity (slots across all source ranks);
+    /// routed pairs beyond it are dropped in claim order.
+    pub c: usize,
+    /// World size.
+    pub w: usize,
+}
+
+impl EpGeom {
+    fn name(&self, kind: &str, r: usize) -> String {
+        let EpGeom { t, h, f, e, k, c, w } = *self;
+        format!("ep_{kind}_t{t}_h{h}_f{f}_e{e}_k{k}_c{c}_w{w}_r{r}")
+    }
+
+    /// `ep_dispatch_*`: pack rank `r`'s routed token rows per destination.
+    pub fn dispatch_name(&self, r: usize) -> String {
+        self.name("dispatch", r)
+    }
+
+    /// `ep_ffn_*`: grouped expert FFN over the rows received at rank `r`.
+    pub fn ffn_name(&self, r: usize) -> String {
+        self.name("ffn", r)
+    }
+
+    /// `ep_combine_*`: gate-weighted reduction of the expert outputs
+    /// returned to token owner `r`.
+    pub fn combine_name(&self, r: usize) -> String {
+        self.name("combine", r)
+    }
+}
+
 /// Parsed kernel entry.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Entry {
@@ -22,6 +69,16 @@ pub enum Entry {
     TpMlpShard { t: usize, h: usize, f: usize },
     /// `tp_attn_shard_t{t}_h{h}_nh{nh}_hd{hd}_s{s}`
     TpAttnShard { t: usize, h: usize, nh: usize, hd: usize, s: usize },
+    /// `ep_dispatch_t{t}_h{h}_f{f}_e{e}_k{k}_c{c}_w{w}_r{r}` — EP token
+    /// dispatch pack on rank `r`: tokens + full routing table in, one
+    /// packed row chunk per destination rank out.
+    EpDispatch { g: EpGeom, r: usize },
+    /// `ep_ffn_*` — grouped expert FFN over the rows received at expert
+    /// rank `r`, sized by the *actual* routed token counts.
+    EpFfn { g: EpGeom, r: usize },
+    /// `ep_combine_*` — gate-weighted per-token reduction of the expert
+    /// outputs returned to token owner `r`.
+    EpCombine { g: EpGeom, r: usize },
 }
 
 fn nums(s: &str, seps: &[&str]) -> Option<Vec<usize>> {
@@ -99,6 +156,29 @@ impl Entry {
                 e: v[3],
                 k: v[4],
                 c: v[5],
+            });
+        }
+        if name.starts_with("ep_dispatch_")
+            || name.starts_with("ep_ffn_")
+            || name.starts_with("ep_combine_")
+        {
+            let v = nums(name, &["_t", "_h", "_f", "_e", "_k", "_c", "_w", "_r"])?;
+            let g = EpGeom {
+                t: v[0],
+                h: v[1],
+                f: v[2],
+                e: v[3],
+                k: v[4],
+                c: v[5],
+                w: v[6],
+            };
+            let r = v[7];
+            return Some(if name.starts_with("ep_dispatch_") {
+                Entry::EpDispatch { g, r }
+            } else if name.starts_with("ep_ffn_") {
+                Entry::EpFfn { g, r }
+            } else {
+                Entry::EpCombine { g, r }
             });
         }
         if name.starts_with("tp_mlp_shard_") {
@@ -201,9 +281,34 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_ep_families() {
+        let g = EpGeom {
+            t: 8,
+            h: 16,
+            f: 32,
+            e: 4,
+            k: 2,
+            c: 12,
+            w: 4,
+        };
+        assert_eq!(
+            Entry::parse(&g.dispatch_name(3)),
+            Some(Entry::EpDispatch { g, r: 3 })
+        );
+        assert_eq!(Entry::parse(&g.ffn_name(0)), Some(Entry::EpFfn { g, r: 0 }));
+        assert_eq!(
+            Entry::parse(&g.combine_name(2)),
+            Some(Entry::EpCombine { g, r: 2 })
+        );
+        // the `_c` inside "ep_combine" must not confuse the field scan
+        assert_eq!(g.combine_name(2), "ep_combine_t8_h16_f32_e4_k2_c12_w4_r2");
+    }
+
+    #[test]
     fn rejects_unknown() {
         assert_eq!(Entry::parse("bogus_1x2"), None);
         assert_eq!(Entry::parse("gemm_1x2"), None);
         assert_eq!(Entry::parse(""), None);
+        assert_eq!(Entry::parse("ep_dispatch_t8"), None);
     }
 }

@@ -5,7 +5,7 @@ use triton_dist_sim::cli::Args;
 use triton_dist_sim::collectives::alltoall::{a2a_deepep_cfg, a2a_ll, A2aBufs, A2aCfg};
 use triton_dist_sim::collectives::ProgBuild;
 use triton_dist_sim::config::{ClusterSpec, DType, FabricSpec, GemmShape, MoeShape, RailPolicy};
-use triton_dist_sim::coordinator::{self, ag_gemm, flash_decode, gemm_rs, moe};
+use triton_dist_sim::coordinator::{self, ag_gemm, ep_moe, flash_decode, gemm_rs, moe};
 use triton_dist_sim::mem::SymmetricHeap;
 use triton_dist_sim::metrics;
 use triton_dist_sim::overlap::features;
@@ -23,6 +23,8 @@ COMMANDS:
   ag-gemm                     run AG+GEMM (ours vs nccl vs flux)
   gemm-rs                     run GEMM+RS (ours vs nccl vs flux)
   ag-moe                      run AG+MoE (ours vs pytorch)
+  ep-moe                      run token-routed expert-parallel MoE
+                              (railed dispatch/combine vs fixed capacity)
   alltoall                    run low-latency EP AllToAll (ours vs deepep)
   flash-decode                run distributed flash decoding
   timeline                    print an ASCII timeline of AG+GEMM
@@ -39,6 +41,16 @@ COMMON OPTIONS:
                   adaptive: emptiest plane per message by live occupancy)
   --m/--n/--k     GEMM dims          --trace    write chrome trace JSON
   --numeric       run real numerics through PJRT/native executors
+
+EP-MOE OPTIONS:
+  --tokens/--in-hidden/--out-hidden/--experts/--topk   MoE shape
+  --skew S            expert-popularity skew exponent (default 0 =
+                      uniform; higher concentrates topk on low experts)
+  --capacity-factor F per-expert capacity over the balanced load
+                      (default 2.0; overflow pairs are dropped)
+  --split N           LL sub-messages per routed dispatch chunk
+                      (default 1; see autotune::tune_dispatch_chunking)
+  --seed N            routing-table seed (default 1)
 ";
 
 fn cluster_from(args: &Args) -> Result<ClusterSpec, String> {
@@ -50,11 +62,11 @@ fn cluster_from(args: &Args) -> Result<ClusterSpec, String> {
     if rails == 0 {
         return Err("--rails must be >= 1".into());
     }
-    // `!(x >= 1.0)` instead of `x < 1.0` so NaN is rejected too
-    if !(oversub >= 1.0) {
+    // explicit NaN checks: `x < 1.0` alone would let NaN through
+    if oversub.is_nan() || oversub < 1.0 {
         return Err("--oversub must be >= 1.0".into());
     }
-    if !(spine_taper >= 1.0) {
+    if spine_taper.is_nan() || spine_taper < 1.0 {
         return Err("--spine-taper must be >= 1.0".into());
     }
     let policy = match args.choice_or("router", "static", &["static", "adaptive"])? {
@@ -201,6 +213,7 @@ fn run(args: &Args) -> Result<(), String> {
                 out_hidden: args.usize_or("out-hidden", 1408)?,
                 experts: args.usize_or("experts", 60)?,
                 topk: args.usize_or("topk", 4)?,
+                ..MoeShape::default()
             };
             let topo = Topology::build(cluster);
             for v in [moe::MoeVariant::Ours, moe::MoeVariant::Torch] {
@@ -208,6 +221,88 @@ fn run(args: &Args) -> Result<(), String> {
                 let t = coordinator::run_timing(&mut op, &topo);
                 println!("{:<24} {}", op.name, fmt_time(t));
             }
+            Ok(())
+        }
+        Some("ep-moe") => {
+            // The flagship multi-node workload: token-routed EP dispatch
+            // -> grouped FFN sized by actual received tokens -> combine
+            // crossing into the receiver's plane, vs the fixed-capacity
+            // padded baseline.
+            let cluster = cluster_from(args)?;
+            let ws = cluster.world_size();
+            let shape = MoeShape {
+                tokens_per_rank: args.usize_or("tokens", 256)?,
+                in_hidden: args.usize_or("in-hidden", 2048)?,
+                out_hidden: args.usize_or("out-hidden", 1408)?,
+                experts: args.usize_or("experts", 64)?,
+                topk: args.usize_or("topk", 4)?,
+                skew: args.f64_or("skew", 0.0)?,
+                capacity_factor: args.f64_or("capacity-factor", 2.0)?,
+            };
+            if shape.skew.is_nan() || shape.skew < 0.0 {
+                return Err("--skew must be >= 0".into());
+            }
+            if shape.capacity_factor.is_nan() || shape.capacity_factor <= 0.0 {
+                return Err("--capacity-factor must be > 0".into());
+            }
+            let split = args.usize_or("split", 1)?;
+            if split == 0 {
+                return Err("--split must be >= 1".into());
+            }
+            let seed = args.usize_or("seed", 1)? as u64;
+            let cfg = A2aCfg::ours().with_split(split);
+            let routing = ep_moe::routing_for(cluster, &shape, seed);
+            let geom = routing.geom;
+            println!(
+                "routing: {}/{} (token, k) pairs kept, {} dropped \
+                 (capacity {} slots/expert, skew {})",
+                routing.kept(),
+                geom.w * geom.t * geom.k,
+                routing.dropped(),
+                geom.c,
+                shape.skew,
+            );
+            let topo = Topology::build(cluster);
+            let mut report = metrics::FigureReport::new("EP MoE (token-routed)");
+            let mut row = metrics::SpeedupRow {
+                workload: format!(
+                    "t{} h{} f{} E{} k{} ws{ws} skew{}",
+                    shape.tokens_per_rank,
+                    shape.in_hidden,
+                    shape.out_hidden,
+                    shape.experts,
+                    shape.topk,
+                    shape.skew
+                ),
+                ours: 0.0,
+                baselines: Vec::new(),
+            };
+            for variant in [ep_moe::EpMoeVariant::TokenRouted, ep_moe::EpMoeVariant::FixedCapacity] {
+                let (mut op, bufs) =
+                    ep_moe::build_ep_moe_cfg(cluster, shape, &routing, variant, &cfg);
+                let t = if args.flag("numeric")
+                    && variant == ep_moe::EpMoeVariant::TokenRouted
+                {
+                    ep_moe::fill_ep_moe(&mut op.heap, &bufs, &routing, seed);
+                    let reference = ep_moe::reference_ep_moe(&op.heap, &bufs, &routing);
+                    let mut exec = HybridExecutor::auto();
+                    let rep = coordinator::run_numeric(&mut op, &topo, &mut exec);
+                    ep_moe::verify_ep_moe(&op.heap, &bufs, &routing, &reference)?;
+                    println!("numerics OK (exact token conservation verified)");
+                    rep.makespan
+                } else {
+                    coordinator::run_timing(&mut op, &topo)
+                };
+                println!("{:<28} {}", op.name, fmt_time(t));
+                match variant {
+                    ep_moe::EpMoeVariant::TokenRouted => row.ours = t,
+                    ep_moe::EpMoeVariant::FixedCapacity => {
+                        row.baselines.push(("fixed-capacity".into(), t));
+                    }
+                }
+            }
+            report.push(row);
+            println!("{}", report.render());
             Ok(())
         }
         Some("alltoall") => {
@@ -237,13 +332,9 @@ fn run(args: &Args) -> Result<(), String> {
                 )
             };
             let mut report = metrics::FigureReport::new("Low-latency AllToAll");
-            let deepep_combine = A2aCfg {
-                queue_overhead: A2aCfg::deepep().queue_overhead * 3.0,
-                ..A2aCfg::deepep()
-            };
             for (tag, chunk_elems, base_cfg) in [
                 ("dispatch", chunk, A2aCfg::deepep()),
-                ("combine", chunk * 2, deepep_combine),
+                ("combine", chunk * 2, A2aCfg::deepep_combine()),
             ] {
                 let ours = run(None, chunk_elems);
                 let deepep = run(Some(base_cfg), chunk_elems);

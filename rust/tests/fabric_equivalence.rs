@@ -15,10 +15,18 @@
 //!    `Static` on deliberately skewed traffic, it keeps collectives
 //!    numerically correct, and the `a2a_ep_rails` asymmetric
 //!    `Rails { tx, rx }` routes land on exactly the claimed planes.
+//! 5. The variable-size (token-routed) AllToAll family: a uniform size
+//!    table through `a2a_ll_var` is **bit-identical** to `a2a_ll` on
+//!    flat and railed fabrics, randomized routing tables deliver every
+//!    kept token exactly once (conservation), and the variable-size
+//!    combine's spine-crossing `Rails { tx, rx }` classes land on the
+//!    claimed planes under a tapered spine.
 
 use triton_dist_sim::collectives::alltoall::{
-    a2a_ep_rails, a2a_ll, a2a_skew, verify_alltoall, A2aBufs, A2aCfg, A2aEpDir,
+    a2a_ep_rails, a2a_ep_rails_var, a2a_ll, a2a_ll_var, a2a_skew, verify_alltoall, A2aBufs,
+    A2aCfg, A2aEpDir, A2aSizes, A2aVarBufs, EpRouting,
 };
+use triton_dist_sim::kernels::names::EpGeom;
 use triton_dist_sim::collectives::ProgBuild;
 use triton_dist_sim::config::{ClusterSpec, DType, FabricSpec, GemmShape, RailPolicy, TrafficClass};
 use triton_dist_sim::coordinator::{ag_gemm, gemm_rs, run_timing};
@@ -364,6 +372,164 @@ fn ep_rails_asymmetric_routes_land_on_claimed_planes() {
     assert!(
         crossing > 0,
         "combine direction must produce spine-crossing routes"
+    );
+}
+
+// -- variable-size (token-routed) AllToAll ----------------------------------
+
+/// Acceptance: a **uniform** size table through the variable-size builder
+/// reproduces `a2a_ll` bit-identically — on the flat default fabric and
+/// on a railed blocking one. The token-routed generalization costs the
+/// uniform path nothing.
+#[test]
+fn var_uniform_bit_identical_to_a2a_ll() {
+    for fabric in [
+        FabricSpec::flat(),
+        FabricSpec::rail_optimized(2, 2.0),
+        FabricSpec::rail_optimized(2, 2.0).with_rail_policy(RailPolicy::Adaptive),
+    ] {
+        let cluster = ClusterSpec::h800(2, 8).with_fabric(fabric);
+        let ctx = ShmemCtx::new(cluster, DType::BF16);
+        let topo = Topology::build(cluster);
+        let run = |var: bool| -> f64 {
+            let mut heap = SymmetricHeap::new(ctx.n_pes(), 4 * ctx.n_pes());
+            let mut pb = ProgBuild::new();
+            if var {
+                let bufs = A2aVarBufs::alloc(&mut heap, A2aSizes::uniform(ctx.n_pes(), 1024));
+                a2a_ll_var(&ctx, &bufs, &mut pb, &A2aCfg::ours(), None);
+            } else {
+                let bufs = A2aBufs::alloc(&mut heap, &ctx, 1024);
+                a2a_ll(&ctx, &bufs, &mut pb, &A2aCfg::ours());
+            }
+            let sim = Sim::with_config(
+                &topo,
+                SimConfig {
+                    numerics: false,
+                    trace: false,
+                },
+            );
+            sim.run(&pb.prog, &mut heap, &mut NoopExecutor)
+                .unwrap()
+                .makespan
+        };
+        assert_eq!(
+            run(false).to_bits(),
+            run(true).to_bits(),
+            "uniform var path must be bit-identical under {fabric:?}"
+        );
+    }
+}
+
+/// Acceptance: randomized routing tables through the railed EP dispatch —
+/// every kept (token, k) pair's row is delivered exactly once, every
+/// arrival signal fires (zero-size chunks included), across seeds and
+/// skews, on a blocking 2-rail fabric.
+#[test]
+fn randomized_routing_conserves_every_token() {
+    for seed in [1u64, 7, 1234] {
+        for skew in [0.0, 1.5] {
+            let cluster =
+                ClusterSpec::h800(2, 4).with_fabric(FabricSpec::rail_optimized(2, 2.0));
+            let ctx = ShmemCtx::new(cluster, DType::BF16);
+            let topo = Topology::build(cluster);
+            let ws = ctx.n_pes();
+            let geom = EpGeom {
+                t: 12,
+                h: 3,
+                f: 2,
+                e: 16,
+                k: 2,
+                c: 24,
+                w: ws,
+            };
+            let routing = EpRouting::generate(geom, skew, seed);
+            let mut heap = SymmetricHeap::new(ws, 4 * ws);
+            let bufs = A2aVarBufs::alloc(&mut heap, routing.dispatch_sizes());
+            for r in 0..ws {
+                let n = bufs.sizes.send_total(r);
+                let vals: Vec<f32> = (0..n).map(|i| (r * 1_000_000 + i + 1) as f32).collect();
+                heap.write(triton_dist_sim::mem::Slice::new(r, bufs.send, 0, n), &vals);
+            }
+            let mut pb = ProgBuild::new();
+            a2a_ep_rails_var(&ctx, &bufs, &mut pb, &A2aCfg::ours(), A2aEpDir::Dispatch, None);
+            let sim = Sim::new(&topo);
+            sim.run(&pb.prog, &mut heap, &mut NoopExecutor).unwrap();
+            let mut delivered = 0usize;
+            for on in 0..ws {
+                for src in 0..ws {
+                    let got = heap.read(bufs.recv_slot(src, on)).to_vec();
+                    let want = heap.read(bufs.send_chunk(on, src)).to_vec();
+                    assert_eq!(got, want, "chunk {src}->{on} (seed {seed}, skew {skew})");
+                    delivered += got.len();
+                    assert_eq!(heap.signal(on, bufs.sig(src)), 1);
+                }
+            }
+            assert_eq!(
+                delivered,
+                routing.kept() * geom.h,
+                "conservation (seed {seed}, skew {skew})"
+            );
+        }
+    }
+}
+
+/// Acceptance: the variable-size combine emits `Rails { tx != rx }`
+/// spine-crossing classes whose routes land on exactly the claimed
+/// planes under a tapered spine — same check as the uniform
+/// `a2a_ep_rails` test, now with routing-sized messages.
+#[test]
+fn ep_rails_var_combine_claims_planes_under_taper() {
+    let cluster = ClusterSpec::h800(2, 8)
+        .with_fabric(FabricSpec::rail_optimized(2, 2.0).with_spine_taper(2.0));
+    let ctx = ShmemCtx::new(cluster, DType::BF16);
+    let topo = Topology::build(cluster);
+    let ws = ctx.n_pes();
+    let geom = EpGeom {
+        t: 8,
+        h: 4,
+        f: 4,
+        e: 16,
+        k: 2,
+        c: usize::MAX,
+        w: ws,
+    };
+    let routing = EpRouting::generate(geom, 0.8, 5);
+    let mut heap = SymmetricHeap::new(ws, 4 * ws);
+    let bufs = A2aVarBufs::alloc(&mut heap, routing.combine_sizes());
+    let mut pb = ProgBuild::new();
+    a2a_ep_rails_var(&ctx, &bufs, &mut pb, &A2aCfg::ours(), A2aEpDir::Combine, None);
+
+    let mut crossing = 0usize;
+    for task in &pb.prog.tasks {
+        for op in &task.ops {
+            let Op::LLPut { src, dst, tc, .. } = op else {
+                continue;
+            };
+            if cluster.node_of(src.rank) == cluster.node_of(dst.rank) {
+                continue;
+            }
+            let TrafficClass::Rails { tx, rx } = *tc else {
+                panic!("inter-node EP message without explicit planes: {tc:?}");
+            };
+            assert_eq!(tx as usize, cluster.local_rank(src.rank) % 2);
+            assert_eq!(rx as usize, cluster.local_rank(dst.rank) % 2);
+            if tx == rx {
+                continue;
+            }
+            crossing += 1;
+            let route = topo.route_tc(src.rank, dst.rank, *tc);
+            let spine_owners: Vec<usize> = route
+                .links
+                .iter()
+                .filter(|&&l| topo.link(l).kind == LinkKind::Spine)
+                .map(|&l| topo.link(l).owner)
+                .collect();
+            assert_eq!(spine_owners, vec![tx as usize, rx as usize]);
+        }
+    }
+    assert!(
+        crossing > 0,
+        "routed combine must produce spine-crossing messages"
     );
 }
 

@@ -3,7 +3,7 @@
 
 use triton_dist_sim::autotune;
 use triton_dist_sim::config::{ClusterSpec, GemmShape, MoeShape};
-use triton_dist_sim::coordinator::{self, ag_gemm, flash_decode, gemm_rs, moe};
+use triton_dist_sim::coordinator::{self, ag_gemm, ep_moe, flash_decode, gemm_rs, moe};
 use triton_dist_sim::metrics;
 use triton_dist_sim::overlap::features;
 use triton_dist_sim::runtime::HybridExecutor;
@@ -70,6 +70,7 @@ fn moe_both_directions_inter_node() {
         out_hidden: 16,
         experts: 4,
         topk: 2,
+        ..MoeShape::default()
     };
     for cluster in [ClusterSpec::h800(1, 8), ClusterSpec::h800(2, 4)] {
         let topo = Topology::build(cluster);
@@ -85,6 +86,39 @@ fn moe_both_directions_inter_node() {
         let exp2 = moe::reference_moe_rs(&op2.heap, &bufs2);
         coordinator::run_numeric(&mut op2, &topo, &mut exec);
         moe::verify_moe_rs(&op2.heap, &bufs2, &exp2).unwrap();
+    }
+}
+
+#[test]
+fn ep_moe_pipeline_across_geometries_and_skews() {
+    // token-routed EP pipeline: exact numerics (token conservation +
+    // bitwise output equality) across geometries, skews, and capacity
+    // factors, including drop-inducing configurations
+    let base = MoeShape {
+        tokens_per_rank: 5,
+        in_hidden: 6,
+        out_hidden: 4,
+        experts: 8,
+        topk: 2,
+        ..MoeShape::default()
+    };
+    let cases = [
+        (ClusterSpec::h800(1, 4), base, 21u64),
+        (ClusterSpec::h800(2, 2), base.with_skew(1.0), 22),
+        (ClusterSpec::h800(2, 4), base.with_skew(2.0).with_capacity_factor(0.6), 23),
+        (ClusterSpec::mi308x(4), base.with_skew(0.5), 24),
+    ];
+    for (cluster, shape, seed) in cases {
+        let routing = ep_moe::routing_for(cluster, &shape, seed);
+        let (mut op, bufs) =
+            ep_moe::build_ep_moe(cluster, shape, &routing, ep_moe::EpMoeVariant::TokenRouted);
+        ep_moe::fill_ep_moe(&mut op.heap, &bufs, &routing, seed);
+        let expected = ep_moe::reference_ep_moe(&op.heap, &bufs, &routing);
+        let topo = Topology::build(cluster);
+        let mut exec = HybridExecutor::native_only();
+        coordinator::run_numeric(&mut op, &topo, &mut exec);
+        ep_moe::verify_ep_moe(&op.heap, &bufs, &routing, &expected)
+            .unwrap_or_else(|e| panic!("{}: {e}", op.name));
     }
 }
 
