@@ -52,6 +52,6 @@ fn main() {
     let (mut op, _b) = gemm_rs::build(inter, shape, gemm_rs::GemmRsVariant::OursInter);
     println!(
         "inter-node GEMM+RS with planned partition (116/1/15/132): {}",
-        fmt_time(run_timing(&mut op, &itopo))
+        fmt_time(run_timing(&mut op, &itopo).unwrap())
     );
 }

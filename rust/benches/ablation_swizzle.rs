@@ -20,7 +20,7 @@ fn main() {
         let shape = GemmShape::new(m, 49152 / 8, 8192);
         let ag = |v| {
             let (mut op, _b) = ag_gemm::build(cluster, shape, v);
-            run_timing(&mut op, &topo)
+            run_timing(&mut op, &topo).unwrap()
         };
         let a = ag(ag_gemm::AgGemmVariant::OursPush);
         let b = ag(ag_gemm::AgGemmVariant::NoSwizzle);
@@ -33,7 +33,7 @@ fn main() {
         let shape_rs = GemmShape::new(m, 8192, 49152 / 8);
         let rs = |v| {
             let (mut op, _b) = gemm_rs::build(cluster, shape_rs, v);
-            run_timing(&mut op, &topo)
+            run_timing(&mut op, &topo).unwrap()
         };
         let a = rs(gemm_rs::GemmRsVariant::OursIntra);
         let b = rs(gemm_rs::GemmRsVariant::NoSwizzle);
@@ -54,7 +54,7 @@ fn main() {
     let shape = GemmShape::new(4096, 49152 / 8, 8192);
     for sc in [1usize, 2, 4, 8, 16] {
         let (mut op, _b) = ag_gemm::build(amd, shape, ag_gemm::AgGemmVariant::OursAmd { sub_chunks: sc });
-        t2.row(&[sc.to_string(), fmt_time(run_timing(&mut op, &amd_topo))]);
+        t2.row(&[sc.to_string(), fmt_time(run_timing(&mut op, &amd_topo).unwrap())]);
     }
     t2.print();
     println!("single sub-chunk serializes the mesh links; more sub-chunks engage all 7");

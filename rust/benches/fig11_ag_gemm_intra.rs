@@ -25,7 +25,7 @@ fn main() {
     for shape in shapes(8) {
         let t = |v| {
             let (mut op, _b) = ag_gemm::build(cluster, shape, v);
-            run_timing(&mut op, &topo)
+            run_timing(&mut op, &topo).unwrap()
         };
         fig.push(SpeedupRow {
             workload: format!("M{} N{} K{}", shape.m, shape.n, shape.k),

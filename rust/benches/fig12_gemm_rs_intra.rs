@@ -24,7 +24,7 @@ fn main() {
     for shape in shapes() {
         let t = |v| {
             let (mut op, _b) = gemm_rs::build(cluster, shape, v);
-            run_timing(&mut op, &topo)
+            run_timing(&mut op, &topo).unwrap()
         };
         fig.push(SpeedupRow {
             workload: format!("M{} N{} Kl{}", shape.m, shape.n, shape.k),

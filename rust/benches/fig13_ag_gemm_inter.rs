@@ -17,7 +17,7 @@ fn main() {
             let shape = GemmShape::new(m, n, k);
             let t = |v| {
                 let (mut op, _b) = ag_gemm::build(cluster, shape, v);
-                run_timing(&mut op, &topo)
+                run_timing(&mut op, &topo).unwrap()
             };
             // FLUX inter-node = same Fig-4 overlap + vendor (CUTLASS) GEMM
             let ours = t(ag_gemm::AgGemmVariant::OursInter);

@@ -19,7 +19,7 @@ fn main() {
             let shape = GemmShape::new(m, n, k);
             let t = |v| {
                 let (mut op, _b) = gemm_rs::build(cluster, shape, v);
-                run_timing(&mut op, &topo)
+                run_timing(&mut op, &topo).unwrap()
             };
             let ours = t(gemm_rs::GemmRsVariant::OursInter);
             let nccl = t(gemm_rs::GemmRsVariant::Nccl);

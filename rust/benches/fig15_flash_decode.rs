@@ -27,7 +27,7 @@ fn run(ws: usize, kv_per_rank: usize) -> (f64, f64) {
     };
     let topo = Topology::build(cluster);
     let (mut op, _b) = flash_decode::build(cluster, cfg);
-    let t = run_timing(&mut op, &topo);
+    let t = run_timing(&mut op, &topo).unwrap();
     (t, flash_decode::achieved_bw(&cfg, &cluster, t))
 }
 

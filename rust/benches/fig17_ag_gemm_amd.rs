@@ -16,7 +16,7 @@ fn main() {
         let shape = GemmShape::new(m, 49152 / 8, 8192);
         let t = |v| {
             let (mut op, _b) = ag_gemm::build(cluster, shape, v);
-            run_timing(&mut op, &topo)
+            run_timing(&mut op, &topo).unwrap()
         };
         fig.push(SpeedupRow {
             workload: format!("M{m}"),

@@ -16,7 +16,7 @@ fn main() {
         let shape = GemmShape::new(m, 8192, 49152 / 8);
         let t = |v| {
             let (mut op, _b) = gemm_rs::build(cluster, shape, v);
-            run_timing(&mut op, &topo)
+            run_timing(&mut op, &topo).unwrap()
         };
         fig.push(SpeedupRow {
             workload: format!("M{m}"),

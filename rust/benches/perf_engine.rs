@@ -25,6 +25,15 @@
 //!   prints the makespan matrix and the token-routed vs fixed-capacity
 //!   win (routed must be strictly lower — pinned by the coordinator's
 //!   test suite).
+//! * `alltoall-degraded-rail` — 4x8 LL AllToAll with spine plane 0 at
+//!   quarter capacity for the whole run: the health-aware adaptive
+//!   router steers around the degraded plane; the record carries the
+//!   fault ledger and the clean-vs-degraded makespan slowdown.
+//! * `moe-ep-rail-flap` — the token-routed EP MoE with spine plane 0
+//!   flapping dead mid-dispatch: Adaptive self-heals the pinned rails
+//!   onto the surviving plane while Static stalls through the retry
+//!   backoff ladder until the plane returns (adaptive must be strictly
+//!   lower — pinned by `tests/fault_injection.rs`).
 //! * `ag_gemm-build+run` — single-node AG+GEMM, program build + engine.
 //! * `ag_gemm-multinode` — 4x8 inter-node AG+GEMM (NIC contention path).
 //! * `ag_gemm-numerics(native)` — data movement through the heap.
@@ -32,12 +41,16 @@
 use triton_dist_sim::bench::{banner, bench_wall};
 use triton_dist_sim::collectives::alltoall::{a2a_ll, a2a_skew, A2aBufs, A2aCfg};
 use triton_dist_sim::collectives::ProgBuild;
-use triton_dist_sim::config::{ClusterSpec, DType, FabricSpec, GemmShape, MoeShape, RailPolicy};
+use triton_dist_sim::config::{
+    ClusterSpec, DType, FabricSpec, FaultPlan, GemmShape, MoeShape, RailPolicy,
+};
 use triton_dist_sim::coordinator::{ag_gemm, ep_moe};
 use triton_dist_sim::mem::SymmetricHeap;
-use triton_dist_sim::metrics::{engine_bench_json, EngineBenchRecord};
+use triton_dist_sim::metrics::{
+    engine_bench_json, fault_ledger_line, EngineBenchRecord, FaultBenchInfo,
+};
 use triton_dist_sim::shmem::ShmemCtx;
-use triton_dist_sim::sim::{NoopExecutor, Sim, SimConfig};
+use triton_dist_sim::sim::{NoopExecutor, Sim, SimConfig, SimReport};
 use triton_dist_sim::topology::Topology;
 
 /// Timing-only AllToAll over a prebuilt cluster; returns events
@@ -67,6 +80,16 @@ fn report(
     events: u64,
     stat: &triton_dist_sim::bench::WallStat,
 ) {
+    report_fault(records, name, events, stat, None);
+}
+
+fn report_fault(
+    records: &mut Vec<EngineBenchRecord>,
+    name: &str,
+    events: u64,
+    stat: &triton_dist_sim::bench::WallStat,
+    fault: Option<FaultBenchInfo>,
+) {
     println!(
         "  {} events -> {:.2} M events/s",
         events,
@@ -76,6 +99,7 @@ fn report(
         scenario: name.to_string(),
         events,
         median_wall_s: stat.median_s,
+        fault,
     });
 }
 
@@ -213,6 +237,120 @@ fn main() {
     });
     println!("{}", stat_ep.render());
     report(&mut records, "moe-ep-skew", events_ep, &stat_ep);
+
+    // degraded-rail AllToAll: spine plane 0 at quarter capacity for the
+    // whole run. The fault machinery is on the hot path here (health-aware
+    // routing + capacity retargeting), so this prices it, and the record
+    // carries the fault ledger + clean-vs-degraded slowdown. The empty
+    // plan being bit-identical is pinned by tests/fault_injection.rs.
+    let deg_run = |plan: FaultPlan| -> SimReport {
+        let cluster = ClusterSpec::h800(4, 8)
+            .with_fabric(FabricSpec::rail_optimized(2, 2.0).with_rail_policy(RailPolicy::Adaptive));
+        let ctx = ShmemCtx::new(cluster, DType::BF16);
+        let topo = Topology::build(cluster);
+        let mut heap = SymmetricHeap::new(ctx.n_pes(), 4 * ctx.n_pes());
+        let bufs = A2aBufs::alloc(&mut heap, &ctx, 4096);
+        let mut pb = ProgBuild::new();
+        a2a_ll(&ctx, &bufs, &mut pb, &A2aCfg::ours());
+        Sim::with_config(
+            &topo,
+            SimConfig {
+                numerics: false,
+                trace: false,
+            },
+        )
+        .with_faults(plan)
+        .run(&pb.prog, &mut heap, &mut NoopExecutor)
+        .unwrap()
+    };
+    let deg_plan = || FaultPlan::parse("deg,spine,0,0,1.0,0.25").unwrap();
+    let clean = deg_run(FaultPlan::default());
+    let mut rep_deg = deg_run(deg_plan());
+    let stat_deg = bench_wall("alltoall-degraded-rail", 1, 5, || {
+        rep_deg = deg_run(deg_plan());
+    });
+    println!("{}", stat_deg.render());
+    let deg_slowdown = rep_deg.makespan / clean.makespan;
+    println!(
+        "  virtual makespan: clean {:.3} us vs degraded {:.3} us ({:.2}x slowdown); {}",
+        clean.makespan * 1e6,
+        rep_deg.makespan * 1e6,
+        deg_slowdown,
+        fault_ledger_line(&rep_deg.ledger)
+    );
+    report_fault(
+        &mut records,
+        "alltoall-degraded-rail",
+        rep_deg.events,
+        &stat_deg,
+        Some(FaultBenchInfo {
+            ledger: rep_deg.ledger,
+            slowdown: deg_slowdown,
+        }),
+    );
+
+    // mid-dispatch rail flap on the token-routed EP MoE: spine plane 0
+    // dies at t=5us and returns at t=505us. Adaptive self-heals the
+    // rail-pinned dispatch/combine onto the surviving plane at the first
+    // retry; Static honors the pins and climbs the backoff ladder until
+    // the plane returns (the strict win is pinned by
+    // tests/fault_injection.rs).
+    let flap_plan = || FaultPlan::parse("flap,spine,0,5e-6,5e-4").unwrap();
+    let ep_flap = |policy: RailPolicy, plan: FaultPlan| -> SimReport {
+        let cluster = ClusterSpec::h800(2, 8).with_fabric(
+            FabricSpec::rail_optimized(2, 2.0)
+                .with_spine_taper(2.0)
+                .with_rail_policy(policy),
+        );
+        let shape = MoeShape {
+            tokens_per_rank: 128,
+            in_hidden: 512,
+            out_hidden: 512,
+            experts: 32,
+            topk: 4,
+            ..MoeShape::default()
+        }
+        .with_skew(1.2);
+        let routing = ep_moe::routing_for(cluster, &shape, 11);
+        let topo = Topology::build(cluster);
+        let (mut op, _bufs) =
+            ep_moe::build_ep_moe(cluster, shape, &routing, ep_moe::EpMoeVariant::TokenRouted);
+        Sim::with_config(
+            &topo,
+            SimConfig {
+                numerics: false,
+                trace: false,
+            },
+        )
+        .with_faults(plan)
+        .run(&op.prog, &mut op.heap, &mut NoopExecutor)
+        .unwrap()
+    };
+    let ep_clean = ep_flap(RailPolicy::Adaptive, FaultPlan::default());
+    let ep_static = ep_flap(RailPolicy::Static, flap_plan());
+    let mut ep_adaptive = ep_flap(RailPolicy::Adaptive, flap_plan());
+    let stat_flap = bench_wall("moe-ep-rail-flap", 1, 5, || {
+        ep_adaptive = ep_flap(RailPolicy::Adaptive, flap_plan());
+    });
+    println!("{}", stat_flap.render());
+    let flap_slowdown = ep_adaptive.makespan / ep_clean.makespan;
+    println!(
+        "  mid-dispatch flap: adaptive+retry {:.3} us vs static+retry {:.3} us ({:.2}x); {}",
+        ep_adaptive.makespan * 1e6,
+        ep_static.makespan * 1e6,
+        ep_static.makespan / ep_adaptive.makespan,
+        fault_ledger_line(&ep_adaptive.ledger)
+    );
+    report_fault(
+        &mut records,
+        "moe-ep-rail-flap",
+        ep_adaptive.events,
+        &stat_flap,
+        Some(FaultBenchInfo {
+            ledger: ep_adaptive.ledger,
+            slowdown: flap_slowdown,
+        }),
+    );
 
     // AG+GEMM with numerics off — program-build + engine cost
     let cluster = ClusterSpec::h800(1, 8);

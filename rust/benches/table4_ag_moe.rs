@@ -53,7 +53,7 @@ fn main() {
     for (i, shape) in rows().into_iter().enumerate() {
         let run = |cluster, topo: &Topology, v| {
             let (mut op, _b) = moe::build_ag_moe(cluster, shape, v);
-            run_timing(&mut op, topo)
+            run_timing(&mut op, topo).unwrap()
         };
         let oi = run(intra, &topo_intra, moe::MoeVariant::Ours);
         let oe = run(inter, &topo_inter, moe::MoeVariant::Ours);

@@ -313,7 +313,7 @@ mod tests {
         let shape = GemmShape::new(4096, 2048, 1024);
         let r = tune_rebuild("amd sub_chunks", &[1usize, 2, 4, 8], |&sc| {
             let (mut op, _b) = build(cluster, shape, AgGemmVariant::OursAmd { sub_chunks: sc });
-            Ok(crate::coordinator::run_timing(&mut op, &topo))
+            crate::coordinator::run_timing(&mut op, &topo).map_err(|e| e.to_string())
         })
         .unwrap();
         assert!(r.best.config >= 2, "expected sub-chunking to win: {:?}", r.best);

@@ -1,0 +1,450 @@
+//! Deterministic fault plans: seeded, replayable adversarial schedules
+//! for the railed fabric (ROADMAP "self-healing transport").
+//!
+//! A [`FaultPlan`] is pure configuration — a list of link faults
+//! (flaps/degradations on NIC or spine links, whole-rail death),
+//! straggler ranks, optional latency jitter, and the recovery knobs
+//! (watchdog timeout, retry budget). The DES engine turns each link
+//! fault into a pair of first-class events that retarget `FlowNet`
+//! capacities; nothing here touches simulation state.
+//!
+//! The non-negotiable invariant: [`FaultPlan::default`] (empty) leaves
+//! the engine bit-identical to the fault-free build, and the same
+//! `(workload seed, fault seed)` pair replays the identical timeline.
+//!
+//! ```
+//! use triton_dist_sim::config::fault::FaultPlan;
+//!
+//! let plan = FaultPlan::parse("flap,nic,3,0,1e-3,2e-3; strag,5,1.5").unwrap();
+//! assert_eq!(plan.link_faults.len(), 1);
+//! assert_eq!(plan.stragglers.len(), 1);
+//! assert!(!plan.is_empty());
+//! assert!(FaultPlan::default().is_empty());
+//! ```
+
+use crate::util::Rng;
+
+/// What piece of the fabric a [`LinkFault`] hits. Resolution to concrete
+/// `LinkId`s is the topology's job (`Topology::fault_links`), so plans
+/// stay portable across cluster shapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultTarget {
+    /// Both directions (tx + rx) of one GPU's NIC on one rail.
+    Nic { rank: usize, rail: usize },
+    /// The shared spine-core link of one rail plane (blocking fabrics
+    /// only; resolves to nothing on a non-blocking fabric).
+    Spine { rail: usize },
+    /// Every link on one rail plane: all NICs, leaf tiers, and spine.
+    Rail { rail: usize },
+}
+
+/// One scheduled capacity change on part of the fabric.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkFault {
+    pub target: FaultTarget,
+    /// Virtual time the fault begins (s).
+    pub t_start: f64,
+    /// Virtual time the fault clears (s); `f64::INFINITY` = permanent.
+    pub t_end: f64,
+    /// Capacity multiplier while active: `0.0` = link down (flows on it
+    /// are killed and retried), `(0, 1)` = degraded bandwidth.
+    pub factor: f64,
+}
+
+impl LinkFault {
+    /// A full down interval (flap) on `target`.
+    pub fn flap(target: FaultTarget, t_start: f64, dur: f64) -> Self {
+        LinkFault {
+            target,
+            t_start,
+            t_end: t_start + dur,
+            factor: 0.0,
+        }
+    }
+
+    /// A bandwidth degradation to `factor` of nominal on `target`.
+    pub fn degrade(target: FaultTarget, t_start: f64, dur: f64, factor: f64) -> Self {
+        LinkFault {
+            target,
+            t_start,
+            t_end: t_start + dur,
+            factor,
+        }
+    }
+}
+
+/// A rank whose compute kernels run `factor`x slower (factor > 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Straggler {
+    pub rank: usize,
+    pub factor: f64,
+}
+
+/// Seeded per-message latency jitter: each flow launch adds a uniform
+/// extra latency in `[0, max_secs)` drawn from a dedicated stream, so
+/// jitter replays identically for a given seed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Jitter {
+    pub seed: u64,
+    pub max_secs: f64,
+}
+
+/// The complete, deterministic adversarial schedule plus recovery knobs.
+///
+/// `lt_timeout`, `retry_max`, and `retry_backoff` are recovery
+/// configuration rather than faults; they do not affect
+/// [`is_empty`](Self::is_empty) (a finite watchdog on a clean run never
+/// fires and never perturbs the timeline).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Scheduled capacity changes, applied as DES events.
+    pub link_faults: Vec<LinkFault>,
+    /// Ranks with inflated compute durations.
+    pub stragglers: Vec<Straggler>,
+    /// Optional seeded latency jitter on every flow launch.
+    pub jitter: Option<Jitter>,
+    /// Watchdog timeout on LL/signal waits (s). `INFINITY` = disabled.
+    /// CLI: `--lt-timeout`.
+    pub lt_timeout: f64,
+    /// Max retry attempts for a put whose flow dies on a downed link
+    /// before the run errors out. CLI: `--retry-max`.
+    pub retry_max: u32,
+    /// Base retry backoff (s); attempt `k` waits
+    /// `retry_backoff * 2^(k-1)`, capped at [`Self::BACKOFF_CAP`].
+    pub retry_backoff: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            link_faults: Vec::new(),
+            stragglers: Vec::new(),
+            jitter: None,
+            lt_timeout: f64::INFINITY,
+            retry_max: 8,
+            retry_backoff: 20e-6,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Retry backoff ceiling (s): exponential growth stops here.
+    pub const BACKOFF_CAP: f64 = 5e-3;
+
+    /// No scheduled faults at all. Recovery knobs are ignored: a
+    /// watchdog or retry budget with nothing to trigger it cannot
+    /// perturb the timeline.
+    pub fn is_empty(&self) -> bool {
+        self.link_faults.is_empty() && self.stragglers.is_empty() && self.jitter.is_none()
+    }
+
+    /// Backoff before retry attempt `attempt` (1-based), exponential and
+    /// capped.
+    pub fn backoff(&self, attempt: u32) -> f64 {
+        let exp = attempt.saturating_sub(1).min(30);
+        (self.retry_backoff * (1u64 << exp) as f64).min(Self::BACKOFF_CAP)
+    }
+
+    /// Compute-duration multiplier for `rank` (1.0 when not a straggler;
+    /// stacked stragglers multiply).
+    pub fn straggle_factor(&self, rank: usize) -> f64 {
+        let mut f = 1.0;
+        for s in &self.stragglers {
+            if s.rank == rank {
+                f *= s.factor;
+            }
+        }
+        f
+    }
+
+    /// Parse a semicolon-separated fault DSL (the `--faults` flag):
+    ///
+    /// * `flap,nic,<rank>,<rail>,<t0>,<dur>` — NIC down interval
+    /// * `flap,spine,<rail>,<t0>,<dur>` — spine-plane down interval
+    /// * `deg,nic,<rank>,<rail>,<t0>,<dur>,<factor>` — NIC degraded
+    /// * `deg,spine,<rail>,<t0>,<dur>,<factor>` — spine degraded
+    /// * `raildead,<rail>,<t0>` — permanent whole-rail death
+    /// * `strag,<rank>,<factor>` — straggler rank
+    /// * `jitter,<seed>,<max_secs>` — seeded latency jitter
+    ///
+    /// Whitespace around separators is ignored; empty clauses are
+    /// skipped, so a trailing `;` is fine.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for clause in s.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = clause.split(',').map(str::trim).collect();
+            let usize_at = |i: usize| -> Result<usize, String> {
+                f.get(i)
+                    .ok_or_else(|| format!("fault clause '{clause}': missing field {i}"))?
+                    .parse::<usize>()
+                    .map_err(|e| format!("fault clause '{clause}' field {i}: {e}"))
+            };
+            let f64_at = |i: usize| -> Result<f64, String> {
+                f.get(i)
+                    .ok_or_else(|| format!("fault clause '{clause}': missing field {i}"))?
+                    .parse::<f64>()
+                    .map_err(|e| format!("fault clause '{clause}' field {i}: {e}"))
+            };
+            let target_at = |kind: &str, base: usize| -> Result<(FaultTarget, usize), String> {
+                match kind {
+                    "nic" => Ok((
+                        FaultTarget::Nic {
+                            rank: usize_at(base)?,
+                            rail: usize_at(base + 1)?,
+                        },
+                        base + 2,
+                    )),
+                    "spine" => Ok((
+                        FaultTarget::Spine {
+                            rail: usize_at(base)?,
+                        },
+                        base + 1,
+                    )),
+                    other => Err(format!(
+                        "fault clause '{clause}': unknown target '{other}' (nic|spine)"
+                    )),
+                }
+            };
+            match f[0] {
+                "flap" => {
+                    let kind = f
+                        .get(1)
+                        .ok_or_else(|| format!("fault clause '{clause}': missing target"))?;
+                    let (target, i) = target_at(kind, 2)?;
+                    let (t0, dur) = (f64_at(i)?, f64_at(i + 1)?);
+                    check_time(clause, t0, dur)?;
+                    plan.link_faults.push(LinkFault::flap(target, t0, dur));
+                }
+                "deg" => {
+                    let kind = f
+                        .get(1)
+                        .ok_or_else(|| format!("fault clause '{clause}': missing target"))?;
+                    let (target, i) = target_at(kind, 2)?;
+                    let (t0, dur, factor) = (f64_at(i)?, f64_at(i + 1)?, f64_at(i + 2)?);
+                    check_time(clause, t0, dur)?;
+                    if !(0.0..1.0).contains(&factor) {
+                        return Err(format!(
+                            "fault clause '{clause}': degradation factor must be in [0, 1)"
+                        ));
+                    }
+                    plan.link_faults
+                        .push(LinkFault::degrade(target, t0, dur, factor));
+                }
+                "raildead" => {
+                    let (rail, t0) = (usize_at(1)?, f64_at(2)?);
+                    check_time(clause, t0, 0.0)?;
+                    plan.link_faults.push(LinkFault {
+                        target: FaultTarget::Rail { rail },
+                        t_start: t0,
+                        t_end: f64::INFINITY,
+                        factor: 0.0,
+                    });
+                }
+                "strag" => {
+                    let (rank, factor) = (usize_at(1)?, f64_at(2)?);
+                    if !(factor >= 1.0) {
+                        return Err(format!(
+                            "fault clause '{clause}': straggler factor must be >= 1"
+                        ));
+                    }
+                    plan.stragglers.push(Straggler { rank, factor });
+                }
+                "jitter" => {
+                    let seed = f
+                        .get(1)
+                        .ok_or_else(|| format!("fault clause '{clause}': missing seed"))?
+                        .parse::<u64>()
+                        .map_err(|e| format!("fault clause '{clause}' seed: {e}"))?;
+                    let max_secs = f64_at(2)?;
+                    if !(max_secs > 0.0) || !max_secs.is_finite() {
+                        return Err(format!(
+                            "fault clause '{clause}': jitter bound must be finite and > 0"
+                        ));
+                    }
+                    plan.jitter = Some(Jitter { seed, max_secs });
+                }
+                other => {
+                    return Err(format!(
+                        "unknown fault kind '{other}' \
+                         (flap|deg|raildead|strag|jitter)"
+                    ))
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Synthesize a random-but-deterministic plan from a seed: roughly
+    /// `rate` faults per rank over `[0, horizon)`, mixing NIC flaps,
+    /// NIC/spine degradations, and the occasional straggler. The same
+    /// `(seed, rate, world, rails, horizon)` always yields the same
+    /// plan (CLI: `--fault-seed` / `--fault-rate`).
+    pub fn synthesize(seed: u64, rate: f64, world: usize, rails: usize, horizon: f64) -> FaultPlan {
+        assert!(rate >= 0.0 && rate.is_finite(), "fault rate must be >= 0");
+        assert!(
+            horizon > 0.0 && horizon.is_finite(),
+            "fault horizon must be finite and > 0"
+        );
+        let mut rng = Rng::new(seed);
+        let mut plan = FaultPlan::default();
+        let n = (rate * world as f64).round() as usize;
+        for _ in 0..n {
+            let t0 = rng.f64() * horizon * 0.8;
+            let dur = (0.05 + 0.25 * rng.f64()) * horizon;
+            let rail = rng.usize_in(0, rails.max(1));
+            match rng.gen_range(8) {
+                // NIC flaps dominate: the common real-world failure
+                0..=3 => {
+                    let rank = rng.usize_in(0, world);
+                    plan.link_faults
+                        .push(LinkFault::flap(FaultTarget::Nic { rank, rail }, t0, dur));
+                }
+                4..=5 => {
+                    let rank = rng.usize_in(0, world);
+                    let factor = 0.1 + 0.7 * rng.f64();
+                    plan.link_faults.push(LinkFault::degrade(
+                        FaultTarget::Nic { rank, rail },
+                        t0,
+                        dur,
+                        factor,
+                    ));
+                }
+                6 => {
+                    let factor = 0.1 + 0.7 * rng.f64();
+                    plan.link_faults.push(LinkFault::degrade(
+                        FaultTarget::Spine { rail },
+                        t0,
+                        dur,
+                        factor,
+                    ));
+                }
+                _ => {
+                    let rank = rng.usize_in(0, world);
+                    plan.stragglers.push(Straggler {
+                        rank,
+                        factor: 1.1 + rng.f64(),
+                    });
+                }
+            }
+        }
+        plan
+    }
+}
+
+fn check_time(clause: &str, t0: f64, dur: f64) -> Result<(), String> {
+    if !(t0 >= 0.0) || !t0.is_finite() {
+        return Err(format!(
+            "fault clause '{clause}': start time must be finite and >= 0"
+        ));
+    }
+    if !(dur >= 0.0) {
+        return Err(format!("fault clause '{clause}': duration must be >= 0"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_empty() {
+        let p = FaultPlan::default();
+        assert!(p.is_empty());
+        assert!(p.lt_timeout.is_infinite());
+        // a finite watchdog alone does not make the plan non-empty
+        let watch = FaultPlan {
+            lt_timeout: 1.0,
+            ..FaultPlan::default()
+        };
+        assert!(watch.is_empty());
+    }
+
+    #[test]
+    fn parse_full_dsl() {
+        let p = FaultPlan::parse(
+            "flap,nic,3,1,1e-3,2e-3; deg,spine,0,0.5e-3,1e-3,0.25; \
+             raildead,1,4e-3; strag,5,1.5; jitter,42,1e-6;",
+        )
+        .unwrap();
+        assert_eq!(p.link_faults.len(), 3);
+        assert_eq!(
+            p.link_faults[0],
+            LinkFault {
+                target: FaultTarget::Nic { rank: 3, rail: 1 },
+                t_start: 1e-3,
+                t_end: 3e-3,
+                factor: 0.0,
+            }
+        );
+        assert_eq!(p.link_faults[1].factor, 0.25);
+        assert_eq!(p.link_faults[1].target, FaultTarget::Spine { rail: 0 });
+        assert!(p.link_faults[2].t_end.is_infinite());
+        assert_eq!(p.link_faults[2].target, FaultTarget::Rail { rail: 1 });
+        assert_eq!(p.stragglers, vec![Straggler { rank: 5, factor: 1.5 }]);
+        assert_eq!(
+            p.jitter,
+            Some(Jitter {
+                seed: 42,
+                max_secs: 1e-6
+            })
+        );
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("explode,everything").is_err());
+        assert!(FaultPlan::parse("flap,nic,3").is_err());
+        assert!(FaultPlan::parse("deg,nic,0,0,0,1e-3,1.5").is_err()); // factor >= 1
+        assert!(FaultPlan::parse("strag,0,0.5").is_err()); // speedup, not straggle
+        assert!(FaultPlan::parse("flap,nic,0,0,-1,1e-3").is_err()); // negative start
+        assert!(FaultPlan::parse("jitter,1,0").is_err());
+        // empty clauses / whitespace tolerated
+        assert!(FaultPlan::parse(" ; ;").unwrap().is_empty());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn backoff_is_exponential_and_capped() {
+        let p = FaultPlan::default();
+        assert_eq!(p.backoff(1), p.retry_backoff);
+        assert_eq!(p.backoff(2), 2.0 * p.retry_backoff);
+        assert_eq!(p.backoff(3), 4.0 * p.retry_backoff);
+        assert!(p.backoff(40) <= FaultPlan::BACKOFF_CAP);
+        assert_eq!(p.backoff(40), FaultPlan::BACKOFF_CAP);
+    }
+
+    #[test]
+    fn straggle_factor_stacks() {
+        let p = FaultPlan::parse("strag,2,1.5; strag,2,2.0; strag,3,1.25").unwrap();
+        assert_eq!(p.straggle_factor(0), 1.0);
+        assert_eq!(p.straggle_factor(3), 1.25);
+        assert!((p.straggle_factor(2) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn synthesize_is_deterministic() {
+        let a = FaultPlan::synthesize(7, 0.5, 16, 2, 1e-2);
+        let b = FaultPlan::synthesize(7, 0.5, 16, 2, 1e-2);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        let c = FaultPlan::synthesize(8, 0.5, 16, 2, 1e-2);
+        assert_ne!(a, c, "different seeds should differ");
+        // every synthesized fault is inside the horizon and well-formed
+        for lf in &a.link_faults {
+            assert!(lf.t_start >= 0.0 && lf.t_start < 1e-2);
+            assert!(lf.t_end > lf.t_start);
+            assert!((0.0..1.0).contains(&lf.factor));
+        }
+        for s in &a.stragglers {
+            assert!(s.factor > 1.0);
+            assert!(s.rank < 16);
+        }
+        // zero rate: empty plan
+        assert!(FaultPlan::synthesize(1, 0.0, 16, 2, 1e-2).is_empty());
+    }
+}

@@ -5,6 +5,10 @@
 //! numbers are estimates; every benchmark reports the *relative* shape
 //! (who wins, by what factor), which is what the reproduction targets.
 
+pub mod fault;
+
+pub use fault::{FaultPlan, FaultTarget, Jitter, LinkFault, Straggler};
+
 /// Accelerator family being simulated.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum HardwareKind {

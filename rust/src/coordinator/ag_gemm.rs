@@ -323,7 +323,7 @@ mod tests {
         let reference = reference_output(&op.heap, &bufs);
         let topo = Topology::build(cluster);
         let mut exec = HybridExecutor::native_only();
-        let rep = super::super::run_numeric(&mut op, &topo, &mut exec);
+        let rep = super::super::run_numeric(&mut op, &topo, &mut exec).unwrap();
         verify(&op.heap, &bufs, &reference).unwrap();
         rep.makespan
     }
@@ -377,7 +377,7 @@ mod tests {
         let t = |v: AgGemmVariant| {
             let (mut op, _b) = build(cluster, shape, v);
             let topo = Topology::build(cluster);
-            super::super::run_timing(&mut op, &topo)
+            super::super::run_timing(&mut op, &topo).unwrap()
         };
         let ours = t(AgGemmVariant::OursPush);
         let nccl = t(AgGemmVariant::Nccl);
@@ -397,7 +397,7 @@ mod tests {
         let topo = Topology::build(cluster);
         let t = |v: AgGemmVariant| {
             let (mut op, _b) = build(cluster, shape, v);
-            super::super::run_timing(&mut op, &topo)
+            super::super::run_timing(&mut op, &topo).unwrap()
         };
         assert!(t(AgGemmVariant::OursPush) <= t(AgGemmVariant::NoSwizzle));
     }

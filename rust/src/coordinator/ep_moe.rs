@@ -1,9 +1,11 @@
 //! Expert-parallel MoE over the railed fabric (§3.5–§3.7's flagship
-//! multi-node workload): topk routing table → **token-routed** railed
-//! dispatch (`a2a_ep_rails_var`, sender-plane-pinned) → grouped expert
-//! FFN sized by the *actual* received token counts → combine crossing
-//! into each receiver's home plane (`TrafficClass::Rails { tx, rx }`) →
-//! gate-weighted per-token reduction.
+//! multi-node workload): routing-metadata **counts exchange** (a small
+//! AllToAll carried as real fabric traffic) → topk routing table →
+//! **token-routed** railed dispatch (`a2a_ep_rails_var`,
+//! sender-plane-pinned) → grouped expert FFN sized by the *actual*
+//! received token counts → combine crossing into each receiver's home
+//! plane (`TrafficClass::Rails { tx, rx }`) → gate-weighted per-token
+//! reduction.
 //!
 //! Unlike `coordinator::moe` (tensor-parallel, fixed `capacity()`
 //! padding), every wire message and every FFN here is sized from the
@@ -58,6 +60,11 @@ pub struct EpMoeBufs {
     pub weight: BufId,
     /// Final per-token output, `[t, f]`.
     pub output: BufId,
+    /// Routing-metadata landing zone, `[w, e_local]`: slot `s` holds the
+    /// per-local-expert row counts rank `s` announced before dispatch
+    /// (token-routed variant only; the fixed-capacity baseline needs no
+    /// exchange — its sizes are static).
+    pub counts: BufId,
     /// Dispatch wire (token rows to expert ranks).
     pub disp: A2aVarBufs,
     /// Combine wire (FFN rows back to token owners).
@@ -128,16 +135,19 @@ pub fn build_ep_moe_cfg(
     };
 
     // signal map: [0, ws) dispatch arrivals | ws pack gate |
-    // [ws+1, 2ws+1) combine arrivals | 2ws+1 FFN gate
+    // [ws+1, 2ws+1) combine arrivals | 2ws+1 FFN gate |
+    // [2ws+2, 3ws+2) counts arrivals (routing-metadata exchange)
     let disp_gate = ws;
     let comb_base = ws + 1;
     let comb_gate = 2 * ws + 1;
+    let counts_base = 2 * ws + 2;
 
-    let mut heap = SymmetricHeap::new(ws, 2 * ws + 8);
+    let mut heap = SymmetricHeap::new(ws, 3 * ws + 8);
     let tokens = heap.alloc("ep_tokens", t * h);
     let idx = heap.alloc("ep_topk_idx", ws * t * k);
     let gate = heap.alloc("ep_topk_gate", ws * t * k);
     let weight = heap.alloc("ep_w_experts", e_local * h * f);
+    let counts = heap.alloc("ep_counts", ws * e_local);
     let disp = A2aVarBufs::alloc(&mut heap, disp_sizes);
     let mut comb = A2aVarBufs::alloc(&mut heap, comb_sizes);
     comb.sig_base = comb_base;
@@ -146,16 +156,44 @@ pub fn build_ep_moe_cfg(
     let mut pb = ProgBuild::new();
     pb.claim_sigs("ep_moe_pack_gate", disp_gate, 1);
     pb.claim_sigs("ep_moe_ffn_gate", comb_gate, 1);
+    pb.claim_sigs("ep_moe_counts", counts_base, ws);
     let cfg = *a2a;
 
     // Static SM budget per rank (§3.8 partition discipline): the two a2a
-    // send tasks, 2*(ws-1) receive blocks, the pack task, and the final
+    // send tasks, 2*(ws-1) receive blocks, the pack task, the counts
+    // exchange (1 SM, retires before dispatch opens), and the final
     // reduction all hold their reservation concurrently; the FFN takes
     // the rest (floored so very wide worlds still fit — excess receive
     // blocks then queue FIFO behind completed ones, which cannot
     // deadlock because receives never wait on later-launched tasks).
     let reserved = 2 * ws as i64 + 6;
     let ffn_sms = ((hw.sms as i64) - reserved).max(8) as u32;
+
+    // 0. routing-metadata exchange (token-routed only): every receiver
+    // must learn how many rows each peer will land on it before dispatch
+    // can begin. On real hardware this is the counts AllToAll DeepEP runs
+    // ahead of dispatch; here it is actual fabric traffic — tiny
+    // per-expert count rows pushed with putmem_signal — so its latency
+    // is part of the makespan instead of build-time omniscience. It
+    // overlaps the dispatch pack; the pack gate below only opens once
+    // both have finished.
+    if variant == EpMoeVariant::TokenRouted {
+        for r in 0..ws {
+            let mut cnt = ctx
+                .task(r, format!("ep_counts[{r}]"))
+                .with_sms(1)
+                .launch_overhead();
+            let row = Slice::new(r, counts, r * e_local, e_local);
+            for i in 1..ws {
+                let dst = (r + i) % ws;
+                cnt.putmem_signal_nbi(row, row.on_rank(dst), counts_base + r, SigOp::Set, 1);
+            }
+            // own counts are locally available immediately
+            cnt.notify(r, counts_base + r, SigOp::Set, 1);
+            cnt.quiet();
+            pb.prog.push(cnt.build());
+        }
+    }
 
     // 1. per-rank routing + dispatch pack into the packed send buffer
     for r in 0..ws {
@@ -184,6 +222,14 @@ pub fn build_ep_moe_cfg(
             },
             label: "ep_dispatch_pack",
         });
+        // dispatch may not start until every peer's counts have landed:
+        // the wait sits after the pack compute so the metadata exchange
+        // overlaps it rather than serializing ahead of it
+        if variant == EpMoeVariant::TokenRouted {
+            for src in 0..ws {
+                pack.signal_wait_until(counts_base + src, SigCond::Ge, 1);
+            }
+        }
         pack.notify(r, disp_gate, SigOp::Set, 1);
         pb.prog.push(pack.build());
     }
@@ -271,6 +317,7 @@ pub fn build_ep_moe_cfg(
         gate,
         weight,
         output,
+        counts,
         disp,
         comb,
         geom,
@@ -419,7 +466,7 @@ mod tests {
         let exp = reference_ep_moe(&op.heap, &bufs, &routing);
         let topo = Topology::build(cluster);
         let mut exec = HybridExecutor::native_only();
-        run_numeric(&mut op, &topo, &mut exec);
+        run_numeric(&mut op, &topo, &mut exec).unwrap();
         verify_ep_moe(&op.heap, &bufs, &routing, &exp).unwrap();
     }
 
@@ -466,7 +513,7 @@ mod tests {
         let topo = Topology::build(cluster);
         let time = |variant| {
             let (mut op, _b) = build_ep_moe(cluster, shape, &routing, variant);
-            run_timing(&mut op, &topo)
+            run_timing(&mut op, &topo).unwrap()
         };
         let routed = time(EpMoeVariant::TokenRouted);
         let fixed = time(EpMoeVariant::FixedCapacity);

@@ -267,7 +267,7 @@ mod tests {
         let exp = reference_output(&op.heap, &bufs);
         let topo = Topology::build(cluster);
         let mut exec = HybridExecutor::native_only();
-        super::super::run_numeric(&mut op, &topo, &mut exec);
+        super::super::run_numeric(&mut op, &topo, &mut exec).unwrap();
         verify(&op.heap, &bufs, &exp).unwrap();
     }
 
@@ -300,7 +300,7 @@ mod tests {
             let cluster = ClusterSpec::h800(1, ws);
             let (mut op, _b) = build(cluster, cfg);
             let topo = Topology::build(cluster);
-            let t = super::super::run_timing(&mut op, &topo);
+            let t = super::super::run_timing(&mut op, &topo).unwrap();
             achieved_bw(&cfg, &cluster, t)
         };
         let b2 = bw(2);
@@ -322,7 +322,7 @@ mod tests {
             let cluster = ClusterSpec::h800(1, ws);
             let (mut op, _b) = build(cluster, cfg);
             let topo = Topology::build(cluster);
-            super::super::run_timing(&mut op, &topo)
+            super::super::run_timing(&mut op, &topo).unwrap()
         };
         // parallel efficiency of 8 GPUs vs 2: poor at short ctx (comm
         // floor dominates), good at very long ctx — the paper's "more

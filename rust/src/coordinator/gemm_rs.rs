@@ -320,7 +320,7 @@ mod tests {
         let expected = reference_outputs(&op.heap, &bufs);
         let topo = Topology::build(cluster);
         let mut exec = HybridExecutor::native_only();
-        let rep = super::super::run_numeric(&mut op, &topo, &mut exec);
+        let rep = super::super::run_numeric(&mut op, &topo, &mut exec).unwrap();
         verify(&op.heap, &bufs, &expected).unwrap();
         rep.makespan
     }
@@ -362,7 +362,7 @@ mod tests {
         let topo = Topology::build(cluster);
         let t = |v: GemmRsVariant| {
             let (mut op, _b) = build(cluster, shape, v);
-            super::super::run_timing(&mut op, &topo)
+            super::super::run_timing(&mut op, &topo).unwrap()
         };
         let ours = t(GemmRsVariant::OursIntra);
         let nccl = t(GemmRsVariant::Nccl);

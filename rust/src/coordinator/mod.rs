@@ -9,11 +9,11 @@ pub mod flash_decode;
 pub mod gemm_rs;
 pub mod moe;
 
-use crate::config::{ClusterSpec, DType};
+use crate::config::{ClusterSpec, DType, FaultPlan};
 use crate::mem::SymmetricHeap;
 use crate::program::Program;
 use crate::shmem::ShmemCtx;
-use crate::sim::{ComputeExecutor, NoopExecutor, Sim, SimConfig, SimReport};
+use crate::sim::{ComputeExecutor, NoopExecutor, Sim, SimConfig, SimError, SimReport};
 use crate::topology::Topology;
 
 /// Everything needed to execute one built program.
@@ -25,18 +25,72 @@ pub struct BuiltOp {
     pub name: String,
 }
 
+/// A coordinator-built program failed in the engine: which op died, the
+/// virtual failure time when the engine error carries one (watchdog
+/// timeouts do; deadlocks are detected after the event queue drains and
+/// are timeless), and the underlying [`SimError`].
+#[derive(Debug)]
+pub struct CoordError {
+    /// Human name of the failed op ("AG+GEMM ours (push)" etc.).
+    pub op: String,
+    /// Virtual failure time (s), when known.
+    pub at: Option<f64>,
+    pub source: SimError,
+}
+
+impl CoordError {
+    fn new(op: &str, source: SimError) -> Self {
+        let at = match &source {
+            SimError::WatchdogTimeout { at, .. } => Some(*at),
+            _ => None,
+        };
+        CoordError {
+            op: op.to_string(),
+            at,
+            source,
+        }
+    }
+}
+
+impl std::fmt::Display for CoordError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "op '{}' failed", self.op)?;
+        if let Some(at) = self.at {
+            write!(f, " at t={at:.6e}s")?;
+        }
+        write!(f, ": {}", self.source)
+    }
+}
+
+impl std::error::Error for CoordError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        Some(&self.source)
+    }
+}
+
 /// Run a built op in timing-only mode; returns the virtual makespan (s).
-pub fn run_timing(op: &mut BuiltOp, topo: &Topology) -> f64 {
+pub fn run_timing(op: &mut BuiltOp, topo: &Topology) -> Result<f64, CoordError> {
+    Ok(run_timing_faults(op, topo, FaultPlan::default())?.makespan)
+}
+
+/// Timing-only run under a fault plan; returns the full report so the
+/// fault ledger rides along for degraded-fabric scenarios. An empty
+/// plan is bit-identical to [`run_timing`].
+pub fn run_timing_faults(
+    op: &mut BuiltOp,
+    topo: &Topology,
+    faults: FaultPlan,
+) -> Result<SimReport, CoordError> {
     let sim = Sim::with_config(
         topo,
         SimConfig {
             numerics: false,
             trace: false,
         },
-    );
+    )
+    .with_faults(faults);
     sim.run(&op.prog, &mut op.heap, &mut NoopExecutor)
-        .unwrap_or_else(|e| panic!("{} failed: {e}", op.name))
-        .makespan
+        .map_err(|e| CoordError::new(&op.name, e))
 }
 
 /// Run with numerics through the given executor.
@@ -44,10 +98,10 @@ pub fn run_numeric(
     op: &mut BuiltOp,
     topo: &Topology,
     exec: &mut dyn ComputeExecutor,
-) -> SimReport {
+) -> Result<SimReport, CoordError> {
     let sim = Sim::new(topo);
     sim.run(&op.prog, &mut op.heap, exec)
-        .unwrap_or_else(|e| panic!("{} failed: {e}", op.name))
+        .map_err(|e| CoordError::new(&op.name, e))
 }
 
 /// Run with numerics + tracing (timeline extraction).
@@ -55,7 +109,7 @@ pub fn run_traced(
     op: &mut BuiltOp,
     topo: &Topology,
     exec: &mut dyn ComputeExecutor,
-) -> SimReport {
+) -> Result<SimReport, CoordError> {
     let sim = Sim::with_config(
         topo,
         SimConfig {
@@ -64,7 +118,7 @@ pub fn run_traced(
         },
     );
     sim.run(&op.prog, &mut op.heap, exec)
-        .unwrap_or_else(|e| panic!("{} failed: {e}", op.name))
+        .map_err(|e| CoordError::new(&op.name, e))
 }
 
 /// Convenience: context + topology for a cluster at bf16.

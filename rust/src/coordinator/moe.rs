@@ -488,7 +488,7 @@ mod tests {
         let exp = reference_ag_moe(&op.heap, &bufs);
         let topo = Topology::build(cluster);
         let mut exec = HybridExecutor::native_only();
-        super::super::run_numeric(&mut op, &topo, &mut exec);
+        super::super::run_numeric(&mut op, &topo, &mut exec).unwrap();
         verify_ag_moe(&op.heap, &bufs, &exp).unwrap();
     }
 
@@ -500,7 +500,7 @@ mod tests {
         let exp = reference_ag_moe(&op.heap, &bufs);
         let topo = Topology::build(cluster);
         let mut exec = HybridExecutor::native_only();
-        super::super::run_numeric(&mut op, &topo, &mut exec);
+        super::super::run_numeric(&mut op, &topo, &mut exec).unwrap();
         verify_ag_moe(&op.heap, &bufs, &exp).unwrap();
     }
 
@@ -512,7 +512,7 @@ mod tests {
         let exp = reference_ag_moe(&op.heap, &bufs);
         let topo = Topology::build(cluster);
         let mut exec = HybridExecutor::native_only();
-        super::super::run_numeric(&mut op, &topo, &mut exec);
+        super::super::run_numeric(&mut op, &topo, &mut exec).unwrap();
         verify_ag_moe(&op.heap, &bufs, &exp).unwrap();
     }
 
@@ -524,7 +524,7 @@ mod tests {
         let exp = reference_moe_rs(&op.heap, &bufs);
         let topo = Topology::build(cluster);
         let mut exec = HybridExecutor::native_only();
-        super::super::run_numeric(&mut op, &topo, &mut exec);
+        super::super::run_numeric(&mut op, &topo, &mut exec).unwrap();
         verify_moe_rs(&op.heap, &bufs, &exp).unwrap();
     }
 
@@ -536,7 +536,7 @@ mod tests {
         let exp = reference_moe_rs(&op.heap, &bufs);
         let topo = Topology::build(cluster);
         let mut exec = HybridExecutor::native_only();
-        super::super::run_numeric(&mut op, &topo, &mut exec);
+        super::super::run_numeric(&mut op, &topo, &mut exec).unwrap();
         verify_moe_rs(&op.heap, &bufs, &exp).unwrap();
     }
 
@@ -548,7 +548,7 @@ mod tests {
         let exp = reference_moe_rs(&op.heap, &bufs);
         let topo = Topology::build(cluster);
         let mut exec = HybridExecutor::native_only();
-        super::super::run_numeric(&mut op, &topo, &mut exec);
+        super::super::run_numeric(&mut op, &topo, &mut exec).unwrap();
         verify_moe_rs(&op.heap, &bufs, &exp).unwrap();
     }
 
@@ -567,7 +567,7 @@ mod tests {
         let topo = Topology::build(cluster);
         let t = |v| {
             let (mut op, _b) = build_ag_moe(cluster, shape, v);
-            super::super::run_timing(&mut op, &topo)
+            super::super::run_timing(&mut op, &topo).unwrap()
         };
         let speedup = t(MoeVariant::Torch) / t(MoeVariant::Ours);
         assert!(speedup > 5.0, "speedup {speedup}");

@@ -4,7 +4,9 @@
 use triton_dist_sim::cli::Args;
 use triton_dist_sim::collectives::alltoall::{a2a_deepep_cfg, a2a_ll, A2aBufs, A2aCfg};
 use triton_dist_sim::collectives::ProgBuild;
-use triton_dist_sim::config::{ClusterSpec, DType, FabricSpec, GemmShape, MoeShape, RailPolicy};
+use triton_dist_sim::config::{
+    ClusterSpec, DType, FabricSpec, FaultPlan, GemmShape, MoeShape, RailPolicy,
+};
 use triton_dist_sim::coordinator::{self, ag_gemm, ep_moe, flash_decode, gemm_rs, moe};
 use triton_dist_sim::mem::SymmetricHeap;
 use triton_dist_sim::metrics;
@@ -41,6 +43,15 @@ COMMON OPTIONS:
                   adaptive: emptiest plane per message by live occupancy)
   --m/--n/--k     GEMM dims          --trace    write chrome trace JSON
   --numeric       run real numerics through PJRT/native executors
+
+FAULT INJECTION (timing runs; empty plan = bit-identical to fault-free):
+  --faults SPEC   semicolon-separated plan, e.g.
+                  \"flap,nic,3,0,1e-3,2e-3; deg,spine,0,0,5e-3,0.5;
+                  raildead,1,4e-3; strag,5,1.5; jitter,42,1e-6\"
+  --fault-seed N  synthesize a deterministic random plan (with --fault-rate)
+  --fault-rate R  faults per rank for the synthesized plan (default 0)
+  --lt-timeout S  watchdog on LL/signal waits, seconds (default: off)
+  --retry-max N   retry budget for puts killed on a downed link (default 8)
 
 EP-MOE OPTIONS:
   --tokens/--in-hidden/--out-hidden/--experts/--topk   MoE shape
@@ -83,6 +94,40 @@ fn cluster_from(args: &Args) -> Result<ClusterSpec, String> {
             .with_spine_taper(spine_taper)
             .with_rail_policy(policy),
     ))
+}
+
+/// Resolve the fault plan: explicit `--faults` DSL wins, else a plan
+/// synthesized from `--fault-seed`/`--fault-rate`, else empty. The
+/// recovery knobs (`--lt-timeout`, `--retry-max`) apply either way.
+fn fault_plan_from(args: &Args, cluster: &ClusterSpec) -> Result<FaultPlan, String> {
+    let mut plan = match args.get("faults") {
+        Some(spec) => FaultPlan::parse(spec)?,
+        None => {
+            let rate = args.f64_or("fault-rate", 0.0)?;
+            if rate.is_nan() || rate < 0.0 {
+                return Err("--fault-rate must be >= 0".into());
+            }
+            if rate > 0.0 {
+                let seed = args.usize_or("fault-seed", 0)? as u64;
+                FaultPlan::synthesize(
+                    seed,
+                    rate,
+                    cluster.world_size(),
+                    cluster.fabric.rails,
+                    10e-3, // horizon: covers every CLI workload's makespan
+                )
+            } else {
+                FaultPlan::default()
+            }
+        }
+    };
+    let lt = args.f64_or("lt-timeout", f64::INFINITY)?;
+    if lt.is_nan() || lt <= 0.0 {
+        return Err("--lt-timeout must be > 0".into());
+    }
+    plan.lt_timeout = lt;
+    plan.retry_max = args.usize_or("retry-max", plan.retry_max as usize)? as u32;
+    Ok(plan)
 }
 
 fn main() {
@@ -132,6 +177,7 @@ fn run(args: &Args) -> Result<(), String> {
             let n = args.usize_or("n", 1024)?;
             let k = args.usize_or("k", 2048)?;
             let shape = GemmShape::new(m, n, k);
+            let plan = fault_plan_from(args, &cluster)?;
             let topo = Topology::build(cluster);
             let mut report = metrics::FigureReport::new("AG+GEMM");
             let variants: Vec<ag_gemm::AgGemmVariant> = if cluster.nodes > 1 {
@@ -156,7 +202,8 @@ fn run(args: &Args) -> Result<(), String> {
                     ag_gemm::fill_inputs(&mut op.heap, &bufs, 1);
                     let reference = ag_gemm::reference_output(&op.heap, &bufs);
                     let mut exec = HybridExecutor::auto();
-                    let rep = coordinator::run_numeric(&mut op, &topo, &mut exec);
+                    let rep = coordinator::run_numeric(&mut op, &topo, &mut exec)
+                        .map_err(|e| e.to_string())?;
                     ag_gemm::verify(&op.heap, &bufs, &reference)?;
                     println!(
                         "numerics OK ({} xla calls, {} native)",
@@ -164,7 +211,12 @@ fn run(args: &Args) -> Result<(), String> {
                     );
                     rep.makespan
                 } else {
-                    coordinator::run_timing(&mut op, &topo)
+                    let rep = coordinator::run_timing_faults(&mut op, &topo, plan.clone())
+                        .map_err(|e| e.to_string())?;
+                    if !plan.is_empty() {
+                        println!("  {}", metrics::fault_ledger_line(&rep.ledger));
+                    }
+                    rep.makespan
                 };
                 println!("{:<24} {}", op.name, fmt_time(t));
                 if op.name.contains("ours") && ours == 0.0 {
@@ -198,10 +250,15 @@ fn run(args: &Args) -> Result<(), String> {
                     gemm_rs::GemmRsVariant::Flux,
                 ]
             };
+            let plan = fault_plan_from(args, &cluster)?;
             for v in variants {
                 let (mut op, _b) = gemm_rs::build(cluster, shape, v);
-                let t = coordinator::run_timing(&mut op, &topo);
-                println!("{:<24} {}", op.name, fmt_time(t));
+                let rep = coordinator::run_timing_faults(&mut op, &topo, plan.clone())
+                    .map_err(|e| e.to_string())?;
+                println!("{:<24} {}", op.name, fmt_time(rep.makespan));
+                if !plan.is_empty() {
+                    println!("  {}", metrics::fault_ledger_line(&rep.ledger));
+                }
             }
             Ok(())
         }
@@ -216,10 +273,15 @@ fn run(args: &Args) -> Result<(), String> {
                 ..MoeShape::default()
             };
             let topo = Topology::build(cluster);
+            let plan = fault_plan_from(args, &cluster)?;
             for v in [moe::MoeVariant::Ours, moe::MoeVariant::Torch] {
                 let (mut op, _b) = moe::build_ag_moe(cluster, shape, v);
-                let t = coordinator::run_timing(&mut op, &topo);
-                println!("{:<24} {}", op.name, fmt_time(t));
+                let rep = coordinator::run_timing_faults(&mut op, &topo, plan.clone())
+                    .map_err(|e| e.to_string())?;
+                println!("{:<24} {}", op.name, fmt_time(rep.makespan));
+                if !plan.is_empty() {
+                    println!("  {}", metrics::fault_ledger_line(&rep.ledger));
+                }
             }
             Ok(())
         }
@@ -262,6 +324,7 @@ fn run(args: &Args) -> Result<(), String> {
                 geom.c,
                 shape.skew,
             );
+            let plan = fault_plan_from(args, &cluster)?;
             let topo = Topology::build(cluster);
             let mut report = metrics::FigureReport::new("EP MoE (token-routed)");
             let mut row = metrics::SpeedupRow {
@@ -286,12 +349,18 @@ fn run(args: &Args) -> Result<(), String> {
                     ep_moe::fill_ep_moe(&mut op.heap, &bufs, &routing, seed);
                     let reference = ep_moe::reference_ep_moe(&op.heap, &bufs, &routing);
                     let mut exec = HybridExecutor::auto();
-                    let rep = coordinator::run_numeric(&mut op, &topo, &mut exec);
+                    let rep = coordinator::run_numeric(&mut op, &topo, &mut exec)
+                        .map_err(|e| e.to_string())?;
                     ep_moe::verify_ep_moe(&op.heap, &bufs, &routing, &reference)?;
                     println!("numerics OK (exact token conservation verified)");
                     rep.makespan
                 } else {
-                    coordinator::run_timing(&mut op, &topo)
+                    let rep = coordinator::run_timing_faults(&mut op, &topo, plan.clone())
+                        .map_err(|e| e.to_string())?;
+                    if !plan.is_empty() {
+                        println!("  {}", metrics::fault_ledger_line(&rep.ledger));
+                    }
+                    rep.makespan
                 };
                 println!("{:<28} {}", op.name, fmt_time(t));
                 match variant {
@@ -311,8 +380,9 @@ fn run(args: &Args) -> Result<(), String> {
             let cluster = cluster_from(args)?;
             let ws = cluster.world_size();
             let chunk = args.usize_or("chunk", (128 * 7168 / ws).max(64))?;
+            let plan = fault_plan_from(args, &cluster)?;
             let topo = Topology::build(cluster);
-            let run = |deepep: Option<A2aCfg>, chunk_elems: usize| -> f64 {
+            let run = |deepep: Option<A2aCfg>, chunk_elems: usize| -> Result<f64, String> {
                 let ctx = triton_dist_sim::shmem::ShmemCtx::new(cluster, DType::BF16);
                 let mut heap = SymmetricHeap::new(ws, 4 * ws.max(16));
                 let bufs = A2aBufs::alloc(&mut heap, &ctx, chunk_elems);
@@ -321,7 +391,7 @@ fn run(args: &Args) -> Result<(), String> {
                     Some(cfg) => a2a_deepep_cfg(&ctx, &bufs, &mut pb, &cfg),
                     None => a2a_ll(&ctx, &bufs, &mut pb, &A2aCfg::ours()),
                 }
-                coordinator::run_timing(
+                let rep = coordinator::run_timing_faults(
                     &mut coordinator::BuiltOp {
                         ctx,
                         heap,
@@ -329,15 +399,21 @@ fn run(args: &Args) -> Result<(), String> {
                         name: "AllToAll".into(),
                     },
                     &topo,
+                    plan.clone(),
                 )
+                .map_err(|e| e.to_string())?;
+                if !plan.is_empty() {
+                    println!("  {}", metrics::fault_ledger_line(&rep.ledger));
+                }
+                Ok(rep.makespan)
             };
             let mut report = metrics::FigureReport::new("Low-latency AllToAll");
             for (tag, chunk_elems, base_cfg) in [
                 ("dispatch", chunk, A2aCfg::deepep()),
                 ("combine", chunk * 2, A2aCfg::deepep_combine()),
             ] {
-                let ours = run(None, chunk_elems);
-                let deepep = run(Some(base_cfg), chunk_elems);
+                let ours = run(None, chunk_elems)?;
+                let deepep = run(Some(base_cfg), chunk_elems)?;
                 println!("{tag:<10} ours {:<12} deepep {}", fmt_time(ours), fmt_time(deepep));
                 report.push(metrics::SpeedupRow {
                     workload: format!("{tag} {ws} GPUs chunk={chunk_elems}"),
@@ -356,9 +432,15 @@ fn run(args: &Args) -> Result<(), String> {
                 kv_per_rank: args.usize_or("kv", 32 * 1024)?,
                 numeric: false,
             };
+            let plan = fault_plan_from(args, &cluster)?;
             let topo = Topology::build(cluster);
             let (mut op, _b) = flash_decode::build(cluster, cfg);
-            let t = coordinator::run_timing(&mut op, &topo);
+            let rep = coordinator::run_timing_faults(&mut op, &topo, plan.clone())
+                .map_err(|e| e.to_string())?;
+            if !plan.is_empty() {
+                println!("{}", metrics::fault_ledger_line(&rep.ledger));
+            }
+            let t = rep.makespan;
             let bw = flash_decode::achieved_bw(&cfg, &cluster, t);
             println!(
                 "{} latency={} achieved-bw={:.2} TB/s per GPU",
@@ -379,7 +461,8 @@ fn run(args: &Args) -> Result<(), String> {
             let (mut op, bufs) = ag_gemm::build(cluster, shape, ag_gemm::AgGemmVariant::OursPush);
             ag_gemm::fill_inputs(&mut op.heap, &bufs, 3);
             let mut exec = HybridExecutor::auto();
-            let rep = coordinator::run_traced(&mut op, &topo, &mut exec);
+            let rep = coordinator::run_traced(&mut op, &topo, &mut exec)
+                .map_err(|e| e.to_string())?;
             println!("{}", metrics::ascii_timeline(&rep, 100));
             if args.flag("trace") {
                 let path = "trace.json";

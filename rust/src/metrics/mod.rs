@@ -3,7 +3,7 @@
 
 use std::fmt::Write as _;
 
-use crate::sim::{OpSpan, SimReport};
+use crate::sim::{FaultLedger, OpSpan, SimReport};
 use crate::util::stats::{fmt_time, geomean};
 use crate::util::Table;
 
@@ -112,13 +112,24 @@ pub fn fig1_summary(reports: &[(&str, f64)]) -> String {
 // engine-perf trajectory (EXPERIMENTS.md §Perf)
 // ---------------------------------------------------------------------------
 
+/// Fault-scenario annotations riding one engine-perf record: what the
+/// recovery machinery did and how much the faults cost in virtual time.
+#[derive(Debug, Clone)]
+pub struct FaultBenchInfo {
+    pub ledger: FaultLedger,
+    /// Faulted makespan / clean makespan of the same workload.
+    pub slowdown: f64,
+}
+
 /// One wall-clock engine measurement: a scenario of `perf_engine` (events
-/// processed, median elapsed seconds).
+/// processed, median elapsed seconds), optionally with its fault ledger.
 #[derive(Debug, Clone)]
 pub struct EngineBenchRecord {
     pub scenario: String,
     pub events: u64,
     pub median_wall_s: f64,
+    /// `Some` for degraded-fabric scenarios.
+    pub fault: Option<FaultBenchInfo>,
 }
 
 impl EngineBenchRecord {
@@ -140,6 +151,19 @@ pub fn engine_bench_json(records: &[EngineBenchRecord]) -> String {
         obj.insert("events".into(), Json::Num(r.events as f64));
         obj.insert("median_wall_s".into(), Json::Num(r.median_wall_s));
         obj.insert("events_per_s".into(), Json::Num(r.events_per_s()));
+        if let Some(fi) = &r.fault {
+            let mut fo = std::collections::BTreeMap::new();
+            fo.insert("faults_applied".into(), Json::Num(fi.ledger.faults_applied as f64));
+            fo.insert("flows_killed".into(), Json::Num(fi.ledger.flows_killed as f64));
+            fo.insert("retries".into(), Json::Num(fi.ledger.retries as f64));
+            fo.insert(
+                "retries_exhausted".into(),
+                Json::Num(fi.ledger.retries_exhausted as f64),
+            );
+            fo.insert("rerouted_bytes".into(), Json::Num(fi.ledger.rerouted_bytes));
+            fo.insert("slowdown".into(), Json::Num(fi.slowdown));
+            obj.insert("fault".into(), Json::Obj(fo));
+        }
         scenarios.insert(r.scenario.clone(), Json::Obj(obj));
     }
     let mut root = std::collections::BTreeMap::new();
@@ -147,6 +171,18 @@ pub fn engine_bench_json(records: &[EngineBenchRecord]) -> String {
     root.insert("unit".into(), Json::Str("events_per_s".into()));
     root.insert("scenarios".into(), Json::Obj(scenarios));
     Json::Obj(root).to_string()
+}
+
+/// One-line human rendering of a fault ledger (CLI fault summaries).
+pub fn fault_ledger_line(l: &FaultLedger) -> String {
+    format!(
+        "faults: {} applied, {} flows killed, {} retries ({} exhausted), {:.2} MB rerouted",
+        l.faults_applied,
+        l.flows_killed,
+        l.retries,
+        l.retries_exhausted,
+        l.rerouted_bytes / 1e6
+    )
 }
 
 // ---------------------------------------------------------------------------
@@ -309,12 +345,41 @@ mod tests {
             scenario: "alltoall-64rank".into(),
             events: 1000,
             median_wall_s: 0.5,
+            fault: None,
         }];
         let s = engine_bench_json(&recs);
         let doc = crate::util::json::parse(&s).unwrap();
         let sc = doc.get("scenarios").get("alltoall-64rank");
         assert_eq!(sc.get("events").as_usize(), Some(1000));
         assert_eq!(sc.get("events_per_s").as_f64(), Some(2000.0));
+    }
+
+    #[test]
+    fn engine_bench_json_carries_fault_ledger() {
+        let recs = vec![EngineBenchRecord {
+            scenario: "alltoall-degraded-rail".into(),
+            events: 500,
+            median_wall_s: 0.25,
+            fault: Some(FaultBenchInfo {
+                ledger: FaultLedger {
+                    faults_applied: 2,
+                    flows_killed: 3,
+                    retries: 4,
+                    rerouted_bytes: 1.5e6,
+                    retries_exhausted: 0,
+                },
+                slowdown: 1.37,
+            }),
+        }];
+        let s = engine_bench_json(&recs);
+        let doc = crate::util::json::parse(&s).unwrap();
+        let f = doc.get("scenarios").get("alltoall-degraded-rail").get("fault");
+        assert_eq!(f.get("flows_killed").as_usize(), Some(3));
+        assert_eq!(f.get("retries").as_usize(), Some(4));
+        assert_eq!(f.get("rerouted_bytes").as_f64(), Some(1.5e6));
+        assert_eq!(f.get("slowdown").as_f64(), Some(1.37));
+        let line = fault_ledger_line(&FaultLedger::default());
+        assert!(line.contains("0 retries"), "{line}");
     }
 
     #[test]

@@ -26,14 +26,25 @@
 //! `RailPolicy::Static` (the default), and static routing is
 //! bit-identical to calling [`Topology::route_tc`] directly.
 
+//!
+//! Fault injection: a [`FaultPlan`] (see `config::fault`) schedules
+//! first-class `FaultToggle` events that retarget `FlowNet` link
+//! capacities (incremental component re-solve), kill-and-retry the puts
+//! riding a downed link, steer the adaptive router around dead planes
+//! via a live [`FabricHealth`] view, inflate straggler compute, jitter
+//! flow latencies, and watchdog LL/signal waits. Every fault branch is
+//! gated on the plan being non-empty, so an empty plan is bit-identical
+//! to the fault-free engine.
+
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 
-use crate::config::{HardwareModel, RailPolicy};
+use crate::config::{FaultPlan, HardwareModel, RailPolicy, TrafficClass};
 use crate::mem::{Slice, SymmetricHeap};
 use crate::program::{ComputeCost, NumericOp, Op, Program, Scope, SigCond, SigOp, SigRef};
 use crate::sim::flow::{FlowId, FlowNet};
-use crate::topology::{LinkOccupancy, Router, Topology};
+use crate::topology::{FabricHealth, LinkId, LinkOccupancy, Route, Router, Topology};
+use crate::util::Rng;
 
 /// Pluggable compute backend (XLA/PJRT in `runtime`, native fallback in
 /// `kernels::exec`, or nothing for timing-only benches).
@@ -91,6 +102,24 @@ pub struct OpSpan {
     pub t1: f64,
 }
 
+/// What the fault/recovery machinery did during one run (the fault
+/// ledger `metrics::engine_bench_json` emits into `BENCH_engine.json`).
+/// All-zero on fault-free runs.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FaultLedger {
+    /// Fault begin/end toggles that actually changed a link capacity.
+    pub faults_applied: u64,
+    /// In-flight flows killed by a link-down fault (diverted to retry).
+    pub flows_killed: u64,
+    /// Retry attempts fired (including backoff re-schedules).
+    pub retries: u64,
+    /// Wire bytes relaunched on a different path than originally routed.
+    pub rerouted_bytes: f64,
+    /// Retries that exhausted their budget and fell back to stalling on
+    /// the dead path until recovery.
+    pub retries_exhausted: u64,
+}
+
 /// Aggregate result of a simulation run.
 #[derive(Debug, Clone, Default)]
 pub struct SimReport {
@@ -104,6 +133,8 @@ pub struct SimReport {
     pub events: u64,
     /// Flows created (diagnostics).
     pub flows: u64,
+    /// Fault/recovery activity (all-zero when no faults were injected).
+    pub ledger: FaultLedger,
 }
 
 /// Simulation failure.
@@ -124,6 +155,17 @@ pub enum SimError {
         #[source]
         source: anyhow::Error,
     },
+    #[error(
+        "watchdog: task '{task}' (rank {rank}) stuck in {waiting} \
+         longer than {timeout}s at t={at}"
+    )]
+    WatchdogTimeout {
+        task: String,
+        rank: usize,
+        waiting: String,
+        timeout: f64,
+        at: f64,
+    },
 }
 
 // ---------------------------------------------------------------------------
@@ -137,6 +179,13 @@ enum Ev {
     FlowDone { flow: FlowId, gen: u64 },
     OpDone { task: usize, gen: u64 },
     BarrierRelease { key: (u64, usize) },
+    /// A scheduled link fault begins (`begin`) or clears.
+    FaultToggle { fault: usize, begin: bool },
+    /// Watchdog check on a task blocked in an LL/signal wait; stale when
+    /// `gen` no longer matches the task's block generation.
+    Watchdog { task: usize, gen: u64 },
+    /// Backoff expired for a killed put; re-route and relaunch.
+    Retry { entry: usize },
 }
 
 struct QEntry {
@@ -195,6 +244,19 @@ struct TaskRt {
     op_gen: u64,
 }
 
+/// Everything needed to re-route and relaunch a transfer whose flow was
+/// killed by a link-down fault: the endpoints, the traffic class, and
+/// how the op shaped its route latency (Get doubles it, a signaled Put
+/// adds the flag-packet overhead).
+#[derive(Debug, Clone, Copy)]
+struct RetryRoute {
+    src: usize,
+    dst: usize,
+    tc: TrafficClass,
+    lat_mult: f64,
+    lat_add: f64,
+}
+
 struct FlowCtx {
     copies: Vec<(Slice, Slice)>,
     signal: Option<(SigRef, SigOp, u64)>,
@@ -205,12 +267,27 @@ struct FlowCtx {
     /// Wire bytes committed to `LinkOccupancy` at post time (released
     /// verbatim at completion). Set by `launch_flow`.
     wire_bytes: f64,
+    /// How to re-route this transfer if its flow dies on a downed link
+    /// (`None` = not retryable, e.g. multimem; the flow then stalls
+    /// until the fault clears).
+    rt: Option<RetryRoute>,
 }
 
 struct PendingFlow {
-    links: Vec<crate::topology::LinkId>,
+    links: Vec<LinkId>,
     bytes: f64,
     ctx: FlowCtx,
+}
+
+/// A killed transfer waiting out its retry backoff.
+struct RetryEntry {
+    rt: RetryRoute,
+    /// Remaining wire bytes at kill time.
+    bytes: f64,
+    ctx: FlowCtx,
+    attempt: u32,
+    /// The links the dead flow occupied (reroute detection).
+    orig_links: Vec<LinkId>,
 }
 
 struct BarrierState {
@@ -234,6 +311,8 @@ fn scope_key(s: Scope) -> u64 {
 pub struct Sim<'a> {
     pub topo: &'a Topology,
     pub cfg: SimConfig,
+    /// Deterministic adversarial schedule (default: empty = fault-free).
+    faults: FaultPlan,
 }
 
 impl<'a> Sim<'a> {
@@ -241,11 +320,28 @@ impl<'a> Sim<'a> {
         Sim {
             topo,
             cfg: SimConfig::default(),
+            faults: FaultPlan::default(),
         }
     }
 
     pub fn with_config(topo: &'a Topology, cfg: SimConfig) -> Self {
-        Sim { topo, cfg }
+        Sim {
+            topo,
+            cfg,
+            faults: FaultPlan::default(),
+        }
+    }
+
+    /// Attach a fault plan. An empty plan leaves the run bit-identical
+    /// to a fault-free simulation.
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// The attached fault plan.
+    pub fn faults(&self) -> &FaultPlan {
+        &self.faults
     }
 
     /// Execute `prog` to completion.
@@ -301,6 +397,27 @@ struct Runner<'s, 'a, 'h> {
     sm_used: Vec<u32>,
     sm_queue: Vec<VecDeque<usize>>,
 
+    // -- fault injection state (inert on an empty plan) --------------------
+    /// Any scheduled faults at all? Gates every fault branch so the
+    /// empty-plan run is bit-identical to the fault-free engine.
+    faults_on: bool,
+    /// Per fault: the concrete links it covers on this topology.
+    fault_links: Vec<Vec<LinkId>>,
+    fault_active: Vec<bool>,
+    /// Nominal link capacities (retarget math: `base * factor`).
+    base_bw: Vec<f64>,
+    /// Live capacity factors the adaptive router consults
+    /// (`Some` iff `faults_on`).
+    health: Option<FabricHealth>,
+    /// Per-rank compute inflation (`None` when no stragglers).
+    straggle: Option<Vec<f64>>,
+    /// Seeded latency jitter stream (`None` when not configured).
+    jitter: Option<(Rng, f64)>,
+    /// Watchdog block generation per task (stale-event filter).
+    wd_gen: Vec<u64>,
+    retries: Vec<Option<RetryEntry>>,
+    retry_free: Vec<usize>,
+
     report: SimReport,
 }
 
@@ -312,11 +429,25 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
         exec: &'h mut dyn ComputeExecutor,
     ) -> Self {
         let ws = sim.topo.cluster.world_size();
-        let link_bw = (0..sim.topo.link_count())
-            .map(|l| sim.topo.link(crate::topology::LinkId(l)).bw)
+        let link_bw: Vec<f64> = (0..sim.topo.link_count())
+            .map(|l| sim.topo.link(LinkId(l)).bw)
             .collect();
         let sig_pad = heap.signal_pad();
         let sig_world = heap.world();
+        let plan = &sim.faults;
+        let faults_on = !plan.is_empty();
+        let fault_links: Vec<Vec<LinkId>> = plan
+            .link_faults
+            .iter()
+            .map(|f| sim.topo.fault_links(&f.target))
+            .collect();
+        let straggle = if faults_on && !plan.stragglers.is_empty() {
+            Some((0..ws).map(|r| plan.straggle_factor(r)).collect())
+        } else {
+            None
+        };
+        let jitter = plan.jitter.map(|j| (Rng::new(j.seed), j.max_secs));
+        let base_bw = link_bw.clone();
         Runner {
             sim,
             prog,
@@ -357,6 +488,16 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
             barriers: HashMap::new(),
             sm_used: vec![0; ws],
             sm_queue: (0..ws).map(|_| VecDeque::new()).collect(),
+            faults_on,
+            fault_active: vec![false; fault_links.len()],
+            fault_links,
+            health: faults_on.then(|| FabricHealth::healthy(sim.topo.link_count())),
+            base_bw,
+            straggle,
+            jitter,
+            wd_gen: vec![0; prog.tasks.len()],
+            retries: Vec::new(),
+            retry_free: Vec::new(),
             report: SimReport::default(),
         }
     }
@@ -400,6 +541,21 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
             self.push(t.start_delay, Ev::Start { task: i });
         }
 
+        // schedule the fault plan as first-class events (none on an
+        // empty plan: the event stream is untouched)
+        if self.faults_on {
+            for i in 0..self.fault_links.len() {
+                if self.fault_links[i].is_empty() {
+                    continue; // target absent on this topology: inert
+                }
+                let f = &self.sim.faults.link_faults[i];
+                self.push(f.t_start, Ev::FaultToggle { fault: i, begin: true });
+                if f.t_end.is_finite() {
+                    self.push(f.t_end, Ev::FaultToggle { fault: i, begin: false });
+                }
+            }
+        }
+
         while let Some(QEntry { t, ev, .. }) = self.events.pop() {
             self.clock = t;
             self.n_events += 1;
@@ -417,6 +573,9 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                 }
                 Ev::OpDone { task, gen } => self.on_op_done(task, gen)?,
                 Ev::BarrierRelease { key } => self.on_barrier_release(key)?,
+                Ev::FaultToggle { fault, begin } => self.on_fault_toggle(fault, begin)?,
+                Ev::Watchdog { task, gen } => self.on_watchdog(task, gen)?,
+                Ev::Retry { entry } => self.on_retry(entry)?,
             }
         }
 
@@ -516,6 +675,28 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
         for &p in &arms {
             let pf = self.pending[p].take().expect("pending flow armed twice");
             self.pending_free.push(p);
+            // a fault may have downed a link while this transfer sat in
+            // its latency window: divert retryable arms straight to the
+            // retry machinery instead of entering a zero-rate flow
+            if let Some(h) = &self.health {
+                if !h.all_healthy()
+                    && pf.ctx.rt.is_some()
+                    && pf.links.iter().any(|&l| h.is_down(l))
+                {
+                    if self.track_occ {
+                        self.occ.release(&pf.links, pf.ctx.wire_bytes);
+                    }
+                    self.report.ledger.flows_killed += 1;
+                    self.enqueue_retry(RetryEntry {
+                        rt: pf.ctx.rt.expect("checked is_some"),
+                        bytes: pf.bytes,
+                        ctx: pf.ctx,
+                        attempt: 1,
+                        orig_links: pf.links,
+                    });
+                    continue;
+                }
+            }
             adds.push((pf.links, pf.bytes));
             add_ctxs.push(pf.ctx);
         }
@@ -544,7 +725,11 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
             self.flow_ctx[id.0] = Some(ctx);
         }
         for (f, gen, eta) in update.etas {
-            self.push(self.clock + eta, Ev::FlowDone { flow: f, gen });
+            // infinite eta = flow stalled on a zero-capacity (faulted)
+            // link; a fresh eta is emitted when the link recovers
+            if eta.is_finite() {
+                self.push(self.clock + eta, Ev::FlowDone { flow: f, gen });
+            }
         }
         for ctx in done_ctxs {
             self.finish_flow(ctx)?;
@@ -632,6 +817,183 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
         Ok(())
     }
 
+    // -- fault handlers ------------------------------------------------------
+
+    /// A scheduled fault begins or clears: recompute the capacity factor
+    /// of every covered link (overlapping faults multiply), retarget the
+    /// flow solver on the touched component(s), and kill-and-retry any
+    /// retryable flow riding a newly-dead link.
+    fn on_fault_toggle(&mut self, fault: usize, begin: bool) -> Result<(), SimError> {
+        self.fault_active[fault] = begin;
+        let mut changes: Vec<(LinkId, f64)> = Vec::new();
+        {
+            let plan = &self.sim.faults;
+            let health = self.health.as_mut().expect("faults_on without health");
+            for li in 0..self.fault_links[fault].len() {
+                let l = self.fault_links[fault][li];
+                let mut factor = 1.0;
+                for j in 0..self.fault_active.len() {
+                    if self.fault_active[j] && self.fault_links[j].contains(&l) {
+                        factor *= plan.link_faults[j].factor;
+                    }
+                }
+                if health.factor(l) != factor {
+                    health.set_factor(l, factor);
+                    changes.push((l, self.base_bw[l.0] * factor));
+                }
+            }
+        }
+        if changes.is_empty() {
+            return Ok(()); // e.g. re-toggle of an already-covered link
+        }
+        self.report.ledger.faults_applied += 1;
+
+        // kill-and-retry: retryable in-flight flows on a newly-dead link.
+        // Non-retryable flows (multimem) stay and stall at rate 0 until
+        // the link recovers.
+        let mut victims: Vec<FlowId> = Vec::new();
+        for &(l, bw) in &changes {
+            if bw != 0.0 {
+                continue;
+            }
+            for f in self.flows.flows_on(l) {
+                if victims.contains(&f) {
+                    continue;
+                }
+                let retryable = self.flow_ctx[f.0].as_ref().is_some_and(|c| c.rt.is_some());
+                // remaining == 0 means its FlowDone is already due: let
+                // it complete rather than replaying the transfer
+                if retryable && self.flows.remaining_at(f, self.clock) > 0.0 {
+                    victims.push(f);
+                }
+            }
+        }
+        let mut parked: Vec<RetryEntry> = Vec::with_capacity(victims.len());
+        for &f in &victims {
+            let links = self.flows.links_of(f).to_vec();
+            let ctx = self.flow_ctx[f.0].take().expect("victim ctx missing");
+            if self.track_occ {
+                self.occ.release(&links, ctx.wire_bytes);
+            }
+            self.report.ledger.flows_killed += 1;
+            parked.push(RetryEntry {
+                rt: ctx.rt.expect("victim without retry route"),
+                bytes: self.flows.remaining_at(f, self.clock),
+                ctx,
+                attempt: 1,
+                orig_links: links,
+            });
+        }
+        if !victims.is_empty() {
+            let (_ids, upd) = self.flows.update(self.clock, &victims, Vec::new());
+            for (f, gen, eta) in upd.etas {
+                if eta.is_finite() {
+                    self.push(self.clock + eta, Ev::FlowDone { flow: f, gen });
+                }
+            }
+        }
+        for e in parked {
+            self.enqueue_retry(e);
+        }
+
+        // retarget the solver: incremental re-solve of the components
+        // touched by the changed links only
+        let upd = self.flows.retarget(self.clock, &changes);
+        for (f, gen, eta) in upd.etas {
+            if eta.is_finite() {
+                self.push(self.clock + eta, Ev::FlowDone { flow: f, gen });
+            }
+        }
+        Ok(())
+    }
+
+    fn alloc_retry(&mut self, e: RetryEntry) -> usize {
+        if let Some(i) = self.retry_free.pop() {
+            self.retries[i] = Some(e);
+            i
+        } else {
+            self.retries.push(Some(e));
+            self.retries.len() - 1
+        }
+    }
+
+    /// Park a killed transfer and schedule its backoff-delayed retry.
+    fn enqueue_retry(&mut self, e: RetryEntry) {
+        let back = self.sim.faults.backoff(e.attempt);
+        let slot = self.alloc_retry(e);
+        self.push(self.clock + back, Ev::Retry { entry: slot });
+    }
+
+    /// Backoff expired: re-route with the current fabric health and
+    /// relaunch, or back off again (capped exponential) while every
+    /// candidate path is still dead.
+    fn on_retry(&mut self, entry: usize) -> Result<(), SimError> {
+        let e = self.retries[entry].take().expect("missing retry entry");
+        self.retry_free.push(entry);
+        self.report.ledger.retries += 1;
+        let mut route =
+            self.router
+                .route_faulty(e.rt.src, e.rt.dst, e.rt.tc, &self.occ, self.health.as_ref());
+        let alive = match &self.health {
+            Some(h) => h.route_alive(&route),
+            None => true,
+        };
+        if !alive {
+            if e.attempt < self.sim.faults.retry_max {
+                let attempt = e.attempt + 1;
+                let back = self.sim.faults.backoff(attempt);
+                let slot = self.alloc_retry(RetryEntry { attempt, ..e });
+                self.push(self.clock + back, Ev::Retry { entry: slot });
+                return Ok(());
+            }
+            // budget exhausted: launch on the dead path anyway and stall
+            // until the fault clears (or the run deadlocks/watchdogs —
+            // the Static-policy failure mode, made visible)
+            self.report.ledger.retries_exhausted += 1;
+        } else if route.links != e.orig_links {
+            self.report.ledger.rerouted_bytes += e.bytes;
+        }
+        route.latency = route.latency * e.rt.lat_mult + e.rt.lat_add;
+        self.launch_flow(route, e.bytes, e.ctx);
+        Ok(())
+    }
+
+    /// (Re-)arm the liveness watchdog for a task entering an LL/signal
+    /// wait. Inert unless the plan sets a finite `lt_timeout`.
+    fn arm_watchdog(&mut self, task: usize) {
+        let to = self.sim.faults.lt_timeout;
+        if to.is_finite() {
+            self.wd_gen[task] += 1;
+            let gen = self.wd_gen[task];
+            self.push(self.clock + to, Ev::Watchdog { task, gen });
+        }
+    }
+
+    /// Watchdog fired: fatal only if the task is still parked in the
+    /// same blocking wait it was armed for.
+    fn on_watchdog(&mut self, task: usize, gen: u64) -> Result<(), SimError> {
+        if self.wd_gen[task] != gen {
+            return Ok(()); // re-armed for a later wait
+        }
+        let waiting = match &self.tasks[task].state {
+            TState::BlockedSignal { idx, cond, value } => {
+                format!("wait_signal(idx={idx}, {cond:?} {value})")
+            }
+            TState::BlockedLL { key } => {
+                format!("ll_wait(rank={}, buf={}, off={})", key.0, key.1, key.2)
+            }
+            _ => return Ok(()), // woke up since; stale
+        };
+        let spec = &self.prog.tasks[task];
+        Err(SimError::WatchdogTimeout {
+            task: spec.name.clone(),
+            rank: spec.rank,
+            waiting,
+            timeout: self.sim.faults.lt_timeout,
+            at: self.clock,
+        })
+    }
+
     // -- op interpreter ------------------------------------------------------
 
     fn bump_pc_and_resume(&mut self, task: usize) -> Result<(), SimError> {
@@ -659,13 +1021,18 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                     tc,
                     label,
                 } => {
-                    let mut route = self.router.route(src.rank, dst.rank, tc, &self.occ);
-                    if signal.is_some() {
+                    let mut route =
+                        self.router
+                            .route_faulty(src.rank, dst.rank, tc, &self.occ, self.health.as_ref());
+                    let lat_add = if signal.is_some() {
                         // flag packet + fence after the payload (§3.4's
                         // "each P2P transfer requires a pair of signal
                         // operations, causing additional overhead")
-                        route.latency += self.hw.signal_overhead;
-                    }
+                        self.hw.signal_overhead
+                    } else {
+                        0.0
+                    };
+                    route.latency += lat_add;
                     let ctx = FlowCtx {
                         copies: vec![(src, dst)],
                         signal,
@@ -674,6 +1041,13 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                         nbi_owner: if blocking { None } else { Some(task) },
                         span: Some((task, label, self.clock)),
                         wire_bytes: 0.0,
+                        rt: Some(RetryRoute {
+                            src: src.rank,
+                            dst: dst.rank,
+                            tc,
+                            lat_mult: 1.0,
+                            lat_add,
+                        }),
                     };
                     self.launch_flow(route, bytes, ctx);
                     if blocking {
@@ -691,7 +1065,9 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                     tc,
                     label,
                 } => {
-                    let mut route = self.router.route(src.rank, dst.rank, tc, &self.occ);
+                    let mut route =
+                        self.router
+                            .route_faulty(src.rank, dst.rank, tc, &self.occ, self.health.as_ref());
                     route.latency *= 2.0; // request/response round trip
                     let ctx = FlowCtx {
                         copies: vec![(src, dst)],
@@ -701,6 +1077,13 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                         nbi_owner: if blocking { None } else { Some(task) },
                         span: Some((task, label, self.clock)),
                         wire_bytes: 0.0,
+                        rt: Some(RetryRoute {
+                            src: src.rank,
+                            dst: dst.rank,
+                            tc,
+                            lat_mult: 2.0,
+                            lat_add: 0.0,
+                        }),
                     };
                     self.launch_flow(route, bytes, ctx);
                     if blocking {
@@ -735,13 +1118,18 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                         nbi_owner: None,
                         span: Some((task, "multimem_st", self.clock)),
                         wire_bytes: 0.0,
+                        // multimem rides the switch broadcast tree: not
+                        // re-routable, stalls through faults instead
+                        rt: None,
                     };
                     self.launch_flow(route, bytes, ctx);
                     self.tasks[task].state = TState::BlockedFlow;
                     return Ok(());
                 }
                 Op::LLPut { src, dst, bytes, tc } => {
-                    let route = self.router.route(src.rank, dst.rank, tc, &self.occ);
+                    let route =
+                        self.router
+                            .route_faulty(src.rank, dst.rank, tc, &self.occ, self.health.as_ref());
                     let ctx = FlowCtx {
                         copies: vec![(src, dst)],
                         signal: None,
@@ -750,6 +1138,13 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                         nbi_owner: Some(task),
                         span: Some((task, "ll_put", self.clock)),
                         wire_bytes: 0.0,
+                        rt: Some(RetryRoute {
+                            src: src.rank,
+                            dst: dst.rank,
+                            tc,
+                            lat_mult: 1.0,
+                            lat_add: 0.0,
+                        }),
                     };
                     // LL doubles the wire size (flag bytes in-band, §3.4)
                     self.launch_flow(route, bytes * 2.0, ctx);
@@ -763,6 +1158,7 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                     } else {
                         self.ll_waiters.entry(key).or_default().push(task);
                         self.tasks[task].state = TState::BlockedLL { key };
+                        self.arm_watchdog(task);
                         return Ok(());
                     }
                 }
@@ -777,6 +1173,7 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                         debug_assert!(idx < self.sig_pad, "signal idx out of pad");
                         self.sig_waiters[rank * self.sig_pad + idx].push(task);
                         self.tasks[task].state = TState::BlockedSignal { idx, cond, value };
+                        self.arm_watchdog(task);
                         return Ok(());
                     }
                 }
@@ -818,7 +1215,10 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                 }
                 Op::Compute { ref cost, .. } => {
                     let sms = self.prog.tasks[task].sms;
-                    let dur = self.cost_time(cost, sms);
+                    let mut dur = self.cost_time(cost, sms);
+                    if let Some(s) = &self.straggle {
+                        dur *= s[rank]; // straggler fault: inflated compute
+                    }
                     self.tasks[task].op_gen += 1;
                     let gen = self.tasks[task].op_gen;
                     self.tasks[task].op_t0 = self.clock;
@@ -862,8 +1262,12 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
         Ok(())
     }
 
-    fn launch_flow(&mut self, route: crate::topology::Route, bytes: f64, ctx: FlowCtx) {
+    fn launch_flow(&mut self, mut route: Route, bytes: f64, ctx: FlowCtx) {
         let bytes = bytes.max(64.0); // minimum wire granule
+        if let Some((rng, max)) = &mut self.jitter {
+            // seeded latency noise, drawn in deterministic launch order
+            route.latency += rng.f64() * *max;
+        }
         // congestion feedback: the transfer holds plane capacity from the
         // moment it is posted (adaptive rail picks see bursts in flight
         // before their first arm)
@@ -978,7 +1382,7 @@ fn sig_met(cur: u64, cond: SigCond, value: u64) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::ClusterSpec;
+    use crate::config::{ClusterSpec, FabricSpec, FaultTarget, LinkFault};
     use crate::program::EngineClass;
     use crate::program::TaskBuilder;
 
@@ -1287,5 +1691,268 @@ mod tests {
             sim.run(&prog, &mut heap, &mut NoopExecutor).unwrap().makespan
         };
         assert_eq!(run_once(), run_once());
+    }
+
+    // -- fault injection -----------------------------------------------------
+
+    /// 2 nodes x 2 GPUs on a blocking 2-rail fabric (NIC/leaf/spine links
+    /// exist, so fault targets resolve).
+    fn railed(policy: RailPolicy) -> (Topology, SymmetricHeap) {
+        let cluster = ClusterSpec::h800(2, 2)
+            .with_fabric(FabricSpec::rail_optimized(2, 2.0).with_rail_policy(policy));
+        let topo = Topology::build(cluster);
+        let heap = SymmetricHeap::new(cluster.world_size(), 64);
+        (topo, heap)
+    }
+
+    /// One pinned-rail inter-node put big enough to still be in flight
+    /// when a mid-transfer fault lands.
+    fn cross_node_put(heap: &mut SymmetricHeap, bytes: f64) -> Program {
+        let buf = heap.alloc("x", 8);
+        heap.write(Slice::new(0, buf, 0, 4), &[1.0, 2.0, 3.0, 4.0]);
+        let mut prog = Program::new();
+        let mut t = TaskBuilder::new(0, "putter").engine(EngineClass::CopyEngine);
+        t.op(Op::Put {
+            src: Slice::new(0, buf, 0, 4),
+            dst: Slice::new(2, buf, 4, 4),
+            bytes,
+            signal: None,
+            blocking: true,
+            tc: TrafficClass::Rail(0),
+            label: "put",
+        });
+        prog.push(t.build());
+        prog
+    }
+
+    #[test]
+    fn empty_fault_plan_is_bit_identical() {
+        let run = |faulted: bool| {
+            let (topo, mut heap) = railed(RailPolicy::Static);
+            let buf = heap.alloc("x", 64);
+            let mut prog = Program::new();
+            for r in 0..4usize {
+                let mut t =
+                    TaskBuilder::new(r, format!("t{r}")).engine(EngineClass::CopyEngine);
+                for p in 0..4usize {
+                    if p != r {
+                        t.op(Op::Put {
+                            src: Slice::new(r, buf, r * 16, 16),
+                            dst: Slice::new(p, buf, r * 16, 16),
+                            bytes: (1u64 << 20) as f64,
+                            signal: None,
+                            blocking: false,
+                            tc: Default::default(),
+                            label: "p",
+                        });
+                    }
+                }
+                t.op(Op::Quiet);
+                prog.push(t.build());
+            }
+            let sim = if faulted {
+                Sim::new(&topo).with_faults(FaultPlan::default())
+            } else {
+                Sim::new(&topo)
+            };
+            let rep = sim.run(&prog, &mut heap, &mut NoopExecutor).unwrap();
+            (rep.makespan.to_bits(), rep.events, rep.flows, rep.ledger)
+        };
+        assert_eq!(run(false), run(true));
+        assert_eq!(run(true).3, FaultLedger::default());
+    }
+
+    #[test]
+    fn flap_kills_retries_and_recovers() {
+        // a 500us NIC flap lands mid-transfer on the pinned rail: the
+        // flow is killed, retries back off (the only candidate path is
+        // the pinned dead rail), and the relaunch after recovery still
+        // delivers the data
+        let run = || {
+            let (topo, mut heap) = railed(RailPolicy::Static);
+            let prog = cross_node_put(&mut heap, 22.5e9 * 1e-3);
+            let plan = FaultPlan {
+                link_faults: vec![LinkFault::flap(
+                    FaultTarget::Nic { rank: 0, rail: 0 },
+                    100e-6,
+                    500e-6,
+                )],
+                ..FaultPlan::default()
+            };
+            let rep = Sim::new(&topo)
+                .with_faults(plan)
+                .run(&prog, &mut heap, &mut NoopExecutor)
+                .unwrap();
+            let buf = crate::mem::BufId(0);
+            assert_eq!(heap.read(Slice::new(2, buf, 4, 4)), &[1.0, 2.0, 3.0, 4.0]);
+            rep
+        };
+        let rep = run();
+        assert_eq!(rep.ledger.flows_killed, 1);
+        assert!(rep.ledger.retries >= 2, "expected backoff retries: {:?}", rep.ledger);
+        assert_eq!(rep.ledger.retries_exhausted, 0);
+        assert_eq!(rep.ledger.rerouted_bytes, 0.0, "pinned rail cannot reroute");
+        // can't finish before the flap clears at 600us
+        assert!(rep.makespan > 600e-6, "{}", rep.makespan);
+        // replay determinism: same plan, same timeline, same ledger
+        let rep2 = run();
+        assert_eq!(rep.makespan.to_bits(), rep2.makespan.to_bits());
+        assert_eq!(rep.ledger, rep2.ledger);
+        assert_eq!(rep.events, rep2.events);
+    }
+
+    #[test]
+    fn adaptive_retry_reroutes_to_surviving_rail() {
+        let (topo, mut heap) = railed(RailPolicy::Adaptive);
+        let buf = heap.alloc("x", 8);
+        let mut prog = Program::new();
+        // background transfer pins occupancy on rail 1 so the victim's
+        // Auto route resolves to rail 0
+        let mut bg = TaskBuilder::new(1, "bg").engine(EngineClass::CopyEngine);
+        bg.op(Op::Put {
+            src: Slice::new(1, buf, 0, 4),
+            dst: Slice::new(3, buf, 0, 4),
+            bytes: 22.5e9 * 2e-3,
+            signal: None,
+            blocking: true,
+            tc: TrafficClass::Rail(1),
+            label: "bg",
+        });
+        prog.push(bg.build());
+        let mut t = TaskBuilder::new(0, "victim").engine(EngineClass::CopyEngine);
+        t.op(Op::Put {
+            src: Slice::new(0, buf, 0, 4),
+            dst: Slice::new(2, buf, 4, 4),
+            bytes: 22.5e9 * 1e-3,
+            signal: None,
+            blocking: true,
+            tc: TrafficClass::Auto,
+            label: "put",
+        });
+        prog.push(t.build());
+        let plan = FaultPlan {
+            link_faults: vec![LinkFault::flap(
+                FaultTarget::Nic { rank: 0, rail: 0 },
+                100e-6,
+                50e-3, // dead long past the end of the run
+            )],
+            ..FaultPlan::default()
+        };
+        let rep = Sim::new(&topo)
+            .with_faults(plan)
+            .run(&prog, &mut heap, &mut NoopExecutor)
+            .unwrap();
+        assert_eq!(rep.ledger.flows_killed, 1);
+        assert!(
+            rep.ledger.rerouted_bytes > 0.0,
+            "adaptive retry should land on the surviving rail: {:?}",
+            rep.ledger
+        );
+        assert_eq!(rep.ledger.retries, 1, "first retry already finds rail 1");
+        // the victim escaped the flap: done long before it clears
+        assert!(rep.makespan < 50e-3, "{}", rep.makespan);
+    }
+
+    #[test]
+    fn degraded_link_slows_transfer_proportionally() {
+        let clean = {
+            let (topo, mut heap) = railed(RailPolicy::Static);
+            let prog = cross_node_put(&mut heap, 22.5e9 * 1e-3);
+            Sim::new(&topo)
+                .run(&prog, &mut heap, &mut NoopExecutor)
+                .unwrap()
+                .makespan
+        };
+        let degraded = {
+            let (topo, mut heap) = railed(RailPolicy::Static);
+            let prog = cross_node_put(&mut heap, 22.5e9 * 1e-3);
+            let plan = FaultPlan::parse("deg,nic,0,0,0,1.0,0.5").unwrap();
+            Sim::new(&topo)
+                .with_faults(plan)
+                .run(&prog, &mut heap, &mut NoopExecutor)
+                .unwrap()
+                .makespan
+        };
+        // NIC at half capacity for the whole run: ~2x the wire time
+        assert!(
+            degraded > 1.5 * clean && degraded < 2.5 * clean,
+            "clean {clean}, degraded {degraded}"
+        );
+    }
+
+    #[test]
+    fn straggler_inflates_compute() {
+        let (topo, mut heap) = setup(1, 2);
+        let mut prog = Program::new();
+        for r in 0..2 {
+            let mut t = TaskBuilder::new(r, format!("k{r}")).sms(4);
+            t.op(Op::Compute {
+                cost: ComputeCost::Fixed { secs: 1e-3 },
+                numeric: NumericOp::None,
+                label: "w",
+            });
+            prog.push(t.build());
+        }
+        let plan = FaultPlan::parse("strag,0,2.0").unwrap();
+        let rep = Sim::new(&topo)
+            .with_faults(plan)
+            .run(&prog, &mut heap, &mut NoopExecutor)
+            .unwrap();
+        let span_of = |r: usize| rep.task_spans.iter().find(|s| s.1 == r).unwrap().3;
+        assert!((span_of(0) - 2e-3).abs() < 1e-9, "{}", span_of(0));
+        assert!((span_of(1) - 1e-3).abs() < 1e-9, "{}", span_of(1));
+    }
+
+    #[test]
+    fn watchdog_turns_hang_into_structured_error() {
+        let (topo, mut heap) = setup(1, 2);
+        let mut prog = Program::new();
+        let mut t = TaskBuilder::new(0, "stuck");
+        t.op(Op::WaitSignal {
+            idx: 3,
+            cond: SigCond::Eq,
+            value: 1,
+        });
+        prog.push(t.build());
+        let plan = FaultPlan {
+            lt_timeout: 250e-6,
+            ..FaultPlan::default()
+        };
+        let err = Sim::new(&topo)
+            .with_faults(plan)
+            .run(&prog, &mut heap, &mut NoopExecutor)
+            .unwrap_err();
+        match err {
+            SimError::WatchdogTimeout { task, rank, at, .. } => {
+                assert_eq!(task, "stuck");
+                assert_eq!(rank, 0);
+                assert!((at - 250e-6).abs() < 1e-12, "{at}");
+            }
+            other => panic!("expected watchdog, got {other}"),
+        }
+    }
+
+    #[test]
+    fn jitter_is_seeded_and_replayable() {
+        let run = |seed: u64| {
+            let (topo, mut heap) = railed(RailPolicy::Static);
+            let prog = cross_node_put(&mut heap, 22.5e9 * 1e-4);
+            let plan = FaultPlan::parse(&format!("jitter,{seed},5e-6")).unwrap();
+            Sim::new(&topo)
+                .with_faults(plan)
+                .run(&prog, &mut heap, &mut NoopExecutor)
+                .unwrap()
+                .makespan
+        };
+        let clean = {
+            let (topo, mut heap) = railed(RailPolicy::Static);
+            let prog = cross_node_put(&mut heap, 22.5e9 * 1e-4);
+            Sim::new(&topo)
+                .run(&prog, &mut heap, &mut NoopExecutor)
+                .unwrap()
+                .makespan
+        };
+        assert_eq!(run(7).to_bits(), run(7).to_bits(), "same seed, same timeline");
+        assert!(run(7) >= clean, "jitter only ever adds latency");
     }
 }

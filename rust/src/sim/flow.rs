@@ -520,6 +520,106 @@ impl FlowNet {
         etas
     }
 
+    /// Change link capacities mid-run (fault injection: degradation,
+    /// down intervals, recovery) and incrementally re-solve **only the
+    /// touched component(s)** — the same scoped water-fill as
+    /// [`FlowNet::update`], seeded from the flows incident to the
+    /// retargeted links. Links with no flows just record their new
+    /// capacity. Flows whose rate changes get a bumped generation and a
+    /// fresh ETA (`INFINITY` when the new capacity is zero — the caller
+    /// must not schedule those; the generation bump already invalidated
+    /// the old completion event, so the flow simply stalls until a later
+    /// retarget or removal revives its component).
+    pub fn retarget(&mut self, now: f64, changes: &[(LinkId, f64)]) -> RateUpdate {
+        debug_assert!(
+            now >= self.last_now - 1e-12,
+            "time went backwards: {now} < {}",
+            self.last_now
+        );
+        if now > self.last_now {
+            self.last_now = now;
+        }
+        self.scratch_comp_flows.clear();
+        self.scratch_comp_links.clear();
+        for &(l, bw) in changes {
+            debug_assert!(bw >= 0.0 && !bw.is_nan(), "negative link capacity");
+            self.link_bw[l.0] = bw;
+            // seed discovery at the changed link so it is refilled (and
+            // its visit stamp reset) even when the BFS reaches it from
+            // no flow
+            if !self.scratch_link_seen[l.0] {
+                self.scratch_link_seen[l.0] = true;
+                self.scratch_comp_links.push(l.0 as u32);
+                for j in 0..self.incidence[l.0].len() {
+                    let fi = self.incidence[l.0][j] as usize;
+                    if !self.scratch_flow_seen[fi] {
+                        self.scratch_flow_seen[fi] = true;
+                        self.scratch_comp_flows.push(fi as u32);
+                    }
+                }
+            }
+        }
+        // BFS the rest of the component(s), exactly as `update` does
+        let mut qi = 0;
+        while qi < self.scratch_comp_flows.len() {
+            let fi = self.scratch_comp_flows[qi] as usize;
+            qi += 1;
+            for k in 0..self.flows[fi].links.len() {
+                let l = self.flows[fi].links[k].0;
+                if self.scratch_link_seen[l] {
+                    continue;
+                }
+                self.scratch_link_seen[l] = true;
+                self.scratch_comp_links.push(l as u32);
+                for j in 0..self.incidence[l].len() {
+                    let f2 = self.incidence[l][j] as usize;
+                    if !self.scratch_flow_seen[f2] {
+                        self.scratch_flow_seen[f2] = true;
+                        self.scratch_comp_flows.push(f2 as u32);
+                    }
+                }
+            }
+        }
+        // accrue progress at the old rates, then refill with the new caps
+        for k in 0..self.scratch_comp_flows.len() {
+            let fi = self.scratch_comp_flows[k] as usize;
+            let f = &mut self.flows[fi];
+            let dt = now - f.last_settle;
+            if dt > 0.0 {
+                f.bytes_left = (f.bytes_left - f.rate * dt).max(0.0);
+            }
+            f.last_settle = now;
+        }
+        let mut comp_flows = std::mem::take(&mut self.scratch_comp_flows);
+        let mut comp_links = std::mem::take(&mut self.scratch_comp_links);
+        comp_flows.sort_unstable();
+        comp_links.sort_unstable();
+        let etas = self.refill_component(&comp_flows, &comp_links);
+        for &fi in &comp_flows {
+            self.scratch_flow_seen[fi as usize] = false;
+        }
+        for &l in &comp_links {
+            self.scratch_link_seen[l as usize] = false;
+        }
+        self.scratch_comp_flows = comp_flows;
+        self.scratch_comp_links = comp_links;
+        RateUpdate { etas }
+    }
+
+    /// Current capacity of a link (reflects any retargeting).
+    pub fn link_capacity(&self, l: LinkId) -> f64 {
+        self.link_bw[l.0]
+    }
+
+    /// The alive flows currently traversing link `l` (unordered). The
+    /// engine uses this to find the victims of a link-down fault.
+    pub fn flows_on(&self, l: LinkId) -> Vec<FlowId> {
+        self.incidence[l.0]
+            .iter()
+            .map(|&fi| FlowId(fi as usize))
+            .collect()
+    }
+
     /// Is `gen` the current generation of `id`? (Stale-event filter.)
     pub fn is_current(&self, id: FlowId, gen: u64) -> bool {
         let f = &self.flows[id.0];
@@ -859,6 +959,75 @@ mod tests {
         let (a, _) = n.add(0.0, vec![LinkId(0)], 10.0);
         n.remove(1.0, a);
         n.remove(1.0, a);
+    }
+
+    #[test]
+    fn retarget_rescales_component_rates() {
+        let mut n = net(&[100.0, 80.0]);
+        let (a, _) = n.add(0.0, vec![LinkId(0)], 1000.0);
+        let (b, up_b) = n.add(0.0, vec![LinkId(1)], 800.0);
+        let gen_b = up_b.etas.iter().find(|e| e.0 == b).unwrap().1;
+        // halve link 0 at t=2: a has 800 left, now at 50 B/s -> eta 16
+        let up = n.retarget(2.0, &[(LinkId(0), 50.0)]);
+        assert_eq!(n.rate(a), 50.0);
+        let (_, gen_a, eta_a) = *up.etas.iter().find(|e| e.0 == a).unwrap();
+        assert!((eta_a - 16.0).abs() < 1e-9, "{eta_a}");
+        assert!(n.is_current(a, gen_a));
+        // b's component untouched: no eta churn, old event still current
+        assert!(up.etas.iter().all(|e| e.0 != b));
+        assert!(n.is_current(b, gen_b));
+        assert_eq!(n.link_capacity(LinkId(0)), 50.0);
+        n.check_capacity().unwrap();
+        // rates match a from-scratch fill under the new capacities
+        for (id, r) in n.reference_rates() {
+            assert_eq!(n.rate(id).to_bits(), r.to_bits());
+        }
+    }
+
+    #[test]
+    fn retarget_to_zero_stalls_then_recovers() {
+        let mut n = net(&[100.0]);
+        let (a, _) = n.add(0.0, vec![LinkId(0)], 1000.0);
+        let up = n.retarget(1.0, &[(LinkId(0), 0.0)]);
+        let (_, gen_down, eta) = up.etas[0];
+        assert_eq!(n.rate(a), 0.0);
+        assert!(eta.is_infinite(), "stalled flow must report eta=inf");
+        // 900 bytes remain frozen while the link is down
+        assert!((n.bytes_left(a) - 900.0).abs() < 1e-9);
+        let up2 = n.retarget(5.0, &[(LinkId(0), 90.0)]);
+        let (_, gen_up, eta2) = *up2.etas.iter().find(|e| e.0 == a).unwrap();
+        assert!(gen_up > gen_down, "recovery must re-arm with a fresh gen");
+        assert!((eta2 - 10.0).abs() < 1e-9, "{eta2}");
+        assert!((n.bytes_left(a) - 900.0).abs() < 1e-9, "no progress while down");
+        assert!(n.is_current(a, gen_up));
+        assert!(!n.is_current(a, gen_down));
+    }
+
+    #[test]
+    fn retarget_unflowed_link_is_silent() {
+        let mut n = net(&[100.0, 50.0]);
+        let (a, up_a) = n.add(0.0, vec![LinkId(0)], 1000.0);
+        let gen_a = up_a.etas[0].1;
+        let up = n.retarget(1.0, &[(LinkId(1), 10.0)]);
+        assert!(up.etas.is_empty(), "no flow touches link 1");
+        assert!(n.is_current(a, gen_a));
+        assert_eq!(n.link_capacity(LinkId(1)), 10.0);
+        // a later flow on the retargeted link sees the new capacity
+        let (b, _) = n.add(2.0, vec![LinkId(1)], 100.0);
+        assert_eq!(n.rate(b), 10.0);
+    }
+
+    #[test]
+    fn flows_on_reports_incident_flows() {
+        let mut n = net(&[10.0, 10.0]);
+        let (a, _) = n.add(0.0, vec![LinkId(0), LinkId(1)], 10.0);
+        let (b, _) = n.add(0.0, vec![LinkId(1)], 10.0);
+        let mut on1 = n.flows_on(LinkId(1));
+        on1.sort_by_key(|f| f.0);
+        assert_eq!(on1, vec![a, b]);
+        assert_eq!(n.flows_on(LinkId(0)), vec![a]);
+        n.remove(1.0, a);
+        assert_eq!(n.flows_on(LinkId(1)), vec![b]);
     }
 
     #[test]

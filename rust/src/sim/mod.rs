@@ -9,5 +9,7 @@
 pub mod engine;
 pub mod flow;
 
-pub use engine::{ComputeExecutor, NoopExecutor, OpSpan, Sim, SimConfig, SimError, SimReport};
+pub use engine::{
+    ComputeExecutor, FaultLedger, NoopExecutor, OpSpan, Sim, SimConfig, SimError, SimReport,
+};
 pub use flow::{FlowId, FlowNet, RateUpdate};

@@ -60,7 +60,7 @@
 //! latency; the DES engine max–min fair-shares link capacity among all
 //! concurrent flows (see `sim::flow`).
 
-use crate::config::{ClusterSpec, HardwareKind, RailPolicy, TrafficClass};
+use crate::config::{ClusterSpec, FaultTarget, HardwareKind, RailPolicy, TrafficClass};
 
 /// Index into the [`Topology`]'s link table (see [`Topology::link`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -167,6 +167,73 @@ impl LinkOccupancy {
     /// Transfers currently in flight over link `l`.
     pub fn in_flight(&self, l: LinkId) -> u32 {
         self.flows[l.0]
+    }
+}
+
+/// Live per-link capacity factors under the active fault set (see
+/// `config::fault`): `1.0` = nominal, `(0, 1)` = degraded, `0.0` = down.
+/// The DES engine owns one of these when a `FaultPlan` is loaded and
+/// updates it as fault begin/end events fire; the [`Router`] consults it
+/// (via [`Router::route_faulty`]) so `RailPolicy::Adaptive` steers
+/// around dead or degraded planes. Fault-free runs never construct one —
+/// the `Option<&FabricHealth>` stays `None` and routing is bit-identical
+/// to the health-blind path.
+///
+/// ```
+/// use triton_dist_sim::topology::{FabricHealth, LinkId};
+///
+/// let mut h = FabricHealth::healthy(4);
+/// assert!(h.all_healthy());
+/// h.set_factor(LinkId(2), 0.0);
+/// assert!(h.is_down(LinkId(2)));
+/// h.set_factor(LinkId(2), 1.0);
+/// assert!(h.all_healthy());
+/// ```
+#[derive(Debug, Clone)]
+pub struct FabricHealth {
+    factor: Vec<f64>,
+    degraded: usize,
+}
+
+impl FabricHealth {
+    /// All links at nominal capacity.
+    pub fn healthy(n_links: usize) -> Self {
+        FabricHealth {
+            factor: vec![1.0; n_links],
+            degraded: 0,
+        }
+    }
+
+    /// Current capacity factor of link `l`.
+    pub fn factor(&self, l: LinkId) -> f64 {
+        self.factor[l.0]
+    }
+
+    /// Set link `l`'s capacity factor (the engine recomputes it as the
+    /// product over all active faults hitting the link).
+    pub fn set_factor(&mut self, l: LinkId, f: f64) {
+        let old = self.factor[l.0];
+        if old == 1.0 && f != 1.0 {
+            self.degraded += 1;
+        } else if old != 1.0 && f == 1.0 {
+            self.degraded -= 1;
+        }
+        self.factor[l.0] = f;
+    }
+
+    /// Is link `l` completely down?
+    pub fn is_down(&self, l: LinkId) -> bool {
+        self.factor[l.0] == 0.0
+    }
+
+    /// No link deviates from nominal capacity.
+    pub fn all_healthy(&self) -> bool {
+        self.degraded == 0
+    }
+
+    /// Does every link of `route` have nonzero capacity?
+    pub fn route_alive(&self, route: &Route) -> bool {
+        route.links.iter().all(|l| self.factor[l.0] > 0.0)
     }
 }
 
@@ -428,6 +495,54 @@ impl Topology {
             latency: 0.0,
         }
     }
+
+    /// Resolve a [`FaultTarget`] to the concrete links it covers on this
+    /// topology. Targets that do not exist here (NIC of an out-of-range
+    /// rank, spine on a non-blocking fabric, any inter-node target on a
+    /// single-node cluster) resolve to an empty set — the fault is inert
+    /// rather than an error, so one plan ports across cluster shapes.
+    pub fn fault_links(&self, target: &FaultTarget) -> Vec<LinkId> {
+        let rails = self.cluster.fabric.rails;
+        let mut out = Vec::new();
+        let mut push = |idx: usize| {
+            if idx != usize::MAX {
+                out.push(LinkId(idx));
+            }
+        };
+        match *target {
+            FaultTarget::Nic { rank, rail } => {
+                if rank < self.cluster.world_size() && rail < rails {
+                    push(self.nic_tx[rank * rails + rail]);
+                    push(self.nic_rx[rank * rails + rail]);
+                }
+            }
+            FaultTarget::Spine { rail } => {
+                if let Some(&idx) = self.spine.get(rail) {
+                    push(idx);
+                }
+            }
+            FaultTarget::Rail { rail } => {
+                if rail < rails {
+                    for r in 0..self.cluster.world_size() {
+                        push(self.nic_tx[r * rails + rail]);
+                        push(self.nic_rx[r * rails + rail]);
+                    }
+                    for node in 0..self.cluster.nodes {
+                        if let Some(&idx) = self.leaf_up.get(node * rails + rail) {
+                            push(idx);
+                        }
+                        if let Some(&idx) = self.leaf_down.get(node * rails + rail) {
+                            push(idx);
+                        }
+                    }
+                    if let Some(&idx) = self.spine.get(rail) {
+                        push(idx);
+                    }
+                }
+            }
+        }
+        out
+    }
 }
 
 /// The rail router: resolves a transfer's [`TrafficClass`] into a
@@ -493,37 +608,93 @@ impl<'t> Router<'t> {
 
     /// Resolve `tc` and route `src -> dst` under live occupancy.
     pub fn route(&self, src: usize, dst: usize, tc: TrafficClass, occ: &LinkOccupancy) -> Route {
-        if self.policy == RailPolicy::Adaptive
-            && tc == TrafficClass::Auto
-            && src != dst
+        self.route_faulty(src, dst, tc, occ, None)
+    }
+
+    /// [`Router::route`] with an optional fabric-health view: when a
+    /// fault plan is active the engine passes `Some(health)` and the
+    /// adaptive rail scoring excludes dead planes and deflates degraded
+    /// ones (effective capacity `bw * factor`). `None` — the fault-free
+    /// engine path — is bit-identical to the health-blind router.
+    ///
+    /// Pinned classes (`Rail` / `Rails`) are a *performance* hint, not a
+    /// correctness requirement: under `RailPolicy::Adaptive` a pinned
+    /// inter-node route with a dead link self-heals onto the emptiest
+    /// alive plane, while `RailPolicy::Static` honors the pin and lets
+    /// the flow stall into the retry machinery — the policy contrast the
+    /// degraded-fabric scenarios measure. With every link alive the
+    /// pinned route is returned untouched, so an active-but-idle fault
+    /// plan stays bit-identical.
+    pub fn route_faulty(
+        &self,
+        src: usize,
+        dst: usize,
+        tc: TrafficClass,
+        occ: &LinkOccupancy,
+        health: Option<&FabricHealth>,
+    ) -> Route {
+        let inter = src != dst
             && self.topo.cluster.fabric.rails > 1
-            && self.topo.cluster.node_of(src) != self.topo.cluster.node_of(dst)
-        {
-            let rail = self.pick_rail(src, dst, occ);
+            && self.topo.cluster.node_of(src) != self.topo.cluster.node_of(dst);
+        if self.policy == RailPolicy::Adaptive && tc == TrafficClass::Auto && inter {
+            let rail = self.pick_rail(src, dst, occ, health);
             return self.topo.route_tc(src, dst, TrafficClass::Rail(rail));
         }
-        self.topo.route_tc(src, dst, tc)
+        let route = self.topo.route_tc(src, dst, tc);
+        if self.policy == RailPolicy::Adaptive && inter {
+            if let Some(h) = health {
+                if !h.route_alive(&route) {
+                    let rail = self.pick_rail(src, dst, occ, health);
+                    return self.topo.route_tc(src, dst, TrafficClass::Rail(rail));
+                }
+            }
+        }
+        route
     }
 
     /// The emptiest plane for `src -> dst`: minimize the candidate path's
     /// bottleneck fill (committed bytes / capacity over its NIC and, on
     /// blocking fabrics, leaf/spine links), breaking ties by in-flight
-    /// flow count and then rail index.
-    fn pick_rail(&self, src: usize, dst: usize, occ: &LinkOccupancy) -> u32 {
+    /// flow count and then rail index. With a health view, planes with a
+    /// downed link on the path are skipped outright (unless *every*
+    /// plane is down, when the ordinary scoring decides and the flow
+    /// stalls into the retry machinery), and degraded links score with
+    /// their reduced effective capacity.
+    fn pick_rail(
+        &self,
+        src: usize,
+        dst: usize,
+        occ: &LinkOccupancy,
+        health: Option<&FabricHealth>,
+    ) -> u32 {
         let t = self.topo;
         let c = &t.cluster;
         let fabric = c.fabric;
         let rails = fabric.rails;
         let blocking = fabric.is_blocking();
-        let mut best = 0u32;
-        let mut best_fill = f64::INFINITY;
-        let mut best_flows = u32::MAX;
+        // (rail, fill, flows) winners among alive planes and among all
+        // planes; prefer the alive winner when one exists.
+        let mut best_alive: Option<(u32, f64, u32)> = None;
+        let mut best_any = (0u32, f64::INFINITY, u32::MAX);
         for rail in 0..rails {
             let mut fill = 0.0f64;
             let mut flows = 0u32;
+            let mut down = false;
             let mut scan = |lid: usize| {
                 let id = LinkId(lid);
-                let f = occ.committed_bytes(id) / t.links[lid].bw;
+                let bw = match health {
+                    // bw * 1.0 == bw exactly: healthy scoring is
+                    // bit-identical to the health-blind path
+                    Some(h) => {
+                        let factor = h.factor(id);
+                        if factor == 0.0 {
+                            down = true;
+                        }
+                        t.links[lid].bw * factor
+                    }
+                    None => t.links[lid].bw,
+                };
+                let f = occ.committed_bytes(id) / bw;
                 if f > fill {
                     fill = f;
                 }
@@ -536,13 +707,23 @@ impl<'t> Router<'t> {
                 scan(t.leaf_down[c.node_of(dst) * rails + rail]);
             }
             scan(t.nic_rx[dst * rails + rail]);
-            if fill < best_fill || (fill == best_fill && flows < best_flows) {
-                best = rail as u32;
-                best_fill = fill;
-                best_flows = flows;
+            if fill < best_any.1 || (fill == best_any.1 && flows < best_any.2) {
+                best_any = (rail as u32, fill, flows);
+            }
+            if !down {
+                let better = match best_alive {
+                    None => true,
+                    Some((_, bf, bn)) => fill < bf || (fill == bf && flows < bn),
+                };
+                if better {
+                    best_alive = Some((rail as u32, fill, flows));
+                }
             }
         }
-        best
+        match best_alive {
+            Some((rail, _, _)) => rail,
+            None => best_any.0,
+        }
     }
 }
 
@@ -798,6 +979,150 @@ mod tests {
             .map(|&l| t.link(l).owner)
             .expect("blocking route must cross a spine plane");
         assert_eq!(spine_owner, 1, "router should pick the empty plane 1");
+    }
+
+    // -- fabric health / fault resolution ----------------------------------
+
+    use crate::config::FaultTarget;
+
+    #[test]
+    fn fault_links_resolve_per_target() {
+        let t = railed(2, 8, 2, 2.0);
+        // NIC: exactly the tx+rx pair of that (rank, rail)
+        let nic = t.fault_links(&FaultTarget::Nic { rank: 3, rail: 1 });
+        assert_eq!(nic.len(), 2);
+        assert_eq!(t.link(nic[0]).kind, LinkKind::NicTx);
+        assert_eq!(t.link(nic[1]).kind, LinkKind::NicRx);
+        assert!(nic.iter().all(|&l| t.link(l).owner == 3));
+        // spine: the one plane link
+        let spine = t.fault_links(&FaultTarget::Spine { rail: 0 });
+        assert_eq!(spine.len(), 1);
+        assert_eq!(t.link(spine[0]).kind, LinkKind::Spine);
+        assert_eq!(t.link(spine[0]).owner, 0);
+        // whole rail: every NIC pair + both leaf dirs per node + spine
+        let rail = t.fault_links(&FaultTarget::Rail { rail: 1 });
+        assert_eq!(rail.len(), 16 * 2 + 2 * 2 + 1);
+        // out-of-range / absent targets are inert, not errors
+        assert!(t.fault_links(&FaultTarget::Nic { rank: 99, rail: 0 }).is_empty());
+        assert!(t.fault_links(&FaultTarget::Spine { rail: 7 }).is_empty());
+        let flat = Topology::build(ClusterSpec::h800(2, 8));
+        assert!(flat.fault_links(&FaultTarget::Spine { rail: 0 }).is_empty());
+        let single = Topology::build(ClusterSpec::h800(1, 8));
+        assert!(single
+            .fault_links(&FaultTarget::Nic { rank: 0, rail: 0 })
+            .is_empty());
+    }
+
+    #[test]
+    fn health_tracks_degraded_count() {
+        let mut h = FabricHealth::healthy(3);
+        assert!(h.all_healthy());
+        h.set_factor(LinkId(1), 0.5);
+        h.set_factor(LinkId(2), 0.0);
+        assert!(!h.all_healthy());
+        assert!(h.is_down(LinkId(2)));
+        assert!(!h.is_down(LinkId(1)));
+        let r = Route {
+            links: vec![LinkId(0), LinkId(2)],
+            latency: 0.0,
+        };
+        assert!(!h.route_alive(&r));
+        h.set_factor(LinkId(2), 1.0);
+        assert!(h.route_alive(&r));
+        h.set_factor(LinkId(1), 1.0);
+        assert!(h.all_healthy());
+    }
+
+    #[test]
+    fn adaptive_router_excludes_dead_rail() {
+        let t = railed(2, 8, 2, 1.0);
+        let router = Router::with_policy(&t, RailPolicy::Adaptive);
+        let occ = LinkOccupancy::new(t.link_count());
+        let mut health = FabricHealth::healthy(t.link_count());
+        // kill rank 0's rail-0 NIC: the empty-fabric tie must now break
+        // to rail 1 instead of rail 0
+        for l in t.fault_links(&FaultTarget::Nic { rank: 0, rail: 0 }) {
+            health.set_factor(l, 0.0);
+        }
+        let r = router.route_faulty(0, 8, TrafficClass::Auto, &occ, Some(&health));
+        let r1 = t.route_tc(0, 8, TrafficClass::Rail(1));
+        assert_eq!(r.links, r1.links, "dead plane must be excluded");
+        // other endpoints are unaffected by rank 0's NIC fault
+        let other = router.route_faulty(1, 9, TrafficClass::Auto, &occ, Some(&health));
+        let other0 = t.route_tc(1, 9, TrafficClass::Rail(0));
+        assert_eq!(other.links, other0.links);
+        // all planes dead: fall back to ordinary scoring (flow will
+        // stall into the retry machinery rather than panic)
+        for l in t.fault_links(&FaultTarget::Rail { rail: 0 }) {
+            health.set_factor(l, 0.0);
+        }
+        for l in t.fault_links(&FaultTarget::Rail { rail: 1 }) {
+            health.set_factor(l, 0.0);
+        }
+        let dead = router.route_faulty(0, 8, TrafficClass::Auto, &occ, Some(&health));
+        assert_eq!(dead.links.len(), 2);
+    }
+
+    #[test]
+    fn pinned_rail_self_heals_under_adaptive_only() {
+        let t = railed(2, 8, 2, 1.0);
+        let occ = LinkOccupancy::new(t.link_count());
+        let mut health = FabricHealth::healthy(t.link_count());
+        for l in t.fault_links(&FaultTarget::Nic { rank: 0, rail: 0 }) {
+            health.set_factor(l, 0.0);
+        }
+        // adaptive: the pin is a hint — a dead pinned plane reroutes to
+        // the alive one (the EP dispatch/combine pins heal this way)
+        let adaptive = Router::with_policy(&t, RailPolicy::Adaptive);
+        let healed = adaptive.route_faulty(0, 8, TrafficClass::Rail(0), &occ, Some(&health));
+        assert_eq!(healed.links, t.route_tc(0, 8, TrafficClass::Rail(1)).links);
+        let rails = adaptive.route_faulty(
+            0,
+            8,
+            TrafficClass::Rails { tx: 0, rx: 0 },
+            &occ,
+            Some(&health),
+        );
+        assert_eq!(rails.links, t.route_tc(0, 8, TrafficClass::Rail(1)).links);
+        // an alive pin is returned untouched (bit-identity under an
+        // active-but-idle plan)
+        let alive = adaptive.route_faulty(0, 8, TrafficClass::Rail(1), &occ, Some(&health));
+        let blind = t.route_tc(0, 8, TrafficClass::Rail(1));
+        assert_eq!(alive.links, blind.links);
+        assert_eq!(alive.latency.to_bits(), blind.latency.to_bits());
+        // static honors the pin: the flow stalls into the retry machinery
+        let stat = Router::with_policy(&t, RailPolicy::Static);
+        let pinned = stat.route_faulty(0, 8, TrafficClass::Rail(0), &occ, Some(&health));
+        assert_eq!(pinned.links, t.route_tc(0, 8, TrafficClass::Rail(0)).links);
+        assert!(!health.route_alive(&pinned));
+    }
+
+    #[test]
+    fn adaptive_router_deflates_degraded_rail() {
+        let t = railed(2, 8, 2, 1.0);
+        let router = Router::with_policy(&t, RailPolicy::Adaptive);
+        let mut occ = LinkOccupancy::new(t.link_count());
+        let mut health = FabricHealth::healthy(t.link_count());
+        // equal committed load on both planes; rail 0 at 25% capacity
+        // now looks 4x fuller, so the router must pick rail 1 (the
+        // healthy-occupancy tie-break would have chosen rail 0)
+        occ.commit(&t.route_tc(0, 8, TrafficClass::Rail(0)).links, 1e6);
+        occ.commit(&t.route_tc(0, 8, TrafficClass::Rail(1)).links, 1e6);
+        for l in t.fault_links(&FaultTarget::Nic { rank: 0, rail: 0 }) {
+            health.set_factor(l, 0.25);
+        }
+        let r = router.route_faulty(0, 8, TrafficClass::Auto, &occ, Some(&health));
+        let r1 = t.route_tc(0, 8, TrafficClass::Rail(1));
+        assert_eq!(r.links, r1.links, "degraded plane scores fuller");
+        // with every factor back at 1.0 the health-aware path is
+        // bit-identical to the blind one
+        for l in t.fault_links(&FaultTarget::Nic { rank: 0, rail: 0 }) {
+            health.set_factor(l, 1.0);
+        }
+        let a = router.route_faulty(0, 8, TrafficClass::Auto, &occ, Some(&health));
+        let b = router.route(0, 8, TrafficClass::Auto, &occ);
+        assert_eq!(a.links, b.links);
+        assert_eq!(a.latency.to_bits(), b.latency.to_bits());
     }
 
     #[test]

@@ -58,13 +58,13 @@ fn a2a_makespan(cluster: ClusterSpec, chunk: usize) -> f64 {
 fn ag_gemm_makespan(cluster: ClusterSpec, shape: GemmShape) -> f64 {
     let topo = Topology::build(cluster);
     let (mut op, _b) = ag_gemm::build(cluster, shape, ag_gemm::AgGemmVariant::OursInter);
-    run_timing(&mut op, &topo)
+    run_timing(&mut op, &topo).unwrap()
 }
 
 fn gemm_rs_makespan(cluster: ClusterSpec, shape: GemmShape) -> f64 {
     let topo = Topology::build(cluster);
     let (mut op, _b) = gemm_rs::build(cluster, shape, gemm_rs::GemmRsVariant::OursInter);
-    run_timing(&mut op, &topo)
+    run_timing(&mut op, &topo).unwrap()
 }
 
 /// fig13 shape (scaled down): inter-node AG+GEMM on 2x8 H800.

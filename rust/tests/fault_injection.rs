@@ -1,0 +1,283 @@
+//! Fault-injection invariants (ISSUE tentpole acceptance):
+//!
+//! 1. **Bit-identity**: an empty [`FaultPlan`] is bit-for-bit identical
+//!    to the fault-free engine on every workload shape — same makespan
+//!    bits, same event/flow counts, same task spans, all-zero ledger.
+//! 2. **Determinism**: the same (workload, fault seed) replays the
+//!    identical timeline.
+//! 3. **Liveness**: under arbitrary synthesized flap schedules a run
+//!    either completes (with exact token conservation on the EP MoE
+//!    numerics) or terminates with a structured watchdog error — it
+//!    never hangs.
+//! 4. **The headline contrast**: under a mid-dispatch rail flap,
+//!    Adaptive + retry strictly beats Static + retry (the self-healing
+//!    pinned-rail reroute vs the backoff ladder).
+
+use triton_dist_sim::collectives::alltoall::{a2a_ll, A2aBufs, A2aCfg};
+use triton_dist_sim::collectives::ProgBuild;
+use triton_dist_sim::config::{
+    ClusterSpec, DType, FabricSpec, FaultPlan, GemmShape, MoeShape, RailPolicy,
+};
+use triton_dist_sim::coordinator::{ag_gemm, ep_moe, run_timing_faults};
+use triton_dist_sim::mem::SymmetricHeap;
+use triton_dist_sim::shmem::ShmemCtx;
+use triton_dist_sim::sim::{NoopExecutor, Sim, SimConfig, SimError, SimReport};
+use triton_dist_sim::topology::Topology;
+use triton_dist_sim::util::prop::{check, Gen};
+
+fn timing_sim(topo: &Topology) -> Sim<'_> {
+    Sim::with_config(
+        topo,
+        SimConfig {
+            numerics: false,
+            trace: false,
+        },
+    )
+}
+
+/// Run one of the three workload shapes twice — fault-free engine vs an
+/// engine with an (empty or given) plan attached — and return both
+/// reports.
+fn bit_identity_pair(shape: usize, plan: FaultPlan) -> (SimReport, SimReport) {
+    match shape {
+        // fig13 shape: inter-node AG+GEMM
+        0 => {
+            let cluster = ClusterSpec::h800(2, 4);
+            let topo = Topology::build(cluster);
+            let gemm = GemmShape::new(1024, 512, 512);
+            let run = |faults: Option<FaultPlan>| {
+                let (mut op, _b) =
+                    ag_gemm::build(cluster, gemm, ag_gemm::AgGemmVariant::OursInter);
+                let mut sim = timing_sim(&topo);
+                if let Some(p) = faults {
+                    sim = sim.with_faults(p);
+                }
+                sim.run(&op.prog, &mut op.heap, &mut NoopExecutor).unwrap()
+            };
+            (run(None), run(Some(plan)))
+        }
+        // fig16 shape: railed LL AllToAll
+        1 => {
+            let cluster = ClusterSpec::h800(2, 4).with_fabric(
+                FabricSpec::rail_optimized(2, 2.0).with_rail_policy(RailPolicy::Adaptive),
+            );
+            let ctx = ShmemCtx::new(cluster, DType::BF16);
+            let topo = Topology::build(cluster);
+            let run = |faults: Option<FaultPlan>| {
+                let mut heap = SymmetricHeap::new(ctx.n_pes(), 4 * ctx.n_pes());
+                let bufs = A2aBufs::alloc(&mut heap, &ctx, 512);
+                let mut pb = ProgBuild::new();
+                a2a_ll(&ctx, &bufs, &mut pb, &A2aCfg::ours());
+                let mut sim = timing_sim(&topo);
+                if let Some(p) = faults {
+                    sim = sim.with_faults(p);
+                }
+                sim.run(&pb.prog, &mut heap, &mut NoopExecutor).unwrap()
+            };
+            (run(None), run(Some(plan)))
+        }
+        // EP MoE shape: token-routed over the tapered railed fabric
+        _ => {
+            let cluster = ClusterSpec::h800(2, 4)
+                .with_fabric(FabricSpec::rail_optimized(2, 2.0).with_spine_taper(2.0));
+            let shape = MoeShape {
+                tokens_per_rank: 16,
+                in_hidden: 64,
+                out_hidden: 64,
+                experts: 8,
+                topk: 2,
+                ..MoeShape::default()
+            }
+            .with_skew(1.2);
+            let routing = ep_moe::routing_for(cluster, &shape, 5);
+            let topo = Topology::build(cluster);
+            let run = |faults: Option<FaultPlan>| {
+                let (mut op, _b) = ep_moe::build_ep_moe(
+                    cluster,
+                    shape,
+                    &routing,
+                    ep_moe::EpMoeVariant::TokenRouted,
+                );
+                let mut sim = timing_sim(&topo);
+                if let Some(p) = faults {
+                    sim = sim.with_faults(p);
+                }
+                sim.run(&op.prog, &mut op.heap, &mut NoopExecutor).unwrap()
+            };
+            (run(None), run(Some(plan)))
+        }
+    }
+}
+
+fn assert_reports_identical(a: &SimReport, b: &SimReport) {
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "makespan bits");
+    assert_eq!(a.events, b.events, "event count");
+    assert_eq!(a.flows, b.flows, "flow count");
+    assert_eq!(a.ledger, b.ledger, "ledger");
+    assert_eq!(a.task_spans.len(), b.task_spans.len());
+    for (x, y) in a.task_spans.iter().zip(&b.task_spans) {
+        assert_eq!(x.0, y.0);
+        assert_eq!(x.1, y.1);
+        assert_eq!(x.2.to_bits(), y.2.to_bits(), "task start bits ({})", x.0);
+        assert_eq!(x.3.to_bits(), y.3.to_bits(), "task end bits ({})", x.0);
+    }
+}
+
+#[test]
+fn empty_fault_plan_is_bit_identical_across_shapes() {
+    check("empty plan == fault-free engine", 9, |g: &mut Gen| {
+        let shape = g.usize_in(0, 3);
+        let (clean, attached) = bit_identity_pair(shape, FaultPlan::default());
+        assert_reports_identical(&clean, &attached);
+        assert_eq!(attached.ledger, Default::default(), "ledger must be zero");
+    });
+}
+
+#[test]
+fn randomized_flap_schedules_never_hang_and_conserve_tokens() {
+    use triton_dist_sim::runtime::HybridExecutor;
+    let cluster = ClusterSpec::h800(2, 2)
+        .with_fabric(FabricSpec::rail_optimized(2, 2.0).with_rail_policy(RailPolicy::Adaptive));
+    let shape = MoeShape {
+        tokens_per_rank: 6,
+        in_hidden: 8,
+        out_hidden: 8,
+        experts: 8,
+        topk: 2,
+        ..MoeShape::default()
+    };
+    let topo = Topology::build(cluster);
+    check("flaps: terminate + conserve tokens", 8, |g: &mut Gen| {
+        let fault_seed = g.u64();
+        let mut plan = FaultPlan::synthesize(fault_seed, 1.0, 4, 2, 1e-3);
+        // arm the watchdog: a wedged wait must become a structured
+        // error, never a hang
+        plan.lt_timeout = 50e-3;
+        let routing = ep_moe::routing_for(cluster, &shape, 3);
+        let (mut op, bufs) = ep_moe::build_ep_moe(
+            cluster,
+            shape,
+            &routing,
+            ep_moe::EpMoeVariant::TokenRouted,
+        );
+        ep_moe::fill_ep_moe(&mut op.heap, &bufs, &routing, 3);
+        let expected = ep_moe::reference_ep_moe(&op.heap, &bufs, &routing);
+        let sim = Sim::with_config(
+            &topo,
+            SimConfig {
+                numerics: true,
+                trace: false,
+            },
+        )
+        .with_faults(plan);
+        let mut exec = HybridExecutor::native_only();
+        match sim.run(&op.prog, &mut op.heap, &mut exec) {
+            Ok(_rep) => {
+                // the retried wire still delivered every routed row
+                // exactly once, bit-exactly
+                ep_moe::verify_ep_moe(&op.heap, &bufs, &routing, &expected)
+                    .unwrap_or_else(|e| panic!("seed {fault_seed}: {e}"));
+            }
+            Err(SimError::WatchdogTimeout { at, .. }) => {
+                assert!(at.is_finite(), "watchdog must carry the failure time");
+            }
+            Err(e) => panic!("seed {fault_seed}: non-watchdog failure: {e}"),
+        }
+    });
+}
+
+#[test]
+fn same_fault_seed_replays_identical_timeline() {
+    let plan = {
+        let mut p = FaultPlan::synthesize(42, 1.5, 8, 2, 1e-3);
+        p.lt_timeout = 50e-3;
+        p
+    };
+    let run = || bit_identity_pair(1, plan.clone()).1;
+    let a = run();
+    let b = run();
+    assert_reports_identical(&a, &b);
+}
+
+#[test]
+fn adaptive_retry_strictly_beats_static_retry_on_mid_dispatch_flap() {
+    // spine plane 0 dies at t=5us and returns at t=505us, mid-dispatch.
+    // Static honors the EP rail pins and climbs the retry backoff ladder
+    // until the plane returns; Adaptive self-heals the pinned routes onto
+    // the surviving plane at the first retry. This is the perf suite's
+    // `moe-ep-rail-flap` contrast, pinned.
+    let shape = MoeShape {
+        tokens_per_rank: 32,
+        in_hidden: 128,
+        out_hidden: 128,
+        experts: 8,
+        topk: 2,
+        ..MoeShape::default()
+    }
+    .with_skew(1.2);
+    let run = |policy: RailPolicy| -> SimReport {
+        let cluster = ClusterSpec::h800(2, 4).with_fabric(
+            FabricSpec::rail_optimized(2, 2.0)
+                .with_spine_taper(2.0)
+                .with_rail_policy(policy),
+        );
+        let routing = ep_moe::routing_for(cluster, &shape, 7);
+        let topo = Topology::build(cluster);
+        let (mut op, _b) = ep_moe::build_ep_moe(
+            cluster,
+            shape,
+            &routing,
+            ep_moe::EpMoeVariant::TokenRouted,
+        );
+        let plan = FaultPlan::parse("flap,spine,0,5e-6,5e-4").unwrap();
+        run_timing_faults(&mut op, &topo, plan).unwrap()
+    };
+    let stat = run(RailPolicy::Static);
+    let adap = run(RailPolicy::Adaptive);
+    assert!(
+        adap.makespan < stat.makespan,
+        "adaptive+retry ({}) must strictly beat static+retry ({})",
+        adap.makespan,
+        stat.makespan
+    );
+    // static visibly stalled: flows died on the downed plane and climbed
+    // the backoff ladder past the flap window
+    assert!(stat.ledger.flows_killed > 0, "static must lose flows");
+    assert!(stat.ledger.retries > 1, "static must climb the ladder");
+    assert!(
+        stat.makespan > 500e-6,
+        "static must stall past the flap window, got {}",
+        stat.makespan
+    );
+    // adaptive recovered: whatever was killed got rerouted, nothing
+    // exhausted its retry budget
+    assert_eq!(adap.ledger.retries_exhausted, 0);
+}
+
+#[test]
+fn watchdog_surfaces_structured_coordinator_error() {
+    // both planes permanently dead from t=0: every inter-node wait is
+    // unsatisfiable, so the watchdog must turn the run into a structured
+    // CoordError carrying the op name and virtual failure time
+    let cluster = ClusterSpec::h800(2, 4)
+        .with_fabric(FabricSpec::rail_optimized(2, 2.0).with_rail_policy(RailPolicy::Adaptive));
+    let shape = MoeShape {
+        tokens_per_rank: 8,
+        in_hidden: 16,
+        out_hidden: 16,
+        experts: 8,
+        topk: 2,
+        ..MoeShape::default()
+    };
+    let routing = ep_moe::routing_for(cluster, &shape, 2);
+    let topo = Topology::build(cluster);
+    let (mut op, _b) =
+        ep_moe::build_ep_moe(cluster, shape, &routing, ep_moe::EpMoeVariant::TokenRouted);
+    let mut plan = FaultPlan::parse("raildead,0,0; raildead,1,0").unwrap();
+    plan.lt_timeout = 1e-3;
+    let err = run_timing_faults(&mut op, &topo, plan).expect_err("must time out");
+    assert!(err.at.is_some(), "watchdog failure time must surface");
+    let msg = err.to_string();
+    assert!(msg.contains("EP MoE"), "op name in error: {msg}");
+    assert!(msg.contains("timed out") || msg.contains("watchdog"), "{msg}");
+}

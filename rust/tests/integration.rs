@@ -32,7 +32,7 @@ fn ag_gemm_all_variants_all_geometries() {
         let reference = ag_gemm::reference_output(&op.heap, &bufs);
         let topo = Topology::build(cluster);
         let mut exec = HybridExecutor::native_only();
-        coordinator::run_numeric(&mut op, &topo, &mut exec);
+        coordinator::run_numeric(&mut op, &topo, &mut exec).unwrap();
         ag_gemm::verify(&op.heap, &bufs, &reference)
             .unwrap_or_else(|e| panic!("{}: {e}", op.name));
     }
@@ -56,7 +56,7 @@ fn gemm_rs_all_variants() {
         let expected = gemm_rs::reference_outputs(&op.heap, &bufs);
         let topo = Topology::build(cluster);
         let mut exec = HybridExecutor::native_only();
-        coordinator::run_numeric(&mut op, &topo, &mut exec);
+        coordinator::run_numeric(&mut op, &topo, &mut exec).unwrap();
         gemm_rs::verify(&op.heap, &bufs, &expected)
             .unwrap_or_else(|e| panic!("{}: {e}", op.name));
     }
@@ -78,13 +78,13 @@ fn moe_both_directions_inter_node() {
         moe::fill_ag_moe(&mut op.heap, &bufs, 5);
         let exp = moe::reference_ag_moe(&op.heap, &bufs);
         let mut exec = HybridExecutor::native_only();
-        coordinator::run_numeric(&mut op, &topo, &mut exec);
+        coordinator::run_numeric(&mut op, &topo, &mut exec).unwrap();
         moe::verify_ag_moe(&op.heap, &bufs, &exp).unwrap();
 
         let (mut op2, bufs2) = moe::build_moe_rs(cluster, shape, moe::MoeVariant::Ours);
         moe::fill_moe_rs(&mut op2.heap, &bufs2, 6);
         let exp2 = moe::reference_moe_rs(&op2.heap, &bufs2);
-        coordinator::run_numeric(&mut op2, &topo, &mut exec);
+        coordinator::run_numeric(&mut op2, &topo, &mut exec).unwrap();
         moe::verify_moe_rs(&op2.heap, &bufs2, &exp2).unwrap();
     }
 }
@@ -116,7 +116,7 @@ fn ep_moe_pipeline_across_geometries_and_skews() {
         let expected = ep_moe::reference_ep_moe(&op.heap, &bufs, &routing);
         let topo = Topology::build(cluster);
         let mut exec = HybridExecutor::native_only();
-        coordinator::run_numeric(&mut op, &topo, &mut exec);
+        coordinator::run_numeric(&mut op, &topo, &mut exec).unwrap();
         ep_moe::verify_ep_moe(&op.heap, &bufs, &routing, &expected)
             .unwrap_or_else(|e| panic!("{}: {e}", op.name));
     }
@@ -140,7 +140,7 @@ fn flash_decode_three_platforms() {
         let exp = flash_decode::reference_output(&op.heap, &bufs);
         let topo = Topology::build(cluster);
         let mut exec = HybridExecutor::native_only();
-        coordinator::run_numeric(&mut op, &topo, &mut exec);
+        coordinator::run_numeric(&mut op, &topo, &mut exec).unwrap();
         flash_decode::verify(&op.heap, &bufs, &exp).unwrap();
     }
 }
@@ -153,7 +153,7 @@ fn traced_run_produces_coherent_timeline() {
     ag_gemm::fill_inputs(&mut op.heap, &bufs, 2);
     let topo = Topology::build(cluster);
     let mut exec = HybridExecutor::native_only();
-    let rep = coordinator::run_traced(&mut op, &topo, &mut exec);
+    let rep = coordinator::run_traced(&mut op, &topo, &mut exec).unwrap();
     assert!(!rep.op_spans.is_empty());
     for s in &rep.op_spans {
         assert!(s.t0 <= s.t1, "span goes backwards");
@@ -175,7 +175,7 @@ fn autotune_over_gemm_rs_partition() {
     let shape = GemmShape::new(2048, 12288 / 8, 4096);
     let result = autotune::tune_rebuild("gemm_rs reduce sms", &[15u32], |_| {
         let (mut op, _b) = gemm_rs::build(cluster, shape, gemm_rs::GemmRsVariant::OursIntra);
-        Ok(coordinator::run_timing(&mut op, &topo))
+        Ok(coordinator::run_timing(&mut op, &topo).unwrap())
     })
     .unwrap();
     assert!(result.best.latency > 0.0);
@@ -201,7 +201,7 @@ fn determinism_across_runs() {
         ag_gemm::fill_inputs(&mut op.heap, &bufs, 77);
         let topo = Topology::build(cluster);
         let mut exec = HybridExecutor::native_only();
-        let rep = coordinator::run_numeric(&mut op, &topo, &mut exec);
+        let rep = coordinator::run_numeric(&mut op, &topo, &mut exec).unwrap();
         (rep.makespan, rep.events, rep.flows)
     };
     assert_eq!(run(), run());

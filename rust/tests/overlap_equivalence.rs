@@ -30,7 +30,7 @@ fn ag_gemm_variants_bitwise_identical() {
         ag_gemm::fill_inputs(&mut op.heap, &bufs, 42);
         let topo = Topology::build(cluster);
         let mut exec = HybridExecutor::native_only();
-        coordinator::run_numeric(&mut op, &topo, &mut exec);
+        coordinator::run_numeric(&mut op, &topo, &mut exec).unwrap();
         op.heap
             .read(Slice::new(0, bufs.output, 0, shape.m * shape.n))
             .to_vec()
@@ -62,7 +62,7 @@ fn ag_gemm_random_problems_property() {
         let reference = ag_gemm::reference_output(&op.heap, &bufs);
         let topo = Topology::build(cluster);
         let mut exec = HybridExecutor::native_only();
-        coordinator::run_numeric(&mut op, &topo, &mut exec);
+        coordinator::run_numeric(&mut op, &topo, &mut exec).unwrap();
         ag_gemm::verify(&op.heap, &bufs, &reference).unwrap();
     });
 }
@@ -90,7 +90,7 @@ fn gemm_rs_random_problems_property() {
         let expected = gemm_rs::reference_outputs(&op.heap, &bufs);
         let topo = Topology::build(cluster);
         let mut exec = HybridExecutor::native_only();
-        coordinator::run_numeric(&mut op, &topo, &mut exec);
+        coordinator::run_numeric(&mut op, &topo, &mut exec).unwrap();
         gemm_rs::verify(&op.heap, &bufs, &expected).unwrap();
     });
 }
@@ -105,7 +105,7 @@ fn overlap_timing_bounds() {
     let shape = GemmShape::new(4096, 1536, 4096);
     let t = |v| {
         let (mut op, _b) = ag_gemm::build(cluster, shape, v);
-        coordinator::run_timing(&mut op, &topo)
+        coordinator::run_timing(&mut op, &topo).unwrap()
     };
     let ours = t(ag_gemm::AgGemmVariant::OursPush);
     let nccl = t(ag_gemm::AgGemmVariant::Nccl);
