@@ -34,6 +34,15 @@
 //!   onto the surviving plane while Static stalls through the retry
 //!   backoff ladder until the plane returns (adaptive must be strictly
 //!   lower — pinned by `tests/fault_injection.rs`).
+//! * `alltoall-4096rank-par` — 512x8 LL AllToAll on a 2-rail fabric,
+//!   swept over `--threads {1,2,4,8}` on the component-sharded engine
+//!   (`sim/par.rs`): the record carries the threads -> events/s curve
+//!   and the single-run wall clock, the tentpole's headline scaling
+//!   scenario (reports are bit-identical across the sweep — pinned by
+//!   `tests/parallel_equivalence.rs`).
+//! * `moe-ep-1024rank-par` — 128x8 token-routed EP MoE on a tapered
+//!   2-rail static fabric, same threads sweep: mixed compute/collective
+//!   shard load rather than pure AllToAll traffic.
 //! * `ag_gemm-build+run` — single-node AG+GEMM, program build + engine.
 //! * `ag_gemm-multinode` — 4x8 inter-node AG+GEMM (NIC contention path).
 //! * `ag_gemm-numerics(native)` — data movement through the heap.
@@ -99,6 +108,8 @@ fn report_fault(
         scenario: name.to_string(),
         events,
         median_wall_s: stat.median_s,
+        sim_wall_ns: 0,
+        threads: Vec::new(),
         fault,
     });
 }
@@ -351,6 +362,132 @@ fn main() {
             slowdown: flap_slowdown,
         }),
     );
+
+    // 4096-rank AllToAll on the component-sharded engine: the tentpole
+    // scaling scenario. chunk=1 keeps the symmetric heap ~200 MB at this
+    // world size; the program is built once and replayed against a fresh
+    // heap per thread count (allocation order is deterministic, so the
+    // rebuilt buffer ids match). Reports must be bit-identical across
+    // the sweep — asserted here and pinned at small scale by
+    // tests/parallel_equivalence.rs.
+    println!("\nalltoall-4096rank-par (threads sweep)");
+    let par_cluster = ClusterSpec::h800(512, 8).with_fabric(FabricSpec::rail_optimized(2, 2.0));
+    let par_ctx = ShmemCtx::new(par_cluster, DType::BF16);
+    let par_topo = Topology::build(par_cluster);
+    let mut par_pb = ProgBuild::new();
+    {
+        let mut heap = SymmetricHeap::new(par_ctx.n_pes(), 4 * par_ctx.n_pes());
+        let bufs = A2aBufs::alloc(&mut heap, &par_ctx, 1);
+        a2a_ll(&par_ctx, &bufs, &mut par_pb, &A2aCfg::ours());
+    }
+    let par_run = |threads: usize| -> SimReport {
+        let mut heap = SymmetricHeap::new(par_ctx.n_pes(), 4 * par_ctx.n_pes());
+        let _bufs = A2aBufs::alloc(&mut heap, &par_ctx, 1);
+        Sim::with_config(
+            &par_topo,
+            SimConfig {
+                numerics: false,
+                trace: false,
+            },
+        )
+        .with_threads(threads)
+        .run(&par_pb.prog, &mut heap, &mut NoopExecutor)
+        .unwrap()
+    };
+    let mut par_sweep = Vec::new();
+    let mut par_last: Option<SimReport> = None;
+    for t in [1usize, 2, 4, 8] {
+        let rep = par_run(t);
+        println!(
+            "  threads={t}  {} events  {:.1} ms wall  {:.2} M events/s",
+            rep.events,
+            rep.wall_ns as f64 / 1e6,
+            rep.events_per_s() / 1e6
+        );
+        if let Some(prev) = &par_last {
+            assert_eq!(
+                prev.makespan.to_bits(),
+                rep.makespan.to_bits(),
+                "sharded engine diverged from sequential at threads={t}"
+            );
+            assert_eq!(prev.events, rep.events);
+        }
+        par_sweep.push((t, rep.events_per_s()));
+        par_last = Some(rep);
+    }
+    let par_rep = par_last.unwrap();
+    records.push(EngineBenchRecord {
+        scenario: "alltoall-4096rank-par".to_string(),
+        events: par_rep.events,
+        median_wall_s: par_rep.wall_ns as f64 * 1e-9,
+        sim_wall_ns: par_rep.wall_ns,
+        threads: par_sweep,
+        fault: None,
+    });
+
+    // 1024-rank token-routed EP MoE, same threads sweep: shard work here
+    // mixes compute spans with the collective traffic, a harsher test of
+    // the lookahead window than pure AllToAll. Static router (the
+    // sharded engine's eligibility condition); build cost stays outside
+    // the engine's wall_ns stamp.
+    println!("\nmoe-ep-1024rank-par (threads sweep)");
+    let ep_par_run = |threads: usize| -> SimReport {
+        let cluster = ClusterSpec::h800(128, 8)
+            .with_fabric(FabricSpec::rail_optimized(2, 2.0).with_spine_taper(2.0));
+        let shape = MoeShape {
+            tokens_per_rank: 16,
+            in_hidden: 64,
+            out_hidden: 64,
+            experts: 2048,
+            topk: 2,
+            ..MoeShape::default()
+        }
+        .with_skew(1.2);
+        let routing = ep_moe::routing_for(cluster, &shape, 7);
+        let topo = Topology::build(cluster);
+        let (mut op, _bufs) =
+            ep_moe::build_ep_moe(cluster, shape, &routing, ep_moe::EpMoeVariant::TokenRouted);
+        Sim::with_config(
+            &topo,
+            SimConfig {
+                numerics: false,
+                trace: false,
+            },
+        )
+        .with_threads(threads)
+        .run(&op.prog, &mut op.heap, &mut NoopExecutor)
+        .unwrap()
+    };
+    let mut ep_par_sweep = Vec::new();
+    let mut ep_par_last: Option<SimReport> = None;
+    for t in [1usize, 2, 4, 8] {
+        let rep = ep_par_run(t);
+        println!(
+            "  threads={t}  {} events  {:.1} ms wall  {:.2} M events/s",
+            rep.events,
+            rep.wall_ns as f64 / 1e6,
+            rep.events_per_s() / 1e6
+        );
+        if let Some(prev) = &ep_par_last {
+            assert_eq!(
+                prev.makespan.to_bits(),
+                rep.makespan.to_bits(),
+                "sharded engine diverged from sequential at threads={t}"
+            );
+            assert_eq!(prev.events, rep.events);
+        }
+        ep_par_sweep.push((t, rep.events_per_s()));
+        ep_par_last = Some(rep);
+    }
+    let ep_par_rep = ep_par_last.unwrap();
+    records.push(EngineBenchRecord {
+        scenario: "moe-ep-1024rank-par".to_string(),
+        events: ep_par_rep.events,
+        median_wall_s: ep_par_rep.wall_ns as f64 * 1e-9,
+        sim_wall_ns: ep_par_rep.wall_ns,
+        threads: ep_par_sweep,
+        fault: None,
+    });
 
     // AG+GEMM with numerics off — program-build + engine cost
     let cluster = ClusterSpec::h800(1, 8);

@@ -64,6 +64,16 @@ impl Args {
         }
     }
 
+    /// Positive-integer option (e.g. `--threads N`): parses like
+    /// [`Args::usize_or`] but rejects zero.
+    pub fn positive_usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
+        let v = self.usize_or(name, default)?;
+        if v == 0 {
+            return Err(format!("--{name} must be >= 1"));
+        }
+        Ok(v)
+    }
+
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
         match self.get(name) {
             None => Ok(default),
@@ -123,6 +133,15 @@ mod tests {
         assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
         let b = parse(&["x", "--n", "abc"]);
         assert!(b.usize_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn positive_usize_rejects_zero() {
+        let a = parse(&["x", "--threads", "4"]);
+        assert_eq!(a.positive_usize_or("threads", 1).unwrap(), 4);
+        assert_eq!(a.positive_usize_or("missing", 1).unwrap(), 1);
+        let b = parse(&["x", "--threads", "0"]);
+        assert!(b.positive_usize_or("threads", 1).is_err());
     }
 
     #[test]

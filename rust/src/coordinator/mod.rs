@@ -81,6 +81,19 @@ pub fn run_timing_faults(
     topo: &Topology,
     faults: FaultPlan,
 ) -> Result<SimReport, CoordError> {
+    run_timing_threads(op, topo, faults, 1)
+}
+
+/// [`run_timing_faults`] on the sharded engine (`--threads N`). The
+/// report is bit-identical for every `threads` value — `1` runs the
+/// sequential event loop, `N > 1` the component-sharded one — so callers
+/// pick purely on host wall-clock (`SimReport::wall_ns`).
+pub fn run_timing_threads(
+    op: &mut BuiltOp,
+    topo: &Topology,
+    faults: FaultPlan,
+    threads: usize,
+) -> Result<SimReport, CoordError> {
     let sim = Sim::with_config(
         topo,
         SimConfig {
@@ -88,7 +101,8 @@ pub fn run_timing_faults(
             trace: false,
         },
     )
-    .with_faults(faults);
+    .with_faults(faults)
+    .with_threads(threads);
     sim.run(&op.prog, &mut op.heap, &mut NoopExecutor)
         .map_err(|e| CoordError::new(&op.name, e))
 }

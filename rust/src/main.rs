@@ -43,6 +43,11 @@ COMMON OPTIONS:
                   adaptive: emptiest plane per message by live occupancy)
   --m/--n/--k     GEMM dims          --trace    write chrome trace JSON
   --numeric       run real numerics through PJRT/native executors
+  --threads N     host threads for the sharded event loop (default 1;
+                  timing runs only — results are bit-identical for every
+                  N, so this is purely a wall-clock knob. Needs >= 2
+                  nodes and --router static to engage; otherwise the
+                  engine falls back to the sequential loop)
 
 FAULT INJECTION (timing runs; empty plan = bit-identical to fault-free):
   --faults SPEC   semicolon-separated plan, e.g.
@@ -178,6 +183,7 @@ fn run(args: &Args) -> Result<(), String> {
             let k = args.usize_or("k", 2048)?;
             let shape = GemmShape::new(m, n, k);
             let plan = fault_plan_from(args, &cluster)?;
+            let threads = args.positive_usize_or("threads", 1)?;
             let topo = Topology::build(cluster);
             let mut report = metrics::FigureReport::new("AG+GEMM");
             let variants: Vec<ag_gemm::AgGemmVariant> = if cluster.nodes > 1 {
@@ -211,8 +217,9 @@ fn run(args: &Args) -> Result<(), String> {
                     );
                     rep.makespan
                 } else {
-                    let rep = coordinator::run_timing_faults(&mut op, &topo, plan.clone())
-                        .map_err(|e| e.to_string())?;
+                    let rep =
+                        coordinator::run_timing_threads(&mut op, &topo, plan.clone(), threads)
+                            .map_err(|e| e.to_string())?;
                     if !plan.is_empty() {
                         println!("  {}", metrics::fault_ledger_line(&rep.ledger));
                     }
@@ -251,9 +258,10 @@ fn run(args: &Args) -> Result<(), String> {
                 ]
             };
             let plan = fault_plan_from(args, &cluster)?;
+            let threads = args.positive_usize_or("threads", 1)?;
             for v in variants {
                 let (mut op, _b) = gemm_rs::build(cluster, shape, v);
-                let rep = coordinator::run_timing_faults(&mut op, &topo, plan.clone())
+                let rep = coordinator::run_timing_threads(&mut op, &topo, plan.clone(), threads)
                     .map_err(|e| e.to_string())?;
                 println!("{:<24} {}", op.name, fmt_time(rep.makespan));
                 if !plan.is_empty() {
@@ -274,9 +282,10 @@ fn run(args: &Args) -> Result<(), String> {
             };
             let topo = Topology::build(cluster);
             let plan = fault_plan_from(args, &cluster)?;
+            let threads = args.positive_usize_or("threads", 1)?;
             for v in [moe::MoeVariant::Ours, moe::MoeVariant::Torch] {
                 let (mut op, _b) = moe::build_ag_moe(cluster, shape, v);
-                let rep = coordinator::run_timing_faults(&mut op, &topo, plan.clone())
+                let rep = coordinator::run_timing_threads(&mut op, &topo, plan.clone(), threads)
                     .map_err(|e| e.to_string())?;
                 println!("{:<24} {}", op.name, fmt_time(rep.makespan));
                 if !plan.is_empty() {
@@ -325,6 +334,7 @@ fn run(args: &Args) -> Result<(), String> {
                 shape.skew,
             );
             let plan = fault_plan_from(args, &cluster)?;
+            let threads = args.positive_usize_or("threads", 1)?;
             let topo = Topology::build(cluster);
             let mut report = metrics::FigureReport::new("EP MoE (token-routed)");
             let mut row = metrics::SpeedupRow {
@@ -355,8 +365,9 @@ fn run(args: &Args) -> Result<(), String> {
                     println!("numerics OK (exact token conservation verified)");
                     rep.makespan
                 } else {
-                    let rep = coordinator::run_timing_faults(&mut op, &topo, plan.clone())
-                        .map_err(|e| e.to_string())?;
+                    let rep =
+                        coordinator::run_timing_threads(&mut op, &topo, plan.clone(), threads)
+                            .map_err(|e| e.to_string())?;
                     if !plan.is_empty() {
                         println!("  {}", metrics::fault_ledger_line(&rep.ledger));
                     }
@@ -381,6 +392,7 @@ fn run(args: &Args) -> Result<(), String> {
             let ws = cluster.world_size();
             let chunk = args.usize_or("chunk", (128 * 7168 / ws).max(64))?;
             let plan = fault_plan_from(args, &cluster)?;
+            let threads = args.positive_usize_or("threads", 1)?;
             let topo = Topology::build(cluster);
             let run = |deepep: Option<A2aCfg>, chunk_elems: usize| -> Result<f64, String> {
                 let ctx = triton_dist_sim::shmem::ShmemCtx::new(cluster, DType::BF16);
@@ -391,7 +403,7 @@ fn run(args: &Args) -> Result<(), String> {
                     Some(cfg) => a2a_deepep_cfg(&ctx, &bufs, &mut pb, &cfg),
                     None => a2a_ll(&ctx, &bufs, &mut pb, &A2aCfg::ours()),
                 }
-                let rep = coordinator::run_timing_faults(
+                let rep = coordinator::run_timing_threads(
                     &mut coordinator::BuiltOp {
                         ctx,
                         heap,
@@ -400,6 +412,7 @@ fn run(args: &Args) -> Result<(), String> {
                     },
                     &topo,
                     plan.clone(),
+                    threads,
                 )
                 .map_err(|e| e.to_string())?;
                 if !plan.is_empty() {
@@ -433,9 +446,10 @@ fn run(args: &Args) -> Result<(), String> {
                 numeric: false,
             };
             let plan = fault_plan_from(args, &cluster)?;
+            let threads = args.positive_usize_or("threads", 1)?;
             let topo = Topology::build(cluster);
             let (mut op, _b) = flash_decode::build(cluster, cfg);
-            let rep = coordinator::run_timing_faults(&mut op, &topo, plan.clone())
+            let rep = coordinator::run_timing_threads(&mut op, &topo, plan.clone(), threads)
                 .map_err(|e| e.to_string())?;
             if !plan.is_empty() {
                 println!("{}", metrics::fault_ledger_line(&rep.ledger));

@@ -128,6 +128,14 @@ pub struct EngineBenchRecord {
     pub scenario: String,
     pub events: u64,
     pub median_wall_s: f64,
+    /// Engine-internal wall clock of the representative run
+    /// (`SimReport::wall_ns`); 0 when the harness-level median is the
+    /// only timing captured.
+    pub sim_wall_ns: u64,
+    /// `threads -> events/s` sweep for sharded-engine scenarios (empty
+    /// for single-thread scenarios). The virtual-time report is
+    /// bit-identical across the sweep — only the wall clock moves.
+    pub threads: Vec<(usize, f64)>,
     /// `Some` for degraded-fabric scenarios.
     pub fault: Option<FaultBenchInfo>,
 }
@@ -151,6 +159,17 @@ pub fn engine_bench_json(records: &[EngineBenchRecord]) -> String {
         obj.insert("events".into(), Json::Num(r.events as f64));
         obj.insert("median_wall_s".into(), Json::Num(r.median_wall_s));
         obj.insert("events_per_s".into(), Json::Num(r.events_per_s()));
+        if r.sim_wall_ns > 0 {
+            obj.insert("wall_ns".into(), Json::Num(r.sim_wall_ns as f64));
+        }
+        if !r.threads.is_empty() {
+            let mut to = std::collections::BTreeMap::new();
+            for &(n, eps) in &r.threads {
+                // zero-pad so string-keyed maps sort numerically
+                to.insert(format!("{n:02}"), Json::Num(eps));
+            }
+            obj.insert("threads_events_per_s".into(), Json::Obj(to));
+        }
         if let Some(fi) = &r.fault {
             let mut fo = std::collections::BTreeMap::new();
             fo.insert("faults_applied".into(), Json::Num(fi.ledger.faults_applied as f64));
@@ -345,6 +364,8 @@ mod tests {
             scenario: "alltoall-64rank".into(),
             events: 1000,
             median_wall_s: 0.5,
+            sim_wall_ns: 0,
+            threads: Vec::new(),
             fault: None,
         }];
         let s = engine_bench_json(&recs);
@@ -352,6 +373,28 @@ mod tests {
         let sc = doc.get("scenarios").get("alltoall-64rank");
         assert_eq!(sc.get("events").as_usize(), Some(1000));
         assert_eq!(sc.get("events_per_s").as_f64(), Some(2000.0));
+        // wall_ns / threads sweep omitted when not captured
+        assert!(!s.contains("wall_ns"));
+        assert!(!s.contains("threads_events_per_s"));
+    }
+
+    #[test]
+    fn engine_bench_json_carries_threads_sweep() {
+        let recs = vec![EngineBenchRecord {
+            scenario: "alltoall-4096rank-par".into(),
+            events: 4000,
+            median_wall_s: 2.0,
+            sim_wall_ns: 2_000_000_000,
+            threads: vec![(1, 2000.0), (8, 12000.0)],
+            fault: None,
+        }];
+        let s = engine_bench_json(&recs);
+        let doc = crate::util::json::parse(&s).unwrap();
+        let sc = doc.get("scenarios").get("alltoall-4096rank-par");
+        assert_eq!(sc.get("wall_ns").as_f64(), Some(2e9));
+        let tw = sc.get("threads_events_per_s");
+        assert_eq!(tw.get("01").as_f64(), Some(2000.0));
+        assert_eq!(tw.get("08").as_f64(), Some(12000.0));
     }
 
     #[test]
@@ -360,6 +403,8 @@ mod tests {
             scenario: "alltoall-degraded-rail".into(),
             events: 500,
             median_wall_s: 0.25,
+            sim_wall_ns: 0,
+            threads: Vec::new(),
             fault: Some(FaultBenchInfo {
                 ledger: FaultLedger {
                     faults_applied: 2,

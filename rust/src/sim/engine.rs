@@ -36,8 +36,19 @@
 //! gated on the plan being non-empty, so an empty plan is bit-identical
 //! to the fault-free engine.
 
+//!
+//! Parallelism: `Sim::with_threads(n)` with `n > 1` dispatches eligible
+//! timing runs to the component-sharded engine in [`super::par`] — one
+//! event queue per node partition advancing concurrently under a
+//! conservative lookahead barrier, with the shared inter-node fabric
+//! solved by a sequential coordinator. The sharded engine reuses this
+//! module's `Runner` verbatim per shard (role-gated at the three points
+//! where work crosses a partition), so `--threads 1` *is* this engine
+//! and `--threads N` is bit-identical to it by construction. See
+//! `docs/ARCHITECTURE.md` §Parallel engine.
+
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 
 use crate::config::{FaultPlan, HardwareModel, RailPolicy, TrafficClass};
 use crate::mem::{Slice, SymmetricHeap};
@@ -135,6 +146,22 @@ pub struct SimReport {
     pub flows: u64,
     /// Fault/recovery activity (all-zero when no faults were injected).
     pub ledger: FaultLedger,
+    /// Host wall-clock spent inside the engine, nanoseconds. Measured,
+    /// not simulated — the one field that is *not* bit-reproducible
+    /// across runs (equivalence suites must ignore it).
+    pub wall_ns: u64,
+}
+
+impl SimReport {
+    /// Events processed per host wall-clock second (the `BENCH_engine`
+    /// throughput unit). 0.0 when the run was too fast to time.
+    pub fn events_per_s(&self) -> f64 {
+        if self.wall_ns == 0 {
+            0.0
+        } else {
+            self.events as f64 / (self.wall_ns as f64 * 1e-9)
+        }
+    }
 }
 
 /// Simulation failure.
@@ -232,16 +259,21 @@ enum TState {
     Done,
 }
 
-type LLKey = (usize, usize, usize); // (rank, buf, off)
+pub(crate) type LLKey = (usize, usize, usize); // (rank, buf, off)
 
-struct TaskRt {
+pub(crate) struct TaskRt {
     pc: usize,
     state: TState,
     outstanding_nbi: u32,
-    t_start: f64,
-    t_end: f64,
+    pub(crate) t_start: f64,
+    pub(crate) t_end: f64,
     op_t0: f64,
     op_gen: u64,
+    /// Flow-launch counter: `(task, launches)` is the canonical flow key
+    /// that orders same-timestamp flow batches independently of slab-id
+    /// recycling (and therefore identically in the solo and sharded
+    /// engines).
+    launches: u32,
 }
 
 /// Everything needed to re-route and relaunch a transfer whose flow was
@@ -257,13 +289,16 @@ struct RetryRoute {
     lat_add: f64,
 }
 
-struct FlowCtx {
+pub(crate) struct FlowCtx {
     copies: Vec<(Slice, Slice)>,
-    signal: Option<(SigRef, SigOp, u64)>,
-    ll_dsts: Vec<LLKey>,
-    resume: Option<usize>,
-    nbi_owner: Option<usize>,
+    pub(crate) signal: Option<(SigRef, SigOp, u64)>,
+    pub(crate) ll_dsts: Vec<LLKey>,
+    pub(crate) resume: Option<usize>,
+    pub(crate) nbi_owner: Option<usize>,
     span: Option<(usize, &'static str, f64)>,
+    /// Canonical batch-ordering key: (task index, per-task launch seq).
+    /// Survives retries — a relaunched transfer keeps its original key.
+    key: (u32, u32),
     /// Wire bytes committed to `LinkOccupancy` at post time (released
     /// verbatim at completion). Set by `launch_flow`.
     wire_bytes: f64,
@@ -271,6 +306,23 @@ struct FlowCtx {
     /// (`None` = not retryable, e.g. multimem; the flow then stalls
     /// until the fault clears).
     rt: Option<RetryRoute>,
+}
+
+impl FlowCtx {
+    /// Tear a fabric-completed flow's context into its shard-side
+    /// effects: `(signal, ll_dsts, nbi_owner, resume)`. Used by the
+    /// sharded coordinator to replay `finish_flow`'s delivery sequence
+    /// on the shard that owns each piece of state.
+    pub(crate) fn into_effects(
+        self,
+    ) -> (
+        Option<(SigRef, SigOp, u64)>,
+        Vec<LLKey>,
+        Option<usize>,
+        Option<usize>,
+    ) {
+        (self.signal, self.ll_dsts, self.nbi_owner, self.resume)
+    }
 }
 
 struct PendingFlow {
@@ -290,10 +342,10 @@ struct RetryEntry {
     orig_links: Vec<LinkId>,
 }
 
-struct BarrierState {
-    arrived: Vec<usize>,
-    needed: usize,
-    released: bool,
+pub(crate) struct BarrierState {
+    pub(crate) arrived: Vec<usize>,
+    pub(crate) needed: usize,
+    pub(crate) released: bool,
 }
 
 fn scope_key(s: Scope) -> u64 {
@@ -313,6 +365,9 @@ pub struct Sim<'a> {
     pub cfg: SimConfig,
     /// Deterministic adversarial schedule (default: empty = fault-free).
     faults: FaultPlan,
+    /// Worker-thread budget for the sharded engine (1 = the sequential
+    /// reference engine, always).
+    threads: usize,
 }
 
 impl<'a> Sim<'a> {
@@ -321,6 +376,7 @@ impl<'a> Sim<'a> {
             topo,
             cfg: SimConfig::default(),
             faults: FaultPlan::default(),
+            threads: 1,
         }
     }
 
@@ -329,6 +385,7 @@ impl<'a> Sim<'a> {
             topo,
             cfg,
             faults: FaultPlan::default(),
+            threads: 1,
         }
     }
 
@@ -337,6 +394,23 @@ impl<'a> Sim<'a> {
     pub fn with_faults(mut self, faults: FaultPlan) -> Self {
         self.faults = faults;
         self
+    }
+
+    /// Set the worker-thread budget (clamped to ≥ 1). `1` always runs
+    /// the sequential reference engine; `> 1` runs the component-sharded
+    /// engine *when the run is eligible* (timing-only, no trace,
+    /// `RailPolicy::Static`, no jitter, a multi-node cluster whose
+    /// program actually decomposes into >1 partition) and falls back to
+    /// the sequential engine otherwise. Either way the `SimReport` is
+    /// bit-identical — threads change wall-clock, never results.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// The worker-thread budget.
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     /// The attached fault plan.
@@ -351,24 +425,84 @@ impl<'a> Sim<'a> {
         heap: &mut SymmetricHeap,
         exec: &mut dyn ComputeExecutor,
     ) -> Result<SimReport, SimError> {
-        Runner::new(self, prog, heap, exec).run()
+        let wall0 = std::time::Instant::now();
+        let mut rep = match crate::sim::par::plan(self, prog) {
+            Some(pm) => crate::sim::par::run_sharded(self, prog, heap, pm)?,
+            None => Runner::new(self, prog, heap, exec).run()?,
+        };
+        rep.wall_ns = wall0.elapsed().as_nanos() as u64;
+        Ok(rep)
     }
 }
 
-struct Runner<'s, 'a, 'h> {
+/// Which flavor of event loop this `Runner` is.
+///
+/// The sharded engine (`sim/par.rs`) reuses `Runner` wholesale: each
+/// node partition gets a `Shard` runner (full-width state, but it only
+/// ever starts its own tasks and solves its own intra-node links) and
+/// the shared inter-node fabric gets a `Fabric` runner (no tasks; owns
+/// every fabric flow plus all fault machinery). The role gates exactly
+/// three behaviors: where inter-node flow posts go (shard → outbox),
+/// where world-barrier arrivals go (shard → outbox), and where flow
+/// completion effects land (fabric → outbox, dispatched to the owning
+/// shard by the coordinator). Everything else — op interpretation,
+/// batching, retry ladders, watchdogs — is byte-for-byte the same code
+/// the sequential engine runs.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Role {
+    Solo,
+    Shard,
+    Fabric,
+}
+
+/// Cross-partition traffic, drained at the lookahead barrier and merged
+/// deterministically by the coordinator (sorted by `(t, shard, FIFO)`).
+pub(crate) enum OutMsg {
+    /// A shard posted an inter-node transfer: the route is already
+    /// resolved (static routing is state-free), the fabric launches it
+    /// at `t` and its `FlowArm` lands at `t + route.latency ≥ t + Δ`.
+    InterFlow {
+        t: f64,
+        route: Route,
+        bytes: f64,
+        ctx: FlowCtx,
+    },
+    /// A task reached a world-scoped barrier at `t`.
+    BarrierArrive {
+        t: f64,
+        key: (u64, usize),
+        task: usize,
+        expect: usize,
+    },
+    /// A fabric flow completed at `t`; its task-side effects (signal,
+    /// LL flags, nbi/blocking wakeups) belong to shard-owned state.
+    Effects { t: f64, ctx: FlowCtx },
+    /// World barrier released at `t`: wake `task` on its owning shard.
+    BarrierWake { t: f64, task: usize },
+}
+
+pub(crate) struct Runner<'s, 'a, 'h, E: ?Sized = dyn ComputeExecutor + 'h> {
     sim: &'s Sim<'a>,
     prog: &'s Program,
     heap: &'h mut SymmetricHeap,
-    exec: &'h mut dyn ComputeExecutor,
+    exec: &'h mut E,
     hw: HardwareModel,
+
+    /// Solo (the sequential engine), or one participant of the sharded
+    /// engine.
+    role: Role,
+    /// `Shard` only: per-rank ownership mask (empty otherwise).
+    owned: Vec<bool>,
+    /// Cross-partition messages for the coordinator (sharded roles only).
+    pub(crate) outbox: Vec<OutMsg>,
 
     clock: f64,
     seq: u64,
     events: BinaryHeap<QEntry>,
-    n_events: u64,
-    n_flows: u64,
+    pub(crate) n_events: u64,
+    pub(crate) n_flows: u64,
 
-    tasks: Vec<TaskRt>,
+    pub(crate) tasks: Vec<TaskRt>,
     flows: FlowNet,
     /// Rail resolution for `TrafficClass::Auto` (policy from the fabric).
     router: Router<'a>,
@@ -390,9 +524,12 @@ struct Runner<'s, 'a, 'h> {
     /// Signal waiters, flat-indexed by `rank * sig_pad + idx`.
     sig_waiters: Vec<Vec<usize>>,
     sig_pad: usize,
-    ll_arrived: HashMap<LLKey, u32>,
-    ll_waiters: HashMap<LLKey, Vec<usize>>,
-    barriers: HashMap<(u64, usize), BarrierState>,
+    // Ordered maps: none of these are iterated on the hot path today,
+    // but deterministic iteration order is a standing invariant of the
+    // sharded engine (no hasher state anywhere results can observe).
+    ll_arrived: BTreeMap<LLKey, u32>,
+    ll_waiters: BTreeMap<LLKey, Vec<usize>>,
+    pub(crate) barriers: BTreeMap<(u64, usize), BarrierState>,
 
     sm_used: Vec<u32>,
     sm_queue: Vec<VecDeque<usize>>,
@@ -418,15 +555,46 @@ struct Runner<'s, 'a, 'h> {
     retries: Vec<Option<RetryEntry>>,
     retry_free: Vec<usize>,
 
-    report: SimReport,
+    pub(crate) report: SimReport,
 }
 
-impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
-    fn new(
+impl<'s, 'a, 'h, E: ComputeExecutor + ?Sized> Runner<'s, 'a, 'h, E> {
+    fn new(sim: &'s Sim<'a>, prog: &'s Program, heap: &'h mut SymmetricHeap, exec: &'h mut E) -> Self {
+        Self::with_role(sim, prog, heap, exec, Role::Solo, Vec::new())
+    }
+
+    /// One node partition of the sharded engine: starts only tasks whose
+    /// rank is owned, never schedules fault toggles (the fabric owns
+    /// them), and routes cross-partition work through its outbox.
+    pub(crate) fn shard(
         sim: &'s Sim<'a>,
         prog: &'s Program,
         heap: &'h mut SymmetricHeap,
-        exec: &'h mut dyn ComputeExecutor,
+        exec: &'h mut E,
+        owned: Vec<bool>,
+    ) -> Self {
+        Self::with_role(sim, prog, heap, exec, Role::Shard, owned)
+    }
+
+    /// The shared-fabric runner of the sharded engine: no tasks, all
+    /// fault machinery, and flow-completion effects emitted as outbox
+    /// messages for the coordinator to dispatch.
+    pub(crate) fn fabric(
+        sim: &'s Sim<'a>,
+        prog: &'s Program,
+        heap: &'h mut SymmetricHeap,
+        exec: &'h mut E,
+    ) -> Self {
+        Self::with_role(sim, prog, heap, exec, Role::Fabric, Vec::new())
+    }
+
+    fn with_role(
+        sim: &'s Sim<'a>,
+        prog: &'s Program,
+        heap: &'h mut SymmetricHeap,
+        exec: &'h mut E,
+        role: Role,
+        owned: Vec<bool>,
     ) -> Self {
         let ws = sim.topo.cluster.world_size();
         let link_bw: Vec<f64> = (0..sim.topo.link_count())
@@ -454,6 +622,9 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
             heap,
             exec,
             hw: sim.topo.cluster.hw,
+            role,
+            owned,
+            outbox: Vec::new(),
             clock: 0.0,
             seq: 0,
             events: BinaryHeap::new(),
@@ -470,6 +641,7 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                     t_end: 0.0,
                     op_t0: 0.0,
                     op_gen: 0,
+                    launches: 0,
                 })
                 .collect(),
             flows: FlowNet::new(link_bw),
@@ -483,9 +655,9 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
             batch_dones: Vec::new(),
             sig_waiters: vec![Vec::new(); sig_world * sig_pad],
             sig_pad,
-            ll_arrived: HashMap::new(),
-            ll_waiters: HashMap::new(),
-            barriers: HashMap::new(),
+            ll_arrived: BTreeMap::new(),
+            ll_waiters: BTreeMap::new(),
+            barriers: BTreeMap::new(),
             sm_used: vec![0; ws],
             sm_queue: (0..ws).map(|_| VecDeque::new()).collect(),
             faults_on,
@@ -527,9 +699,29 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
         }
     }
 
-    fn run(mut self) -> Result<SimReport, SimError> {
-        // launch every task
+    /// Does this runner start/advance task `i`? Solo owns everything,
+    /// a shard owns the tasks of its ranks, the fabric owns none.
+    fn owns_task(&self, i: usize) -> bool {
+        match self.role {
+            Role::Solo => true,
+            Role::Shard => self.owned[self.prog.tasks[i].rank],
+            Role::Fabric => false,
+        }
+    }
+
+    /// Schedule the initial event population: `Start` for every owned
+    /// task, plus the fault plan's toggles (Solo and Fabric only — a
+    /// shard's fabric health never changes; faults live on fabric links).
+    pub(crate) fn init(&mut self) -> Result<(), SimError> {
         for (i, t) in self.prog.tasks.iter().enumerate() {
+            let mine = match self.role {
+                Role::Solo => true,
+                Role::Shard => self.owned[t.rank],
+                Role::Fabric => false,
+            };
+            if !mine {
+                continue;
+            }
             if t.sms > self.hw.sms {
                 return Err(SimError::SmOversubscribed {
                     task: t.name.clone(),
@@ -543,7 +735,7 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
 
         // schedule the fault plan as first-class events (none on an
         // empty plan: the event stream is untouched)
-        if self.faults_on {
+        if self.faults_on && self.role != Role::Shard {
             for i in 0..self.fault_links.len() {
                 if self.fault_links[i].is_empty() {
                     continue; // target absent on this topology: inert
@@ -555,43 +747,108 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                 }
             }
         }
+        Ok(())
+    }
 
-        while let Some(QEntry { t, ev, .. }) = self.events.pop() {
-            self.clock = t;
-            self.n_events += 1;
-            match ev {
-                Ev::Start { task } => self.on_start(task)?,
-                Ev::FlowArm { pending } => {
-                    self.batch_arms.push(pending);
-                    self.drain_flow_events_at(t);
-                    self.on_flow_batch()?;
-                }
-                Ev::FlowDone { flow, gen } => {
-                    self.batch_dones.push((flow, gen));
-                    self.drain_flow_events_at(t);
-                    self.on_flow_batch()?;
-                }
-                Ev::OpDone { task, gen } => self.on_op_done(task, gen)?,
-                Ev::BarrierRelease { key } => self.on_barrier_release(key)?,
-                Ev::FaultToggle { fault, begin } => self.on_fault_toggle(fault, begin)?,
-                Ev::Watchdog { task, gen } => self.on_watchdog(task, gen)?,
-                Ev::Retry { entry } => self.on_retry(entry)?,
+    fn dispatch(&mut self, t: f64, ev: Ev) -> Result<(), SimError> {
+        self.clock = t;
+        self.n_events += 1;
+        match ev {
+            Ev::Start { task } => self.on_start(task)?,
+            Ev::FlowArm { pending } => {
+                self.batch_arms.push(pending);
+                self.drain_flow_events_at(t);
+                self.on_flow_batch()?;
             }
+            Ev::FlowDone { flow, gen } => {
+                self.batch_dones.push((flow, gen));
+                self.drain_flow_events_at(t);
+                self.on_flow_batch()?;
+            }
+            Ev::OpDone { task, gen } => self.on_op_done(task, gen)?,
+            Ev::BarrierRelease { key } => self.on_barrier_release(key)?,
+            Ev::FaultToggle { fault, begin } => self.on_fault_toggle(fault, begin)?,
+            Ev::Watchdog { task, gen } => self.on_watchdog(task, gen)?,
+            Ev::Retry { entry } => self.on_retry(entry)?,
         }
+        Ok(())
+    }
 
-        // completion / deadlock check
-        let stuck: Vec<String> = self
-            .tasks
+    /// Timestamp of the next queued event (`INFINITY` when drained).
+    pub(crate) fn next_time(&self) -> f64 {
+        self.events.peek().map_or(f64::INFINITY, |e| e.t)
+    }
+
+    /// Process every queued event with `t < horizon` (the conservative
+    /// lookahead window: nothing outside this runner can schedule work
+    /// below the horizon, so the window is safe to run unsynchronized).
+    pub(crate) fn run_window(&mut self, horizon: f64) -> Result<(), SimError> {
+        while self.events.peek().is_some_and(|e| e.t < horizon) {
+            let QEntry { t, ev, .. } = self.events.pop().expect("peeked entry vanished");
+            self.dispatch(t, ev)?;
+        }
+        Ok(())
+    }
+
+    /// Process exactly one event (plus its same-timestamp flow batch).
+    /// Returns false when the queue is empty.
+    pub(crate) fn step_one(&mut self) -> Result<bool, SimError> {
+        match self.events.pop() {
+            Some(QEntry { t, ev, .. }) => {
+                self.dispatch(t, ev)?;
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
+    /// Advance the clock to a coordinator-dispatched effect time (never
+    /// backwards; the lookahead barrier guarantees `t ≥` every event
+    /// this runner already processed).
+    pub(crate) fn sync_clock(&mut self, t: f64) {
+        debug_assert!(
+            t >= self.clock - 1e-12,
+            "cross-partition effect in the past: {t} < {}",
+            self.clock
+        );
+        self.clock = self.clock.max(t);
+    }
+
+    /// Drain the cross-partition outbox (coordinator barrier).
+    pub(crate) fn take_outbox(&mut self) -> Vec<OutMsg> {
+        std::mem::take(&mut self.outbox)
+    }
+
+    /// Coordinator hook: schedule a world-barrier release on the fabric
+    /// queue (the matching `BarrierState` must already be in `barriers`).
+    pub(crate) fn push_barrier_release(&mut self, t: f64, key: (u64, usize)) {
+        self.push(t, Ev::BarrierRelease { key });
+    }
+
+    /// Diagnostic lines for every owned task that is not `Done`.
+    pub(crate) fn stuck_tasks(&self) -> Vec<String> {
+        self.tasks
             .iter()
             .enumerate()
-            .filter(|(_, t)| t.state != TState::Done)
+            .filter(|(i, t)| self.owns_task(*i) && t.state != TState::Done)
             .map(|(i, t)| {
                 format!(
                     "task '{}' (rank {}) pc={} state={:?}",
                     self.prog.tasks[i].name, self.prog.tasks[i].rank, t.pc, t.state
                 )
             })
-            .collect();
+            .collect()
+    }
+
+    fn run(mut self) -> Result<SimReport, SimError> {
+        self.init()?;
+
+        while let Some(QEntry { t, ev, .. }) = self.events.pop() {
+            self.dispatch(t, ev)?;
+        }
+
+        // completion / deadlock check
+        let stuck = self.stuck_tasks();
         if !stuck.is_empty() {
             return Err(SimError::Deadlock(stuck.join("; ")));
         }
@@ -653,8 +910,18 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
     /// component-scoped `FlowNet::update`, then the completion
     /// side-effects in event order.
     fn on_flow_batch(&mut self) -> Result<(), SimError> {
-        let arms = std::mem::take(&mut self.batch_arms);
+        let mut arms = std::mem::take(&mut self.batch_arms);
         let dones = std::mem::take(&mut self.batch_dones);
+
+        // Canonical batch order: (task, per-task launch seq). Slab ids
+        // depend on free-list recycling history, which differs between
+        // the solo engine (one slab) and the sharded engine (per-shard +
+        // fabric slabs); the launch key does not. Sorting both arms and
+        // completions by it makes every same-timestamp batch — and thus
+        // every signal/LL/SM wake order downstream — identical across
+        // engine layouts. Rates are unaffected (the water-fill is
+        // order-insensitive); only tie-order observability is pinned.
+        arms.sort_by_key(|&p| self.pending[p].as_ref().expect("pending flow armed twice").ctx.key);
 
         // stale-filter completions against current generations
         let mut remove_ids: Vec<FlowId> = Vec::with_capacity(dones.len());
@@ -668,6 +935,7 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                 remove_ids.push(flow);
             }
         }
+        remove_ids.sort_by_key(|id| self.flow_ctx[id.0].as_ref().expect("missing flow ctx").key);
 
         // collect armed flows (recycling their pending slots)
         let mut adds = Vec::with_capacity(arms.len());
@@ -746,8 +1014,17 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
     }
 
     /// Completion side-effects of one flow: data movement, signal,
-    /// LL-flag arrivals, trace span, nbi/blocking wakeups.
+    /// LL-flag arrivals, trace span, nbi/blocking wakeups. The fabric
+    /// runner's effects belong to shard-owned task state, so it hands
+    /// the context to the coordinator instead; the coordinator replays
+    /// the exact same helper calls, in the same order, on the owning
+    /// shard(s).
     fn finish_flow(&mut self, ctx: FlowCtx) -> Result<(), SimError> {
+        if self.role == Role::Fabric {
+            let t = self.clock;
+            self.outbox.push(OutMsg::Effects { t, ctx });
+            return Ok(());
+        }
         if self.sim.cfg.numerics {
             for (src, dst) in &ctx.copies {
                 self.heap.copy(*src, *dst);
@@ -757,32 +1034,55 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
             self.apply_signal(sig, op, val)?;
         }
         for key in ctx.ll_dsts {
-            *self.ll_arrived.entry(key).or_insert(0) += 1;
-            if let Some(waiters) = self.ll_waiters.remove(&key) {
-                for w in waiters {
-                    self.tasks[w].state = TState::Running;
-                    self.bump_pc_and_resume(w)?;
-                }
-            }
+            self.deliver_ll(key)?;
         }
         if let Some((task, label, t0)) = ctx.span {
             self.span(task, label, t0, self.clock);
         }
         if let Some(owner) = ctx.nbi_owner {
-            self.tasks[owner].outstanding_nbi -= 1;
-            if self.tasks[owner].state == TState::WaitQuiet
-                && self.tasks[owner].outstanding_nbi == 0
-            {
-                self.tasks[owner].state = TState::Running;
-                self.bump_pc_and_resume(owner)?;
-            }
+            self.deliver_nbi(owner)?;
         }
         if let Some(t) = ctx.resume {
-            debug_assert_eq!(self.tasks[t].state, TState::BlockedFlow);
-            self.tasks[t].state = TState::Running;
-            self.bump_pc_and_resume(t)?;
+            self.deliver_resume(t)?;
         }
         Ok(())
+    }
+
+    /// An LL payload's in-band flag landed: bump the arrival count and
+    /// wake every task parked on that (rank, buf, off) key.
+    pub(crate) fn deliver_ll(&mut self, key: LLKey) -> Result<(), SimError> {
+        *self.ll_arrived.entry(key).or_insert(0) += 1;
+        if let Some(waiters) = self.ll_waiters.remove(&key) {
+            for w in waiters {
+                self.tasks[w].state = TState::Running;
+                self.bump_pc_and_resume(w)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// A non-blocking transfer of `owner` completed; wake it if it was
+    /// draining its nbi window in `Quiet`.
+    pub(crate) fn deliver_nbi(&mut self, owner: usize) -> Result<(), SimError> {
+        self.tasks[owner].outstanding_nbi -= 1;
+        if self.tasks[owner].state == TState::WaitQuiet && self.tasks[owner].outstanding_nbi == 0 {
+            self.tasks[owner].state = TState::Running;
+            self.bump_pc_and_resume(owner)?;
+        }
+        Ok(())
+    }
+
+    /// A blocking transfer completed: resume its issuing task.
+    pub(crate) fn deliver_resume(&mut self, t: usize) -> Result<(), SimError> {
+        debug_assert_eq!(self.tasks[t].state, TState::BlockedFlow);
+        self.tasks[t].state = TState::Running;
+        self.bump_pc_and_resume(t)
+    }
+
+    /// World-barrier release reached this shard: wake one arrived task.
+    pub(crate) fn deliver_barrier_wake(&mut self, task: usize) -> Result<(), SimError> {
+        self.tasks[task].state = TState::Running;
+        self.bump_pc_and_resume(task)
     }
 
     fn on_op_done(&mut self, task: usize, gen: u64) -> Result<(), SimError> {
@@ -811,8 +1111,16 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
         st.released = true;
         let arrived = std::mem::take(&mut st.arrived);
         for t in arrived {
-            self.tasks[t].state = TState::Running;
-            self.bump_pc_and_resume(t)?;
+            if self.role == Role::Fabric {
+                // world barrier on the sharded engine: the arrived tasks
+                // live on shards — the coordinator wakes each in the
+                // same (arrival) order the solo engine would.
+                let now = self.clock;
+                self.outbox.push(OutMsg::BarrierWake { t: now, task: t });
+            } else {
+                self.tasks[t].state = TState::Running;
+                self.bump_pc_and_resume(t)?;
+            }
         }
         Ok(())
     }
@@ -868,6 +1176,9 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                 }
             }
         }
+        // canonical victim order (see on_flow_batch): retry scheduling
+        // and the ledger's f64 byte sums are insensitive to slab layout
+        victims.sort_by_key(|f| self.flow_ctx[f.0].as_ref().expect("victim ctx missing").key);
         let mut parked: Vec<RetryEntry> = Vec::with_capacity(victims.len());
         for &f in &victims {
             let links = self.flows.links_of(f).to_vec();
@@ -1041,6 +1352,7 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                         nbi_owner: if blocking { None } else { Some(task) },
                         span: Some((task, label, self.clock)),
                         wire_bytes: 0.0,
+                        key: self.next_flow_key(task),
                         rt: Some(RetryRoute {
                             src: src.rank,
                             dst: dst.rank,
@@ -1077,6 +1389,7 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                         nbi_owner: if blocking { None } else { Some(task) },
                         span: Some((task, label, self.clock)),
                         wire_bytes: 0.0,
+                        key: self.next_flow_key(task),
                         rt: Some(RetryRoute {
                             src: src.rank,
                             dst: dst.rank,
@@ -1118,6 +1431,7 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                         nbi_owner: None,
                         span: Some((task, "multimem_st", self.clock)),
                         wire_bytes: 0.0,
+                        key: self.next_flow_key(task),
                         // multimem rides the switch broadcast tree: not
                         // re-routable, stalls through faults instead
                         rt: None,
@@ -1138,6 +1452,7 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                         nbi_owner: Some(task),
                         span: Some((task, "ll_put", self.clock)),
                         wire_bytes: 0.0,
+                        key: self.next_flow_key(task),
                         rt: Some(RetryRoute {
                             src: src.rank,
                             dst: dst.rank,
@@ -1187,6 +1502,23 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
                 }
                 Op::Barrier { scope, id, expect } => {
                     let key = (scope_key(scope), id);
+                    if self.role == Role::Shard && matches!(scope, Scope::World) {
+                        // world barriers span partitions: the arrival is
+                        // aggregated by the coordinator (which mirrors
+                        // the expect/reuse validation below) and the
+                        // release comes back as a BarrierWake. Node
+                        // barriers stay shard-local — partitioning
+                        // guarantees a node never splits across shards.
+                        let now = self.clock;
+                        self.outbox.push(OutMsg::BarrierArrive {
+                            t: now,
+                            key,
+                            task,
+                            expect,
+                        });
+                        self.tasks[task].state = TState::BlockedBarrier;
+                        return Ok(());
+                    }
                     let st = self.barriers.entry(key).or_insert(BarrierState {
                         arrived: Vec::new(),
                         needed: expect,
@@ -1262,8 +1594,38 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
         Ok(())
     }
 
-    fn launch_flow(&mut self, mut route: Route, bytes: f64, ctx: FlowCtx) {
+    /// Canonical flow key for the next transfer `task` launches.
+    fn next_flow_key(&mut self, task: usize) -> (u32, u32) {
+        let n = self.tasks[task].launches;
+        self.tasks[task].launches += 1;
+        (task as u32, n)
+    }
+
+    pub(crate) fn launch_flow(&mut self, mut route: Route, bytes: f64, ctx: FlowCtx) {
         let bytes = bytes.max(64.0); // minimum wire granule
+        if self.role == Role::Shard
+            && route
+                .links
+                .first()
+                .is_some_and(|&l| self.sim.topo.is_fabric_link(l))
+        {
+            // Inter-node transfer: fabric links are solved by the shared
+            // fabric runner. Hand the fully-resolved route (static
+            // routing is pure, so resolving shard-side is exact) to the
+            // coordinator; the fabric arms it at `t + latency`, which the
+            // lookahead bound keeps at or beyond the barrier horizon.
+            let t = self.clock;
+            self.outbox.push(OutMsg::InterFlow {
+                t,
+                route,
+                bytes,
+                ctx: FlowCtx {
+                    wire_bytes: bytes,
+                    ..ctx
+                },
+            });
+            return;
+        }
         if let Some((rng, max)) = &mut self.jitter {
             // seeded latency noise, drawn in deterministic launch order
             route.latency += rng.f64() * *max;
@@ -1289,7 +1651,7 @@ impl<'s, 'a, 'h> Runner<'s, 'a, 'h> {
         self.push(self.clock + route.latency, Ev::FlowArm { pending: idx });
     }
 
-    fn apply_signal(&mut self, sig: SigRef, op: SigOp, value: u64) -> Result<(), SimError> {
+    pub(crate) fn apply_signal(&mut self, sig: SigRef, op: SigOp, value: u64) -> Result<(), SimError> {
         match op {
             SigOp::Set => self.heap.signal_set(sig.rank, sig.idx, value),
             SigOp::Add => {

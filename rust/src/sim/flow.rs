@@ -56,6 +56,23 @@
 //! virtual timestamp into a single `update` call, so the N simultaneous
 //! puts a collective issues cost one component recompute instead of N
 //! global ones.
+//!
+//! # Component structure across the intra/fabric boundary
+//!
+//! The same decomposition property powers the sharded engine
+//! (`sim/par.rs`): an intra-node route uses only one node's
+//! NVLink/mesh/PCIe/HBM links, and an inter-node route uses only
+//! NIC/leaf/spine links ([`Topology::is_fabric_link`]), so no flow — and
+//! therefore no connected component — ever spans the boundary. Each node
+//! partition runs its own `FlowNet` over its intra-node flows, and the
+//! shared fabric runner owns every fabric flow; every per-component
+//! water-fill performs the identical floating-point operations it would
+//! inside one global net (link ids are global in all nets, and the
+//! per-link incidence order is pinned by the engine's canonical
+//! `(task, launch)` batch key), keeping the split bit-identical to the
+//! single-threaded solve.
+//!
+//! [`Topology::is_fabric_link`]: crate::topology::Topology::is_fabric_link
 
 use std::cmp::{Ordering, Reverse};
 use std::collections::BinaryHeap;

@@ -8,6 +8,7 @@
 
 pub mod engine;
 pub mod flow;
+pub(crate) mod par;
 
 pub use engine::{
     ComputeExecutor, FaultLedger, NoopExecutor, OpSpan, Sim, SimConfig, SimError, SimReport,

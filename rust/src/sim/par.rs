@@ -1,0 +1,401 @@
+//! Component-sharded parallel event loop with conservative lookahead.
+//!
+//! The flow solver's max–min components never span the intra-node /
+//! fabric boundary ([`Topology::is_fabric_link`]): an intra-node route
+//! uses only one node's NVLink/mesh/PCIe/HBM links and an inter-node
+//! route uses only NIC/leaf/spine links. That exact decomposition (the
+//! same one `tests/flow_equivalence.rs` pins for the incremental
+//! solver) lets the engine split into:
+//!
+//! * **one shard per node partition** — a full
+//!   [`Runner`](super::engine) that starts only its own tasks and
+//!   solves only its own intra-node links, advancing *in parallel* with
+//!   the other shards; and
+//! * **one fabric runner** — a sequential coordinator-side `Runner`
+//!   owning every inter-node flow plus the entire fault machinery
+//!   (every `FaultTarget` resolves to fabric links).
+//!
+//! Synchronization is a conservative lookahead barrier. Every
+//! shard→anywhere interaction is latency-bounded below by
+//! Δ = [`Topology::min_cross_partition_latency`]: an inter-node
+//! transfer posted at `t` cannot arm a fabric flow before `t + Δ`
+//! (`route_tc` charges at least `inter_lat`), and a world barrier
+//! completed at `t` releases at `t + 2·inter_lat`. So while the
+//! earliest pending *fabric* event is at `t_fab`, every shard may
+//! safely run all events with `t < min(t_fab, t_min + Δ)` without
+//! seeing anyone else — that window is executed on a thread pool.
+//! Fabric→shard effects, by contrast, are *instantaneous* (a flow's
+//! completion applies its signal at completion time), so fabric events
+//! are processed one at a time, interleaved in exact `(t, tie)` order
+//! with the shard windows, with their task-side effects dispatched
+//! synchronously into the owning shard.
+//!
+//! Determinism: shard-to-fabric messages are merged sorted by
+//! `(t, shard index, FIFO)`, flow batches are ordered by the canonical
+//! `(task, launch)` key in *both* engines, and partitioning is a pure
+//! function of (topology, program) — so the report is bit-identical
+//! for every thread count, including `--threads 1` (which *is* the
+//! sequential engine).
+//!
+//! Couplings faster than Δ — a cross-node `SetSignal`, a cross-node
+//! `LLWait`, a foreign node-scoped barrier, an intra-node put that
+//! signals a third node — would break the bound, so the partition
+//! pre-scan unions the involved nodes into one shard: the coupling
+//! becomes shard-local and exact. Runs that are not eligible at all
+//! (numerics, tracing, adaptive routing's global occupancy feedback,
+//! latency jitter's global draw order, single-node clusters, programs
+//! that collapse to one partition) fall back to the sequential engine.
+
+use std::collections::BTreeMap;
+
+use crate::config::RailPolicy;
+use crate::mem::SymmetricHeap;
+use crate::program::{Op, Program, Scope};
+use crate::sim::engine::{
+    BarrierState, NoopExecutor, OutMsg, Runner, Sim, SimError, SimReport,
+};
+use crate::topology::PartitionMap;
+
+/// Decide whether `sim` can run sharded, and if so return the partition
+/// map (node partitions coarsened by the program's cross-node
+/// couplings). `None` means: run the sequential engine.
+pub(crate) fn plan(sim: &Sim, prog: &Program) -> Option<PartitionMap> {
+    if sim.threads() <= 1
+        || sim.cfg.numerics
+        || sim.cfg.trace
+        || sim.faults().jitter.is_some()
+        || sim.topo.cluster.fabric.rail_policy != RailPolicy::Static
+        || sim.topo.cluster.nodes < 2
+    {
+        return None;
+    }
+    // the lookahead window only makes progress with a strictly positive
+    // latency floor (NaN-explicit comparison: any degenerate hw model
+    // falls back to the sequential engine)
+    let delta = sim.topo.min_cross_partition_latency();
+    if !delta.is_finite() || delta <= 0.0 {
+        return None;
+    }
+    let c = &sim.topo.cluster;
+    let ws = c.world_size();
+    let mut pm = sim.topo.node_partition_map();
+    for t in &prog.tasks {
+        if t.rank >= ws {
+            return None; // malformed program: let the solo engine report
+        }
+        for op in &t.ops {
+            match op {
+                Op::SetSignal { sig, .. } => pm.union_ranks(t.rank, sig.rank),
+                Op::LLWait { dst } => pm.union_ranks(t.rank, dst.rank),
+                Op::Barrier {
+                    scope: Scope::Node(n),
+                    ..
+                } => {
+                    let first = n * c.gpus_per_node;
+                    if first < ws {
+                        pm.union_ranks(t.rank, first);
+                    }
+                }
+                Op::Put {
+                    src, dst, signal, ..
+                } => {
+                    if c.node_of(src.rank) == c.node_of(dst.rank) {
+                        // intra-node flow: its effects apply in the
+                        // posting shard — pull everything it touches in
+                        pm.union_ranks(t.rank, src.rank);
+                        if let Some((sig, _, _)) = signal {
+                            pm.union_ranks(t.rank, sig.rank);
+                        }
+                    }
+                }
+                Op::Get { src, dst, .. } | Op::LLPut { src, dst, .. } => {
+                    if c.node_of(src.rank) == c.node_of(dst.rank) {
+                        pm.union_ranks(t.rank, src.rank);
+                    }
+                }
+                Op::MultimemSt { src, .. } => pm.union_ranks(t.rank, src.rank),
+                _ => {}
+            }
+        }
+    }
+    pm.compact();
+    if pm.n_parts() < 2 {
+        return None;
+    }
+    Some(pm)
+}
+
+/// World-barrier aggregation state, coordinator-side.
+struct WorldBarrier {
+    arrived: Vec<usize>,
+    needed: usize,
+    released: bool,
+}
+
+/// Run `prog` on the sharded engine. Only called with a `plan()`-vetted
+/// configuration; the result is bit-identical to the sequential engine.
+pub(crate) fn run_sharded(
+    sim: &Sim,
+    prog: &Program,
+    heap: &mut SymmetricHeap,
+    pm: PartitionMap,
+) -> Result<SimReport, SimError> {
+    let topo = sim.topo;
+    let k = pm.n_parts();
+    let world = heap.world();
+    let pad = heap.signal_pad();
+    let delta = topo.min_cross_partition_latency();
+    let workers = sim.threads().min(k).max(1);
+    let part_of_task = |task: usize| pm.part_of(prog.tasks[task].rank);
+
+    // Scratch heaps: one per shard plus one (untouched) for the fabric.
+    // Timing-mode runners only ever read/write signal cells, and the
+    // partition map guarantees each rank's cells are touched through
+    // exactly one shard — seeded from, and merged back into, the real
+    // heap around the run.
+    let mut heaps: Vec<SymmetricHeap> = (0..k + 1)
+        .map(|_| SymmetricHeap::new(world, pad))
+        .collect();
+    for h in heaps.iter_mut() {
+        for r in 0..world {
+            for i in 0..pad {
+                let v = heap.signal(r, i);
+                if v != 0 {
+                    h.signal_set(r, i, v);
+                }
+            }
+        }
+    }
+    let mut execs: Vec<NoopExecutor> = (0..k + 1).map(|_| NoopExecutor).collect();
+
+    let report = {
+        let (fab_heap, shard_heaps) = heaps.split_last_mut().expect("k+1 heaps");
+        let (fab_exec, shard_execs) = execs.split_last_mut().expect("k+1 execs");
+        let mut shards: Vec<Runner<NoopExecutor>> = shard_heaps
+            .iter_mut()
+            .zip(shard_execs.iter_mut())
+            .enumerate()
+            .map(|(p, (h, e))| {
+                let mask: Vec<bool> = (0..world).map(|r| pm.part_of(r) == p).collect();
+                Runner::shard(sim, prog, h, e, mask)
+            })
+            .collect();
+        let mut fabric = Runner::fabric(sim, prog, fab_heap, fab_exec);
+        let mut barriers: BTreeMap<(u64, usize), WorldBarrier> = BTreeMap::new();
+
+        for sh in shards.iter_mut() {
+            sh.init()?;
+        }
+        fabric.init()?;
+        merge_outboxes(&mut shards, &mut fabric, &mut barriers, sim)?;
+
+        loop {
+            let t_shard = shards
+                .iter()
+                .map(|s| s.next_time())
+                .fold(f64::INFINITY, f64::min);
+            let t_fab = fabric.next_time();
+            if !t_shard.is_finite() && !t_fab.is_finite() {
+                break;
+            }
+            if t_fab <= t_shard {
+                // Fabric turn: one event, sequential (its effects are
+                // instantaneous on shard state, so it must interleave in
+                // exact time order). Ties go to the fabric — a fabric
+                // completion at `t` is visible to shard events at `t`,
+                // matching the canonical batch order's task-key tie rule.
+                fabric.step_one()?;
+                dispatch_effects(&mut fabric, &mut shards, &pm, &part_of_task)?;
+                merge_outboxes(&mut shards, &mut fabric, &mut barriers, sim)?;
+                continue;
+            }
+            // Parallel shard window: nothing — not the fabric (earliest
+            // event at t_fab ≥ horizon), not another shard (reachable
+            // only through the fabric, ≥ t_shard + Δ ≥ horizon) — can
+            // affect any shard below the horizon.
+            let horizon = t_fab.min(t_shard + delta);
+            let per = shards.len().div_ceil(workers);
+            std::thread::scope(|scope| -> Result<(), SimError> {
+                let mut handles = Vec::with_capacity(workers);
+                for chunk in shards.chunks_mut(per) {
+                    handles.push(scope.spawn(move || -> Result<(), SimError> {
+                        for sh in chunk.iter_mut() {
+                            sh.run_window(horizon)?;
+                        }
+                        Ok(())
+                    }));
+                }
+                for h in handles {
+                    h.join().expect("shard worker panicked")?;
+                }
+                Ok(())
+            })?;
+            merge_outboxes(&mut shards, &mut fabric, &mut barriers, sim)?;
+        }
+
+        // completion / deadlock check over every shard's owned tasks
+        let stuck: Vec<String> = shards.iter().flat_map(|s| s.stuck_tasks()).collect();
+        if !stuck.is_empty() {
+            return Err(SimError::Deadlock(stuck.join("; ")));
+        }
+
+        // assemble the report exactly as the solo engine does, pulling
+        // each task's span from its owning shard
+        let mut makespan = 0.0f64;
+        let mut task_spans = Vec::with_capacity(prog.tasks.len());
+        for (i, spec) in prog.tasks.iter().enumerate() {
+            let rt = &shards[pm.part_of(spec.rank)].tasks[i];
+            makespan = makespan.max(rt.t_end);
+            task_spans.push((spec.name.clone(), spec.rank, rt.t_start, rt.t_end));
+        }
+        SimReport {
+            makespan,
+            task_spans,
+            events: fabric.n_events + shards.iter().map(|s| s.n_events).sum::<u64>(),
+            flows: fabric.n_flows + shards.iter().map(|s| s.n_flows).sum::<u64>(),
+            ledger: fabric.report.ledger,
+            ..SimReport::default()
+        }
+    };
+
+    // fold each rank's final signal state back into the caller's heap
+    for r in 0..world {
+        let sh = &heaps[pm.part_of(r)];
+        for i in 0..pad {
+            heap.signal_set(r, i, sh.signal(r, i));
+        }
+    }
+    Ok(report)
+}
+
+/// Dispatch the fabric's completion effects into the owning shards, in
+/// outbox (= canonical completion) order. This is `finish_flow` /
+/// `on_barrier_release` split across the partition boundary: the same
+/// helper calls, in the same order, on the shard that owns the state.
+fn dispatch_effects(
+    fabric: &mut Runner<NoopExecutor>,
+    shards: &mut [Runner<NoopExecutor>],
+    pm: &PartitionMap,
+    part_of_task: &dyn Fn(usize) -> usize,
+) -> Result<(), SimError> {
+    for msg in fabric.take_outbox() {
+        match msg {
+            OutMsg::Effects { t, ctx } => {
+                let (signal, ll_dsts, nbi_owner, resume) = ctx.into_effects();
+                if let Some((sig, op, val)) = signal {
+                    let s = &mut shards[pm.part_of(sig.rank)];
+                    s.sync_clock(t);
+                    s.apply_signal(sig, op, val)?;
+                }
+                for key in ll_dsts {
+                    let s = &mut shards[pm.part_of(key.0)];
+                    s.sync_clock(t);
+                    s.deliver_ll(key)?;
+                }
+                if let Some(owner) = nbi_owner {
+                    let s = &mut shards[part_of_task(owner)];
+                    s.sync_clock(t);
+                    s.deliver_nbi(owner)?;
+                }
+                if let Some(task) = resume {
+                    let s = &mut shards[part_of_task(task)];
+                    s.sync_clock(t);
+                    s.deliver_resume(task)?;
+                }
+            }
+            OutMsg::BarrierWake { t, task } => {
+                let s = &mut shards[part_of_task(task)];
+                s.sync_clock(t);
+                s.deliver_barrier_wake(task)?;
+            }
+            OutMsg::InterFlow { .. } | OutMsg::BarrierArrive { .. } => {
+                unreachable!("fabric runner never posts shard traffic")
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The lookahead barrier's merge: drain every shard's outbox (sorted by
+/// `(t, shard, FIFO)` — each outbox is already time-ordered, so a stable
+/// sort by `t` over the shard-ordered concatenation is exactly that) and
+/// apply it to the fabric: launch inter-node flows, aggregate world
+/// barriers, schedule releases.
+fn merge_outboxes(
+    shards: &mut [Runner<NoopExecutor>],
+    fabric: &mut Runner<NoopExecutor>,
+    barriers: &mut BTreeMap<(u64, usize), WorldBarrier>,
+    sim: &Sim,
+) -> Result<(), SimError> {
+    let mut msgs: Vec<OutMsg> = Vec::new();
+    for sh in shards.iter_mut() {
+        msgs.append(&mut sh.take_outbox());
+    }
+    if msgs.is_empty() {
+        return Ok(());
+    }
+    msgs.sort_by(|a, b| msg_t(a).total_cmp(&msg_t(b)));
+    for msg in msgs {
+        match msg {
+            OutMsg::InterFlow {
+                t,
+                route,
+                bytes,
+                ctx,
+            } => {
+                fabric.sync_clock(t);
+                fabric.launch_flow(route, bytes, ctx);
+            }
+            OutMsg::BarrierArrive {
+                t,
+                key,
+                task,
+                expect,
+            } => {
+                let st = barriers.entry(key).or_insert(WorldBarrier {
+                    arrived: Vec::new(),
+                    needed: expect,
+                    released: false,
+                });
+                // mirror the solo engine's program-bug checks verbatim
+                assert_eq!(
+                    st.needed, expect,
+                    "barrier id {} used with inconsistent expect counts",
+                    key.1
+                );
+                if st.released {
+                    panic!("barrier id {} reused after release", key.1);
+                }
+                st.arrived.push(task);
+                if st.arrived.len() == st.needed {
+                    st.released = true;
+                    let hw = sim.topo.cluster.hw;
+                    let release_t = t + 2.0 * hw.inter_lat;
+                    fabric.sync_clock(t);
+                    fabric.barriers.insert(
+                        key,
+                        BarrierState {
+                            arrived: std::mem::take(&mut st.arrived),
+                            needed: st.needed,
+                            released: false,
+                        },
+                    );
+                    fabric.push_barrier_release(release_t, key);
+                }
+            }
+            OutMsg::Effects { .. } | OutMsg::BarrierWake { .. } => {
+                unreachable!("shards apply their own completion effects")
+            }
+        }
+    }
+    Ok(())
+}
+
+fn msg_t(m: &OutMsg) -> f64 {
+    match m {
+        OutMsg::InterFlow { t, .. }
+        | OutMsg::BarrierArrive { t, .. }
+        | OutMsg::Effects { t, .. }
+        | OutMsg::BarrierWake { t, .. } => *t,
+    }
+}

@@ -237,6 +237,73 @@ impl FabricHealth {
     }
 }
 
+/// Rank → partition assignment for the sharded event loop.
+///
+/// Produced by [`Topology::node_partition_map`] (one partition per node,
+/// the flow-solver's natural component boundary) and then *coarsened* by
+/// the engine's program pre-scan: any program-level coupling that would
+/// let two partitions interact faster than the fabric latency floor
+/// (cross-node `SetSignal`, cross-node `LLWait`, foreign node-scoped
+/// barriers) unions the two partitions so the coupling becomes
+/// shard-local. Labels are renumbered densely by [`PartitionMap::compact`]
+/// so partition indices are deterministic.
+#[derive(Debug, Clone)]
+pub struct PartitionMap {
+    part_of: Vec<usize>,
+    n_parts: usize,
+}
+
+impl PartitionMap {
+    /// Partition index of `rank`.
+    pub fn part_of(&self, rank: usize) -> usize {
+        self.part_of[rank]
+    }
+
+    /// Number of partitions (valid after [`Self::compact`]).
+    pub fn n_parts(&self) -> usize {
+        self.n_parts
+    }
+
+    /// Merge the partitions containing ranks `a` and `b`, keeping the
+    /// smaller label. Call [`Self::compact`] once all unions are in.
+    pub fn union_ranks(&mut self, a: usize, b: usize) {
+        let (pa, pb) = (self.part_of[a], self.part_of[b]);
+        if pa == pb {
+            return;
+        }
+        let (keep, drop) = if pa < pb { (pa, pb) } else { (pb, pa) };
+        for p in self.part_of.iter_mut() {
+            if *p == drop {
+                *p = keep;
+            }
+        }
+    }
+
+    /// Renumber labels densely to `0..n_parts` in order of first
+    /// appearance by rank (deterministic: no hasher state involved).
+    pub fn compact(&mut self) {
+        let mut map = std::collections::BTreeMap::new();
+        let mut next = 0usize;
+        for p in self.part_of.iter_mut() {
+            let d = *map.entry(*p).or_insert_with(|| {
+                let d = next;
+                next += 1;
+                d
+            });
+            *p = d;
+        }
+        self.n_parts = next;
+    }
+
+    /// Ranks owned by `part`, in ascending order.
+    pub fn ranks_of(&self, part: usize) -> impl Iterator<Item = usize> + '_ {
+        self.part_of
+            .iter()
+            .enumerate()
+            .filter_map(move |(r, &p)| (p == part).then_some(r))
+    }
+}
+
 /// Immutable interconnect graph for one cluster.
 pub struct Topology {
     pub cluster: ClusterSpec,
@@ -255,7 +322,10 @@ pub struct Topology {
     spine: Vec<usize>,
     hbm: Vec<usize>,
     pcie_host: Vec<usize>, // per NUMA domain
-    mesh: std::collections::HashMap<(usize, usize), usize>,
+    // Ordered so link-id assignment and any iteration over pairs is
+    // deterministic regardless of hasher state (cross-thread bit-identity
+    // prerequisite — see sim/par.rs).
+    mesh: std::collections::BTreeMap<(usize, usize), usize>,
 }
 
 impl Topology {
@@ -465,6 +535,58 @@ impl Topology {
     /// by a factor of `rails` on multi-rail fabrics.
     pub fn inter_path_bw(&self) -> f64 {
         self.cluster.fabric.rail_path_bw(self.cluster.hw.nic_bw)
+    }
+
+    /// Conservative-lookahead bound for the sharded engine (sim/par.rs):
+    /// the minimum virtual latency of *any* interaction that crosses a
+    /// node partition. Every inter-node route costs at least
+    /// `hw.inter_lat` (`route_tc` adds non-negative leaf/spine terms on
+    /// top), and the world-barrier release latency is `2 * inter_lat`,
+    /// so no event produced by one partition at time `t` can affect
+    /// another partition before `t + min_cross_partition_latency()`.
+    /// Returns `f64::INFINITY` on single-node clusters (no cross-partition
+    /// path exists at all).
+    pub fn min_cross_partition_latency(&self) -> f64 {
+        if self.cluster.nodes > 1 {
+            self.cluster.hw.inter_lat
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Is `id` part of the inter-node fabric (NIC / leaf / spine tiers)?
+    ///
+    /// Fabric links are exactly the links an inter-node route traverses
+    /// and exactly the links a [`FaultTarget`] can resolve to; intra-node
+    /// links (NVLink / mesh / PCIe / HBM) are everything else. The two
+    /// sets are disjoint and no route mixes intra-node links of two
+    /// different nodes, which is what lets the sharded engine give each
+    /// node partition a private [`crate::sim::FlowNet`] over its intra
+    /// links and solve the shared fabric separately — the max–min
+    /// components never span the boundary.
+    pub fn is_fabric_link(&self, id: LinkId) -> bool {
+        matches!(
+            self.links[id.0].kind,
+            LinkKind::NicTx
+                | LinkKind::NicRx
+                | LinkKind::LeafUp
+                | LinkKind::LeafDown
+                | LinkKind::Spine
+        )
+    }
+
+    /// Static partition map for the sharded engine: rank → partition
+    /// index, one partition per node. Cross-partition couplings that the
+    /// *program* introduces (cross-node `SetSignal`, cross-node `LLWait`,
+    /// a task executing a foreign node-scoped barrier) are unioned on top
+    /// by [`crate::sim::engine`]'s pre-scan; this is just the topological
+    /// floor.
+    pub fn node_partition_map(&self) -> PartitionMap {
+        let c = &self.cluster;
+        PartitionMap {
+            part_of: (0..c.world_size()).map(|r| c.node_of(r)).collect(),
+            n_parts: c.nodes,
+        }
     }
 
     /// Route for `multimem.st`: one store fans out to every other rank in

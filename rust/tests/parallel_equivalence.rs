@@ -1,0 +1,225 @@
+//! Parallel-engine equivalence (ISSUE 7 acceptance): the
+//! component-sharded event loop (`sim/par.rs`, engaged by
+//! `Sim::with_threads(N)` for N > 1) must produce a **bit-identical**
+//! [`SimReport`] to the sequential loop on every shape — same makespan
+//! bits, same event/flow counts, same task-span bits, same fault ledger
+//! — for every thread count, including fault-injected and same-seed
+//! replay runs. `wall_ns` is the one measured (non-reproducible) field
+//! and is deliberately not compared.
+//!
+//! Shapes mirror `tests/fault_injection.rs` (fig13 AG+GEMM, fig16 railed
+//! AllToAll, token-routed EP MoE) but pin the **static** rail policy:
+//! the sharded engine only engages when routes are static (the adaptive
+//! router reads global link occupancy on every decision, which a shard
+//! cannot see); an adaptive shape is still covered below to pin that the
+//! fallback path stays bit-identical too.
+//!
+//! Fault plans here keep the default (infinite) `lt_timeout`: watchdog
+//! *arming* is host-order-sensitive at equal virtual times, so a finite
+//! timeout is the one knob the bit-identity contract excludes (see
+//! `sim/par.rs` module docs).
+
+use triton_dist_sim::collectives::alltoall::{a2a_ll, A2aBufs, A2aCfg};
+use triton_dist_sim::collectives::ProgBuild;
+use triton_dist_sim::config::{
+    ClusterSpec, DType, FabricSpec, FaultPlan, GemmShape, MoeShape, RailPolicy,
+};
+use triton_dist_sim::coordinator::{ag_gemm, ep_moe};
+use triton_dist_sim::mem::SymmetricHeap;
+use triton_dist_sim::shmem::ShmemCtx;
+use triton_dist_sim::sim::{NoopExecutor, Sim, SimConfig, SimReport};
+use triton_dist_sim::topology::Topology;
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn timing_sim(topo: &Topology) -> Sim<'_> {
+    Sim::with_config(
+        topo,
+        SimConfig {
+            numerics: false,
+            trace: false,
+        },
+    )
+}
+
+fn assert_reports_identical(a: &SimReport, b: &SimReport, what: &str) {
+    assert_eq!(
+        a.makespan.to_bits(),
+        b.makespan.to_bits(),
+        "{what}: makespan bits ({} vs {})",
+        a.makespan,
+        b.makespan
+    );
+    assert_eq!(a.events, b.events, "{what}: event count");
+    assert_eq!(a.flows, b.flows, "{what}: flow count");
+    assert_eq!(a.ledger, b.ledger, "{what}: ledger");
+    assert_eq!(a.task_spans.len(), b.task_spans.len(), "{what}: span count");
+    for (x, y) in a.task_spans.iter().zip(&b.task_spans) {
+        assert_eq!(x.0, y.0, "{what}: span name");
+        assert_eq!(x.1, y.1, "{what}: span rank");
+        assert_eq!(x.2.to_bits(), y.2.to_bits(), "{what}: start bits ({})", x.0);
+        assert_eq!(x.3.to_bits(), y.3.to_bits(), "{what}: end bits ({})", x.0);
+    }
+}
+
+/// Run `run_at(threads)` for every thread count and assert every report
+/// matches the sequential (threads = 1) one bit-for-bit.
+fn sweep_identical(what: &str, run_at: impl Fn(usize) -> SimReport) {
+    let seq = run_at(1);
+    assert!(seq.events > 0, "{what}: empty run proves nothing");
+    for t in &THREADS[1..] {
+        let par = run_at(*t);
+        assert_reports_identical(&seq, &par, &format!("{what} @ threads={t}"));
+    }
+}
+
+/// fig13 shape: inter-node AG+GEMM on the default (fat-tree) fabric.
+fn run_fig13(threads: usize, plan: FaultPlan) -> SimReport {
+    let cluster = ClusterSpec::h800(2, 4);
+    let topo = Topology::build(cluster);
+    let gemm = GemmShape::new(1024, 512, 512);
+    let (mut op, _b) = ag_gemm::build(cluster, gemm, ag_gemm::AgGemmVariant::OursInter);
+    timing_sim(&topo)
+        .with_faults(plan)
+        .with_threads(threads)
+        .run(&op.prog, &mut op.heap, &mut NoopExecutor)
+        .unwrap()
+}
+
+/// fig16 shape: railed LL AllToAll. Static policy (the canonical fig16
+/// fabric is adaptive — covered separately as the fallback case).
+fn run_fig16_static(threads: usize, plan: FaultPlan) -> SimReport {
+    let cluster = ClusterSpec::h800(2, 4).with_fabric(FabricSpec::rail_optimized(2, 2.0));
+    let ctx = ShmemCtx::new(cluster, DType::BF16);
+    let topo = Topology::build(cluster);
+    let mut heap = SymmetricHeap::new(ctx.n_pes(), 4 * ctx.n_pes());
+    let bufs = A2aBufs::alloc(&mut heap, &ctx, 512);
+    let mut pb = ProgBuild::new();
+    a2a_ll(&ctx, &bufs, &mut pb, &A2aCfg::ours());
+    timing_sim(&topo)
+        .with_faults(plan)
+        .with_threads(threads)
+        .run(&pb.prog, &mut heap, &mut NoopExecutor)
+        .unwrap()
+}
+
+/// EP MoE shape: token-routed over the tapered railed (static) fabric.
+fn run_ep_moe(threads: usize, plan: FaultPlan) -> SimReport {
+    let cluster = ClusterSpec::h800(2, 4)
+        .with_fabric(FabricSpec::rail_optimized(2, 2.0).with_spine_taper(2.0));
+    let shape = MoeShape {
+        tokens_per_rank: 16,
+        in_hidden: 64,
+        out_hidden: 64,
+        experts: 8,
+        topk: 2,
+        ..MoeShape::default()
+    }
+    .with_skew(1.2);
+    let routing = ep_moe::routing_for(cluster, &shape, 5);
+    let topo = Topology::build(cluster);
+    let (mut op, _b) =
+        ep_moe::build_ep_moe(cluster, shape, &routing, ep_moe::EpMoeVariant::TokenRouted);
+    timing_sim(&topo)
+        .with_faults(plan)
+        .with_threads(threads)
+        .run(&op.prog, &mut op.heap, &mut NoopExecutor)
+        .unwrap()
+}
+
+#[test]
+fn fig13_bit_identical_across_threads() {
+    sweep_identical("fig13 AG+GEMM", |t| run_fig13(t, FaultPlan::default()));
+}
+
+#[test]
+fn fig16_static_bit_identical_across_threads() {
+    sweep_identical("fig16 railed AllToAll", |t| {
+        run_fig16_static(t, FaultPlan::default())
+    });
+}
+
+#[test]
+fn ep_moe_bit_identical_across_threads() {
+    sweep_identical("EP MoE token-routed", |t| run_ep_moe(t, FaultPlan::default()));
+}
+
+#[test]
+fn rail_flap_bit_identical_across_threads() {
+    // spine plane 0 dies mid-run and returns: the fault machinery (kill,
+    // retry ladder, capacity retarget) all lives fabric-side, so the
+    // sharded engine must replay it bit-for-bit
+    let flap = || FaultPlan::parse("flap,spine,0,5e-6,5e-4").unwrap();
+    sweep_identical("fig16 + rail flap", |t| run_fig16_static(t, flap()));
+    sweep_identical("EP MoE + rail flap", |t| run_ep_moe(t, flap()));
+}
+
+#[test]
+fn degraded_rail_bit_identical_across_threads() {
+    // spine plane 0 at quarter capacity for the whole run: the water-fill
+    // rates of every fabric component shift, shard wakeups move with them
+    let deg = || FaultPlan::parse("deg,spine,0,0,1.0,0.25").unwrap();
+    sweep_identical("fig16 + degraded rail", |t| run_fig16_static(t, deg()));
+}
+
+#[test]
+fn same_seed_replay_identical_across_threads() {
+    // a synthesized plan (default infinite lt_timeout) replayed at every
+    // thread count: same seed -> same timeline, sequential or sharded
+    let plan = || FaultPlan::synthesize(42, 1.5, 8, 2, 1e-3);
+    sweep_identical("fig16 + synthesized plan", |t| run_fig16_static(t, plan()));
+    let a = run_fig16_static(4, plan());
+    let b = run_fig16_static(4, plan());
+    assert_reports_identical(&a, &b, "threads=4 replay");
+}
+
+#[test]
+fn adaptive_policy_falls_back_bit_identically() {
+    // the adaptive router is a global observer, so `plan()` refuses to
+    // shard and `--threads 8` must take the sequential path unchanged
+    let run = |threads: usize| {
+        let cluster = ClusterSpec::h800(2, 4).with_fabric(
+            FabricSpec::rail_optimized(2, 2.0).with_rail_policy(RailPolicy::Adaptive),
+        );
+        let ctx = ShmemCtx::new(cluster, DType::BF16);
+        let topo = Topology::build(cluster);
+        let mut heap = SymmetricHeap::new(ctx.n_pes(), 4 * ctx.n_pes());
+        let bufs = A2aBufs::alloc(&mut heap, &ctx, 512);
+        let mut pb = ProgBuild::new();
+        a2a_ll(&ctx, &bufs, &mut pb, &A2aCfg::ours());
+        timing_sim(&topo)
+            .with_threads(threads)
+            .run(&pb.prog, &mut heap, &mut NoopExecutor)
+            .unwrap()
+    };
+    assert_reports_identical(&run(1), &run(8), "adaptive fallback");
+}
+
+#[test]
+fn single_node_falls_back_bit_identically() {
+    // one node has no cross-partition latency to bound the lookahead, so
+    // sharding is refused and the sequential loop runs
+    let run = |threads: usize| {
+        let cluster = ClusterSpec::h800(1, 8);
+        let topo = Topology::build(cluster);
+        let gemm = GemmShape::new(1024, 512, 512);
+        let (mut op, _b) = ag_gemm::build(cluster, gemm, ag_gemm::AgGemmVariant::OursPush);
+        timing_sim(&topo)
+            .with_threads(threads)
+            .run(&op.prog, &mut op.heap, &mut NoopExecutor)
+            .unwrap()
+    };
+    assert_reports_identical(&run(1), &run(8), "single-node fallback");
+}
+
+#[test]
+fn sharded_run_reports_wall_clock_throughput() {
+    // satellite: SimReport carries measured wall_ns + events/s on both
+    // engine paths (the one field equivalence must ignore)
+    let seq = run_fig16_static(1, FaultPlan::default());
+    let par = run_fig16_static(4, FaultPlan::default());
+    assert!(seq.wall_ns > 0, "sequential run must stamp wall_ns");
+    assert!(par.wall_ns > 0, "sharded run must stamp wall_ns");
+    assert!(seq.events_per_s() > 0.0);
+    assert!(par.events_per_s() > 0.0);
+}
