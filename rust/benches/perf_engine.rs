@@ -34,6 +34,11 @@
 //!   onto the surviving plane while Static stalls through the retry
 //!   backoff ladder until the plane returns (adaptive must be strictly
 //!   lower — pinned by `tests/fault_injection.rs`).
+//! * `moe-ep-rank-death` — 16-rank token-routed EP MoE (full numerics)
+//!   with rank 3 dying mid-run: the elastic recovery controller
+//!   (`coordinator::recover`) detects the death, drains, re-plans over
+//!   the 15 survivors and resumes; the record carries the recovery
+//!   timeline (detect/drain/re-plan latency) and the degraded goodput.
 //! * `alltoall-4096rank-par` — 512x8 LL AllToAll on a 2-rail fabric,
 //!   swept over `--threads {1,2,4,8}` on the component-sharded engine
 //!   (`sim/par.rs`): the record carries the threads -> events/s curve
@@ -53,10 +58,11 @@ use triton_dist_sim::collectives::ProgBuild;
 use triton_dist_sim::config::{
     ClusterSpec, DType, FabricSpec, FaultPlan, GemmShape, MoeShape, RailPolicy,
 };
-use triton_dist_sim::coordinator::{ag_gemm, ep_moe};
+use triton_dist_sim::coordinator::{ag_gemm, ep_moe, recover};
 use triton_dist_sim::mem::SymmetricHeap;
 use triton_dist_sim::metrics::{
-    engine_bench_json, fault_ledger_line, EngineBenchRecord, FaultBenchInfo,
+    engine_bench_json, fault_ledger_line, recovery_line, EngineBenchRecord, FaultBenchInfo,
+    RecoveryBenchInfo,
 };
 use triton_dist_sim::shmem::ShmemCtx;
 use triton_dist_sim::sim::{NoopExecutor, Sim, SimConfig, SimReport};
@@ -111,6 +117,7 @@ fn report_fault(
         sim_wall_ns: 0,
         threads: Vec::new(),
         fault,
+        recovery: None,
     });
 }
 
@@ -423,6 +430,7 @@ fn main() {
         sim_wall_ns: par_rep.wall_ns,
         threads: par_sweep,
         fault: None,
+        recovery: None,
     });
 
     // 1024-rank token-routed EP MoE, same threads sweep: shard work here
@@ -487,6 +495,7 @@ fn main() {
         sim_wall_ns: ep_par_rep.wall_ns,
         threads: ep_par_sweep,
         fault: None,
+        recovery: None,
     });
 
     // AG+GEMM with numerics off — program-build + engine cost
@@ -542,6 +551,69 @@ fn main() {
     });
     println!("{}", stat4.render());
     report(&mut records, "ag_gemm-numerics(native)", events4, &stat4);
+
+    // elastic recovery: rank 3 dies mid-run of the token-routed EP MoE
+    // (full numerics); the controller detects, drains, re-plans over the
+    // 15 survivors and resumes. The record carries the recovery timeline
+    // plus the degraded goodput (delivered / originally-owed pairs).
+    println!("\nmoe-ep-rank-death (elastic recovery)");
+    let death_cluster = ClusterSpec::h800(2, 8)
+        .with_fabric(FabricSpec::rail_optimized(2, 2.0).with_spine_taper(2.0));
+    let death_shape = MoeShape {
+        tokens_per_rank: 16,
+        in_hidden: 32,
+        out_hidden: 32,
+        experts: 32,
+        topk: 2,
+        ..MoeShape::default()
+    }
+    .with_skew(1.2);
+    let death_run = || {
+        recover::run_ep_moe_elastic(
+            death_cluster,
+            death_shape,
+            11,
+            ep_moe::EpMoeVariant::TokenRouted,
+            &A2aCfg::ours(),
+            FaultPlan::parse("die,3,1e-5").unwrap(),
+            &recover::RecoverCfg::default(),
+        )
+        .unwrap()
+    };
+    let mut elastic = death_run();
+    let stat_death = bench_wall("moe-ep-rank-death", 1, 3, || {
+        elastic = death_run();
+    });
+    println!("{}", stat_death.render());
+    let rec = elastic
+        .report
+        .recovery
+        .clone()
+        .expect("die plan must produce a recovery ledger");
+    let owed = (death_cluster.world_size() * death_shape.tokens_per_rank * death_shape.topk) as f64;
+    let death_goodput = rec.tokens_delivered as f64 / owed;
+    println!("  {}", recovery_line(&rec));
+    println!(
+        "  recovery latency: detect {:.3} us + drain {:.3} us + re-plan {:.3} us \
+         -> resumed at {:.3} us; degraded goodput {:.1}%",
+        (rec.detected_at - rec.died_at) * 1e6,
+        (rec.drained_at - rec.detected_at) * 1e6,
+        (rec.replanned_at - rec.drained_at) * 1e6,
+        rec.resumed_at * 1e6,
+        death_goodput * 100.0
+    );
+    records.push(EngineBenchRecord {
+        scenario: "moe-ep-rank-death".to_string(),
+        events: elastic.report.events,
+        median_wall_s: stat_death.median_s,
+        sim_wall_ns: 0,
+        threads: Vec::new(),
+        fault: None,
+        recovery: Some(RecoveryBenchInfo {
+            ledger: rec,
+            goodput: death_goodput,
+        }),
+    });
 
     // machine-readable trajectory for cross-PR tracking
     let json = engine_bench_json(&records);

@@ -7,7 +7,7 @@
 use crate::program::{ComputeCost, NumericOp, Op, Scope, SigCond, SigOp};
 use crate::shmem::ShmemCtx;
 
-use super::{AgBufs, ProgBuild};
+use super::{AgBufs, ProgBuild, WorldView};
 
 /// Alg. 1 — push-mode intra-node AllGather on the copy engine.
 ///
@@ -312,6 +312,48 @@ pub fn ag_ll_pcie(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild) {
     }
 }
 
+/// Flat survivor-indexed AllGather: every logical rank pushes its own
+/// shard to every other logical peer with a delivery signal. This is the
+/// **degraded-world re-plan path** of the elastic recovery controller:
+/// unlike [`ag_inter`] it assumes nothing about the node grid being
+/// rectangular, so it stays valid on any survivor set after rank or node
+/// death. Segment slots and signals are indexed by *physical* rank (a
+/// survivor's shard stays in its original heap slot; dead ranks' slots
+/// are simply never gathered), so it composes with the original
+/// [`AgBufs`] allocation. Non-overlapped and rail-striped only — the
+/// price of generality; the overlapped builders remain the fault-free
+/// fast path.
+pub fn ag_flat_on(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild, view: &WorldView) {
+    let ws = view.world();
+    pb.claim_sigs("ag_flat", bufs.sig_base, ctx.n_pes());
+    for l in 0..ws {
+        let pr = view.phys(l);
+        assert!(pr < ctx.n_pes(), "view physical rank out of range");
+        let mut t = ctx
+            .task(pr, format!("ag_flat[{l}]"))
+            .with_sms(1)
+            .launch_overhead();
+        t.notify(pr, bufs.sig(pr), SigOp::Set, 1);
+        let mut inter_idx = 0usize;
+        for i in 1..ws {
+            let m = (l + i) % ws;
+            let pm = view.phys(m);
+            if ctx.node_of(pm) != ctx.node_of(pr) {
+                t.stripe_rail(inter_idx);
+                inter_idx += 1;
+            }
+            t.putmem_signal(
+                bufs.seg(pr, pr),
+                bufs.seg(pr, pm),
+                bufs.sig(pr),
+                SigOp::Set,
+                1,
+            );
+        }
+        pb.prog.push(t.build());
+    }
+}
+
 /// AMD full-mesh AllGather (§3.6 + Fig. 8): communication is tiled into
 /// sub-chunks and each step pulls the next sub-chunk from *all* peers
 /// simultaneously — the only way to reach the 350 GB/s aggregate of the
@@ -458,6 +500,43 @@ mod tests {
     #[test]
     fn ll_pcie_two_nodes_gathers() {
         run_variant(ClusterSpec::l20(2, 8), 32, ag_ll_pcie, true);
+    }
+
+    #[test]
+    fn flat_identity_gathers() {
+        run_variant(
+            ClusterSpec::h800(2, 4),
+            32,
+            |c, b, p| ag_flat_on(c, b, p, &WorldView::identity(c.n_pes())),
+            false,
+        );
+    }
+
+    #[test]
+    fn flat_survivor_view_gathers_survivor_shards() {
+        // after rank 5 dies, the flat re-plan gathers every *survivor*
+        // shard onto every survivor; the dead slot stays untouched
+        let cluster = ClusterSpec::h800(2, 4);
+        let ctx = ShmemCtx::new(cluster, DType::BF16);
+        let topo = Topology::build(cluster);
+        let mut heap = SymmetricHeap::new(ctx.n_pes(), 4 * ctx.n_pes().max(16));
+        let bufs = AgBufs::alloc(&mut heap, &ctx, 16);
+        fill_ag_inputs(&mut heap, &bufs, 11);
+        let view = WorldView::survivors(ctx.n_pes(), &[5]);
+        let mut pb = ProgBuild::new();
+        ag_flat_on(&ctx, &bufs, &mut pb, &view);
+        let sim = Sim::new(&topo);
+        sim.run(&pb.prog, &mut heap, &mut NoopExecutor).unwrap();
+        for l in 0..view.world() {
+            let on = view.phys(l);
+            for s in 0..view.world() {
+                let seg = view.phys(s);
+                let got = heap.read(bufs.seg(seg, on));
+                let own = heap.read(bufs.seg(seg, seg));
+                assert_eq!(got, own, "segment {seg} missing on rank {on}");
+                assert!(heap.signal(on, bufs.sig(seg)) >= 1);
+            }
+        }
     }
 
     #[test]

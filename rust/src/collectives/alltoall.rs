@@ -28,7 +28,7 @@ use crate::shmem::{ShmemCtx, ShmemTask};
 use crate::topology::Topology;
 use crate::util::Rng;
 
-use super::ProgBuild;
+use super::{ProgBuild, WorldView};
 
 /// AllToAll working set: `send` holds one chunk per destination rank;
 /// `recv` holds one slot per source rank.
@@ -161,7 +161,10 @@ pub struct A2aVarBufs {
 
 impl A2aVarBufs {
     pub fn alloc(heap: &mut SymmetricHeap, sizes: A2aSizes) -> Self {
-        assert_eq!(sizes.world(), heap.world(), "size table world mismatch");
+        // `<=`, not `==`: a survivor re-plan builds a logical size table
+        // smaller than the physical heap world (dead ranks keep their
+        // heap space but are never addressed)
+        assert!(sizes.world() <= heap.world(), "size table world mismatch");
         let send_len = sizes.max_send_total().max(1);
         let recv_len = sizes.max_recv_total().max(1);
         A2aVarBufs {
@@ -435,6 +438,13 @@ impl A2aCfg {
 ///   still fires the arrival signal so consumers wait uniformly.
 /// * `cfg.split > 1` splits every chunk into that many LL pieces, each
 ///   paying the post overhead and taking its own plane assignment.
+///
+/// **Survivor indexing** (elastic recovery): all loop indices `r`, `dst`,
+/// `src` are *logical* ranks of `view`; tasks, slices, and signal targets
+/// are re-homed onto `view.phys(..)`. The `plane` callback receives
+/// logical indices — callers needing physical rail homes map through the
+/// view themselves. [`WorldView::identity`] makes every re-homing a
+/// field-preserving no-op, so the classic builders stay bit-identical.
 #[allow(clippy::too_many_arguments)]
 fn a2a_ll_body<L: A2aLayout>(
     ctx: &ShmemCtx,
@@ -444,15 +454,21 @@ fn a2a_ll_body<L: A2aLayout>(
     who: &'static str,
     prefix: &str,
     gate: Option<usize>,
+    view: &WorldView,
     mut plane: impl FnMut(&mut ShmemTask, usize, usize, usize),
 ) {
-    let ws = ctx.n_pes();
+    let ws = view.world();
+    assert!(
+        (0..ws).all(|l| view.phys(l) < ctx.n_pes()),
+        "world view addresses ranks outside the cluster"
+    );
     pb.claim_sigs(who, bufs.sig(0), ws);
 
     for r in 0..ws {
-        let node = ctx.node_of(r);
+        let pr = view.phys(r);
+        let node = ctx.node_of(pr);
         let mut send = ctx
-            .task(r, format!("{prefix}_send[{r}]"))
+            .task(pr, format!("{prefix}_send[{r}]"))
             .with_sms(1)
             .launch_overhead();
         if let Some(g) = gate {
@@ -466,21 +482,22 @@ fn a2a_ll_body<L: A2aLayout>(
                     bytes: ctx.bytes(self_elems) * 2.0,
                 },
                 numeric: NumericOp::Copy {
-                    src: bufs.send_chunk(r, r),
-                    dst: bufs.recv_slot(r, r),
+                    src: bufs.send_chunk(r, r).on_rank(pr),
+                    dst: bufs.recv_slot(r, r).on_rank(pr),
                 },
                 label: "a2a_self_copy",
             });
         }
-        send.notify(r, bufs.sig(r), SigOp::Set, 1);
+        send.notify(pr, bufs.sig(r), SigOp::Set, 1);
         let mut inter_idx = 0usize;
         for i in 1..ws {
             let dst = (r + i) % ws;
+            let pd = view.phys(dst);
             let elems = bufs.elems(r, dst);
             if elems == 0 {
                 continue;
             }
-            let inter = ctx.node_of(dst) != node;
+            let inter = ctx.node_of(pd) != node;
             for (off, len) in split_ranges(elems, cfg.split) {
                 if inter {
                     // IBRC/IBGDA post cost, serialized in the sender,
@@ -497,8 +514,8 @@ fn a2a_ll_body<L: A2aLayout>(
                     });
                 }
                 send.ll_put(
-                    bufs.send_chunk(dst, r).sub(off, len),
-                    bufs.ll_slot(r, dst).sub(off, len),
+                    bufs.send_chunk(dst, r).sub(off, len).on_rank(pr),
+                    bufs.ll_slot(r, dst).sub(off, len).on_rank(pd),
                 );
             }
         }
@@ -514,26 +531,26 @@ fn a2a_ll_body<L: A2aLayout>(
             if elems == 0 {
                 // nothing on the wire — the arrival signal still fires
                 let mut t = ctx
-                    .task(r, format!("{prefix}_recv[{r}<-{src}]"))
+                    .task(pr, format!("{prefix}_recv[{r}<-{src}]"))
                     .with_sms(1);
-                t.notify(r, bufs.sig(src), SigOp::Set, 1);
+                t.notify(pr, bufs.sig(src), SigOp::Set, 1);
                 pb.prog.push(t.build());
                 continue;
             }
             let mut t = ctx
-                .task(r, format!("{prefix}_recv[{r}<-{src}]"))
+                .task(pr, format!("{prefix}_recv[{r}<-{src}]"))
                 .with_sms(1)
                 .launch_overhead();
             for (off, len) in split_ranges(elems, cfg.split) {
-                t.recv_ll(bufs.ll_slot(src, r).sub(off, len));
+                t.recv_ll(bufs.ll_slot(src, r).sub(off, len).on_rank(pr));
             }
             t.op(Op::Compute {
                 cost: ComputeCost::MemBound {
                     bytes: ctx.bytes(elems) * 2.0,
                 },
                 numeric: NumericOp::Copy {
-                    src: bufs.ll_slot(src, r),
-                    dst: bufs.recv_slot(src, r),
+                    src: bufs.ll_slot(src, r).on_rank(pr),
+                    dst: bufs.recv_slot(src, r).on_rank(pr),
                 },
                 label: "a2a_unpack",
             });
@@ -542,7 +559,7 @@ fn a2a_ll_body<L: A2aLayout>(
                     secs: cfg.queue_overhead,
                 });
             }
-            t.notify(r, bufs.sig(src), SigOp::Set, 1);
+            t.notify(pr, bufs.sig(src), SigOp::Set, 1);
             pb.prog.push(t.build());
         }
     }
@@ -554,7 +571,8 @@ fn a2a_ll_body<L: A2aLayout>(
 /// Inter-node messages stripe across NIC rails (round-robin, or by live
 /// congestion under `RailPolicy::Adaptive`).
 pub fn a2a_ll(ctx: &ShmemCtx, bufs: &A2aBufs, pb: &mut ProgBuild, cfg: &A2aCfg) {
-    a2a_ll_body(ctx, bufs, pb, cfg, "a2a_ll", "a2a", None, |t, _src, _dst, idx| {
+    let view = WorldView::identity(ctx.n_pes());
+    a2a_ll_body(ctx, bufs, pb, cfg, "a2a_ll", "a2a", None, &view, |t, _src, _dst, idx| {
         t.stripe_rail(idx);
     })
 }
@@ -572,7 +590,23 @@ pub fn a2a_ll_var(
     cfg: &A2aCfg,
     gate: Option<usize>,
 ) {
-    a2a_ll_body(ctx, bufs, pb, cfg, "a2a_ll", "a2a", gate, |t, _src, _dst, idx| {
+    a2a_ll_var_on(ctx, bufs, pb, cfg, gate, &WorldView::identity(ctx.n_pes()))
+}
+
+/// [`a2a_ll_var`] over an explicit [`WorldView`] — the survivor-indexed
+/// form the elastic recovery controller re-plans with after a permanent
+/// rank/node death. The size table is logical (`view.world()` wide);
+/// tasks and buffers land on `view.phys(..)`. The identity view is
+/// bit-identical to [`a2a_ll_var`].
+pub fn a2a_ll_var_on(
+    ctx: &ShmemCtx,
+    bufs: &A2aVarBufs,
+    pb: &mut ProgBuild,
+    cfg: &A2aCfg,
+    gate: Option<usize>,
+    view: &WorldView,
+) {
+    a2a_ll_body(ctx, bufs, pb, cfg, "a2a_ll", "a2a", gate, view, |t, _src, _dst, idx| {
         t.stripe_rail(idx);
     })
 }
@@ -713,7 +747,8 @@ pub fn a2a_ep_rails(
 ) {
     let rails = ctx.cluster.fabric.rails;
     let home = |pe: usize| ctx.local_rank_of(pe) % rails;
-    a2a_ll_body(ctx, bufs, pb, cfg, "a2a_ep_rails", "a2a_ep", None, |t, src, dst, _idx| {
+    let view = WorldView::identity(ctx.n_pes());
+    a2a_ll_body(ctx, bufs, pb, cfg, "a2a_ep_rails", "a2a_ep", None, &view, |t, src, dst, _idx| {
         match dir {
             A2aEpDir::Dispatch => t.on_rails(home(src), home(src)),
             A2aEpDir::Combine => t.on_rails(home(src), home(dst)),
@@ -737,9 +772,27 @@ pub fn a2a_ep_rails_var(
     dir: A2aEpDir,
     gate: Option<usize>,
 ) {
+    a2a_ep_rails_var_on(ctx, bufs, pb, cfg, dir, gate, &WorldView::identity(ctx.n_pes()))
+}
+
+/// [`a2a_ep_rails_var`] over an explicit [`WorldView`] — the
+/// survivor-indexed EP dispatch/combine wire of the elastic recovery
+/// controller. Home planes are computed from **physical** local ranks
+/// (`view.phys`), so a survivor keeps its NIC plane even after logical
+/// renumbering; the identity view is bit-identical to
+/// [`a2a_ep_rails_var`].
+pub fn a2a_ep_rails_var_on(
+    ctx: &ShmemCtx,
+    bufs: &A2aVarBufs,
+    pb: &mut ProgBuild,
+    cfg: &A2aCfg,
+    dir: A2aEpDir,
+    gate: Option<usize>,
+    view: &WorldView,
+) {
     let rails = ctx.cluster.fabric.rails;
-    let home = |pe: usize| ctx.local_rank_of(pe) % rails;
-    a2a_ll_body(ctx, bufs, pb, cfg, "a2a_ep_rails", "a2a_ep", gate, |t, src, dst, _idx| {
+    let home = |l: usize| ctx.local_rank_of(view.phys(l)) % rails;
+    a2a_ll_body(ctx, bufs, pb, cfg, "a2a_ep_rails", "a2a_ep", gate, view, |t, src, dst, _idx| {
         match dir {
             A2aEpDir::Dispatch => t.on_rails(home(src), home(src)),
             A2aEpDir::Combine => t.on_rails(home(src), home(dst)),

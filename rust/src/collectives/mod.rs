@@ -73,6 +73,69 @@ impl ProgBuild {
     }
 }
 
+/// Logical→physical rank map for **survivor-indexed** program builders
+/// (elastic degraded-world recovery): a program is constructed over a
+/// dense *logical* world `0..world()` whose rank `l` is placed on
+/// physical rank `phys(l)` of the original (possibly larger) cluster.
+///
+/// The identity view is the normal case — every view-threaded builder
+/// called with [`WorldView::identity`] emits a program bit-identical to
+/// its un-viewed form (`phys(l) == l` makes every re-homing a no-op).
+/// After a permanent rank/node death the recovery controller builds a
+/// [`WorldView::survivors`] view and re-plans the collective over it:
+/// tasks, slices, and signals land only on surviving physical ranks, on
+/// the *original* topology and heap (dead ranks keep their heap space
+/// but are never addressed).
+///
+/// Logical indices drive program *structure* (size tables, signal ids,
+/// shifted send walks); physical ranks drive *placement* (task homes,
+/// slice ranks, rail planes).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorldView {
+    phys: Vec<usize>,
+}
+
+impl WorldView {
+    /// The trivial view: logical rank `l` is physical rank `l`.
+    pub fn identity(world: usize) -> Self {
+        WorldView {
+            phys: (0..world).collect(),
+        }
+    }
+
+    /// Survivor view over a `world`-sized cluster: logical ranks are the
+    /// physical ranks **not** listed in `dead`, in ascending order.
+    /// Panics if nobody survives — an unrecoverable plan is the caller's
+    /// error to surface, not a silent empty program.
+    pub fn survivors(world: usize, dead: &[usize]) -> Self {
+        let phys: Vec<usize> = (0..world).filter(|r| !dead.contains(r)).collect();
+        assert!(!phys.is_empty(), "no survivors: cannot build a world view");
+        WorldView { phys }
+    }
+
+    /// Logical world size (number of participating ranks).
+    pub fn world(&self) -> usize {
+        self.phys.len()
+    }
+
+    /// Physical rank hosting logical rank `l`.
+    pub fn phys(&self, l: usize) -> usize {
+        self.phys[l]
+    }
+
+    /// Logical index of physical rank `p`, `None` if `p` is not in the
+    /// view (dead, or outside the original world).
+    pub fn logical(&self, p: usize) -> Option<usize> {
+        self.phys.iter().position(|&q| q == p)
+    }
+
+    /// True when `phys(l) == l` for every logical rank (the bit-identity
+    /// fast path).
+    pub fn is_identity(&self) -> bool {
+        self.phys.iter().enumerate().all(|(l, &p)| l == p)
+    }
+}
+
 /// Upper bound of the signal footprint any ReduceScatter variant claims
 /// above [`RsBufs::sig_base`]: the intra scatter claims `ws`
 /// (`rs_push_intra`), `rs_inter` claims `lws + 2 * n_nodes`, and the
@@ -392,5 +455,27 @@ mod tests {
         let mut pb = ProgBuild::new();
         pb.claim_sigs("ag", 0, 8);
         pb.claim_sigs("rs", 4, 2);
+    }
+
+    #[test]
+    fn world_view_identity_and_survivors() {
+        let id = WorldView::identity(4);
+        assert!(id.is_identity());
+        assert_eq!(id.world(), 4);
+        assert_eq!(id.phys(3), 3);
+        assert_eq!(id.logical(2), Some(2));
+
+        let sv = WorldView::survivors(4, &[1]);
+        assert!(!sv.is_identity());
+        assert_eq!(sv.world(), 3);
+        assert_eq!((sv.phys(0), sv.phys(1), sv.phys(2)), (0, 2, 3));
+        assert_eq!(sv.logical(1), None, "dead rank has no logical index");
+        assert_eq!(sv.logical(3), Some(2));
+    }
+
+    #[test]
+    #[should_panic(expected = "no survivors")]
+    fn world_view_requires_survivors() {
+        let _ = WorldView::survivors(2, &[0, 1]);
     }
 }

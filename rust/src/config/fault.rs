@@ -36,6 +36,37 @@ pub enum FaultTarget {
     Spine { rail: usize },
     /// Every link on one rail plane: all NICs, leaf tiers, and spine.
     Rail { rail: usize },
+    /// Every link terminating at one GPU: NICs on all rails *plus* its
+    /// intra-node links and HBM port. Unlike the fabric-only targets
+    /// above this reaches intra-node links, so plans containing it are
+    /// excluded from the sharded engine (see `sim/par.rs`).
+    Rank { rank: usize },
+    /// Every link of every rank hosted on one node.
+    Node { node: usize },
+}
+
+/// Scope of a permanent endpoint death ([`Death`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeathScope {
+    /// One GPU dies (DSL: `die,<rank>,<t0>`).
+    Rank(usize),
+    /// A whole node dies — every rank it hosts at once
+    /// (DSL: `nodedead,<node>,<t0>`).
+    Node(usize),
+}
+
+/// A permanent endpoint failure: at `t` the scope's ranks stop forever —
+/// every link they terminate drops to zero capacity, in-flight flows
+/// touching them are killed, and their waiters are released with a
+/// structured `DeadPeer` error instead of hanging. Unlike a
+/// [`LinkFault`] there is no `t_end`: recovery means *re-planning over
+/// the survivor world* (the elastic controller in
+/// `coordinator::recover`), not waiting the fault out.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Death {
+    pub scope: DeathScope,
+    /// Virtual time of death (s).
+    pub t: f64,
 }
 
 /// One scheduled capacity change on part of the fabric.
@@ -99,6 +130,10 @@ pub struct Jitter {
 pub struct FaultPlan {
     /// Scheduled capacity changes, applied as DES events.
     pub link_faults: Vec<LinkFault>,
+    /// Permanent rank/node deaths, applied as DES events; a run that
+    /// touches a dead rank ends in a structured `DeadPeer` error that
+    /// the elastic recovery controller turns into a survivor re-plan.
+    pub deaths: Vec<Death>,
     /// Ranks with inflated compute durations.
     pub stragglers: Vec<Straggler>,
     /// Optional seeded latency jitter on every flow launch.
@@ -118,6 +153,7 @@ impl Default for FaultPlan {
     fn default() -> Self {
         FaultPlan {
             link_faults: Vec::new(),
+            deaths: Vec::new(),
             stragglers: Vec::new(),
             jitter: None,
             lt_timeout: f64::INFINITY,
@@ -135,7 +171,18 @@ impl FaultPlan {
     /// watchdog or retry budget with nothing to trigger it cannot
     /// perturb the timeline.
     pub fn is_empty(&self) -> bool {
-        self.link_faults.is_empty() && self.stragglers.is_empty() && self.jitter.is_none()
+        self.link_faults.is_empty()
+            && self.deaths.is_empty()
+            && self.stragglers.is_empty()
+            && self.jitter.is_none()
+    }
+
+    /// Does the plan schedule any permanent rank/node death? Such plans
+    /// are ineligible for the sharded engine (the survivor re-plan
+    /// crosses the lookahead barrier) and are routed to the elastic
+    /// recovery controller by `--recover`.
+    pub fn has_deaths(&self) -> bool {
+        !self.deaths.is_empty()
     }
 
     /// Backoff before retry attempt `attempt` (1-based), exponential and
@@ -161,14 +208,25 @@ impl FaultPlan {
     ///
     /// * `flap,nic,<rank>,<rail>,<t0>,<dur>` — NIC down interval
     /// * `flap,spine,<rail>,<t0>,<dur>` — spine-plane down interval
+    /// * `flap,rail,<rail>,<t0>,<dur>` — whole-rail down interval
     /// * `deg,nic,<rank>,<rail>,<t0>,<dur>,<factor>` — NIC degraded
     /// * `deg,spine,<rail>,<t0>,<dur>,<factor>` — spine degraded
+    /// * `deg,rail,<rail>,<t0>,<dur>,<factor>` — whole rail degraded
     /// * `raildead,<rail>,<t0>` — permanent whole-rail death
+    /// * `die,<rank>,<t0>` — permanent GPU death (rank leaves the world)
+    /// * `nodedead,<node>,<t0>` — permanent node death (all its ranks)
     /// * `strag,<rank>,<factor>` — straggler rank
     /// * `jitter,<seed>,<max_secs>` — seeded latency jitter
     ///
     /// Whitespace around separators is ignored; empty clauses are
-    /// skipped, so a trailing `;` is fine.
+    /// skipped, so a trailing `;` is fine. Malformed clauses (wrong
+    /// arity, unknown kind, non-numeric or negative fields) return a
+    /// structured `Err` naming the clause — never a panic.
+    ///
+    /// `parse` is the exact inverse of the [`Display`](struct.FaultPlan.html#impl-Display-for-FaultPlan)
+    /// rendering for the scheduled faults, provided the plan's interval
+    /// arithmetic is exact in f64 (`t_start + dur == t_end`); the
+    /// recovery knobs are not part of the DSL and come back as defaults.
     pub fn parse(s: &str) -> Result<FaultPlan, String> {
         let mut plan = FaultPlan::default();
         for clause in s.split(';') {
@@ -204,8 +262,27 @@ impl FaultPlan {
                         },
                         base + 1,
                     )),
+                    "rail" => Ok((
+                        FaultTarget::Rail {
+                            rail: usize_at(base)?,
+                        },
+                        base + 1,
+                    )),
+                    "rank" => Ok((
+                        FaultTarget::Rank {
+                            rank: usize_at(base)?,
+                        },
+                        base + 1,
+                    )),
+                    "node" => Ok((
+                        FaultTarget::Node {
+                            node: usize_at(base)?,
+                        },
+                        base + 1,
+                    )),
                     other => Err(format!(
-                        "fault clause '{clause}': unknown target '{other}' (nic|spine)"
+                        "fault clause '{clause}': unknown target '{other}' \
+                         (nic|spine|rail|rank|node)"
                     )),
                 }
             };
@@ -244,6 +321,22 @@ impl FaultPlan {
                         factor: 0.0,
                     });
                 }
+                "die" => {
+                    let (rank, t0) = (usize_at(1)?, f64_at(2)?);
+                    check_time(clause, t0, 0.0)?;
+                    plan.deaths.push(Death {
+                        scope: DeathScope::Rank(rank),
+                        t: t0,
+                    });
+                }
+                "nodedead" => {
+                    let (node, t0) = (usize_at(1)?, f64_at(2)?);
+                    check_time(clause, t0, 0.0)?;
+                    plan.deaths.push(Death {
+                        scope: DeathScope::Node(node),
+                        t: t0,
+                    });
+                }
                 "strag" => {
                     let (rank, factor) = (usize_at(1)?, f64_at(2)?);
                     if !(factor >= 1.0) {
@@ -270,7 +363,7 @@ impl FaultPlan {
                 other => {
                     return Err(format!(
                         "unknown fault kind '{other}' \
-                         (flap|deg|raildead|strag|jitter)"
+                         (flap|deg|raildead|die|nodedead|strag|jitter)"
                     ))
                 }
             }
@@ -283,6 +376,15 @@ impl FaultPlan {
     /// NIC/spine degradations, and the occasional straggler. The same
     /// `(seed, rate, world, rails, horizon)` always yields the same
     /// plan (CLI: `--fault-seed` / `--fault-rate`).
+    ///
+    /// **Recoverability contract**: this default tier never emits
+    /// permanent faults — no `die`, no `nodedead`, no `raildead`, and
+    /// every link fault has a finite `t_end` — so any program that
+    /// completes fault-free also completes under a synthesized plan
+    /// (possibly slower, via the kill-and-retry ladder). Plans that may
+    /// *not* recover without a survivor re-plan come only from
+    /// [`synthesize_severe`](Self::synthesize_severe) or an explicit
+    /// DSL string.
     pub fn synthesize(seed: u64, rate: f64, world: usize, rails: usize, horizon: f64) -> FaultPlan {
         assert!(rate >= 0.0 && rate.is_finite(), "fault rate must be >= 0");
         assert!(
@@ -332,6 +434,165 @@ impl FaultPlan {
             }
         }
         plan
+    }
+
+    /// The severe tier of [`synthesize`](Self::synthesize): same bounded
+    /// fault mix, but roughly a fifth of the draws escalate to
+    /// *permanent* faults — a rank `die`, a `nodedead`, or a `raildead`.
+    ///
+    /// **Recoverability contract**: severe plans may require the elastic
+    /// recovery controller (`coordinator::recover`) to complete, but
+    /// they are always *recoverable by it*: at most **one** rank/node
+    /// death is emitted per plan (so the survivor world is never empty
+    /// and single-epoch re-planning suffices), a node death is only
+    /// drawn when `nodes > 1`, and `raildead` is only drawn when
+    /// `rails > 1` (an alive plane always remains for adaptive rerouting
+    /// or retries). Deterministic in
+    /// `(seed, rate, world, nodes, rails, horizon)`
+    /// (CLI: `--fault-severe`).
+    pub fn synthesize_severe(
+        seed: u64,
+        rate: f64,
+        world: usize,
+        nodes: usize,
+        rails: usize,
+        horizon: f64,
+    ) -> FaultPlan {
+        assert!(rate >= 0.0 && rate.is_finite(), "fault rate must be >= 0");
+        assert!(
+            horizon > 0.0 && horizon.is_finite(),
+            "fault horizon must be finite and > 0"
+        );
+        let mut rng = Rng::new(seed ^ 0x0D1E_5EED_u64.rotate_left(13));
+        let mut plan = FaultPlan::default();
+        let n = (rate * world as f64).round() as usize;
+        let mut death_spent = false;
+        for _ in 0..n {
+            let t0 = rng.f64() * horizon * 0.8;
+            let dur = (0.05 + 0.25 * rng.f64()) * horizon;
+            let rail = rng.usize_in(0, rails.max(1));
+            match rng.gen_range(10) {
+                0..=3 => {
+                    let rank = rng.usize_in(0, world);
+                    plan.link_faults
+                        .push(LinkFault::flap(FaultTarget::Nic { rank, rail }, t0, dur));
+                }
+                4..=5 => {
+                    let rank = rng.usize_in(0, world);
+                    let factor = 0.1 + 0.7 * rng.f64();
+                    plan.link_faults.push(LinkFault::degrade(
+                        FaultTarget::Nic { rank, rail },
+                        t0,
+                        dur,
+                        factor,
+                    ));
+                }
+                6 => {
+                    let factor = 0.1 + 0.7 * rng.f64();
+                    plan.link_faults.push(LinkFault::degrade(
+                        FaultTarget::Spine { rail },
+                        t0,
+                        dur,
+                        factor,
+                    ));
+                }
+                7 => {
+                    let rank = rng.usize_in(0, world);
+                    plan.stragglers.push(Straggler {
+                        rank,
+                        factor: 1.1 + rng.f64(),
+                    });
+                }
+                // permanent faults: one death budget per plan, rail
+                // death only where another plane survives
+                _ => {
+                    if !death_spent && world > 1 {
+                        death_spent = true;
+                        let scope = if nodes > 1 && rng.gen_range(2) == 1 {
+                            DeathScope::Node(rng.usize_in(0, nodes))
+                        } else {
+                            DeathScope::Rank(rng.usize_in(0, world))
+                        };
+                        plan.deaths.push(Death { scope, t: t0 });
+                    } else if rails > 1 {
+                        plan.link_faults.push(LinkFault {
+                            target: FaultTarget::Rail { rail },
+                            t_start: t0,
+                            t_end: f64::INFINITY,
+                            factor: 0.0,
+                        });
+                    } else {
+                        let rank = rng.usize_in(0, world);
+                        plan.link_faults
+                            .push(LinkFault::flap(FaultTarget::Nic { rank, rail }, t0, dur));
+                    }
+                }
+            }
+        }
+        plan
+    }
+}
+
+/// Render the plan back into the `--faults` DSL it parses from. The
+/// scheduled faults round-trip exactly —
+/// `FaultPlan::parse(&plan.to_string())` reproduces `link_faults`,
+/// `deaths`, `stragglers`, and `jitter` bit-for-bit — whenever the
+/// interval arithmetic is exact in f64 (`t_start + (t_end - t_start) ==
+/// t_end`; always true for dyadic-rational times and for permanent
+/// `t_end = inf`). The recovery knobs (`lt_timeout`, `retry_max`,
+/// `retry_backoff`) are CLI flags, not DSL clauses, and are not
+/// rendered.
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut sep = "";
+        let mut clause = |f: &mut std::fmt::Formatter<'_>, s: String| {
+            let r = write!(f, "{sep}{s}");
+            sep = "; ";
+            r
+        };
+        for lf in &self.link_faults {
+            let target = match lf.target {
+                FaultTarget::Nic { rank, rail } => format!("nic,{rank},{rail}"),
+                FaultTarget::Spine { rail } => format!("spine,{rail}"),
+                FaultTarget::Rail { rail } => format!("rail,{rail}"),
+                FaultTarget::Rank { rank } => format!("rank,{rank}"),
+                FaultTarget::Node { node } => format!("node,{node}"),
+            };
+            let s = if lf.factor == 0.0
+                && lf.t_end.is_infinite()
+                && matches!(lf.target, FaultTarget::Rail { .. })
+            {
+                let rail = match lf.target {
+                    FaultTarget::Rail { rail } => rail,
+                    _ => unreachable!(),
+                };
+                format!("raildead,{rail},{}", lf.t_start)
+            } else if lf.factor == 0.0 {
+                format!("flap,{target},{},{}", lf.t_start, lf.t_end - lf.t_start)
+            } else {
+                format!(
+                    "deg,{target},{},{},{}",
+                    lf.t_start,
+                    lf.t_end - lf.t_start,
+                    lf.factor
+                )
+            };
+            clause(f, s)?;
+        }
+        for d in &self.deaths {
+            let s = match d.scope {
+                DeathScope::Rank(rank) => format!("die,{rank},{}", d.t),
+                DeathScope::Node(node) => format!("nodedead,{node},{}", d.t),
+            };
+            clause(f, s)?;
+        }
+        for s in &self.stragglers {
+            clause(f, format!("strag,{},{}", s.rank, s.factor))?;
+        }
+        if let Some(j) = &self.jitter {
+            clause(f, format!("jitter,{},{}", j.seed, j.max_secs))?;
+        }
+        Ok(())
     }
 }
 
@@ -424,6 +685,102 @@ mod tests {
         assert_eq!(p.straggle_factor(0), 1.0);
         assert_eq!(p.straggle_factor(3), 1.25);
         assert!((p.straggle_factor(2) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_permanent_deaths() {
+        let p = FaultPlan::parse("die,3,1e-3; nodedead,1,2e-3").unwrap();
+        assert!(p.has_deaths());
+        assert_eq!(
+            p.deaths,
+            vec![
+                Death {
+                    scope: DeathScope::Rank(3),
+                    t: 1e-3
+                },
+                Death {
+                    scope: DeathScope::Node(1),
+                    t: 2e-3
+                },
+            ]
+        );
+        // deaths alone make the plan non-empty (bit-identity gate)
+        assert!(!p.is_empty());
+        // malformed death clauses: structured errors, never panics
+        assert!(FaultPlan::parse("die,3").is_err());
+        assert!(FaultPlan::parse("die,x,1e-3").is_err());
+        assert!(FaultPlan::parse("die,3,-1").is_err());
+        assert!(FaultPlan::parse("nodedead,0,nan").is_err());
+    }
+
+    #[test]
+    fn display_roundtrips_through_parse() {
+        let spec = "flap,nic,3,1,0.001,0.002; deg,spine,0,0.0005,0.001,0.25; \
+                    raildead,1,0.004; flap,rail,0,0.001,0.002; \
+                    die,3,0.001; nodedead,1,0.002; strag,5,1.5; jitter,42,0.000001";
+        let p = FaultPlan::parse(spec).unwrap();
+        let q = FaultPlan::parse(&p.to_string()).unwrap();
+        assert_eq!(p, q, "display must round-trip:\n  {p}");
+        // rank/node-scoped link faults render and parse too
+        let p = FaultPlan::parse("flap,rank,2,0.001,0.002; deg,node,1,0.001,0.002,0.5").unwrap();
+        assert_eq!(
+            p.link_faults[0].target,
+            FaultTarget::Rank { rank: 2 }
+        );
+        assert_eq!(
+            p.link_faults[1].target,
+            FaultTarget::Node { node: 1 }
+        );
+        assert_eq!(FaultPlan::parse(&p.to_string()).unwrap(), p);
+    }
+
+    #[test]
+    fn synthesize_default_tier_never_emits_permanent_faults() {
+        for seed in 0..64u64 {
+            let p = FaultPlan::synthesize(seed, 1.0, 16, 2, 1e-2);
+            assert!(p.deaths.is_empty(), "seed {seed} emitted a death");
+            for lf in &p.link_faults {
+                assert!(
+                    lf.t_end.is_finite(),
+                    "seed {seed} emitted a permanent link fault"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn synthesize_severe_caps_deaths_and_is_deterministic() {
+        let a = FaultPlan::synthesize_severe(7, 1.0, 16, 2, 2, 1e-2);
+        let b = FaultPlan::synthesize_severe(7, 1.0, 16, 2, 2, 1e-2);
+        assert_eq!(a, b);
+        let mut saw_death = false;
+        for seed in 0..64u64 {
+            let p = FaultPlan::synthesize_severe(seed, 1.0, 16, 2, 2, 1e-2);
+            assert!(p.deaths.len() <= 1, "seed {seed}: more than one death");
+            saw_death |= !p.deaths.is_empty();
+            for d in &p.deaths {
+                match d.scope {
+                    DeathScope::Rank(r) => assert!(r < 16),
+                    DeathScope::Node(n) => assert!(n < 2),
+                }
+            }
+            // permanent rail faults only with an alive plane remaining
+            let single_rail = FaultPlan::synthesize_severe(seed, 1.0, 16, 2, 1, 1e-2);
+            for lf in &single_rail.link_faults {
+                assert!(
+                    !(lf.t_end.is_infinite()
+                        && matches!(lf.target, FaultTarget::Rail { .. })),
+                    "seed {seed}: raildead on a single-rail fabric"
+                );
+            }
+        }
+        assert!(saw_death, "severe tier never escalated in 64 seeds");
+        // a 1-rank world cannot lose its only rank
+        for seed in 0..16u64 {
+            assert!(FaultPlan::synthesize_severe(seed, 4.0, 1, 1, 1, 1e-2)
+                .deaths
+                .is_empty());
+        }
     }
 
     #[test]

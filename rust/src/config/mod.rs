@@ -7,7 +7,7 @@
 
 pub mod fault;
 
-pub use fault::{FaultPlan, FaultTarget, Jitter, LinkFault, Straggler};
+pub use fault::{Death, DeathScope, FaultPlan, FaultTarget, Jitter, LinkFault, Straggler};
 
 /// Accelerator family being simulated.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

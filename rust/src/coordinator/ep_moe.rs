@@ -22,11 +22,11 @@
 //! conservation proof.
 
 use crate::collectives::alltoall::{
-    a2a_ep_rails_var, A2aCfg, A2aEpDir, A2aSizes, A2aVarBufs, EpRouting,
+    a2a_ep_rails_var_on, A2aCfg, A2aEpDir, A2aSizes, A2aVarBufs, EpRouting,
 };
-use crate::collectives::ProgBuild;
+use crate::collectives::{ProgBuild, WorldView};
 use crate::config::{ClusterSpec, MoeShape};
-use crate::kernels::exec::matmul;
+use crate::kernels::exec::{matmul, FixedPlan};
 use crate::kernels::names::EpGeom;
 use crate::mem::{BufId, Slice, SymmetricHeap};
 use crate::program::{ComputeCost, NumericOp, Op, SigCond, SigOp};
@@ -43,8 +43,11 @@ pub enum EpMoeVariant {
     TokenRouted,
     /// Fixed-capacity baseline: every (src, dst) message padded to
     /// `e_local * cap_src` rows and the FFN to the matching padded row
-    /// count, independent of routing (timing-only — the generous-buffer
-    /// policy `coordinator::moe::capacity` applies globally).
+    /// count, independent of routing. Carries full numerics through the
+    /// `ep_*_fixed` kernel family (zero-padded slots, deterministic
+    /// overflow drop beyond `cap_src` per (source, expert)); with
+    /// generous caps its outputs are **bitwise equal** to
+    /// [`EpMoeVariant::TokenRouted`].
     FixedCapacity,
 }
 
@@ -72,6 +75,9 @@ pub struct EpMoeBufs {
     pub geom: EpGeom,
     pub e_local: usize,
     pub variant: EpMoeVariant,
+    /// Per-(source, expert) slot cap of the fixed-capacity wire (also
+    /// computed for the token-routed variant, where it is unused).
+    pub cap_src: usize,
 }
 
 /// Generate the routing summary for `cluster`/`shape` (the step that, on
@@ -115,8 +121,31 @@ pub fn build_ep_moe_cfg(
     variant: EpMoeVariant,
     a2a: &A2aCfg,
 ) -> (BuiltOp, EpMoeBufs) {
+    let view = WorldView::identity(cluster.world_size());
+    build_ep_moe_view(cluster, shape, routing, variant, a2a, &view)
+}
+
+/// [`build_ep_moe_cfg`] over an explicit [`WorldView`] — the
+/// survivor-indexed form the elastic recovery controller re-plans with
+/// after a permanent rank/node death. The routing table, size tables,
+/// and signal map are *logical* (`view.world()` wide, which must equal
+/// `routing.geom.w`); tasks, slices, and rail homes land on the
+/// surviving **physical** ranks of the original cluster. The identity
+/// view is bit-identical to [`build_ep_moe_cfg`].
+pub fn build_ep_moe_view(
+    cluster: ClusterSpec,
+    shape: MoeShape,
+    routing: &EpRouting,
+    variant: EpMoeVariant,
+    a2a: &A2aCfg,
+    view: &WorldView,
+) -> (BuiltOp, EpMoeBufs) {
     let (ctx, _t) = setup(cluster);
-    let ws = ctx.n_pes();
+    let ws = view.world();
+    assert!(
+        (0..ws).all(|l| view.phys(l) < ctx.n_pes()),
+        "world view addresses ranks outside the cluster"
+    );
     let geom = routing.geom;
     assert_eq!(geom.w, ws, "routing table built for a different world");
     let EpGeom { t, h, f, e, k, .. } = geom;
@@ -142,7 +171,9 @@ pub fn build_ep_moe_cfg(
     let comb_gate = 2 * ws + 1;
     let counts_base = 2 * ws + 2;
 
-    let mut heap = SymmetricHeap::new(ws, 3 * ws + 8);
+    // the heap stays physical-world-sized: a survivor re-plan keeps the
+    // dead ranks' heap space but never addresses it
+    let mut heap = SymmetricHeap::new(ctx.n_pes(), 3 * ws + 8);
     let tokens = heap.alloc("ep_tokens", t * h);
     let idx = heap.alloc("ep_topk_idx", ws * t * k);
     let gate = heap.alloc("ep_topk_gate", ws * t * k);
@@ -179,17 +210,24 @@ pub fn build_ep_moe_cfg(
     // both have finished.
     if variant == EpMoeVariant::TokenRouted {
         for r in 0..ws {
+            let pr = view.phys(r);
             let mut cnt = ctx
-                .task(r, format!("ep_counts[{r}]"))
+                .task(pr, format!("ep_counts[{r}]"))
                 .with_sms(1)
                 .launch_overhead();
-            let row = Slice::new(r, counts, r * e_local, e_local);
+            let row = Slice::new(pr, counts, r * e_local, e_local);
             for i in 1..ws {
                 let dst = (r + i) % ws;
-                cnt.putmem_signal_nbi(row, row.on_rank(dst), counts_base + r, SigOp::Set, 1);
+                cnt.putmem_signal_nbi(
+                    row,
+                    row.on_rank(view.phys(dst)),
+                    counts_base + r,
+                    SigOp::Set,
+                    1,
+                );
             }
             // own counts are locally available immediately
-            cnt.notify(r, counts_base + r, SigOp::Set, 1);
+            cnt.notify(pr, counts_base + r, SigOp::Set, 1);
             cnt.quiet();
             pb.prog.push(cnt.build());
         }
@@ -197,9 +235,10 @@ pub fn build_ep_moe_cfg(
 
     // 1. per-rank routing + dispatch pack into the packed send buffer
     for r in 0..ws {
+        let pr = view.phys(r);
         let send_elems = disp.sizes.send_total(r);
         let mut pack = ctx
-            .task(r, format!("ep_pack[{r}]"))
+            .task(pr, format!("ep_pack[{r}]"))
             .with_sms(1)
             .launch_overhead();
         pack.op(Op::Sleep {
@@ -209,16 +248,16 @@ pub fn build_ep_moe_cfg(
             cost: ComputeCost::MemBound {
                 bytes: ctx.bytes(2 * send_elems),
             },
-            numeric: match variant {
-                EpMoeVariant::TokenRouted => NumericOp::Call {
-                    entry: geom.dispatch_name(r),
-                    args: vec![
-                        Slice::new(r, tokens, 0, t * h),
-                        Slice::new(r, idx, 0, ws * t * k),
-                    ],
-                    outs: (0..ws).map(|d| disp.send_chunk(d, r)).collect(),
+            numeric: NumericOp::Call {
+                entry: match variant {
+                    EpMoeVariant::TokenRouted => geom.dispatch_name(r),
+                    EpMoeVariant::FixedCapacity => geom.dispatch_fixed_name(cap_src, r),
                 },
-                EpMoeVariant::FixedCapacity => NumericOp::None,
+                args: vec![
+                    Slice::new(pr, tokens, 0, t * h),
+                    Slice::new(pr, idx, 0, ws * t * k),
+                ],
+                outs: (0..ws).map(|d| disp.send_chunk(d, r).on_rank(pr)).collect(),
             },
             label: "ep_dispatch_pack",
         });
@@ -230,21 +269,22 @@ pub fn build_ep_moe_cfg(
                 pack.signal_wait_until(counts_base + src, SigCond::Ge, 1);
             }
         }
-        pack.notify(r, disp_gate, SigOp::Set, 1);
+        pack.notify(pr, disp_gate, SigOp::Set, 1);
         pb.prog.push(pack.build());
     }
 
     // 2. railed dispatch: every message pinned to the sender's home
     // plane end to end, sized by the routing summary
-    a2a_ep_rails_var(&ctx, &disp, &mut pb, &cfg, A2aEpDir::Dispatch, Some(disp_gate));
+    a2a_ep_rails_var_on(&ctx, &disp, &mut pb, &cfg, A2aEpDir::Dispatch, Some(disp_gate), view);
 
     // 3. grouped expert FFN sized by the *actual* received token counts
     for r in 0..ws {
+        let pr = view.phys(r);
         let n_rows = disp.sizes.recv_total(r) / h.max(1);
         let util = group_gemm_utilization(n_rows as f64 / e_local as f64);
         let flops = 2.0 * n_rows as f64 * h as f64 * f as f64 / util;
         let mut ffn = ctx
-            .task(r, format!("ep_ffn[{r}]"))
+            .task(pr, format!("ep_ffn[{r}]"))
             .with_sms(ffn_sms)
             .launch_overhead();
         for src in 0..ws {
@@ -258,33 +298,34 @@ pub fn build_ep_moe_cfg(
                 flops,
                 vendor: false,
             },
-            numeric: match variant {
-                EpMoeVariant::TokenRouted => NumericOp::Call {
-                    entry: geom.ffn_name(r),
-                    args: vec![
-                        Slice::new(r, disp.recv, 0, disp.sizes.recv_total(r)),
-                        Slice::new(r, idx, 0, ws * t * k),
-                        Slice::new(r, weight, 0, e_local * h * f),
-                    ],
-                    outs: vec![Slice::new(r, comb.send, 0, comb.sizes.send_total(r))],
+            numeric: NumericOp::Call {
+                entry: match variant {
+                    EpMoeVariant::TokenRouted => geom.ffn_name(r),
+                    EpMoeVariant::FixedCapacity => geom.ffn_fixed_name(cap_src, r),
                 },
-                EpMoeVariant::FixedCapacity => NumericOp::None,
+                args: vec![
+                    Slice::new(pr, disp.recv, 0, disp.sizes.recv_total(r)),
+                    Slice::new(pr, idx, 0, ws * t * k),
+                    Slice::new(pr, weight, 0, e_local * h * f),
+                ],
+                outs: vec![Slice::new(pr, comb.send, 0, comb.sizes.send_total(r))],
             },
             label: "ep_group_ffn",
         });
-        ffn.notify(r, comb_gate, SigOp::Set, 1);
+        ffn.notify(pr, comb_gate, SigOp::Set, 1);
         pb.prog.push(ffn.build());
     }
 
     // 4. combine: each message leaves on the expert rank's home plane
     // and crosses into the token owner's plane (Rails { tx, rx })
-    a2a_ep_rails_var(&ctx, &comb, &mut pb, &cfg, A2aEpDir::Combine, Some(comb_gate));
+    a2a_ep_rails_var_on(&ctx, &comb, &mut pb, &cfg, A2aEpDir::Combine, Some(comb_gate), view);
 
     // 5. gate-weighted reduction into the token owner's output
     for r in 0..ws {
+        let pr = view.phys(r);
         let m_elems = comb.sizes.recv_total(r);
         let mut red = ctx
-            .task(r, format!("ep_combine[{r}]"))
+            .task(pr, format!("ep_combine[{r}]"))
             .with_sms(4)
             .launch_overhead();
         for src in 0..ws {
@@ -294,17 +335,17 @@ pub fn build_ep_moe_cfg(
             cost: ComputeCost::Reduce {
                 bytes: ctx.bytes(m_elems + t * f),
             },
-            numeric: match variant {
-                EpMoeVariant::TokenRouted => NumericOp::Call {
-                    entry: geom.combine_name(r),
-                    args: vec![
-                        Slice::new(r, comb.recv, 0, m_elems),
-                        Slice::new(r, idx, 0, ws * t * k),
-                        Slice::new(r, gate, 0, ws * t * k),
-                    ],
-                    outs: vec![Slice::new(r, output, 0, t * f)],
+            numeric: NumericOp::Call {
+                entry: match variant {
+                    EpMoeVariant::TokenRouted => geom.combine_name(r),
+                    EpMoeVariant::FixedCapacity => geom.combine_fixed_name(cap_src, r),
                 },
-                EpMoeVariant::FixedCapacity => NumericOp::None,
+                args: vec![
+                    Slice::new(pr, comb.recv, 0, m_elems),
+                    Slice::new(pr, idx, 0, ws * t * k),
+                    Slice::new(pr, gate, 0, ws * t * k),
+                ],
+                outs: vec![Slice::new(pr, output, 0, t * f)],
             },
             label: "ep_token_combine",
         });
@@ -323,6 +364,7 @@ pub fn build_ep_moe_cfg(
         geom,
         e_local,
         variant,
+        cap_src,
     };
     let op = BuiltOp {
         ctx,
@@ -336,16 +378,44 @@ pub fn build_ep_moe_cfg(
 /// Seed tokens and expert weights (rank-local) and replicate the routing
 /// tables — the state the metadata exchange distributes before dispatch.
 pub fn fill_ep_moe(heap: &mut SymmetricHeap, bufs: &EpMoeBufs, routing: &EpRouting, seed: u64) {
-    let ws = heap.world();
+    fill_ep_moe_view(heap, bufs, routing, seed, &WorldView::identity(bufs.geom.w))
+}
+
+/// [`fill_ep_moe`] over an explicit [`WorldView`]. Seeding is chosen so a
+/// survivor re-plan restores exactly the state a real elastic system
+/// recovers:
+/// * **tokens** come from a per-*physical*-rank stream — each survivor
+///   keeps its own tokens unchanged across the re-shard;
+/// * **expert weights** come from one stream per *global expert*, so an
+///   expert re-homed to a survivor regenerates bit-identical weights
+///   (the checkpoint/replica-restore a re-shard performs).
+pub fn fill_ep_moe_view(
+    heap: &mut SymmetricHeap,
+    bufs: &EpMoeBufs,
+    routing: &EpRouting,
+    seed: u64,
+    view: &WorldView,
+) {
+    let g = bufs.geom;
     let idx_f: Vec<f32> = routing.idx.iter().map(|&i| i as f32).collect();
-    for r in 0..ws {
-        heap.write(Slice::new(r, bufs.idx, 0, idx_f.len()), &idx_f);
-        heap.write(Slice::new(r, bufs.gate, 0, routing.gate.len()), &routing.gate);
-        let mut rng = Rng::new(seed ^ ((r as u64) << 17) ^ 0xE9);
+    for l in 0..g.w {
+        let pr = view.phys(l);
+        heap.write(Slice::new(pr, bufs.idx, 0, idx_f.len()), &idx_f);
+        heap.write(Slice::new(pr, bufs.gate, 0, routing.gate.len()), &routing.gate);
+        let mut rng = Rng::new(seed ^ ((pr as u64) << 17) ^ 0xE9);
         let toks = rng.normal_vec(heap.buf_len(bufs.tokens));
-        heap.write(Slice::new(r, bufs.tokens, 0, toks.len()), &toks);
-        let w = rng.normal_vec(heap.buf_len(bufs.weight));
-        heap.write(Slice::new(r, bufs.weight, 0, w.len()), &w);
+        heap.write(Slice::new(pr, bufs.tokens, 0, toks.len()), &toks);
+        for el in 0..bufs.e_local {
+            let ei = l * bufs.e_local + el;
+            if ei >= g.e {
+                break;
+            }
+            let mut wrng = Rng::new(seed ^ ((ei as u64) << 29) ^ 0x77E1);
+            heap.write(
+                Slice::new(pr, bufs.weight, el * g.h * g.f, g.h * g.f),
+                &wrng.normal_vec(g.h * g.f),
+            );
+        }
     }
 }
 
@@ -357,8 +427,55 @@ pub fn reference_ep_moe(
     bufs: &EpMoeBufs,
     routing: &EpRouting,
 ) -> Vec<Vec<f32>> {
+    reference_ep_moe_view(heap, bufs, routing, &WorldView::identity(bufs.geom.w))
+}
+
+/// [`reference_ep_moe`] over an explicit [`WorldView`]: logical rank
+/// `r`'s tokens and logical expert rank `d`'s weights are read from
+/// their physical homes.
+pub fn reference_ep_moe_view(
+    heap: &SymmetricHeap,
+    bufs: &EpMoeBufs,
+    routing: &EpRouting,
+    view: &WorldView,
+) -> Vec<Vec<f32>> {
     let g = bufs.geom;
     let plan = routing.plan();
+    let e_local = bufs.e_local;
+    (0..g.w)
+        .map(|r| {
+            let toks = heap.read(Slice::new(view.phys(r), bufs.tokens, 0, g.t * g.h));
+            let mut out = vec![0.0f32; g.t * g.f];
+            for ti in 0..g.t {
+                for ki in 0..g.k {
+                    let gi = (r * g.t + ti) * g.k + ki;
+                    let Some(d) = plan.dst_of(gi) else { continue };
+                    let el = routing.idx[gi] - d * e_local;
+                    let w = heap
+                        .read(Slice::new(view.phys(d), bufs.weight, el * g.h * g.f, g.h * g.f));
+                    let row = matmul(&toks[ti * g.h..(ti + 1) * g.h], w, 1, g.h, g.f);
+                    let gv = routing.gate[gi];
+                    for (o, &v) in out[ti * g.f..(ti + 1) * g.f].iter_mut().zip(&row) {
+                        *o += gv * v;
+                    }
+                }
+            }
+            out
+        })
+        .collect()
+}
+
+/// Reference output of the **fixed-capacity** pipeline: same walk as
+/// [`reference_ep_moe`] but gated on the [`FixedPlan`] slot claim
+/// (per-(source, expert) cap, overflow dropped) instead of the global
+/// capacity claim — bitwise comparable to the `ep_*_fixed` kernels.
+pub fn reference_ep_moe_fixed(
+    heap: &SymmetricHeap,
+    bufs: &EpMoeBufs,
+    routing: &EpRouting,
+) -> Vec<Vec<f32>> {
+    let g = bufs.geom;
+    let plan = FixedPlan::build(&routing.idx, g, bufs.cap_src);
     let e_local = bufs.e_local;
     (0..g.w)
         .map(|r| {
@@ -367,8 +484,10 @@ pub fn reference_ep_moe(
             for ti in 0..g.t {
                 for ki in 0..g.k {
                     let gi = (r * g.t + ti) * g.k + ki;
-                    let Some(d) = plan.dst_of(gi) else { continue };
-                    let el = routing.idx[gi] - d * e_local;
+                    if plan.slot_of(gi).is_none() {
+                        continue;
+                    }
+                    let (d, el) = (routing.idx[gi] / e_local, routing.idx[gi] % e_local);
                     let w = heap.read(Slice::new(d, bufs.weight, el * g.h * g.f, g.h * g.f));
                     let row = matmul(&toks[ti * g.h..(ti + 1) * g.h], w, 1, g.h, g.f);
                     let gv = routing.gate[gi];
@@ -382,49 +501,98 @@ pub fn reference_ep_moe(
         .collect()
 }
 
-/// Verify the token-routed pipeline: (1) exact token conservation — the
-/// packed dispatch landing zone of every expert rank holds precisely the
-/// kept routed rows, in plan order, each exactly once; (2) the final
-/// outputs equal [`reference_ep_moe`] with **no tolerance** (identical
-/// f32 operation order end to end).
+/// Verify the pipeline numerics for either variant: (1) exact token
+/// conservation — every expert rank's dispatch landing zone holds
+/// precisely the kept routed rows (packed in plan order for
+/// [`EpMoeVariant::TokenRouted`]; zero-padded per-(source, expert)
+/// slots for [`EpMoeVariant::FixedCapacity`]); (2) the final outputs
+/// equal the matching reference with **no tolerance** (identical f32
+/// operation order end to end).
 pub fn verify_ep_moe(
     heap: &SymmetricHeap,
     bufs: &EpMoeBufs,
     routing: &EpRouting,
     expected: &[Vec<f32>],
 ) -> Result<(), String> {
-    assert_eq!(
-        bufs.variant,
-        EpMoeVariant::TokenRouted,
-        "only the token-routed variant carries numerics"
-    );
+    verify_ep_moe_view(heap, bufs, routing, expected, &WorldView::identity(bufs.geom.w))
+}
+
+/// [`verify_ep_moe`] over an explicit [`WorldView`]: logical rank `r`'s
+/// buffers are read from their physical homes, so a survivor re-plan
+/// can be verified on the original (larger) physical heap.
+pub fn verify_ep_moe_view(
+    heap: &SymmetricHeap,
+    bufs: &EpMoeBufs,
+    routing: &EpRouting,
+    expected: &[Vec<f32>],
+    view: &WorldView,
+) -> Result<(), String> {
     let g = bufs.geom;
-    let plan = routing.plan();
-    for d in 0..g.w {
-        let mut exp = Vec::new();
-        for src in 0..g.w {
-            let toks = heap.read(Slice::new(src, bufs.tokens, 0, g.t * g.h));
-            for p in 0..g.t * g.k {
-                let gi = src * g.t * g.k + p;
-                if plan.dst_of(gi) == Some(d) {
-                    let ti = p / g.k;
-                    exp.extend_from_slice(&toks[ti * g.h..(ti + 1) * g.h]);
+    match bufs.variant {
+        EpMoeVariant::TokenRouted => {
+            let plan = routing.plan();
+            for d in 0..g.w {
+                let mut exp = Vec::new();
+                for src in 0..g.w {
+                    let toks =
+                        heap.read(Slice::new(view.phys(src), bufs.tokens, 0, g.t * g.h));
+                    for p in 0..g.t * g.k {
+                        let gi = src * g.t * g.k + p;
+                        if plan.dst_of(gi) == Some(d) {
+                            let ti = p / g.k;
+                            exp.extend_from_slice(&toks[ti * g.h..(ti + 1) * g.h]);
+                        }
+                    }
+                }
+                let got = heap.read(Slice::new(view.phys(d), bufs.disp.recv, 0, exp.len()));
+                if got != exp {
+                    return Err(format!(
+                        "token conservation violated: expert rank {d} landing zone \
+                         does not match the routed rows"
+                    ));
+                }
+                if exp.len() != plan.recv_total(d) * g.h {
+                    return Err(format!("expert rank {d} received a wrong row count"));
                 }
             }
         }
-        let got = heap.read(Slice::new(d, bufs.disp.recv, 0, exp.len()));
-        if got != exp {
-            return Err(format!(
-                "token conservation violated: expert rank {d} landing zone \
-                 does not match the routed rows"
-            ));
-        }
-        if exp.len() != plan.recv_total(d) * g.h {
-            return Err(format!("expert rank {d} received a wrong row count"));
+        EpMoeVariant::FixedCapacity => {
+            // fixed wire: each (src -> d) chunk is e_local slot blocks of
+            // cap_src zero-padded rows; verify the padded layout exactly
+            let plan = FixedPlan::build(&routing.idx, g, bufs.cap_src);
+            let e_local = bufs.e_local;
+            let cs = bufs.cap_src;
+            let chunk = e_local * cs * g.h;
+            for d in 0..g.w {
+                let mut exp = vec![0.0f32; g.w * chunk];
+                for src in 0..g.w {
+                    let toks =
+                        heap.read(Slice::new(view.phys(src), bufs.tokens, 0, g.t * g.h));
+                    for p in 0..g.t * g.k {
+                        let gi = src * g.t * g.k + p;
+                        let Some(s) = plan.slot_of(gi) else { continue };
+                        if routing.idx[gi] / e_local != d {
+                            continue;
+                        }
+                        let el = routing.idx[gi] % e_local;
+                        let ti = p / g.k;
+                        let off = src * chunk + (el * cs + s) * g.h;
+                        exp[off..off + g.h]
+                            .copy_from_slice(&toks[ti * g.h..(ti + 1) * g.h]);
+                    }
+                }
+                let got = heap.read(Slice::new(view.phys(d), bufs.disp.recv, 0, exp.len()));
+                if got != exp {
+                    return Err(format!(
+                        "token conservation violated: expert rank {d} fixed landing \
+                         zone does not match the padded slot layout"
+                    ));
+                }
+            }
         }
     }
     for (r, exp) in expected.iter().enumerate() {
-        let got = heap.read(Slice::new(r, bufs.output, 0, exp.len()));
+        let got = heap.read(Slice::new(view.phys(r), bufs.output, 0, exp.len()));
         if got != exp.as_slice() {
             let i = got
                 .iter()
@@ -520,6 +688,40 @@ mod tests {
         assert!(
             routed < fixed,
             "token-routed {routed} must beat fixed-capacity {fixed}"
+        );
+    }
+
+    #[test]
+    fn fixed_capacity_numerics_match_token_routed_bitwise() {
+        // generous caps (factor 8 == e, so cap_src >= t*k and the global
+        // cap never drops): the padded fixed-capacity pipeline must be
+        // bit-for-bit identical to the token-routed one
+        let cluster = ClusterSpec::h800(2, 2);
+        let shape = small_shape().with_capacity_factor(8.0);
+        let routing = routing_for(cluster, &shape, 5);
+        assert_eq!(routing.dropped(), 0, "generous cap must not drop");
+        let topo = Topology::build(cluster);
+        let run = |variant| {
+            let (mut op, bufs) = build_ep_moe(cluster, shape, &routing, variant);
+            fill_ep_moe(&mut op.heap, &bufs, &routing, 5);
+            let exp = match variant {
+                EpMoeVariant::TokenRouted => reference_ep_moe(&op.heap, &bufs, &routing),
+                EpMoeVariant::FixedCapacity => {
+                    assert!(bufs.cap_src >= shape.tokens_per_rank * shape.topk);
+                    reference_ep_moe_fixed(&op.heap, &bufs, &routing)
+                }
+            };
+            let mut exec = HybridExecutor::native_only();
+            run_numeric(&mut op, &topo, &mut exec).unwrap();
+            verify_ep_moe(&op.heap, &bufs, &routing, &exp).unwrap();
+            (0..bufs.geom.w)
+                .map(|r| op.heap.read(Slice::new(r, bufs.output, 0, exp[r].len())))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(
+            run(EpMoeVariant::TokenRouted),
+            run(EpMoeVariant::FixedCapacity),
+            "fixed-capacity outputs must be bitwise equal under generous caps"
         );
     }
 

@@ -8,6 +8,7 @@ pub mod ep_moe;
 pub mod flash_decode;
 pub mod gemm_rs;
 pub mod moe;
+pub mod recover;
 
 use crate::config::{ClusterSpec, DType, FaultPlan};
 use crate::mem::SymmetricHeap;
@@ -42,6 +43,7 @@ impl CoordError {
     fn new(op: &str, source: SimError) -> Self {
         let at = match &source {
             SimError::WatchdogTimeout { at, .. } => Some(*at),
+            SimError::DeadPeer(info) => Some(info.detected_at),
             _ => None,
         };
         CoordError {
@@ -114,6 +116,28 @@ pub fn run_numeric(
     exec: &mut dyn ComputeExecutor,
 ) -> Result<SimReport, CoordError> {
     let sim = Sim::new(topo);
+    sim.run(&op.prog, &mut op.heap, exec)
+        .map_err(|e| CoordError::new(&op.name, e))
+}
+
+/// Run with numerics under a fault plan. An empty plan is bit-identical
+/// to [`run_numeric`]; with death entries the run may end in
+/// [`SimError::DeadPeer`], which the elastic recovery controller
+/// ([`recover::run_ep_moe_elastic`]) turns into a survivor re-plan.
+pub fn run_numeric_faults(
+    op: &mut BuiltOp,
+    topo: &Topology,
+    exec: &mut dyn ComputeExecutor,
+    faults: FaultPlan,
+) -> Result<SimReport, CoordError> {
+    let sim = Sim::with_config(
+        topo,
+        SimConfig {
+            numerics: true,
+            trace: false,
+        },
+    )
+    .with_faults(faults);
     sim.run(&op.prog, &mut op.heap, exec)
         .map_err(|e| CoordError::new(&op.name, e))
 }

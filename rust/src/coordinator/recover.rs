@@ -1,0 +1,456 @@
+//! Elastic degraded-world recovery: turn a permanent rank/node death
+//! ([`SimError::DeadPeer`]) into a survivor re-plan instead of a failed
+//! run.
+//!
+//! The controller loop is **detect → drain → re-plan → resume**:
+//!
+//! 1. **detect** — the engine aborts with a structured
+//!    [`DeadPeerInfo`](crate::sim::DeadPeerInfo): who died, when, which
+//!    of the five detection paths noticed, what was drained, and a
+//!    checkpoint of completed steps.
+//! 2. **drain** — in-flight flows touching the dead ranks were already
+//!    killed by the engine; the controller charges
+//!    [`RecoverCfg::drain_per_flow`] virtual seconds per drained flow.
+//! 3. **re-plan** — build a [`WorldView::survivors`] over the original
+//!    cluster, slice the original routing table down to survivor rows,
+//!    re-shard experts over the survivor world (`e_local` grows;
+//!    re-homed experts regenerate bit-identical weights from their
+//!    per-global-expert seed streams), and rebuild the whole pipeline
+//!    with the survivor-indexed builders (`build_ep_moe_view`,
+//!    `ag_flat_on`). Charged as a base cost plus a per-survivor term.
+//! 4. **resume** — run the survivor program under the *shifted* fault
+//!    plan ([`shift_plan`]): consumed deaths are dropped, everything
+//!    still pending moves to the survivor run's clock. Another death
+//!    starts another epoch.
+//!
+//! The final [`SimReport`] is stitched: makespan = resume offset +
+//! survivor makespan, and [`SimReport::recovery`] carries the
+//! [`RecoveryLedger`] with the full timeline plus **exact token
+//! accounting** — `tokens_delivered + tokens_dropped` equals every
+//! (token, expert-slot) pair the original plan owed, always.
+//!
+//! Fault-free and non-death runs never enter the loop, so their reports
+//! stay bit-identical to the plain runners (`recovery` is `None`).
+
+use crate::collectives::allgather::ag_flat_on;
+use crate::collectives::alltoall::{A2aCfg, EpRouting};
+use crate::collectives::{AgBufs, ProgBuild, WorldView};
+use crate::config::{ClusterSpec, DeathScope, FaultPlan, GemmShape, MoeShape};
+use crate::kernels::exec::FixedPlan;
+use crate::kernels::names::{Entry, EpGeom};
+use crate::mem::{Slice, SymmetricHeap};
+use crate::program::{ComputeCost, NumericOp, Op, SigCond};
+use crate::runtime::HybridExecutor;
+use crate::sim::{RecoveryLedger, SimError, SimReport};
+use crate::topology::Topology;
+
+use super::ag_gemm::{self, AgGemmVariant};
+use super::ep_moe::{
+    build_ep_moe_cfg, build_ep_moe_view, fill_ep_moe, fill_ep_moe_view, routing_for, EpMoeBufs,
+    EpMoeVariant,
+};
+use super::{run_numeric_faults, run_timing_faults, setup, BuiltOp, CoordError};
+
+/// Virtual-time cost model of one recovery round. All knobs are
+/// deterministic constants, so same-seed replays produce identical
+/// [`RecoveryLedger`]s.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecoverCfg {
+    /// Seconds charged per in-flight flow the engine drained (state
+    /// teardown + completion-queue flush).
+    pub drain_per_flow: f64,
+    /// Base re-plan cost: rebuilding programs + buffers for the
+    /// survivor world.
+    pub replan_base: f64,
+    /// Additional re-plan cost per surviving rank (membership
+    /// agreement + weight re-shard).
+    pub replan_per_rank: f64,
+}
+
+impl Default for RecoverCfg {
+    fn default() -> Self {
+        RecoverCfg {
+            drain_per_flow: 2e-6,
+            replan_base: 200e-6,
+            replan_per_rank: 5e-6,
+        }
+    }
+}
+
+/// Result of an elastic EP MoE run: the stitched report plus the final
+/// (possibly degraded) world the pipeline finished on, so callers can
+/// verify survivor numerics against the matching references.
+pub struct ElasticRun {
+    /// Stitched report; `recovery` is `Some` iff at least one death was
+    /// survived.
+    pub report: SimReport,
+    /// The op of the final epoch (holds the heap with the outputs).
+    pub op: BuiltOp,
+    /// Buffers of the final epoch's build.
+    pub bufs: EpMoeBufs,
+    /// Survivor routing table of the final epoch.
+    pub routing: EpRouting,
+    /// Logical→physical map of the final epoch.
+    pub view: WorldView,
+}
+
+/// Project a fault plan onto the survivor world after a detected death:
+/// drop what was consumed or targets the dead, and move everything still
+/// pending onto the survivor run's clock (its `t = 0` is the original
+/// timeline's `resumed_at`).
+pub fn shift_plan(
+    plan: &FaultPlan,
+    dead: &[usize],
+    detected_at: f64,
+    resumed_at: f64,
+) -> FaultPlan {
+    let mut out = plan.clone();
+    out.deaths.retain(|d| {
+        if d.t <= detected_at {
+            return false; // consumed by this epoch
+        }
+        match d.scope {
+            DeathScope::Rank(r) => !dead.contains(&r),
+            DeathScope::Node(_) => true,
+        }
+    });
+    for d in &mut out.deaths {
+        d.t = (d.t - resumed_at).max(0.0);
+    }
+    out.link_faults.retain(|f| {
+        if f.t_end <= resumed_at {
+            return false; // fully elapsed before the resume
+        }
+        match f.target {
+            crate::config::FaultTarget::Rank { rank } => !dead.contains(&rank),
+            crate::config::FaultTarget::Nic { rank, .. } => !dead.contains(&rank),
+            _ => true,
+        }
+    });
+    for f in &mut out.link_faults {
+        f.t_start = (f.t_start - resumed_at).max(0.0);
+        f.t_end -= resumed_at; // INFINITY stays INFINITY
+    }
+    out.stragglers.retain(|s| !dead.contains(&s.rank));
+    out
+}
+
+/// Run the EP MoE pipeline with full numerics under `faults`, surviving
+/// permanent rank/node deaths by re-planning over the survivor world
+/// (multi-epoch: each further death starts another recovery round).
+///
+/// Errors propagate unchanged when recovery is impossible: fewer than
+/// two survivors, or a non-death failure.
+pub fn run_ep_moe_elastic(
+    cluster: ClusterSpec,
+    shape: MoeShape,
+    seed: u64,
+    variant: EpMoeVariant,
+    a2a: &A2aCfg,
+    faults: FaultPlan,
+    rcfg: &RecoverCfg,
+) -> Result<ElasticRun, CoordError> {
+    let topo = Topology::build(cluster);
+    let w0 = cluster.world_size();
+    let mut exec = HybridExecutor::native_only();
+
+    let routing0 = routing_for(cluster, &shape, seed);
+    let g0 = routing0.geom;
+    let idx0 = routing0.idx.clone();
+    let gate0 = routing0.gate.clone();
+    let e_local0 = g0.e.div_ceil(g0.w);
+
+    let mut view = WorldView::identity(w0);
+    let (mut op, mut bufs) = build_ep_moe_cfg(cluster, shape, &routing0, variant, a2a);
+    fill_ep_moe(&mut op.heap, &bufs, &routing0, seed);
+    let mut routing = routing0;
+
+    let mut faults_cur = faults;
+    let mut dead_all: Vec<usize> = Vec::new();
+    let mut rec: Option<RecoveryLedger> = None;
+    // virtual time of the current epoch's t = 0 on the original clock
+    let mut base_t = 0.0f64;
+
+    loop {
+        match run_numeric_faults(&mut op, &topo, &mut exec, faults_cur.clone()) {
+            Ok(mut rep) => {
+                if let Some(mut r) = rec {
+                    // stitch the survivor epoch back onto the original
+                    // clock and settle the token accounting
+                    rep.makespan += base_t;
+                    for s in &mut rep.task_spans {
+                        s.2 += base_t;
+                        s.3 += base_t;
+                    }
+                    let g = routing.geom;
+                    let e_local = bufs.e_local;
+                    let owed = (w0 * g0.t * g0.k) as u64;
+                    let kept: Vec<bool> = match variant {
+                        EpMoeVariant::TokenRouted => {
+                            let plan = routing.plan();
+                            (0..g.w * g.t * g.k).map(|gi| plan.dst_of(gi).is_some()).collect()
+                        }
+                        EpMoeVariant::FixedCapacity => {
+                            let plan = FixedPlan::build(&routing.idx, g, bufs.cap_src);
+                            (0..g.w * g.t * g.k).map(|gi| plan.slot_of(gi).is_some()).collect()
+                        }
+                    };
+                    let mut delivered = 0u64;
+                    let mut rerouted = 0u64;
+                    for gi in 0..g.w * g.t * g.k {
+                        if !kept[gi] {
+                            continue;
+                        }
+                        delivered += 1;
+                        let ei = routing.idx[gi];
+                        let old_home = ei / e_local0;
+                        let new_home = view.phys(ei / e_local);
+                        if new_home != old_home {
+                            rerouted += 1;
+                        }
+                    }
+                    r.tokens_delivered = delivered;
+                    r.tokens_rerouted = rerouted;
+                    r.tokens_dropped = owed - delivered;
+                    rep.recovery = Some(r);
+                }
+                return Ok(ElasticRun {
+                    report: rep,
+                    op,
+                    bufs,
+                    routing,
+                    view,
+                });
+            }
+            Err(e) => {
+                let SimError::DeadPeer(info) = &e.source else {
+                    return Err(e);
+                };
+                for &d in &info.dead {
+                    if !dead_all.contains(&d) {
+                        dead_all.push(d);
+                    }
+                }
+                dead_all.sort_unstable();
+                if w0 - dead_all.len() < 2 {
+                    return Err(e); // nothing left to re-plan over
+                }
+
+                // --- drain + re-plan timeline (deterministic cost model)
+                let died_at = base_t + info.died_at;
+                let detected_at = base_t + info.detected_at;
+                let drained_at = detected_at + rcfg.drain_per_flow * info.flows_drained as f64;
+                let survivors = w0 - dead_all.len();
+                let replanned_at =
+                    drained_at + rcfg.replan_base + rcfg.replan_per_rank * survivors as f64;
+                let resumed_at = replanned_at;
+
+                // --- survivor routing: survivor rows of the ORIGINAL
+                // table, capacity recomputed for the smaller world
+                view = WorldView::survivors(w0, &dead_all);
+                let wsur = view.world();
+                let tk = g0.t * g0.k;
+                let mut idx = Vec::with_capacity(wsur * tk);
+                let mut gate = Vec::with_capacity(wsur * tk);
+                for l in 0..wsur {
+                    let pr = view.phys(l);
+                    idx.extend_from_slice(&idx0[pr * tk..(pr + 1) * tk]);
+                    gate.extend_from_slice(&gate0[pr * tk..(pr + 1) * tk]);
+                }
+                let gsur = EpGeom {
+                    w: wsur,
+                    c: shape.expert_capacity(wsur),
+                    ..g0
+                };
+                routing = EpRouting::from_table(gsur, idx, gate);
+
+                // --- rebuild + restore on the survivor world
+                let (op2, bufs2) = build_ep_moe_view(cluster, shape, &routing, variant, a2a, &view);
+                op = op2;
+                bufs = bufs2;
+                fill_ep_moe_view(&mut op.heap, &bufs, &routing, seed, &view);
+
+                let r = rec.get_or_insert_with(RecoveryLedger::default);
+                if r.epochs == 0 {
+                    r.died_at = died_at;
+                }
+                r.dead_ranks = dead_all.clone();
+                r.detected_at = detected_at;
+                r.via = info.via.clone();
+                r.drained_at = drained_at;
+                r.replanned_at = replanned_at;
+                r.resumed_at = resumed_at;
+                r.flows_drained += info.flows_drained;
+                r.steps_checkpointed += info.checkpoint.len() as u64;
+                r.epochs += 1;
+
+                faults_cur = shift_plan(&faults_cur, &dead_all, info.detected_at, resumed_at - base_t);
+                base_t = resumed_at;
+            }
+        }
+    }
+}
+
+/// Timing-only elastic AG+GEMM: run the chosen overlapped variant; on a
+/// permanent death, re-plan with the flat survivor AllGather
+/// ([`ag_flat_on`]) feeding a full-SM GEMM per survivor — the degraded,
+/// non-overlapped program that stays valid on any survivor set. Single
+/// recovery epoch (a further death during the degraded run propagates).
+pub fn run_ag_gemm_elastic(
+    cluster: ClusterSpec,
+    shape: GemmShape,
+    variant: AgGemmVariant,
+    faults: FaultPlan,
+    rcfg: &RecoverCfg,
+) -> Result<(SimReport, WorldView), CoordError> {
+    let topo = Topology::build(cluster);
+    let ws = cluster.world_size();
+    let (mut op, _bufs) = ag_gemm::build(cluster, shape, variant);
+    let err = match run_timing_faults(&mut op, &topo, faults.clone()) {
+        Ok(rep) => return Ok((rep, WorldView::identity(ws))),
+        Err(e) => e,
+    };
+    let SimError::DeadPeer(info) = &err.source else {
+        return Err(err);
+    };
+    let dead = info.dead.clone();
+    if ws - dead.len() < 2 {
+        return Err(err);
+    }
+    let view = WorldView::survivors(ws, &dead);
+    let died_at = info.died_at;
+    let detected_at = info.detected_at;
+    let drained_at = detected_at + rcfg.drain_per_flow * info.flows_drained as f64;
+    let replanned_at =
+        drained_at + rcfg.replan_base + rcfg.replan_per_rank * view.world() as f64;
+    let resumed_at = replanned_at;
+
+    // degraded re-plan: flat survivor AllGather + one full-SM GEMM task
+    // per survivor over the survivor chunks only
+    let (ctx, _t) = setup(cluster);
+    assert!(shape.m % ws == 0, "M must divide world size");
+    let m_per_rank = shape.m / ws;
+    let shard = m_per_rank * shape.k;
+    let mut heap = SymmetricHeap::new(ws, 4 * ws.max(16));
+    let bufs = AgBufs::alloc(&mut heap, &ctx, shard);
+    let weight = heap.alloc("weight", shape.k * shape.n);
+    let output = heap.alloc("output", shape.m * shape.n);
+    let mut pb = ProgBuild::new();
+    ag_flat_on(&ctx, &bufs, &mut pb, &view);
+    let chunk_flops = 2.0 * m_per_rank as f64 * shape.n as f64 * shape.k as f64;
+    let entry = Entry::gemm_name(m_per_rank, shape.k, shape.n);
+    for l in 0..view.world() {
+        let pr = view.phys(l);
+        let mut t = ctx
+            .task(pr, format!("degraded_gemm[{l}]"))
+            .with_sms(cluster.hw.sms)
+            .launch_overhead();
+        for i in 0..view.world() {
+            let seg = view.phys((l + i) % view.world());
+            t.signal_wait_until(bufs.sig(seg), SigCond::Ge, 1);
+            t.op(Op::Compute {
+                cost: ComputeCost::Gemm {
+                    flops: chunk_flops,
+                    vendor: false,
+                },
+                numeric: NumericOp::Call {
+                    entry: entry.clone(),
+                    args: vec![
+                        bufs.seg(seg, pr),
+                        Slice::new(pr, weight, 0, shape.k * shape.n),
+                    ],
+                    outs: vec![Slice::new(
+                        pr,
+                        output,
+                        seg * m_per_rank * shape.n,
+                        m_per_rank * shape.n,
+                    )],
+                },
+                label: "degraded_gemm_chunk",
+            });
+        }
+        pb.prog.push(t.build());
+    }
+    let mut op2 = BuiltOp {
+        ctx,
+        heap,
+        prog: pb.prog,
+        name: format!("{} (degraded)", op.name),
+    };
+    let fp = shift_plan(&faults, &dead, detected_at, resumed_at);
+    let mut rep = run_timing_faults(&mut op2, &topo, fp)?;
+    rep.makespan += resumed_at;
+    for s in &mut rep.task_spans {
+        s.2 += resumed_at;
+        s.3 += resumed_at;
+    }
+    rep.recovery = Some(RecoveryLedger {
+        dead_ranks: {
+            let mut d = dead;
+            d.sort_unstable();
+            d
+        },
+        died_at,
+        detected_at,
+        via: info.via.clone(),
+        drained_at,
+        replanned_at,
+        resumed_at,
+        flows_drained: info.flows_drained,
+        steps_checkpointed: info.checkpoint.len() as u64,
+        tokens_delivered: 0,
+        tokens_rerouted: 0,
+        tokens_dropped: 0,
+        epochs: 1,
+    });
+    Ok((rep, view))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Death, FaultTarget, LinkFault, Straggler};
+
+    #[test]
+    fn shift_plan_consumes_and_rebases() {
+        let plan = FaultPlan {
+            deaths: vec![
+                Death { scope: DeathScope::Rank(3), t: 1e-4 },  // consumed
+                Death { scope: DeathScope::Rank(3), t: 9e-3 },  // dead target
+                Death { scope: DeathScope::Rank(1), t: 6e-3 },  // pending
+                Death { scope: DeathScope::Node(1), t: 8e-3 },  // pending
+            ],
+            link_faults: vec![
+                LinkFault::flap(FaultTarget::Nic { rank: 3, rail: 0 }, 2e-3, 1e-3), // dead
+                LinkFault::flap(FaultTarget::Spine { rail: 0 }, 1e-3, 1e-3),        // elapsed
+                LinkFault::flap(FaultTarget::Spine { rail: 1 }, 4e-3, 4e-3),        // pending
+            ],
+            stragglers: vec![
+                Straggler { rank: 3, factor: 2.0 },
+                Straggler { rank: 0, factor: 2.0 },
+            ],
+            ..FaultPlan::default()
+        };
+        let out = shift_plan(&plan, &[3], 2e-4, 5e-3);
+        assert_eq!(out.deaths.len(), 2);
+        assert_eq!(out.deaths[0].scope, DeathScope::Rank(1));
+        assert!((out.deaths[0].t - 1e-3).abs() < 1e-12);
+        assert_eq!(out.deaths[1].scope, DeathScope::Node(1));
+        assert_eq!(out.link_faults.len(), 1);
+        assert_eq!(out.link_faults[0].target, FaultTarget::Spine { rail: 1 });
+        assert!(out.link_faults[0].t_start.abs() < 1e-12); // clamped to 0
+        assert!((out.link_faults[0].t_end - 3e-3).abs() < 1e-12);
+        assert_eq!(out.stragglers, vec![Straggler { rank: 0, factor: 2.0 }]);
+    }
+
+    #[test]
+    fn shift_plan_keeps_recovery_knobs() {
+        let mut plan = FaultPlan::default();
+        plan.lt_timeout = 1e-3;
+        plan.retry_max = 7;
+        let out = shift_plan(&plan, &[0], 0.0, 1e-3);
+        assert_eq!(out.lt_timeout, 1e-3);
+        assert_eq!(out.retry_max, 7);
+        assert!(out.is_empty());
+    }
+}

@@ -189,6 +189,70 @@ pub fn eval_entry(entry: &Entry, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
             }
             Ok(vec![out])
         }
+        Entry::EpDispatchFixed { g, cs, r } => {
+            ensure!(inputs.len() == 2, "ep_dispatch_fixed takes 2 args");
+            let tokens = &inputs[0];
+            ensure!(tokens.len() == g.t * g.h, "ep_dispatch_fixed token size");
+            let idx = expert_indices(&inputs[1], g)?;
+            let plan = FixedPlan::build(&idx, g, cs);
+            let e_local = g.e.div_ceil(g.w);
+            let mut outs = vec![vec![0.0f32; e_local * cs * g.h]; g.w];
+            for p in 0..g.t * g.k {
+                let gi = r * g.t * g.k + p;
+                let Some(s) = plan.slot_of(gi) else { continue };
+                let (d, el) = (idx[gi] / e_local, idx[gi] % e_local);
+                let ti = p / g.k;
+                outs[d][(el * cs + s) * g.h..(el * cs + s + 1) * g.h]
+                    .copy_from_slice(&tokens[ti * g.h..(ti + 1) * g.h]);
+            }
+            Ok(outs)
+        }
+        Entry::EpFfnFixed { g, cs, r: _ } => {
+            ensure!(inputs.len() == 3, "ep_ffn_fixed takes 3 args");
+            let recv = &inputs[0];
+            let e_local = g.e.div_ceil(g.w);
+            let chunk = e_local * cs * g.h;
+            ensure!(recv.len() == g.w * chunk, "ep_ffn_fixed recv size");
+            ensure!(inputs[1].len() == g.w * g.t * g.k, "ep_ffn_fixed idx size");
+            let w = &inputs[2];
+            ensure!(w.len() == e_local * g.h * g.f, "ep_ffn_fixed weight size");
+            // every slot block goes through the grouped GEMM: zero
+            // (padding) rows produce zero rows bit-exactly, and a filled
+            // slot sees the same f32 op order as the token-routed row GEMM
+            let mut out = Vec::with_capacity(g.w * e_local * cs * g.f);
+            for src in 0..g.w {
+                for el in 0..e_local {
+                    let x = &recv[src * chunk + el * cs * g.h..src * chunk + (el + 1) * cs * g.h];
+                    out.extend(matmul(x, &w[el * g.h * g.f..(el + 1) * g.h * g.f], cs, g.h, g.f));
+                }
+            }
+            Ok(vec![out])
+        }
+        Entry::EpCombineFixed { g, cs, r } => {
+            ensure!(inputs.len() == 3, "ep_combine_fixed takes 3 args");
+            let crecv = &inputs[0];
+            let idx = expert_indices(&inputs[1], g)?;
+            let gate = &inputs[2];
+            ensure!(gate.len() == g.w * g.t * g.k, "ep_combine_fixed gate size");
+            let e_local = g.e.div_ceil(g.w);
+            let chunk = e_local * cs * g.f;
+            ensure!(crecv.len() == g.w * chunk, "ep_combine_fixed recv size");
+            let plan = FixedPlan::build(&idx, g, cs);
+            let mut out = vec![0.0f32; g.t * g.f];
+            for ti in 0..g.t {
+                for ki in 0..g.k {
+                    let gi = (r * g.t + ti) * g.k + ki;
+                    let Some(s) = plan.slot_of(gi) else { continue };
+                    let (d, el) = (idx[gi] / e_local, idx[gi] % e_local);
+                    let row = &crecv[d * chunk + (el * cs + s) * g.f..d * chunk + (el * cs + s + 1) * g.f];
+                    let gv = gate[gi];
+                    for (o, &v) in out[ti * g.f..(ti + 1) * g.f].iter_mut().zip(row) {
+                        *o += gv * v;
+                    }
+                }
+            }
+            Ok(vec![out])
+        }
         Entry::TpMlpShard { t, h, f } => {
             ensure!(inputs.len() == 3);
             ensure!(inputs[0].len() == t * h);
@@ -479,6 +543,68 @@ impl EpPlan {
     }
 }
 
+/// Slot assignment of the **fixed-capacity** EP baseline: the wire is
+/// pre-sized at `cs` slots per (source rank, expert) and the only drop
+/// policy is slot overflow — pairs claim slots in the same deterministic
+/// `(src, token, k)` scan order as [`EpPlan`], and a pair beyond `cs`
+/// claimed slots for its (source, expert) is dropped. The global
+/// per-expert capacity `g.c` is irrelevant here (DeepEP-style static
+/// buffers admit whatever fits their padding).
+///
+/// With `cs >= t * k` no pair can overflow, every token-routed kept pair
+/// keeps its row, and the fixed pipeline's output is **bitwise equal** to
+/// the token-routed one whenever that plan also dropped nothing — the
+/// carried-numerics contract `coordinator::ep_moe` verifies.
+#[derive(Debug, Clone)]
+pub struct FixedPlan {
+    g: EpGeom,
+    /// Slot within the pair's (source, expert) block; `usize::MAX` marks
+    /// an overflow-dropped pair.
+    slot: Vec<usize>,
+}
+
+impl FixedPlan {
+    /// Build the slot assignment from the full routing table.
+    pub fn build(idx: &[usize], g: EpGeom, cs: usize) -> FixedPlan {
+        assert_eq!(idx.len(), g.w * g.t * g.k, "routing table size");
+        assert!(cs >= 1, "slot cap must be >= 1");
+        let mut used = vec![0usize; g.w * g.e];
+        let mut slot = vec![usize::MAX; idx.len()];
+        for src in 0..g.w {
+            for p in 0..g.t * g.k {
+                let gi = src * g.t * g.k + p;
+                let ei = idx[gi];
+                assert!(ei < g.e, "expert index {ei} out of range");
+                let u = &mut used[src * g.e + ei];
+                if *u < cs {
+                    slot[gi] = *u;
+                    *u += 1;
+                }
+            }
+        }
+        FixedPlan { g, slot }
+    }
+
+    /// Slot of global pair `gi` within its (source, expert) block,
+    /// `None` if overflow-dropped.
+    pub fn slot_of(&self, gi: usize) -> Option<usize> {
+        match self.slot[gi] {
+            usize::MAX => None,
+            s => Some(s),
+        }
+    }
+
+    /// Pairs that claimed a slot.
+    pub fn kept(&self) -> usize {
+        self.slot.iter().filter(|&&s| s != usize::MAX).count()
+    }
+
+    /// Pairs dropped by slot overflow.
+    pub fn dropped(&self) -> usize {
+        self.g.w * self.g.t * self.g.k - self.kept()
+    }
+}
+
 /// Decode an f32-carried expert-index table, validating range and
 /// integrality.
 fn expert_indices(raw: &[f32], g: EpGeom) -> Result<Vec<usize>> {
@@ -698,6 +824,109 @@ mod tests {
         // conservation: every kept pair shows up exactly once on a wire
         let wired: usize = recv.iter().map(|v| v.len()).sum();
         assert_eq!(wired, plan.kept() * g.h);
+    }
+
+    #[test]
+    fn fixed_pipeline_matches_token_routed_when_nothing_drops() {
+        // generous caps everywhere: the padded fixed-capacity pipeline
+        // must reproduce the token-routed outputs bitwise
+        let g = EpGeom {
+            t: 3,
+            h: 2,
+            f: 2,
+            e: 4,
+            k: 2,
+            c: 1000, // global capacity cannot drop
+            w: 2,
+        };
+        let cs = g.t * g.k; // slot cap cannot overflow
+        let mut rng = Rng::new(11);
+        let idx_f: Vec<f32> = (0..g.w * g.t * g.k)
+            .map(|_| rng.usize_in(0, g.e) as f32)
+            .collect();
+        let gate: Vec<f32> = (0..g.w * g.t * g.k).map(|_| rng.f32().max(0.05)).collect();
+        let tokens: Vec<Vec<f32>> = (0..g.w).map(|_| rng.normal_vec(g.t * g.h)).collect();
+        let e_local = g.e.div_ceil(g.w);
+        let weights: Vec<Vec<f32>> =
+            (0..g.w).map(|_| rng.normal_vec(e_local * g.h * g.f)).collect();
+
+        let run = |fixed: bool| -> Vec<Vec<f32>> {
+            // dispatch on every rank
+            let packed: Vec<Vec<Vec<f32>>> = (0..g.w)
+                .map(|r| {
+                    let e = if fixed {
+                        Entry::EpDispatchFixed { g, cs, r }
+                    } else {
+                        Entry::EpDispatch { g, r }
+                    };
+                    eval_entry(&e, &[tokens[r].clone(), idx_f.clone()]).unwrap()
+                })
+                .collect();
+            let recv: Vec<Vec<f32>> = (0..g.w)
+                .map(|d| (0..g.w).flat_map(|s| packed[s][d].clone()).collect())
+                .collect();
+            let ffn: Vec<Vec<f32>> = (0..g.w)
+                .map(|d| {
+                    let e = if fixed {
+                        Entry::EpFfnFixed { g, cs, r: d }
+                    } else {
+                        Entry::EpFfn { g, r: d }
+                    };
+                    eval_entry(&e, &[recv[d].clone(), idx_f.clone(), weights[d].clone()])
+                        .unwrap()
+                        .remove(0)
+                })
+                .collect();
+            let idx: Vec<usize> = idx_f.iter().map(|&v| v as usize).collect();
+            let plan = EpPlan::build(&idx, g);
+            (0..g.w)
+                .map(|r| {
+                    let mut crecv = Vec::new();
+                    for (d, rows) in ffn.iter().enumerate() {
+                        if fixed {
+                            // fixed combine wire: owner r's whole padded
+                            // chunk from expert rank d
+                            let chunk = e_local * cs * g.f;
+                            crecv.extend_from_slice(&rows[r * chunk..(r + 1) * chunk]);
+                        } else {
+                            let before: usize = (0..r).map(|s| plan.count(s, d)).sum();
+                            let mine = plan.count(r, d);
+                            crecv.extend_from_slice(&rows[before * g.f..(before + mine) * g.f]);
+                        }
+                    }
+                    let e = if fixed {
+                        Entry::EpCombineFixed { g, cs, r }
+                    } else {
+                        Entry::EpCombine { g, r }
+                    };
+                    eval_entry(&e, &[crecv, idx_f.clone(), gate.clone()])
+                        .unwrap()
+                        .remove(0)
+                })
+                .collect()
+        };
+        assert_eq!(run(true), run(false), "fixed == routed when nothing drops");
+    }
+
+    #[test]
+    fn fixed_plan_drops_deterministically_beyond_slot_cap() {
+        let g = EpGeom {
+            t: 2,
+            h: 1,
+            f: 1,
+            e: 2,
+            k: 1,
+            c: 1000,
+            w: 2,
+        };
+        // rank 0 sends both tokens to expert 0 but only one slot exists
+        let plan = FixedPlan::build(&[0, 0, 1, 1], g, 1);
+        assert_eq!(plan.slot_of(0), Some(0));
+        assert_eq!(plan.slot_of(1), None, "second claim overflows cs=1");
+        assert_eq!(plan.slot_of(2), Some(0));
+        assert_eq!(plan.slot_of(3), None);
+        assert_eq!(plan.kept(), 2);
+        assert_eq!(plan.dropped(), 2);
     }
 
     #[test]

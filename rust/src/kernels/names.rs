@@ -46,6 +46,31 @@ impl EpGeom {
     pub fn combine_name(&self, r: usize) -> String {
         self.name("combine", r)
     }
+
+    fn fixed_name(&self, kind: &str, cs: usize, r: usize) -> String {
+        let EpGeom { t, h, f, e, k, c, w } = *self;
+        format!("ep_{kind}_fixed_t{t}_h{h}_f{f}_e{e}_k{k}_c{c}_w{w}_s{cs}_r{r}")
+    }
+
+    /// `ep_dispatch_fixed_*`: pack rank `r`'s routed rows into the
+    /// fixed-capacity wire — per (dst, local expert) blocks of `cs`
+    /// zero-padded slots (`cs` = per-(source, expert) slot cap), claim
+    /// order, overflow beyond `cs` deterministically dropped.
+    pub fn dispatch_fixed_name(&self, cs: usize, r: usize) -> String {
+        self.fixed_name("dispatch", cs, r)
+    }
+
+    /// `ep_ffn_fixed_*`: grouped expert FFN over the padded slot blocks
+    /// received at rank `r` (zero slots produce zero rows bit-exactly).
+    pub fn ffn_fixed_name(&self, cs: usize, r: usize) -> String {
+        self.fixed_name("ffn", cs, r)
+    }
+
+    /// `ep_combine_fixed_*`: gate-weighted reduction reading each kept
+    /// pair's row back out of its fixed slot.
+    pub fn combine_fixed_name(&self, cs: usize, r: usize) -> String {
+        self.fixed_name("combine", cs, r)
+    }
 }
 
 /// Parsed kernel entry.
@@ -79,6 +104,13 @@ pub enum Entry {
     /// `ep_combine_*` — gate-weighted per-token reduction of the expert
     /// outputs returned to token owner `r`.
     EpCombine { g: EpGeom, r: usize },
+    /// `ep_dispatch_fixed_*_s{cs}_*` — fixed-capacity dispatch pack:
+    /// `cs` zero-padded slots per (source, expert), overflow dropped.
+    EpDispatchFixed { g: EpGeom, cs: usize, r: usize },
+    /// `ep_ffn_fixed_*` — grouped FFN over the padded slot blocks.
+    EpFfnFixed { g: EpGeom, cs: usize, r: usize },
+    /// `ep_combine_fixed_*` — slot-addressed gate-weighted reduction.
+    EpCombineFixed { g: EpGeom, cs: usize, r: usize },
 }
 
 fn nums(s: &str, seps: &[&str]) -> Option<Vec<usize>> {
@@ -156,6 +188,33 @@ impl Entry {
                 e: v[3],
                 k: v[4],
                 c: v[5],
+            });
+        }
+        // the fixed-capacity families must be matched BEFORE the plain
+        // EP prefixes: "ep_dispatch_fixed_..." also starts with
+        // "ep_dispatch_" and the plain field scan would silently accept
+        // it (its `_s{cs}` field is invisible to the `_t.._r` scan)
+        if name.starts_with("ep_dispatch_fixed_")
+            || name.starts_with("ep_ffn_fixed_")
+            || name.starts_with("ep_combine_fixed_")
+        {
+            let v = nums(name, &["_t", "_h", "_f", "_e", "_k", "_c", "_w", "_s", "_r"])?;
+            let g = EpGeom {
+                t: v[0],
+                h: v[1],
+                f: v[2],
+                e: v[3],
+                k: v[4],
+                c: v[5],
+                w: v[6],
+            };
+            let (cs, r) = (v[7], v[8]);
+            return Some(if name.starts_with("ep_dispatch_fixed_") {
+                Entry::EpDispatchFixed { g, cs, r }
+            } else if name.starts_with("ep_ffn_fixed_") {
+                Entry::EpFfnFixed { g, cs, r }
+            } else {
+                Entry::EpCombineFixed { g, cs, r }
             });
         }
         if name.starts_with("ep_dispatch_")
@@ -302,6 +361,37 @@ mod tests {
         );
         // the `_c` inside "ep_combine" must not confuse the field scan
         assert_eq!(g.combine_name(2), "ep_combine_t8_h16_f32_e4_k2_c12_w4_r2");
+    }
+
+    #[test]
+    fn roundtrip_ep_fixed_families_and_prefix_precedence() {
+        let g = EpGeom {
+            t: 8,
+            h: 16,
+            f: 32,
+            e: 4,
+            k: 2,
+            c: 12,
+            w: 4,
+        };
+        assert_eq!(
+            g.dispatch_fixed_name(3, 2),
+            "ep_dispatch_fixed_t8_h16_f32_e4_k2_c12_w4_s3_r2"
+        );
+        // the fixed names also match the plain "ep_dispatch_" prefix;
+        // parse must pick the fixed family, never the plain one
+        assert_eq!(
+            Entry::parse(&g.dispatch_fixed_name(3, 2)),
+            Some(Entry::EpDispatchFixed { g, cs: 3, r: 2 })
+        );
+        assert_eq!(
+            Entry::parse(&g.ffn_fixed_name(5, 0)),
+            Some(Entry::EpFfnFixed { g, cs: 5, r: 0 })
+        );
+        assert_eq!(
+            Entry::parse(&g.combine_fixed_name(1, 3)),
+            Some(Entry::EpCombineFixed { g, cs: 1, r: 3 })
+        );
     }
 
     #[test]

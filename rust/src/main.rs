@@ -7,7 +7,7 @@ use triton_dist_sim::collectives::ProgBuild;
 use triton_dist_sim::config::{
     ClusterSpec, DType, FabricSpec, FaultPlan, GemmShape, MoeShape, RailPolicy,
 };
-use triton_dist_sim::coordinator::{self, ag_gemm, ep_moe, flash_decode, gemm_rs, moe};
+use triton_dist_sim::coordinator::{self, ag_gemm, ep_moe, flash_decode, gemm_rs, moe, recover};
 use triton_dist_sim::mem::SymmetricHeap;
 use triton_dist_sim::metrics;
 use triton_dist_sim::overlap::features;
@@ -53,10 +53,26 @@ FAULT INJECTION (timing runs; empty plan = bit-identical to fault-free):
   --faults SPEC   semicolon-separated plan, e.g.
                   \"flap,nic,3,0,1e-3,2e-3; deg,spine,0,0,5e-3,0.5;
                   raildead,1,4e-3; strag,5,1.5; jitter,42,1e-6\"
+                  permanent deaths: \"die,<rank>,<t0>\" kills one GPU
+                  forever; \"nodedead,<node>,<t0>\" kills a whole node.
+                  A run touching a dead rank aborts with a structured
+                  DeadPeer error — pass --recover (ep-moe) to survive it.
   --fault-seed N  synthesize a deterministic random plan (with --fault-rate)
   --fault-rate R  faults per rank for the synthesized plan (default 0)
+  --fault-severe  synthesized plan draws from the severe tier too
+                  (die/nodedead/raildead); without it every synthesized
+                  plan is recoverable by retry/reroute alone
   --lt-timeout S  watchdog on LL/signal waits, seconds (default: off)
   --retry-max N   retry budget for puts killed on a downed link (default 8)
+
+ELASTIC RECOVERY (ep-moe):
+  --recover       survive permanent deaths: detect -> drain -> re-plan
+                  over the survivors -> resume (numerics verified on the
+                  survivor world; prints the recovery ledger with exact
+                  token accounting)
+  worked example — kill rank 3 at t=10us mid-dispatch and recover:
+    triton-dist-sim ep-moe --nodes 2 --rails 2 \\
+        --faults \"die,3,1e-5\" --recover
 
 EP-MOE OPTIONS:
   --tokens/--in-hidden/--out-hidden/--experts/--topk   MoE shape
@@ -114,13 +130,25 @@ fn fault_plan_from(args: &Args, cluster: &ClusterSpec) -> Result<FaultPlan, Stri
             }
             if rate > 0.0 {
                 let seed = args.usize_or("fault-seed", 0)? as u64;
-                FaultPlan::synthesize(
-                    seed,
-                    rate,
-                    cluster.world_size(),
-                    cluster.fabric.rails,
-                    10e-3, // horizon: covers every CLI workload's makespan
-                )
+                let horizon = 10e-3; // covers every CLI workload's makespan
+                if args.flag("fault-severe") {
+                    FaultPlan::synthesize_severe(
+                        seed,
+                        rate,
+                        cluster.world_size(),
+                        cluster.nodes,
+                        cluster.fabric.rails,
+                        horizon,
+                    )
+                } else {
+                    FaultPlan::synthesize(
+                        seed,
+                        rate,
+                        cluster.world_size(),
+                        cluster.fabric.rails,
+                        horizon,
+                    )
+                }
             } else {
                 FaultPlan::default()
             }
@@ -334,6 +362,44 @@ fn run(args: &Args) -> Result<(), String> {
                 shape.skew,
             );
             let plan = fault_plan_from(args, &cluster)?;
+            if args.flag("recover") || plan.has_deaths() {
+                // Elastic path: detect the death, drain, re-plan over the
+                // survivor world, resume, and verify survivor numerics.
+                let run = recover::run_ep_moe_elastic(
+                    cluster,
+                    shape,
+                    seed,
+                    ep_moe::EpMoeVariant::TokenRouted,
+                    &cfg,
+                    plan,
+                    &recover::RecoverCfg::default(),
+                )
+                .map_err(|e| e.to_string())?;
+                match &run.report.recovery {
+                    Some(rec) => println!("{}", metrics::recovery_line(rec)),
+                    None => println!("no deaths fired; completed at full world"),
+                }
+                let reference = ep_moe::reference_ep_moe_view(
+                    &run.op.heap,
+                    &run.bufs,
+                    &run.routing,
+                    &run.view,
+                );
+                ep_moe::verify_ep_moe_view(
+                    &run.op.heap,
+                    &run.bufs,
+                    &run.routing,
+                    &reference,
+                    &run.view,
+                )?;
+                println!(
+                    "survivor numerics OK (exact, world {} of {})",
+                    run.view.world(),
+                    ws
+                );
+                println!("{:<28} {}", run.op.name, fmt_time(run.report.makespan));
+                return Ok(());
+            }
             let threads = args.positive_usize_or("threads", 1)?;
             let topo = Topology::build(cluster);
             let mut report = metrics::FigureReport::new("EP MoE (token-routed)");

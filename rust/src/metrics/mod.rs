@@ -3,7 +3,7 @@
 
 use std::fmt::Write as _;
 
-use crate::sim::{FaultLedger, OpSpan, SimReport};
+use crate::sim::{FaultLedger, OpSpan, RecoveryLedger, SimReport};
 use crate::util::stats::{fmt_time, geomean};
 use crate::util::Table;
 
@@ -121,6 +121,17 @@ pub struct FaultBenchInfo {
     pub slowdown: f64,
 }
 
+/// Elastic-recovery annotations riding one engine-perf record: the
+/// controller's detect → drain → re-plan → resume timeline plus the
+/// degraded goodput after the survivor re-plan.
+#[derive(Debug, Clone)]
+pub struct RecoveryBenchInfo {
+    pub ledger: RecoveryLedger,
+    /// Fraction of the originally-owed (token, expert-slot) pairs the
+    /// survivor plan delivered (`tokens_delivered / owed`).
+    pub goodput: f64,
+}
+
 /// One wall-clock engine measurement: a scenario of `perf_engine` (events
 /// processed, median elapsed seconds), optionally with its fault ledger.
 #[derive(Debug, Clone)]
@@ -138,6 +149,8 @@ pub struct EngineBenchRecord {
     pub threads: Vec<(usize, f64)>,
     /// `Some` for degraded-fabric scenarios.
     pub fault: Option<FaultBenchInfo>,
+    /// `Some` for scenarios that survived a permanent death.
+    pub recovery: Option<RecoveryBenchInfo>,
 }
 
 impl EngineBenchRecord {
@@ -183,6 +196,26 @@ pub fn engine_bench_json(records: &[EngineBenchRecord]) -> String {
             fo.insert("slowdown".into(), Json::Num(fi.slowdown));
             obj.insert("fault".into(), Json::Obj(fo));
         }
+        if let Some(ri) = &r.recovery {
+            let l = &ri.ledger;
+            let mut ro = std::collections::BTreeMap::new();
+            ro.insert(
+                "dead_ranks".into(),
+                Json::Arr(l.dead_ranks.iter().map(|&d| Json::Num(d as f64)).collect()),
+            );
+            ro.insert("detect_latency_s".into(), Json::Num(l.detected_at - l.died_at));
+            ro.insert("drain_s".into(), Json::Num(l.drained_at - l.detected_at));
+            ro.insert("replan_s".into(), Json::Num(l.replanned_at - l.drained_at));
+            ro.insert("resumed_at_s".into(), Json::Num(l.resumed_at));
+            ro.insert("via".into(), Json::Str(l.via.clone()));
+            ro.insert("flows_drained".into(), Json::Num(l.flows_drained as f64));
+            ro.insert("tokens_delivered".into(), Json::Num(l.tokens_delivered as f64));
+            ro.insert("tokens_rerouted".into(), Json::Num(l.tokens_rerouted as f64));
+            ro.insert("tokens_dropped".into(), Json::Num(l.tokens_dropped as f64));
+            ro.insert("epochs".into(), Json::Num(l.epochs as f64));
+            ro.insert("goodput".into(), Json::Num(ri.goodput));
+            obj.insert("recovery".into(), Json::Obj(ro));
+        }
         scenarios.insert(r.scenario.clone(), Json::Obj(obj));
     }
     let mut root = std::collections::BTreeMap::new();
@@ -201,6 +234,27 @@ pub fn fault_ledger_line(l: &FaultLedger) -> String {
         l.retries,
         l.retries_exhausted,
         l.rerouted_bytes / 1e6
+    )
+}
+
+/// One-line human rendering of a recovery ledger (CLI `--recover`
+/// summaries): timeline deltas plus the exact token accounting.
+pub fn recovery_line(l: &RecoveryLedger) -> String {
+    format!(
+        "recovery: rank(s) {:?} died at {}, detected via {} after {}, \
+         drain {}, re-plan {}, resumed at {}; tokens {} delivered \
+         ({} rerouted), {} dropped; {} epoch(s)",
+        l.dead_ranks,
+        fmt_time(l.died_at),
+        l.via,
+        fmt_time(l.detected_at - l.died_at),
+        fmt_time(l.drained_at - l.detected_at),
+        fmt_time(l.replanned_at - l.drained_at),
+        fmt_time(l.resumed_at),
+        l.tokens_delivered,
+        l.tokens_rerouted,
+        l.tokens_dropped,
+        l.epochs
     )
 }
 
@@ -367,6 +421,7 @@ mod tests {
             sim_wall_ns: 0,
             threads: Vec::new(),
             fault: None,
+            recovery: None,
         }];
         let s = engine_bench_json(&recs);
         let doc = crate::util::json::parse(&s).unwrap();
@@ -387,6 +442,7 @@ mod tests {
             sim_wall_ns: 2_000_000_000,
             threads: vec![(1, 2000.0), (8, 12000.0)],
             fault: None,
+            recovery: None,
         }];
         let s = engine_bench_json(&recs);
         let doc = crate::util::json::parse(&s).unwrap();
@@ -415,6 +471,7 @@ mod tests {
                 },
                 slowdown: 1.37,
             }),
+            recovery: None,
         }];
         let s = engine_bench_json(&recs);
         let doc = crate::util::json::parse(&s).unwrap();
@@ -425,6 +482,48 @@ mod tests {
         assert_eq!(f.get("slowdown").as_f64(), Some(1.37));
         let line = fault_ledger_line(&FaultLedger::default());
         assert!(line.contains("0 retries"), "{line}");
+    }
+
+    #[test]
+    fn engine_bench_json_carries_recovery() {
+        let ledger = RecoveryLedger {
+            dead_ranks: vec![3],
+            died_at: 1e-4,
+            detected_at: 1.5e-4,
+            via: "flow-kill".into(),
+            drained_at: 1.6e-4,
+            replanned_at: 4e-4,
+            resumed_at: 4e-4,
+            flows_drained: 5,
+            steps_checkpointed: 12,
+            tokens_delivered: 84,
+            tokens_rerouted: 10,
+            tokens_dropped: 12,
+            epochs: 1,
+        };
+        let recs = vec![EngineBenchRecord {
+            scenario: "moe-ep-rank-death".into(),
+            events: 800,
+            median_wall_s: 0.1,
+            sim_wall_ns: 0,
+            threads: Vec::new(),
+            fault: None,
+            recovery: Some(RecoveryBenchInfo {
+                ledger: ledger.clone(),
+                goodput: 84.0 / 96.0,
+            }),
+        }];
+        let s = engine_bench_json(&recs);
+        let doc = crate::util::json::parse(&s).unwrap();
+        let r = doc.get("scenarios").get("moe-ep-rank-death").get("recovery");
+        assert_eq!(r.get("via").as_str(), Some("flow-kill"));
+        assert_eq!(r.get("tokens_delivered").as_usize(), Some(84));
+        assert_eq!(r.get("epochs").as_usize(), Some(1));
+        assert!((r.get("detect_latency_s").as_f64().unwrap() - 5e-5).abs() < 1e-12);
+        assert!((r.get("goodput").as_f64().unwrap() - 0.875).abs() < 1e-12);
+        let line = recovery_line(&ledger);
+        assert!(line.contains("flow-kill"), "{line}");
+        assert!(line.contains("84 delivered"), "{line}");
     }
 
     #[test]

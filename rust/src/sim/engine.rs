@@ -50,7 +50,7 @@
 use std::cmp::Ordering;
 use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 
-use crate::config::{FaultPlan, HardwareModel, RailPolicy, TrafficClass};
+use crate::config::{DeathScope, FaultPlan, FaultTarget, HardwareModel, RailPolicy, TrafficClass};
 use crate::mem::{Slice, SymmetricHeap};
 use crate::program::{ComputeCost, NumericOp, Op, Program, Scope, SigCond, SigOp, SigRef};
 use crate::sim::flow::{FlowId, FlowNet};
@@ -131,6 +131,49 @@ pub struct FaultLedger {
     pub retries_exhausted: u64,
 }
 
+/// What the elastic recovery controller (`coordinator::recover`) did to
+/// survive a permanent rank/node death: the detect → drain → re-plan →
+/// resume timeline plus exact token accounting. The engine itself never
+/// fills this — it aborts with [`SimError::DeadPeer`] and the
+/// controller stitches the ledger into the final [`SimReport`] — so
+/// fault-free and non-death runs carry `None` and stay bit-identical.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RecoveryLedger {
+    /// Ranks that permanently died, ascending.
+    pub dead_ranks: Vec<usize>,
+    /// Virtual time of the (first) death.
+    pub died_at: f64,
+    /// When the engine detected it (`detected_at - died_at` is the
+    /// detection latency).
+    pub detected_at: f64,
+    /// How it was detected: `flow-kill`, `launch-to-dead`,
+    /// `retry-to-dead`, `watchdog`, or `queue-drain`.
+    pub via: String,
+    /// When the structured drain of in-flight state finished.
+    pub drained_at: f64,
+    /// When the survivor-world re-plan was ready.
+    pub replanned_at: f64,
+    /// When the survivor program resumed executing.
+    pub resumed_at: f64,
+    /// In-flight flows killed because they touched a dead rank.
+    pub flows_drained: u64,
+    /// Program steps (tasks) already complete at detection and carried
+    /// over instead of re-executed.
+    pub steps_checkpointed: u64,
+    /// (token, expert-slot) pairs delivered by the survivor plan.
+    pub tokens_delivered: u64,
+    /// Delivered pairs whose expert moved to a different physical rank
+    /// in the re-shard (subset of `tokens_delivered`).
+    pub tokens_rerouted: u64,
+    /// Pairs lost with the dead ranks (their resident tokens) plus
+    /// survivor-side capacity drops. Conservation invariant:
+    /// `tokens_delivered + tokens_dropped` = every pair the original
+    /// plan owed.
+    pub tokens_dropped: u64,
+    /// Recovery rounds executed (1 = single death epoch).
+    pub epochs: u32,
+}
+
 /// Aggregate result of a simulation run.
 #[derive(Debug, Clone, Default)]
 pub struct SimReport {
@@ -146,6 +189,10 @@ pub struct SimReport {
     pub flows: u64,
     /// Fault/recovery activity (all-zero when no faults were injected).
     pub ledger: FaultLedger,
+    /// Elastic-recovery timeline + token accounting; `Some` only on
+    /// reports stitched by `coordinator::recover` after a permanent
+    /// death (`None` preserves empty-plan bit-identity).
+    pub recovery: Option<RecoveryLedger>,
     /// Host wall-clock spent inside the engine, nanoseconds. Measured,
     /// not simulated — the one field that is *not* bit-reproducible
     /// across runs (equivalence suites must ignore it).
@@ -193,6 +240,44 @@ pub enum SimError {
         timeout: f64,
         at: f64,
     },
+    #[error(
+        "dead peer: rank(s) {:?} died at t={:.6e}s, detected at \
+         t={:.6e}s via {} ({} in-flight flows drained, {} steps \
+         checkpointed)",
+        .0.dead, .0.died_at, .0.detected_at, .0.via,
+        .0.flows_drained, .0.checkpoint.len()
+    )]
+    DeadPeer(Box<DeadPeerInfo>),
+}
+
+/// Structured abort a permanent rank/node death produces instead of a
+/// hang or a bare [`SimError::Deadlock`]: who died, when, how the
+/// engine noticed, what in-flight state was drained, and a checkpoint
+/// of every task that had already completed — everything the elastic
+/// recovery controller (`coordinator::recover`) needs to re-plan over
+/// the survivor world and resume.
+#[derive(Debug, Clone)]
+pub struct DeadPeerInfo {
+    /// Permanently dead ranks, in death order.
+    pub dead: Vec<usize>,
+    /// Virtual time of the (first) death.
+    pub died_at: f64,
+    /// Virtual time of detection (= abort time).
+    pub detected_at: f64,
+    /// Detection path: `flow-kill` (an in-flight transfer touched the
+    /// dying rank), `launch-to-dead` (a task posted a transfer to/from a
+    /// dead endpoint), `retry-to-dead` (the retry ladder re-routed onto
+    /// a dead endpoint), `watchdog` (a liveness watchdog fired with
+    /// deaths active), or `queue-drain` (the event queue drained with
+    /// stuck tasks — the backstop that guarantees a death can never end
+    /// in a bare `Deadlock`).
+    pub via: String,
+    /// In-flight flows killed because a dead rank terminated them.
+    pub flows_drained: u64,
+    /// Tasks already `Done` at detection: `(name, rank, t_start,
+    /// t_end)`, exactly the `SimReport::task_spans` rows the controller
+    /// carries over instead of re-executing.
+    pub checkpoint: Vec<(String, usize, f64, f64)>,
 }
 
 // ---------------------------------------------------------------------------
@@ -213,6 +298,8 @@ enum Ev {
     Watchdog { task: usize, gen: u64 },
     /// Backoff expired for a killed put; re-route and relaunch.
     Retry { entry: usize },
+    /// A permanent rank/node death (`FaultPlan::deaths[death]`) fires.
+    Death { death: usize },
 }
 
 struct QEntry {
@@ -554,6 +641,16 @@ pub(crate) struct Runner<'s, 'a, 'h, E: ?Sized = dyn ComputeExecutor + 'h> {
     wd_gen: Vec<u64>,
     retries: Vec<Option<RetryEntry>>,
     retry_free: Vec<usize>,
+    /// Any permanent deaths scheduled? Gates every death-detection
+    /// branch (false on death-free plans: zero extra work).
+    deaths_on: bool,
+    /// Per death: the concrete ranks it retires (empty = out of range,
+    /// inert on this cluster like an absent fault target).
+    death_ranks: Vec<Vec<usize>>,
+    /// Set when the first death fires: `(died_at, dead ranks so far)`.
+    dead_since: Option<(f64, Vec<usize>)>,
+    /// In-flight flows killed because they touched a dead rank.
+    flows_drained: u64,
 
     pub(crate) report: SimReport,
 }
@@ -616,6 +713,18 @@ impl<'s, 'a, 'h, E: ComputeExecutor + ?Sized> Runner<'s, 'a, 'h, E> {
         };
         let jitter = plan.jitter.map(|j| (Rng::new(j.seed), j.max_secs));
         let base_bw = link_bw.clone();
+        let c = &sim.topo.cluster;
+        let death_ranks: Vec<Vec<usize>> = plan
+            .deaths
+            .iter()
+            .map(|d| match d.scope {
+                DeathScope::Rank(r) if r < ws => vec![r],
+                DeathScope::Node(n) if n < c.nodes => {
+                    (0..ws).filter(|&r| c.node_of(r) == n).collect()
+                }
+                _ => Vec::new(), // out of range: inert, like absent targets
+            })
+            .collect();
         Runner {
             sim,
             prog,
@@ -670,6 +779,10 @@ impl<'s, 'a, 'h, E: ComputeExecutor + ?Sized> Runner<'s, 'a, 'h, E> {
             wd_gen: vec![0; prog.tasks.len()],
             retries: Vec::new(),
             retry_free: Vec::new(),
+            deaths_on: faults_on && death_ranks.iter().any(|r| !r.is_empty()),
+            death_ranks,
+            dead_since: None,
+            flows_drained: 0,
             report: SimReport::default(),
         }
     }
@@ -746,6 +859,13 @@ impl<'s, 'a, 'h, E: ComputeExecutor + ?Sized> Runner<'s, 'a, 'h, E> {
                     self.push(f.t_end, Ev::FaultToggle { fault: i, begin: false });
                 }
             }
+            for i in 0..self.death_ranks.len() {
+                if self.death_ranks[i].is_empty() {
+                    continue; // scope absent on this cluster: inert
+                }
+                let t = self.sim.faults.deaths[i].t;
+                self.push(t, Ev::Death { death: i });
+            }
         }
         Ok(())
     }
@@ -770,6 +890,7 @@ impl<'s, 'a, 'h, E: ComputeExecutor + ?Sized> Runner<'s, 'a, 'h, E> {
             Ev::FaultToggle { fault, begin } => self.on_fault_toggle(fault, begin)?,
             Ev::Watchdog { task, gen } => self.on_watchdog(task, gen)?,
             Ev::Retry { entry } => self.on_retry(entry)?,
+            Ev::Death { death } => self.on_death(death)?,
         }
         Ok(())
     }
@@ -847,9 +968,14 @@ impl<'s, 'a, 'h, E: ComputeExecutor + ?Sized> Runner<'s, 'a, 'h, E> {
             self.dispatch(t, ev)?;
         }
 
-        // completion / deadlock check
+        // completion / deadlock check; with a death on record the stall
+        // is attributed to the dead peer (queue-drain backstop: a death
+        // never surfaces as a bare Deadlock)
         let stuck = self.stuck_tasks();
         if !stuck.is_empty() {
+            if self.dead_since.is_some() {
+                return Err(self.dead_peer("queue-drain"));
+            }
             return Err(SimError::Deadlock(stuck.join("; ")));
         }
 
@@ -1218,6 +1344,126 @@ impl<'s, 'a, 'h, E: ComputeExecutor + ?Sized> Runner<'s, 'a, 'h, E> {
         Ok(())
     }
 
+    /// A permanent rank/node death fires: mark the ranks dead in the
+    /// health view, zero every link they terminate, drain (kill without
+    /// retry — the peer is gone) every in-flight flow riding those
+    /// links, and — when anything was actually in flight — abort with a
+    /// structured [`SimError::DeadPeer`] right here (`via: flow-kill`).
+    /// A death nothing was talking to stays silent until the first
+    /// subsequent touch: a transfer posted to/from a dead endpoint, a
+    /// retry re-routed onto one, a watchdog firing with deaths active,
+    /// or ultimately the queue-drain backstop in [`Runner::run`]. All
+    /// paths produce `DeadPeer`, never a hang or a bare `Deadlock`.
+    fn on_death(&mut self, death: usize) -> Result<(), SimError> {
+        let ranks = self.death_ranks[death].clone();
+        let mut changes: Vec<(LinkId, f64)> = Vec::new();
+        {
+            let health = self.health.as_mut().expect("deaths without health");
+            let mut newly: Vec<usize> = Vec::new();
+            for &r in &ranks {
+                if health.is_alive(r) {
+                    health.mark_dead(r);
+                    newly.push(r);
+                }
+            }
+            if newly.is_empty() {
+                return Ok(()); // overlapping die/nodedead: idempotent
+            }
+            for &r in &newly {
+                for l in self.sim.topo.fault_links(&FaultTarget::Rank { rank: r }) {
+                    if health.factor(l) != 0.0 {
+                        health.set_factor(l, 0.0);
+                        changes.push((l, 0.0));
+                    }
+                }
+            }
+            match &mut self.dead_since {
+                Some((_, list)) => list.extend(newly),
+                None => self.dead_since = Some((self.clock, newly)),
+            }
+        }
+        self.report.ledger.faults_applied += 1;
+
+        // Drain: every in-flight flow terminating at a dead rank is
+        // lost — no data movement, no signal, no retry. Flows whose
+        // wire transfer already finished (FlowDone due at this instant)
+        // are let through, matching the fault-toggle rule.
+        let mut victims: Vec<FlowId> = Vec::new();
+        for &(l, _) in &changes {
+            for f in self.flows.flows_on(l) {
+                if !victims.contains(&f) && self.flows.remaining_at(f, self.clock) > 0.0 {
+                    victims.push(f);
+                }
+            }
+        }
+        victims.sort_by_key(|f| self.flow_ctx[f.0].as_ref().expect("victim ctx missing").key);
+        for &f in &victims {
+            let links = self.flows.links_of(f).to_vec();
+            let ctx = self.flow_ctx[f.0].take().expect("victim ctx missing");
+            if self.track_occ {
+                self.occ.release(&links, ctx.wire_bytes);
+            }
+            self.report.ledger.flows_killed += 1;
+            self.flows_drained += 1;
+        }
+        if !victims.is_empty() {
+            let (_ids, upd) = self.flows.update(self.clock, &victims, Vec::new());
+            for (f, gen, eta) in upd.etas {
+                if eta.is_finite() {
+                    self.push(self.clock + eta, Ev::FlowDone { flow: f, gen });
+                }
+            }
+        }
+        let upd = self.flows.retarget(self.clock, &changes);
+        for (f, gen, eta) in upd.etas {
+            if eta.is_finite() {
+                self.push(self.clock + eta, Ev::FlowDone { flow: f, gen });
+            }
+        }
+        if self.flows_drained > 0 {
+            return Err(self.dead_peer("flow-kill"));
+        }
+        Ok(())
+    }
+
+    /// Build the structured death abort: who died, when it was noticed,
+    /// and the checkpoint of completed tasks the recovery controller
+    /// carries over.
+    fn dead_peer(&self, via: &str) -> SimError {
+        let (died_at, dead) = self.dead_since.clone().expect("dead_peer without a death");
+        let checkpoint: Vec<(String, usize, f64, f64)> = self
+            .prog
+            .tasks
+            .iter()
+            .zip(self.tasks.iter())
+            .filter(|(_, rt)| rt.state == TState::Done)
+            .map(|(s, rt)| (s.name.clone(), s.rank, rt.t_start, rt.t_end))
+            .collect();
+        SimError::DeadPeer(Box::new(DeadPeerInfo {
+            dead,
+            died_at,
+            detected_at: self.clock,
+            via: via.to_string(),
+            flows_drained: self.flows_drained,
+            checkpoint,
+        }))
+    }
+
+    /// Death-detection probe on a transfer's endpoints (inert unless
+    /// deaths are scheduled): posting to or from a dead rank aborts with
+    /// `DeadPeer` instead of launching a flow that can never complete.
+    fn check_endpoints_alive(&self, src: usize, dst: usize) -> Result<(), SimError> {
+        if !self.deaths_on {
+            return Ok(());
+        }
+        if let Some(h) = &self.health {
+            if !h.is_alive(src) || !h.is_alive(dst) {
+                return Err(self.dead_peer("launch-to-dead"));
+            }
+        }
+        Ok(())
+    }
+
     fn alloc_retry(&mut self, e: RetryEntry) -> usize {
         if let Some(i) = self.retry_free.pop() {
             self.retries[i] = Some(e);
@@ -1250,6 +1496,15 @@ impl<'s, 'a, 'h, E: ComputeExecutor + ?Sized> Runner<'s, 'a, 'h, E> {
             None => true,
         };
         if !alive {
+            // a dead endpoint can never come back: abort structured
+            // instead of burning the backoff ladder
+            if self.deaths_on {
+                if let Some(h) = &self.health {
+                    if !h.is_alive(e.rt.src) || !h.is_alive(e.rt.dst) {
+                        return Err(self.dead_peer("retry-to-dead"));
+                    }
+                }
+            }
             if e.attempt < self.sim.faults.retry_max {
                 let attempt = e.attempt + 1;
                 let back = self.sim.faults.backoff(attempt);
@@ -1295,6 +1550,11 @@ impl<'s, 'a, 'h, E: ComputeExecutor + ?Sized> Runner<'s, 'a, 'h, E> {
             }
             _ => return Ok(()), // woke up since; stale
         };
+        if self.dead_since.is_some() {
+            // the wait will never be satisfied by a dead peer: surface
+            // the death, not a generic timeout
+            return Err(self.dead_peer("watchdog"));
+        }
         let spec = &self.prog.tasks[task];
         Err(SimError::WatchdogTimeout {
             task: spec.name.clone(),
@@ -1332,6 +1592,7 @@ impl<'s, 'a, 'h, E: ComputeExecutor + ?Sized> Runner<'s, 'a, 'h, E> {
                     tc,
                     label,
                 } => {
+                    self.check_endpoints_alive(src.rank, dst.rank)?;
                     let mut route =
                         self.router
                             .route_faulty(src.rank, dst.rank, tc, &self.occ, self.health.as_ref());
@@ -1377,6 +1638,7 @@ impl<'s, 'a, 'h, E: ComputeExecutor + ?Sized> Runner<'s, 'a, 'h, E> {
                     tc,
                     label,
                 } => {
+                    self.check_endpoints_alive(src.rank, dst.rank)?;
                     let mut route =
                         self.router
                             .route_faulty(src.rank, dst.rank, tc, &self.occ, self.health.as_ref());
@@ -1407,6 +1669,7 @@ impl<'s, 'a, 'h, E: ComputeExecutor + ?Sized> Runner<'s, 'a, 'h, E> {
                     self.tasks[task].pc += 1;
                 }
                 Op::MultimemSt { src, bytes, ll } => {
+                    self.check_endpoints_alive(src.rank, src.rank)?;
                     let route = self
                         .sim
                         .topo
@@ -1441,6 +1704,7 @@ impl<'s, 'a, 'h, E: ComputeExecutor + ?Sized> Runner<'s, 'a, 'h, E> {
                     return Ok(());
                 }
                 Op::LLPut { src, dst, bytes, tc } => {
+                    self.check_endpoints_alive(src.rank, dst.rank)?;
                     let route =
                         self.router
                             .route_faulty(src.rank, dst.rank, tc, &self.occ, self.health.as_ref());

@@ -11,6 +11,7 @@ pub mod flow;
 pub(crate) mod par;
 
 pub use engine::{
-    ComputeExecutor, FaultLedger, NoopExecutor, OpSpan, Sim, SimConfig, SimError, SimReport,
+    ComputeExecutor, DeadPeerInfo, FaultLedger, NoopExecutor, OpSpan, RecoveryLedger, Sim,
+    SimConfig, SimError, SimReport,
 };
 pub use flow::{FlowId, FlowNet, RateUpdate};

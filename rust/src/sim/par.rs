@@ -60,10 +60,19 @@ use crate::topology::PartitionMap;
 /// map (node partitions coarsened by the program's cross-node
 /// couplings). `None` means: run the sequential engine.
 pub(crate) fn plan(sim: &Sim, prog: &Program) -> Option<PartitionMap> {
+    // Permanent deaths make the run ineligible for sharding: a death
+    // retires *intra-node* links (FaultTarget::Rank/Node reach past the
+    // fabric boundary the fault machinery otherwise respects), and the
+    // recovery that follows — abort with DeadPeer, re-plan over the
+    // survivor world — happens above the engine, where the conservative
+    // lookahead cannot model it. `--threads N` with a death plan falls
+    // back to the sequential engine; reports stay bit-identical either
+    // way, as always.
     if sim.threads() <= 1
         || sim.cfg.numerics
         || sim.cfg.trace
         || sim.faults().jitter.is_some()
+        || sim.faults().has_deaths()
         || sim.topo.cluster.fabric.rail_policy != RailPolicy::Static
         || sim.topo.cluster.nodes < 2
     {

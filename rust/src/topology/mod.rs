@@ -179,6 +179,14 @@ impl LinkOccupancy {
 /// the `Option<&FabricHealth>` stays `None` and routing is bit-identical
 /// to the health-blind path.
 ///
+/// Besides per-link factors the health view carries a per-rank
+/// **alive-mask** for permanent deaths (`die` / `nodedead` fault
+/// clauses): [`FabricHealth::mark_dead`] retires a rank forever, and
+/// [`FabricHealth::is_alive`] lets the engine and router refuse dead
+/// endpoints outright instead of discovering the zeroed links one flow
+/// at a time. The mask is lazily grown, so fault plans without deaths
+/// allocate nothing and stay bit-identical to the PR-5 behavior.
+///
 /// ```
 /// use triton_dist_sim::topology::{FabricHealth, LinkId};
 ///
@@ -188,19 +196,26 @@ impl LinkOccupancy {
 /// assert!(h.is_down(LinkId(2)));
 /// h.set_factor(LinkId(2), 1.0);
 /// assert!(h.all_healthy());
+/// assert!(h.is_alive(7) && !h.any_dead());
+/// h.mark_dead(7);
+/// assert!(!h.is_alive(7) && h.any_dead());
 /// ```
 #[derive(Debug, Clone)]
 pub struct FabricHealth {
     factor: Vec<f64>,
     degraded: usize,
+    /// Permanently dead ranks; empty (nothing dead) until the first
+    /// [`mark_dead`](Self::mark_dead).
+    alive: Vec<bool>,
 }
 
 impl FabricHealth {
-    /// All links at nominal capacity.
+    /// All links at nominal capacity, every rank alive.
     pub fn healthy(n_links: usize) -> Self {
         FabricHealth {
             factor: vec![1.0; n_links],
             degraded: 0,
+            alive: Vec::new(),
         }
     }
 
@@ -234,6 +249,36 @@ impl FabricHealth {
     /// Does every link of `route` have nonzero capacity?
     pub fn route_alive(&self, route: &Route) -> bool {
         route.links.iter().all(|l| self.factor[l.0] > 0.0)
+    }
+
+    /// Permanently retire `rank`. Idempotent; the engine also zeroes
+    /// every link the rank terminates, so `route_alive` refuses its
+    /// routes and `is_alive` refuses it as an endpoint.
+    pub fn mark_dead(&mut self, rank: usize) {
+        if self.alive.len() <= rank {
+            self.alive.resize(rank + 1, true);
+        }
+        self.alive[rank] = false;
+    }
+
+    /// Has `rank` not been [`mark_dead`](Self::mark_dead)ed? Ranks the
+    /// mask has never seen are alive.
+    pub fn is_alive(&self, rank: usize) -> bool {
+        self.alive.get(rank).copied().unwrap_or(true)
+    }
+
+    /// Any permanent death recorded?
+    pub fn any_dead(&self) -> bool {
+        self.alive.iter().any(|a| !a)
+    }
+
+    /// The dead ranks, ascending.
+    pub fn dead_ranks(&self) -> Vec<usize> {
+        self.alive
+            .iter()
+            .enumerate()
+            .filter_map(|(r, &a)| (!a).then_some(r))
+            .collect()
     }
 }
 
@@ -557,8 +602,12 @@ impl Topology {
     /// Is `id` part of the inter-node fabric (NIC / leaf / spine tiers)?
     ///
     /// Fabric links are exactly the links an inter-node route traverses
-    /// and exactly the links a [`FaultTarget`] can resolve to; intra-node
-    /// links (NVLink / mesh / PCIe / HBM) are everything else. The two
+    /// and exactly the links the *fabric-scoped* [`FaultTarget`]s
+    /// (`Nic`/`Spine`/`Rail`) can resolve to; intra-node links (NVLink /
+    /// mesh / PCIe / HBM) are everything else. The endpoint-scoped
+    /// targets (`Rank`/`Node`, used by permanent deaths) do reach
+    /// intra-node links, which is one reason plans with deaths are
+    /// excluded from the sharded engine (`sim/par.rs`). The two
     /// sets are disjoint and no route mixes intra-node links of two
     /// different nodes, which is what lets the sharded engine give each
     /// node partition a private [`crate::sim::FlowNet`] over its intra
@@ -662,8 +711,49 @@ impl Topology {
                     }
                 }
             }
+            FaultTarget::Rank { rank } => {
+                if rank < self.cluster.world_size() {
+                    self.rank_links(rank, &mut out);
+                }
+            }
+            FaultTarget::Node { node } => {
+                if node < self.cluster.nodes {
+                    for r in 0..self.cluster.world_size() {
+                        if self.cluster.node_of(r) == node {
+                            self.rank_links(r, &mut out);
+                        }
+                    }
+                }
+            }
         }
         out
+    }
+
+    /// Every link terminating at `rank`: its HBM port, intra-node
+    /// egress/ingress (or mesh pairs, either direction), and NIC tx/rx
+    /// on every rail. Shared links (PCIe root complexes, leaf/spine
+    /// tiers) are *not* included — killing a rank must not take down its
+    /// healthy neighbors. Used by [`FaultTarget::Rank`] /
+    /// [`FaultTarget::Node`] (and therefore by permanent deaths).
+    fn rank_links(&self, rank: usize, out: &mut Vec<LinkId>) {
+        let rails = self.cluster.fabric.rails;
+        let mut push = |idx: usize| {
+            if idx != usize::MAX {
+                out.push(LinkId(idx));
+            }
+        };
+        push(self.hbm[rank]);
+        push(self.intra_egress[rank]);
+        push(self.intra_ingress[rank]);
+        for rail in 0..rails {
+            push(self.nic_tx[rank * rails + rail]);
+            push(self.nic_rx[rank * rails + rail]);
+        }
+        for (&(a, b), &idx) in self.mesh.iter() {
+            if a == rank || b == rank {
+                push(idx);
+            }
+        }
     }
 }
 
@@ -755,6 +845,15 @@ impl<'t> Router<'t> {
         occ: &LinkOccupancy,
         health: Option<&FabricHealth>,
     ) -> Route {
+        // A permanently dead endpoint is refused outright: no plane can
+        // help, so skip the adaptive search and return the static route
+        // (all of whose endpoint links are zeroed), which the engine's
+        // death detection then converts into a structured `DeadPeer`.
+        if let Some(h) = health {
+            if !h.is_alive(src) || !h.is_alive(dst) {
+                return self.topo.route_tc(src, dst, tc);
+            }
+        }
         let inter = src != dst
             && self.topo.cluster.fabric.rails > 1
             && self.topo.cluster.node_of(src) != self.topo.cluster.node_of(dst);
