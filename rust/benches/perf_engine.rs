@@ -39,6 +39,11 @@
 //!   (`coordinator::recover`) detects the death, drains, re-plans over
 //!   the 15 survivors and resumes; the record carries the recovery
 //!   timeline (detect/drain/re-plan latency) and the degraded goodput.
+//! * `serve-mixed-1k` — 1k-request mixed trace (poisson + bursts + a
+//!   diurnal swell) through the continuous-batching serving loop
+//!   (`coordinator::serve`) with rank 3 dying mid-trace: prices the
+//!   outer serving loop + memoized per-step decode programs, and the
+//!   record carries the p50/p99 TTFT & TPOT for cross-PR tracking.
 //! * `alltoall-4096rank-par` — 512x8 LL AllToAll on a 2-rail fabric,
 //!   swept over `--threads {1,2,4,8}` on the component-sharded engine
 //!   (`sim/par.rs`): the record carries the threads -> events/s curve
@@ -56,13 +61,13 @@ use triton_dist_sim::bench::{banner, bench_wall};
 use triton_dist_sim::collectives::alltoall::{a2a_ll, a2a_skew, A2aBufs, A2aCfg};
 use triton_dist_sim::collectives::ProgBuild;
 use triton_dist_sim::config::{
-    ClusterSpec, DType, FabricSpec, FaultPlan, GemmShape, MoeShape, RailPolicy,
+    ClusterSpec, DType, FabricSpec, FaultPlan, GemmShape, MoeShape, RailPolicy, TracePlan,
 };
-use triton_dist_sim::coordinator::{ag_gemm, ep_moe, recover};
+use triton_dist_sim::coordinator::{ag_gemm, ep_moe, recover, serve};
 use triton_dist_sim::mem::SymmetricHeap;
 use triton_dist_sim::metrics::{
-    engine_bench_json, fault_ledger_line, recovery_line, EngineBenchRecord, FaultBenchInfo,
-    RecoveryBenchInfo,
+    engine_bench_json, fault_ledger_line, recovery_line, serving_line, EngineBenchRecord,
+    FaultBenchInfo, RecoveryBenchInfo,
 };
 use triton_dist_sim::shmem::ShmemCtx;
 use triton_dist_sim::sim::{NoopExecutor, Sim, SimConfig, SimReport};
@@ -118,6 +123,7 @@ fn report_fault(
         threads: Vec::new(),
         fault,
         recovery: None,
+        serving: None,
     });
 }
 
@@ -431,6 +437,7 @@ fn main() {
         threads: par_sweep,
         fault: None,
         recovery: None,
+        serving: None,
     });
 
     // 1024-rank token-routed EP MoE, same threads sweep: shard work here
@@ -496,6 +503,7 @@ fn main() {
         threads: ep_par_sweep,
         fault: None,
         recovery: None,
+        serving: None,
     });
 
     // AG+GEMM with numerics off — program-build + engine cost
@@ -613,6 +621,53 @@ fn main() {
             ledger: rec,
             goodput: death_goodput,
         }),
+        serving: None,
+    });
+
+    // trace-driven serving: a 1k-request mixed trace (poisson floor +
+    // burst spikes + a diurnal swell) on a railed 2x8 fleet, with rank
+    // 3 dying mid-trace — the full serving loop (arrivals -> batcher ->
+    // prefill/decode SM partition -> per-step flash-decode + EP-MoE ->
+    // elastic recovery) priced end to end. The record carries the
+    // ServingBenchInfo percentiles for cross-PR latency tracking.
+    println!("\nserve-mixed-1k (trace-driven serving)");
+    let serve_cluster = ClusterSpec::h800(2, 8)
+        .with_fabric(FabricSpec::rail_optimized(2, 2.0).with_spine_taper(2.0));
+    let serve_trace = TracePlan::parse(
+        "poisson,1e4,500,11; bursty,5e3,300,12,4,2e-3; diurnal,4e3,200,13,8e-3,0.75; lens,96,16",
+    )
+    .unwrap()
+    .materialize();
+    let serve_cfg = serve::ServeCfg {
+        moe_experts: 16,
+        moe_hidden: 128,
+        ..serve::ServeCfg::default()
+    };
+    let die_at = serve_trace.horizon() * 0.5;
+    let serve_plan = FaultPlan::parse(&format!("die,3,{die_at}")).unwrap();
+    let mut serve_rep = serve::run_serve(
+        serve_cluster,
+        &serve_trace,
+        serve_plan.clone(),
+        &serve_cfg,
+    )
+    .unwrap();
+    let stat_serve = bench_wall("serve-mixed-1k", 1, 3, || {
+        serve_rep =
+            serve::run_serve(serve_cluster, &serve_trace, serve_plan.clone(), &serve_cfg).unwrap();
+    });
+    println!("{}", stat_serve.render());
+    let serve_info = serve_rep.bench_info();
+    println!("  {}", serving_line(&serve_info));
+    records.push(EngineBenchRecord {
+        scenario: "serve-mixed-1k".to_string(),
+        events: serve_rep.events,
+        median_wall_s: stat_serve.median_s,
+        sim_wall_ns: 0,
+        threads: Vec::new(),
+        fault: None,
+        recovery: None,
+        serving: Some(serve_info),
     });
 
     // machine-readable trajectory for cross-PR tracking

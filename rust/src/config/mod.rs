@@ -6,8 +6,10 @@
 //! (who wins, by what factor), which is what the reproduction targets.
 
 pub mod fault;
+pub mod workload;
 
 pub use fault::{Death, DeathScope, FaultPlan, FaultTarget, Jitter, LinkFault, Straggler};
+pub use workload::{ArrivalKind, ArrivalProc, ArrivalTrace, Request, TracePlan, TraceReq};
 
 /// Accelerator family being simulated.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

@@ -1,0 +1,631 @@
+//! Serving workload traces: a deterministic request arrival process for
+//! the trace-driven serving simulator (`coordinator::serve`).
+//!
+//! A [`TracePlan`] mirrors the [`FaultPlan`](super::FaultPlan) design:
+//! a semicolon-separated clause DSL (`--trace`), an exact
+//! [`Display`](struct.TracePlan.html#impl-Display-for-TracePlan)
+//! round-trip, a seeded [`synthesize`](TracePlan::synthesize), and an
+//! [`is_empty`](TracePlan::is_empty) contract — an empty plan admits no
+//! requests and the serving loop degenerates to a no-op, bit-identical
+//! to never having invoked it.
+//!
+//! [`TracePlan::materialize`] expands the plan into an
+//! [`ArrivalTrace`]: a time-sorted list of [`Request`]s with seeded
+//! prompt/output lengths. Same plan, same trace, bit-for-bit — every
+//! draw comes from the clause's own [`Rng`] stream, so two processes in
+//! one plan never perturb each other.
+
+use crate::util::Rng;
+
+/// Shape of one arrival process clause.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalKind {
+    /// Homogeneous Poisson arrivals at `rate` requests/s
+    /// (DSL: `poisson,<rate>,<n>,<seed>`).
+    Poisson,
+    /// On/off bursts: the first half of every `period` runs at
+    /// `rate * factor`, the second at `rate / factor`
+    /// (DSL: `bursty,<rate>,<n>,<seed>,<factor>,<period>`).
+    Bursty {
+        /// Peak-to-mean rate multiplier (>= 1).
+        factor: f64,
+        /// Burst cycle length (s).
+        period: f64,
+    },
+    /// Sinusoidal day/night cycle: instantaneous rate
+    /// `rate * (1 + depth * sin(2*pi*t/period))`
+    /// (DSL: `diurnal,<rate>,<n>,<seed>,<period>,<depth>`).
+    Diurnal {
+        /// Cycle length (s).
+        period: f64,
+        /// Modulation depth in `[0, 1)` — the trough rate stays > 0.
+        depth: f64,
+    },
+}
+
+/// One seeded arrival process: `n` requests at a mean `rate`, shaped by
+/// `kind`, every draw from the process's own `seed` stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArrivalProc {
+    pub kind: ArrivalKind,
+    /// Mean arrival rate (requests/s), finite and > 0.
+    pub rate: f64,
+    /// Number of requests this process contributes.
+    pub n: usize,
+    /// Seed for inter-arrival and length draws.
+    pub seed: u64,
+}
+
+/// One explicitly scheduled request (DSL: `req,<t>,<prompt>,<output>`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceReq {
+    /// Arrival time (s).
+    pub t: f64,
+    /// Prompt length (tokens, >= 1).
+    pub prompt: usize,
+    /// Output length (tokens, >= 1).
+    pub output: usize,
+}
+
+/// The complete, deterministic workload schedule plus length knobs.
+///
+/// `prompt_mean` / `output_mean` parameterize the seeded length draws
+/// of the arrival processes; like `FaultPlan`'s recovery knobs they do
+/// not affect [`is_empty`](Self::is_empty) (means with no arrivals to
+/// apply them to cannot produce a request) — but unlike those knobs
+/// they *are* part of the DSL (`lens,<prompt>,<output>`, rendered only
+/// when non-default) so plans round-trip exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TracePlan {
+    /// Seeded arrival processes, expanded in order.
+    pub procs: Vec<ArrivalProc>,
+    /// Explicitly scheduled requests, merged after the processes.
+    pub explicit: Vec<TraceReq>,
+    /// Mean prompt length (tokens) for generated requests.
+    pub prompt_mean: usize,
+    /// Mean output length (tokens) for generated requests.
+    pub output_mean: usize,
+}
+
+impl Default for TracePlan {
+    fn default() -> Self {
+        TracePlan {
+            procs: Vec::new(),
+            explicit: Vec::new(),
+            prompt_mean: Self::DEFAULT_PROMPT_MEAN,
+            output_mean: Self::DEFAULT_OUTPUT_MEAN,
+        }
+    }
+}
+
+/// One request of a materialized trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    /// Trace-wide id, dense `0..len` in arrival order.
+    pub id: usize,
+    /// Arrival time (s).
+    pub t_arrive: f64,
+    /// Prompt length (tokens, >= 1).
+    pub prompt_tokens: usize,
+    /// Output length (tokens, >= 1).
+    pub output_tokens: usize,
+}
+
+/// A materialized, time-sorted request trace.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ArrivalTrace {
+    /// Requests sorted by `t_arrive` (stable on ties), ids dense.
+    pub requests: Vec<Request>,
+}
+
+impl ArrivalTrace {
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// Arrival time of the last request (0 for an empty trace).
+    pub fn horizon(&self) -> f64 {
+        self.requests.last().map_or(0.0, |r| r.t_arrive)
+    }
+}
+
+impl TracePlan {
+    /// Default mean prompt length (tokens).
+    pub const DEFAULT_PROMPT_MEAN: usize = 128;
+    /// Default mean output length (tokens).
+    pub const DEFAULT_OUTPUT_MEAN: usize = 32;
+    /// Default burst peak-to-mean factor for `--arrival bursty`.
+    pub const DEFAULT_BURST_FACTOR: f64 = 4.0;
+    /// Default burst cycle (s) for `--arrival bursty`.
+    pub const DEFAULT_BURST_PERIOD: f64 = 2e-3;
+    /// Default day/night cycle (s) for `--arrival diurnal`.
+    pub const DEFAULT_DIURNAL_PERIOD: f64 = 8e-3;
+    /// Default modulation depth for `--arrival diurnal`.
+    pub const DEFAULT_DIURNAL_DEPTH: f64 = 0.75;
+
+    /// No requests at all: the serving loop is a no-op. The length
+    /// means are ignored — with nothing arriving they cannot perturb
+    /// anything.
+    pub fn is_empty(&self) -> bool {
+        self.procs.is_empty() && self.explicit.is_empty()
+    }
+
+    /// Total number of requests the plan will materialize.
+    pub fn total_requests(&self) -> usize {
+        self.procs.iter().map(|p| p.n).sum::<usize>() + self.explicit.len()
+    }
+
+    /// Single-process plan for the CLI's
+    /// `--arrival poisson|bursty|diurnal` shorthand; bursty/diurnal get
+    /// the default shape constants (use the `--trace` DSL for custom
+    /// shapes).
+    pub fn arrival(kind: &str, rate: f64, n: usize, seed: u64) -> Result<TracePlan, String> {
+        let kind = match kind {
+            "poisson" => ArrivalKind::Poisson,
+            "bursty" => ArrivalKind::Bursty {
+                factor: Self::DEFAULT_BURST_FACTOR,
+                period: Self::DEFAULT_BURST_PERIOD,
+            },
+            "diurnal" => ArrivalKind::Diurnal {
+                period: Self::DEFAULT_DIURNAL_PERIOD,
+                depth: Self::DEFAULT_DIURNAL_DEPTH,
+            },
+            other => {
+                return Err(format!(
+                    "unknown arrival kind '{other}' (poisson|bursty|diurnal)"
+                ))
+            }
+        };
+        check_rate("--arrival", rate)?;
+        Ok(TracePlan {
+            procs: vec![ArrivalProc { kind, rate, n, seed }],
+            ..TracePlan::default()
+        })
+    }
+
+    /// Parse a semicolon-separated trace DSL (the `--trace` flag):
+    ///
+    /// * `poisson,<rate>,<n>,<seed>` — homogeneous Poisson arrivals
+    /// * `bursty,<rate>,<n>,<seed>,<factor>,<period>` — on/off bursts
+    /// * `diurnal,<rate>,<n>,<seed>,<period>,<depth>` — sinusoidal cycle
+    /// * `req,<t>,<prompt>,<output>` — one explicit request
+    /// * `lens,<prompt_mean>,<output_mean>` — length means for the
+    ///   seeded draws (last clause wins)
+    ///
+    /// Whitespace around separators is ignored; empty clauses are
+    /// skipped, so a trailing `;` is fine. Malformed clauses (wrong
+    /// arity, unknown kind, non-numeric, non-positive rate, depth
+    /// outside `[0, 1)`, …) return a structured `Err` naming the clause
+    /// — never a panic. `parse` is the exact inverse of the `Display`
+    /// rendering.
+    pub fn parse(s: &str) -> Result<TracePlan, String> {
+        let mut plan = TracePlan::default();
+        for clause in s.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = clause.split(',').map(str::trim).collect();
+            let usize_at = |i: usize| -> Result<usize, String> {
+                f.get(i)
+                    .ok_or_else(|| format!("trace clause '{clause}': missing field {i}"))?
+                    .parse::<usize>()
+                    .map_err(|e| format!("trace clause '{clause}' field {i}: {e}"))
+            };
+            let u64_at = |i: usize| -> Result<u64, String> {
+                f.get(i)
+                    .ok_or_else(|| format!("trace clause '{clause}': missing field {i}"))?
+                    .parse::<u64>()
+                    .map_err(|e| format!("trace clause '{clause}' field {i}: {e}"))
+            };
+            let f64_at = |i: usize| -> Result<f64, String> {
+                f.get(i)
+                    .ok_or_else(|| format!("trace clause '{clause}': missing field {i}"))?
+                    .parse::<f64>()
+                    .map_err(|e| format!("trace clause '{clause}' field {i}: {e}"))
+            };
+            match f[0] {
+                "poisson" => {
+                    let (rate, n, seed) = (f64_at(1)?, usize_at(2)?, u64_at(3)?);
+                    check_rate(clause, rate)?;
+                    plan.procs.push(ArrivalProc {
+                        kind: ArrivalKind::Poisson,
+                        rate,
+                        n,
+                        seed,
+                    });
+                }
+                "bursty" => {
+                    let (rate, n, seed) = (f64_at(1)?, usize_at(2)?, u64_at(3)?);
+                    let (factor, period) = (f64_at(4)?, f64_at(5)?);
+                    check_rate(clause, rate)?;
+                    if !(factor >= 1.0) || !factor.is_finite() {
+                        return Err(format!(
+                            "trace clause '{clause}': burst factor must be finite and >= 1"
+                        ));
+                    }
+                    check_period(clause, period)?;
+                    plan.procs.push(ArrivalProc {
+                        kind: ArrivalKind::Bursty { factor, period },
+                        rate,
+                        n,
+                        seed,
+                    });
+                }
+                "diurnal" => {
+                    let (rate, n, seed) = (f64_at(1)?, usize_at(2)?, u64_at(3)?);
+                    let (period, depth) = (f64_at(4)?, f64_at(5)?);
+                    check_rate(clause, rate)?;
+                    check_period(clause, period)?;
+                    if !(0.0..1.0).contains(&depth) {
+                        return Err(format!(
+                            "trace clause '{clause}': diurnal depth must be in [0, 1)"
+                        ));
+                    }
+                    plan.procs.push(ArrivalProc {
+                        kind: ArrivalKind::Diurnal { period, depth },
+                        rate,
+                        n,
+                        seed,
+                    });
+                }
+                "req" => {
+                    let (t, prompt, output) = (f64_at(1)?, usize_at(2)?, usize_at(3)?);
+                    if !(t >= 0.0) || !t.is_finite() {
+                        return Err(format!(
+                            "trace clause '{clause}': arrival time must be finite and >= 0"
+                        ));
+                    }
+                    check_len(clause, prompt, "prompt")?;
+                    check_len(clause, output, "output")?;
+                    plan.explicit.push(TraceReq { t, prompt, output });
+                }
+                "lens" => {
+                    let (p, o) = (usize_at(1)?, usize_at(2)?);
+                    check_len(clause, p, "prompt mean")?;
+                    check_len(clause, o, "output mean")?;
+                    plan.prompt_mean = p;
+                    plan.output_mean = o;
+                }
+                other => {
+                    return Err(format!(
+                        "unknown trace kind '{other}' (poisson|bursty|diurnal|req|lens)"
+                    ))
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Synthesize a random-but-deterministic plan from a seed: `n`
+    /// requests total across 1–3 processes of mixed kinds around the
+    /// given mean `rate`, occasionally with explicit requests and
+    /// non-default length means. Same `(seed, rate, n)`, same plan.
+    pub fn synthesize(seed: u64, rate: f64, n: usize) -> TracePlan {
+        assert!(rate > 0.0 && rate.is_finite(), "trace rate must be > 0");
+        let mut rng = Rng::new(seed ^ 0x7ACE_5EED_u64.rotate_left(17));
+        let mut plan = TracePlan::default();
+        let procs = 1 + rng.usize_in(0, 3);
+        let per = (n / procs).max(1);
+        for _ in 0..procs {
+            let r = rate * (0.5 + rng.f64());
+            let kind = match rng.gen_range(3) {
+                0 => ArrivalKind::Poisson,
+                1 => ArrivalKind::Bursty {
+                    factor: 2.0 + (rng.gen_range(6) as f64) / 2.0,
+                    period: Self::DEFAULT_BURST_PERIOD,
+                },
+                _ => ArrivalKind::Diurnal {
+                    period: Self::DEFAULT_DIURNAL_PERIOD,
+                    depth: (rng.gen_range(15) as f64) / 16.0,
+                },
+            };
+            plan.procs.push(ArrivalProc {
+                kind,
+                rate: r,
+                n: per,
+                seed: rng.next_u64(),
+            });
+        }
+        if rng.gen_range(2) == 1 {
+            plan.explicit.push(TraceReq {
+                t: (rng.usize_in(0, 1 << 12) as f64) / (1u64 << 20) as f64,
+                prompt: 1 + rng.usize_in(0, 512),
+                output: 1 + rng.usize_in(0, 128),
+            });
+        }
+        if rng.gen_range(2) == 1 {
+            plan.prompt_mean = 16 + rng.usize_in(0, 512);
+            plan.output_mean = 4 + rng.usize_in(0, 128);
+        }
+        plan
+    }
+
+    /// Expand the plan into a time-sorted [`ArrivalTrace`].
+    ///
+    /// Each process draws its inter-arrival gaps sequentially from its
+    /// own seed stream — exponential with the *instantaneous* rate at
+    /// the current time (the standard next-gap approximation of an
+    /// inhomogeneous Poisson process) — then its prompt/output lengths
+    /// (exponential around the plan means, floored at 1 token). The
+    /// merge is a stable sort on arrival time, so equal-time requests
+    /// keep (process order, draw order) and ids are dense in arrival
+    /// order. Deterministic: same plan, same trace, bit-for-bit.
+    pub fn materialize(&self) -> ArrivalTrace {
+        let mut reqs: Vec<Request> = Vec::with_capacity(self.total_requests());
+        for p in &self.procs {
+            let mut rng = Rng::new(p.seed);
+            let mut t = 0.0f64;
+            for _ in 0..p.n {
+                let r = instantaneous_rate(&p.kind, p.rate, t);
+                t += -(1.0 - rng.f64()).ln() / r;
+                let prompt = draw_len(&mut rng, self.prompt_mean);
+                let output = draw_len(&mut rng, self.output_mean);
+                reqs.push(Request {
+                    id: 0,
+                    t_arrive: t,
+                    prompt_tokens: prompt,
+                    output_tokens: output,
+                });
+            }
+        }
+        for e in &self.explicit {
+            reqs.push(Request {
+                id: 0,
+                t_arrive: e.t,
+                prompt_tokens: e.prompt,
+                output_tokens: e.output,
+            });
+        }
+        // stable: equal arrival times keep generation order
+        reqs.sort_by(|a, b| a.t_arrive.partial_cmp(&b.t_arrive).unwrap());
+        for (i, r) in reqs.iter_mut().enumerate() {
+            r.id = i;
+        }
+        ArrivalTrace { requests: reqs }
+    }
+}
+
+/// Instantaneous arrival rate of a process at time `t`; always finite
+/// and > 0 for a validated plan.
+fn instantaneous_rate(kind: &ArrivalKind, rate: f64, t: f64) -> f64 {
+    match *kind {
+        ArrivalKind::Poisson => rate,
+        ArrivalKind::Bursty { factor, period } => {
+            let phase = (t / period).rem_euclid(1.0);
+            if phase < 0.5 {
+                rate * factor
+            } else {
+                rate / factor
+            }
+        }
+        ArrivalKind::Diurnal { period, depth } => {
+            rate * (1.0 + depth * (std::f64::consts::TAU * t / period).sin())
+        }
+    }
+}
+
+/// Exponential length draw around `mean`, floored at one token.
+fn draw_len(rng: &mut Rng, mean: usize) -> usize {
+    let x = -(1.0 - rng.f64()).ln() * mean as f64;
+    (x.round() as usize).max(1)
+}
+
+fn check_rate(clause: &str, rate: f64) -> Result<(), String> {
+    if !(rate > 0.0) || !rate.is_finite() {
+        return Err(format!(
+            "trace clause '{clause}': rate must be finite and > 0"
+        ));
+    }
+    Ok(())
+}
+
+fn check_period(clause: &str, period: f64) -> Result<(), String> {
+    if !(period > 0.0) || !period.is_finite() {
+        return Err(format!(
+            "trace clause '{clause}': period must be finite and > 0"
+        ));
+    }
+    Ok(())
+}
+
+fn check_len(clause: &str, v: usize, what: &str) -> Result<(), String> {
+    if v == 0 {
+        return Err(format!("trace clause '{clause}': {what} must be >= 1"));
+    }
+    Ok(())
+}
+
+/// Render the plan back into the `--trace` DSL it parses from. The
+/// round-trip is exact — `TracePlan::parse(&plan.to_string()) ==
+/// *plan`, bit-for-bit, for any validated plan (every numeric field is
+/// rendered with Rust's shortest-round-trip float formatting and parsed
+/// straight back; there is no interval arithmetic to lose bits to).
+/// The length means are rendered as a `lens` clause only when
+/// non-default.
+impl std::fmt::Display for TracePlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut sep = "";
+        let mut clause = |f: &mut std::fmt::Formatter<'_>, s: String| {
+            let r = write!(f, "{sep}{s}");
+            sep = "; ";
+            r
+        };
+        for p in &self.procs {
+            let s = match p.kind {
+                ArrivalKind::Poisson => {
+                    format!("poisson,{},{},{}", p.rate, p.n, p.seed)
+                }
+                ArrivalKind::Bursty { factor, period } => {
+                    format!("bursty,{},{},{},{factor},{period}", p.rate, p.n, p.seed)
+                }
+                ArrivalKind::Diurnal { period, depth } => {
+                    format!("diurnal,{},{},{},{period},{depth}", p.rate, p.n, p.seed)
+                }
+            };
+            clause(f, s)?;
+        }
+        for e in &self.explicit {
+            clause(f, format!("req,{},{},{}", e.t, e.prompt, e.output))?;
+        }
+        if self.prompt_mean != Self::DEFAULT_PROMPT_MEAN
+            || self.output_mean != Self::DEFAULT_OUTPUT_MEAN
+        {
+            clause(f, format!("lens,{},{}", self.prompt_mean, self.output_mean))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn default_plan_is_empty() {
+        let p = TracePlan::default();
+        assert!(p.is_empty());
+        assert_eq!(p.total_requests(), 0);
+        assert!(p.materialize().is_empty());
+        // non-default length means alone do not make the plan non-empty
+        let lens_only = TracePlan::parse("lens,64,8").unwrap();
+        assert!(lens_only.is_empty());
+        assert!(lens_only.materialize().is_empty());
+    }
+
+    #[test]
+    fn parse_full_dsl() {
+        let p = TracePlan::parse(
+            "poisson,5e4,100,7; bursty,2e4,50,11,4,2e-3; \
+             diurnal,1e4,25,13,8e-3,0.75; req,1e-3,256,16; lens,64,8;",
+        )
+        .unwrap();
+        assert_eq!(p.procs.len(), 3);
+        assert_eq!(
+            p.procs[0],
+            ArrivalProc {
+                kind: ArrivalKind::Poisson,
+                rate: 5e4,
+                n: 100,
+                seed: 7
+            }
+        );
+        assert_eq!(
+            p.procs[1].kind,
+            ArrivalKind::Bursty {
+                factor: 4.0,
+                period: 2e-3
+            }
+        );
+        assert_eq!(
+            p.procs[2].kind,
+            ArrivalKind::Diurnal {
+                period: 8e-3,
+                depth: 0.75
+            }
+        );
+        assert_eq!(
+            p.explicit,
+            vec![TraceReq {
+                t: 1e-3,
+                prompt: 256,
+                output: 16
+            }]
+        );
+        assert_eq!((p.prompt_mean, p.output_mean), (64, 8));
+        assert_eq!(p.total_requests(), 176);
+    }
+
+    #[test]
+    fn malformed_clauses_error_never_panic() {
+        for s in [
+            "gaussian,1e4,10,7",          // unknown kind
+            "poisson,1e4,10",             // missing seed
+            "poisson,0,10,7",             // zero rate
+            "poisson,-5,10,7",            // negative rate
+            "poisson,inf,10,7",           // non-finite rate
+            "poisson,abc,10,7",           // non-numeric
+            "bursty,1e4,10,7,0.5,2e-3",   // factor < 1
+            "bursty,1e4,10,7,4,0",        // zero period
+            "diurnal,1e4,10,7,8e-3,1.0",  // depth out of range
+            "diurnal,1e4,10,7,8e-3,-0.1", // depth negative
+            "req,-1,10,10",               // negative time
+            "req,1e-3,0,10",              // zero prompt
+            "req,1e-3,10,0",              // zero output
+            "lens,0,8",                   // zero mean
+        ] {
+            let e = TracePlan::parse(s).expect_err(s);
+            assert!(e.contains("clause") || e.contains("kind"), "{s}: {e}");
+        }
+    }
+
+    #[test]
+    fn display_round_trips_exactly() {
+        check("trace_display_round_trip", 128, |g| {
+            let plan = TracePlan::synthesize(g.u64(), 1e4 * (0.1 + g.f64()), 1 + g.usize_in(0, 64));
+            let rendered = plan.to_string();
+            let back = TracePlan::parse(&rendered)
+                .unwrap_or_else(|e| panic!("'{rendered}' failed to re-parse: {e}"));
+            assert_eq!(back, plan, "round-trip mismatch for '{rendered}'");
+        });
+    }
+
+    #[test]
+    fn materialize_is_deterministic_and_sorted() {
+        let plan = TracePlan::parse(
+            "poisson,5e4,64,7; bursty,2e4,32,11,4,2e-3; diurnal,1e4,16,13,8e-3,0.5",
+        )
+        .unwrap();
+        let a = plan.materialize();
+        let b = plan.materialize();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), plan.total_requests());
+        for w in a.requests.windows(2) {
+            assert!(w[0].t_arrive <= w[1].t_arrive);
+        }
+        for (i, r) in a.requests.iter().enumerate() {
+            assert_eq!(r.id, i);
+            assert!(r.t_arrive.is_finite() && r.t_arrive >= 0.0);
+            assert!(r.prompt_tokens >= 1 && r.output_tokens >= 1);
+        }
+        // a different seed on one process perturbs the trace
+        let plan2 = TracePlan::parse(
+            "poisson,5e4,64,8; bursty,2e4,32,11,4,2e-3; diurnal,1e4,16,13,8e-3,0.5",
+        )
+        .unwrap();
+        assert_ne!(plan2.materialize(), a);
+    }
+
+    #[test]
+    fn poisson_mean_rate_is_plausible() {
+        // 4096 arrivals at 1e4/s should span ~0.41 s; allow a wide band
+        let plan = TracePlan::parse("poisson,1e4,4096,42").unwrap();
+        let trace = plan.materialize();
+        let span = trace.horizon();
+        let rate = trace.len() as f64 / span;
+        assert!(
+            (0.5e4..2e4).contains(&rate),
+            "empirical rate {rate:.0}/s too far from 1e4/s"
+        );
+    }
+
+    #[test]
+    fn explicit_requests_merge_in_time_order() {
+        let plan = TracePlan::parse("req,2e-3,8,4; req,1e-3,16,2; poisson,1e5,4,3").unwrap();
+        let trace = plan.materialize();
+        assert_eq!(trace.len(), 6);
+        let explicit: Vec<_> = trace
+            .requests
+            .iter()
+            .filter(|r| r.prompt_tokens == 8 || r.prompt_tokens == 16)
+            .collect();
+        assert_eq!(explicit.len(), 2);
+        assert!(explicit[0].prompt_tokens == 16 && explicit[0].t_arrive == 1e-3);
+        assert!(explicit[1].prompt_tokens == 8 && explicit[1].t_arrive == 2e-3);
+    }
+}

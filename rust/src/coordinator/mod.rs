@@ -9,6 +9,7 @@ pub mod flash_decode;
 pub mod gemm_rs;
 pub mod moe;
 pub mod recover;
+pub mod serve;
 
 use crate::config::{ClusterSpec, DType, FaultPlan};
 use crate::mem::SymmetricHeap;

@@ -45,6 +45,7 @@ use crate::sim::{RecoveryLedger, SimError, SimReport};
 use crate::topology::Topology;
 
 use super::ag_gemm::{self, AgGemmVariant};
+use super::flash_decode::{self, FlashDecodeBufs, FlashDecodeCfg};
 use super::ep_moe::{
     build_ep_moe_cfg, build_ep_moe_view, fill_ep_moe, fill_ep_moe_view, routing_for, EpMoeBufs,
     EpMoeVariant,
@@ -284,7 +285,8 @@ pub fn run_ep_moe_elastic(
                 r.steps_checkpointed += info.checkpoint.len() as u64;
                 r.epochs += 1;
 
-                faults_cur = shift_plan(&faults_cur, &dead_all, info.detected_at, resumed_at - base_t);
+                faults_cur =
+                    shift_plan(&faults_cur, &dead_all, info.detected_at, resumed_at - base_t);
                 base_t = resumed_at;
             }
         }
@@ -401,6 +403,131 @@ pub fn run_ag_gemm_elastic(
         tokens_delivered: 0,
         tokens_rerouted: 0,
         tokens_dropped: 0,
+        epochs: 1,
+    });
+    Ok((rep, view))
+}
+
+/// Build the timing-only degraded flash-decode step on the survivor
+/// world: each survivor recomputes its partial attention over its local
+/// KV shard (the mid-step partials may have been in flight to a dead
+/// peer), the flat survivor AllGather ([`ag_flat_on`]) broadcasts the
+/// partial segments, and every survivor combines the survivor segments
+/// only. Shared by [`run_flash_decode_elastic`] and the serving loop's
+/// post-death decode steps (`coordinator::serve`).
+pub fn build_flash_decode_degraded(
+    cluster: ClusterSpec,
+    cfg: FlashDecodeCfg,
+    view: &WorldView,
+) -> BuiltOp {
+    let (ctx, _t) = setup(cluster);
+    let ws = cluster.world_size();
+    let seg_len = FlashDecodeBufs::seg_len(&cfg);
+    let mut heap = SymmetricHeap::new(ws, 4 * ws.max(16));
+    let bufs = AgBufs::alloc(&mut heap, &ctx, seg_len);
+    let mut pb = ProgBuild::new();
+    ag_flat_on(&ctx, &bufs, &mut pb, view);
+    let kv_bytes =
+        (cfg.heads * cfg.kv_per_rank * cfg.head_dim) as f64 * ctx.dtype.bytes() as f64;
+    for l in 0..view.world() {
+        let pr = view.phys(l);
+        let mut t = ctx
+            .task(pr, format!("degraded_decode[{l}]"))
+            .with_sms(cluster.hw.sms)
+            .launch_overhead();
+        t.op(Op::Compute {
+            cost: ComputeCost::MemBound { bytes: kv_bytes * 2.0 },
+            numeric: NumericOp::None,
+            label: "degraded_decode_partial",
+        });
+        for i in 0..view.world() {
+            let seg = view.phys((l + i) % view.world());
+            t.signal_wait_until(bufs.sig(seg), SigCond::Ge, 1);
+        }
+        t.op(Op::Compute {
+            cost: ComputeCost::MemBound {
+                bytes: (seg_len * view.world() * ctx.dtype.bytes()) as f64 * 2.0,
+            },
+            numeric: NumericOp::None,
+            label: "degraded_decode_combine",
+        });
+        pb.prog.push(t.build());
+    }
+    BuiltOp {
+        ctx,
+        heap,
+        prog: pb.prog,
+        name: format!("FlashDecode+AG ws={ws} kv={} (degraded)", cfg.kv_per_rank),
+    }
+}
+
+/// Timing-only elastic flash decode: run the gated-LL decode program;
+/// on a permanent death, re-plan the step onto the survivor world — a
+/// degraded program where each survivor recomputes its partial
+/// attention over its local KV shard, the flat survivor AllGather
+/// ([`ag_flat_on`]) broadcasts the partial segments, and every survivor
+/// combines the survivor segments only. The dead ranks' KV shards are
+/// gone with them: the [`RecoveryLedger`] accounts every KV entry the
+/// original step owed as delivered (survivor shards) or dropped (dead
+/// shards) — exactly, always. Single recovery epoch (a further death
+/// during the degraded run propagates).
+pub fn run_flash_decode_elastic(
+    cluster: ClusterSpec,
+    cfg: FlashDecodeCfg,
+    faults: FaultPlan,
+    rcfg: &RecoverCfg,
+) -> Result<(SimReport, WorldView), CoordError> {
+    let topo = Topology::build(cluster);
+    let ws = cluster.world_size();
+    let (mut op, _bufs) = flash_decode::build(cluster, cfg);
+    let err = match run_timing_faults(&mut op, &topo, faults.clone()) {
+        Ok(rep) => return Ok((rep, WorldView::identity(ws))),
+        Err(e) => e,
+    };
+    let SimError::DeadPeer(info) = &err.source else {
+        return Err(err);
+    };
+    let dead = info.dead.clone();
+    if ws - dead.len() < 2 {
+        return Err(err);
+    }
+    let view = WorldView::survivors(ws, &dead);
+    let died_at = info.died_at;
+    let detected_at = info.detected_at;
+    let drained_at = detected_at + rcfg.drain_per_flow * info.flows_drained as f64;
+    let replanned_at =
+        drained_at + rcfg.replan_base + rcfg.replan_per_rank * view.world() as f64;
+    let resumed_at = replanned_at;
+
+    let mut op2 = build_flash_decode_degraded(cluster, cfg, &view);
+    let fp = shift_plan(&faults, &dead, detected_at, resumed_at);
+    let mut rep = run_timing_faults(&mut op2, &topo, fp)?;
+    rep.makespan += resumed_at;
+    for s in &mut rep.task_spans {
+        s.2 += resumed_at;
+        s.3 += resumed_at;
+    }
+    // exact KV accounting: owed = ws * kv_per_rank entries attended by
+    // the original step; survivor shards are delivered, dead shards
+    // dropped — delivered + dropped == owed by construction
+    let kv = cfg.kv_per_rank as u64;
+    rep.recovery = Some(RecoveryLedger {
+        dead_ranks: {
+            let mut d = dead;
+            d.sort_unstable();
+            d
+        },
+        died_at,
+        detected_at,
+        via: info.via.clone(),
+        drained_at,
+        replanned_at,
+        resumed_at,
+        flows_drained: info.flows_drained,
+        steps_checkpointed: info.checkpoint.len() as u64,
+        tokens_delivered: view.world() as u64 * kv,
+        tokens_rerouted: 0,
+        tokens_dropped: (ws - view.world()) as u64 * kv,
         epochs: 1,
     });
     Ok((rep, view))

@@ -1,0 +1,784 @@
+//! Trace-driven serving simulator: a continuously-batched inference
+//! fleet fed by a [`TracePlan`](crate::config::TracePlan) arrival
+//! process, reporting request-level latency percentiles instead of a
+//! single makespan.
+//!
+//! The outer loop advances *serving* virtual time over discrete steps:
+//!
+//! * **admit** — arrivals (Poisson/bursty/diurnal/explicit) queue up and
+//!   join the batch while slots are free; each admitted request's
+//!   KV-cache is homed on the least-loaded rank.
+//! * **prefill** — a shared per-step token budget (`prefill_chunk`)
+//!   processed FCFS across prompt-phase requests; GEMM-bound, priced
+//!   analytically on the prefill SM share.
+//! * **decode** — one token per decode-phase request per step, priced
+//!   by actually *running* the `flash_decode` (+ optional `ep_moe`)
+//!   coordinator programs on the railed fabric through the DES engine,
+//!   with KV length and MoE token load bucketed to powers of two so
+//!   repeated steps reuse memoized program runs (memoization is only
+//!   valid — and only enabled — when no link faults are in play).
+//! * **partition** — when both phases are live they compete for SMs via
+//!   the §3.5-style [`plan_serving`] split: prefill is priced on its
+//!   share, the decode programs' makespan is scaled by the ratio of the
+//!   full device to the decode share (a deliberate first-order model:
+//!   collective time doesn't scale with SMs, compute does), and the
+//!   step advances by the *max* of the two — the phases overlap.
+//!
+//! **Elastic recovery is folded in, not bolted on**: rank/node deaths
+//! from the fault plan are applied on the serving clock — the
+//! [`RecoverCfg`] detect → drain → re-plan pause is charged, the world
+//! shrinks to a [`WorldView`] of survivors, decode steps switch to the
+//! degraded survivor programs ([`build_flash_decode_degraded`],
+//! `build_ep_moe_view` over survivor-sliced routing), and requests
+//! whose KV-cache lived on a dead rank are *rerouted* (re-queued to
+//! re-prefill on a new home) once, dropped with a reason on a second
+//! loss. A mid-serving death therefore surfaces as a p99 latency spike
+//! in the [`ServingReport`] — never a failed run (pinned by
+//! `tests/serving.rs`).
+//!
+//! Everything is deterministic: same `(trace, fault plan, config)` ⇒
+//! the same report, bit for bit. Link faults and stragglers (the
+//! non-death residual of the plan) are projected onto each inner DES
+//! run's clock with [`shift_plan`], so a spine flap mid-trace slows the
+//! decode steps it overlaps and nothing else.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::collectives::alltoall::{A2aCfg, EpRouting};
+use crate::collectives::WorldView;
+use crate::config::{
+    ArrivalTrace, ClusterSpec, DType, DeathScope, FaultPlan, MoeShape, TracePlan,
+};
+use crate::kernels::names::EpGeom;
+use crate::overlap::partition::plan_serving;
+use crate::topology::Topology;
+use crate::util::stats::percentile;
+
+use super::ep_moe::{build_ep_moe_cfg, build_ep_moe_view, routing_for, EpMoeVariant};
+use super::flash_decode::{self, FlashDecodeCfg};
+use super::recover::{build_flash_decode_degraded, shift_plan, RecoverCfg};
+use super::{run_timing_threads, CoordError};
+
+/// Serving-fleet configuration: model geometry, batching knobs, and the
+/// recovery cost model. All deterministic constants.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeCfg {
+    /// Attention heads (with `head_dim`, fixes the model width).
+    pub heads: usize,
+    /// Head dimension.
+    pub head_dim: usize,
+    /// Transformer layers the analytic prefill cost is scaled by.
+    pub layers: usize,
+    /// Max requests resident in the batch (prefill + decode phases).
+    pub max_batch: usize,
+    /// Shared prefill token budget per step, FCFS across requests.
+    pub prefill_chunk: usize,
+    /// Tokens per KV-cache block (the migration granularity).
+    pub kv_block: usize,
+    /// Run the EP-MoE FFN per decode step (in addition to attention).
+    pub moe: bool,
+    /// Experts of the per-step MoE.
+    pub moe_experts: usize,
+    /// Hidden width of the per-step MoE.
+    pub moe_hidden: usize,
+    /// Seed of the per-step MoE routing table.
+    pub moe_seed: u64,
+    /// Engine threads for the inner DES runs (`--threads`).
+    pub threads: usize,
+    /// Recovery cost model applied on a mid-serving death.
+    pub rcfg: RecoverCfg,
+    /// Death detection latency when the plan's watchdog is disabled.
+    pub detect_latency: f64,
+    /// Queue cap: arrivals beyond it are dropped as `queue-full`.
+    pub max_queue: usize,
+    /// Rebalance trigger: max-min KV block spread that migrates one
+    /// request's blocks to the least-loaded rank.
+    pub migrate_spread: u64,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg {
+            heads: 16,
+            head_dim: 128,
+            layers: 8,
+            max_batch: 32,
+            prefill_chunk: 256,
+            kv_block: 64,
+            moe: true,
+            moe_experts: 32,
+            moe_hidden: 256,
+            moe_seed: 11,
+            threads: 1,
+            rcfg: RecoverCfg::default(),
+            detect_latency: 10e-6,
+            max_queue: 4096,
+            migrate_spread: 8,
+        }
+    }
+}
+
+/// One completed request's latency record.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReqStat {
+    /// Trace id.
+    pub id: usize,
+    /// Arrival time (s).
+    pub t_arrive: f64,
+    /// Time to first token (s).
+    pub ttft: f64,
+    /// Total latency, arrival to last token (s).
+    pub latency: f64,
+    /// Output tokens produced.
+    pub tokens: usize,
+}
+
+/// One survived mid-serving death.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServeRecovery {
+    /// Ranks that died in this event (sorted).
+    pub dead: Vec<usize>,
+    /// Death time on the serving clock (s).
+    pub died_at: f64,
+    /// Serving time after the detect + drain + re-plan pause (s).
+    pub resumed_at: f64,
+    /// Requests whose KV died with the ranks and were re-queued.
+    pub rerouted: usize,
+    /// Requests dropped (second KV loss).
+    pub dropped: usize,
+}
+
+/// The serving run's result: request conservation counters, latency
+/// percentiles, throughput, queue pressure, KV migration traffic, and
+/// the recovery log. `Default` is the empty-trace no-op report.
+/// Deterministic bit-for-bit: `PartialEq` compares exactly.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServingReport {
+    /// Requests in the trace (`== completed + dropped`, always).
+    pub requests: usize,
+    /// Requests that produced their full output.
+    pub completed: usize,
+    /// Requests dropped; every drop has a reason in `drop_reasons`.
+    pub dropped: usize,
+    /// Drop reason → count (sorted by reason; counts sum to `dropped`).
+    pub drop_reasons: Vec<(String, usize)>,
+    /// Requests re-queued after losing their KV to a dead rank (each
+    /// still ends in `completed` or `dropped`).
+    pub rerouted: usize,
+    /// Median / 99th-percentile time-to-first-token (s).
+    pub p50_ttft: f64,
+    pub p99_ttft: f64,
+    /// Median / 99th-percentile time-per-output-token (s).
+    pub p50_tpot: f64,
+    pub p99_tpot: f64,
+    /// Median / 99th-percentile total latency (s).
+    pub p50_latency: f64,
+    pub p99_latency: f64,
+    /// Completed output tokens.
+    pub tokens_out: u64,
+    /// Completed output tokens per virtual second.
+    pub goodput: f64,
+    /// Virtual time from t=0 to the last completion or drop (s).
+    pub makespan: f64,
+    /// Queue-depth samples over time, downsampled to ≤ 256 points.
+    pub queue_depth: Vec<(f64, usize)>,
+    /// Peak queue depth over the whole run (pre-downsampling).
+    pub max_queue_depth: usize,
+    /// KV rebalance events and blocks moved over the fabric.
+    pub kv_migrations: u64,
+    pub kv_blocks_moved: u64,
+    /// Survived mid-serving deaths, in order.
+    pub recoveries: Vec<ServeRecovery>,
+    /// DES events processed across all inner coordinator runs
+    /// (memoized steps count their cached run's events).
+    pub events: u64,
+    /// Per-completed-request records, in completion order.
+    pub per_request: Vec<ReqStat>,
+}
+
+impl ServingReport {
+    /// Flatten into the scalar summary the report layer records in
+    /// `BENCH_engine.json` (`metrics::ServingBenchInfo`).
+    pub fn bench_info(&self) -> crate::metrics::ServingBenchInfo {
+        crate::metrics::ServingBenchInfo {
+            requests: self.requests as u64,
+            completed: self.completed as u64,
+            dropped: self.dropped as u64,
+            rerouted: self.rerouted as u64,
+            p50_ttft_s: self.p50_ttft,
+            p99_ttft_s: self.p99_ttft,
+            p50_tpot_s: self.p50_tpot,
+            p99_tpot_s: self.p99_tpot,
+            goodput_tokens_per_s: self.goodput,
+            makespan_s: self.makespan,
+            max_queue_depth: self.max_queue_depth as u64,
+            recoveries: self.recoveries.len() as u32,
+        }
+    }
+}
+
+/// One resident or queued request.
+#[derive(Debug, Clone)]
+struct Slot {
+    id: usize,
+    t_arrive: f64,
+    prompt: usize,
+    output: usize,
+    prefill_done: usize,
+    decoded: usize,
+    t_first: Option<f64>,
+    /// Physical rank homing this request's KV blocks.
+    home: usize,
+    kv_blocks: u64,
+    /// Already survived one KV loss; a second drops it.
+    rerouted: bool,
+}
+
+impl Slot {
+    fn new(id: usize, t_arrive: f64, prompt: usize, output: usize) -> Self {
+        Slot {
+            id,
+            t_arrive,
+            // a request always has at least one prompt and one output
+            // token, whatever an explicit trace clause claims — a
+            // zero-length phase could never leave the batch
+            prompt: prompt.max(1),
+            output: output.max(1),
+            prefill_done: 0,
+            decoded: 0,
+            t_first: None,
+            home: 0,
+            kv_blocks: 0,
+            rerouted: false,
+        }
+    }
+
+    fn decoding(&self) -> bool {
+        self.prefill_done >= self.prompt
+    }
+}
+
+/// Run the serving loop: `trace` against `cluster` under `faults`.
+///
+/// Completes (never errors) on any recoverable plan: deaths shrink the
+/// world and show up as latency spikes + reroutes/drops; only a
+/// world-collapse (fewer than two survivors) drops the remaining
+/// requests — still a completed run with exact accounting. Inner DES
+/// failures other than the handled death path propagate as
+/// [`CoordError`].
+pub fn run_serve(
+    cluster: ClusterSpec,
+    trace: &ArrivalTrace,
+    faults: FaultPlan,
+    cfg: &ServeCfg,
+) -> Result<ServingReport, CoordError> {
+    if trace.is_empty() {
+        // no-op contract: nothing arrives, nothing runs, default report
+        return Ok(ServingReport::default());
+    }
+    let topo = Topology::build(cluster);
+    let hw = cluster.hw;
+    let w0 = cluster.world_size();
+
+    // deaths run on the serving clock; the residual plan (link faults,
+    // stragglers, jitter, knobs) is projected onto each inner DES run
+    let mut deaths: Vec<(f64, Vec<usize>)> = faults
+        .deaths
+        .iter()
+        .map(|d| {
+            let ranks = match d.scope {
+                DeathScope::Rank(r) => vec![r],
+                DeathScope::Node(n) => (0..w0).filter(|&r| cluster.node_of(r) == n).collect(),
+            };
+            (d.t, ranks)
+        })
+        .collect();
+    deaths.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let residual = FaultPlan {
+        deaths: Vec::new(),
+        ..faults.clone()
+    };
+    let detect_lat = if residual.lt_timeout.is_finite() {
+        residual.lt_timeout
+    } else {
+        cfg.detect_latency
+    };
+
+    let mut view = WorldView::identity(w0);
+    let mut dead_all: Vec<usize> = Vec::new();
+
+    let reqs = &trace.requests;
+    let total = reqs.len();
+    let mut next_arr = 0usize;
+    let mut queue: VecDeque<Slot> = VecDeque::new();
+    let mut active: Vec<Slot> = Vec::new();
+
+    let mut per_request: Vec<ReqStat> = Vec::new();
+    let mut drop_reasons: BTreeMap<&'static str, usize> = BTreeMap::new();
+    let mut done = 0usize;
+    let mut rerouted_total = 0usize;
+    let mut tokens_out = 0u64;
+    let mut events = 0u64;
+    let mut kv_migrations = 0u64;
+    let mut kv_blocks_moved = 0u64;
+    let mut qsamples: Vec<(f64, usize)> = Vec::new();
+    let mut max_q = 0usize;
+    let mut recoveries: Vec<ServeRecovery> = Vec::new();
+    // phys rank -> resident KV blocks (survivor ranks only)
+    let mut kv_load: BTreeMap<usize, u64> = (0..w0).map(|r| (r, 0)).collect();
+    // (world, kv bucket, moe bucket) -> (step cost, DES events)
+    let mut memo: BTreeMap<(usize, u64, u64), (f64, u64)> = BTreeMap::new();
+
+    // analytic prefill cost: attention + FFN GEMMs of a dense block,
+    // ~12 * hidden^2 MACs/token/layer
+    let hidden = (cfg.heads * cfg.head_dim) as f64;
+    let flops_per_token = 12.0 * hidden * hidden * cfg.layers as f64;
+    let bytes_per_token = 2.0 * hidden * DType::BF16.bytes() as f64; // K + V
+    fn drop_req(reasons: &mut BTreeMap<&'static str, usize>, why: &'static str) {
+        *reasons.entry(why).or_insert(0) += 1;
+    }
+
+    let mut t = 0.0f64;
+    'serve: while done < total {
+        // --- world collapse: fewer than two survivors can't host the
+        // collectives; drop everything remaining, exactly accounted
+        if w0 - dead_all.len() < 2 {
+            for _ in active.drain(..).chain(queue.drain(..)) {
+                drop_req(&mut drop_reasons, "world-collapsed");
+                done += 1;
+            }
+            while next_arr < total {
+                drop_req(&mut drop_reasons, "world-collapsed");
+                done += 1;
+                next_arr += 1;
+            }
+            break 'serve;
+        }
+
+        // --- apply any death due at or before the current time
+        if deaths.first().is_some_and(|d| d.0 <= t) {
+            let (died_at, ranks) = deaths.remove(0);
+            let newly: Vec<usize> = ranks
+                .into_iter()
+                .filter(|r| !dead_all.contains(r))
+                .collect();
+            if newly.is_empty() {
+                continue;
+            }
+            dead_all.extend(newly.iter().copied());
+            dead_all.sort_unstable();
+            let survivors = w0 - dead_all.len();
+            // detect -> drain -> re-plan pause on the serving clock
+            let drained = active.iter().filter(|s| s.decoding()).count();
+            t = t.max(died_at)
+                + detect_lat
+                + cfg.rcfg.drain_per_flow * drained as f64
+                + cfg.rcfg.replan_base
+                + cfg.rcfg.replan_per_rank * survivors as f64;
+            if survivors >= 2 {
+                view = WorldView::survivors(w0, &dead_all);
+            }
+            for r in &newly {
+                kv_load.remove(r);
+            }
+            // KV on the dead ranks is gone: reroute once, drop twice
+            let mut rec = ServeRecovery {
+                dead: newly,
+                died_at,
+                resumed_at: t,
+                rerouted: 0,
+                dropped: 0,
+            };
+            let mut keep = Vec::with_capacity(active.len());
+            for mut s in active.drain(..) {
+                if !dead_all.contains(&s.home) {
+                    keep.push(s);
+                } else if s.rerouted {
+                    drop_req(&mut drop_reasons, "kv-lost");
+                    done += 1;
+                    rec.dropped += 1;
+                } else {
+                    s.rerouted = true;
+                    s.prefill_done = 0;
+                    s.decoded = 0;
+                    s.kv_blocks = 0;
+                    rerouted_total += 1;
+                    rec.rerouted += 1;
+                    queue.push_front(s);
+                }
+            }
+            active = keep;
+            recoveries.push(rec);
+            continue;
+        }
+
+        // --- admit arrivals and fill the batch
+        while next_arr < total && reqs[next_arr].t_arrive <= t {
+            let r = reqs[next_arr];
+            next_arr += 1;
+            if queue.len() >= cfg.max_queue {
+                drop_req(&mut drop_reasons, "queue-full");
+                done += 1;
+            } else {
+                queue.push_back(Slot::new(r.id, r.t_arrive, r.prompt_tokens, r.output_tokens));
+            }
+        }
+        while active.len() < cfg.max_batch {
+            let Some(mut s) = queue.pop_front() else { break };
+            // home the KV on the least-loaded survivor (ties -> lowest)
+            // and reserve the prompt's blocks up front, so concurrent
+            // admissions spread instead of piling onto one rank
+            s.home = kv_load
+                .iter()
+                .min_by_key(|&(r, load)| (*load, *r))
+                .map(|(r, _)| *r)
+                .expect("at least two survivors");
+            s.kv_blocks = (s.prompt as u64).div_ceil(cfg.kv_block as u64);
+            *kv_load.get_mut(&s.home).expect("home is a survivor") += s.kv_blocks;
+            active.push(s);
+        }
+
+        // --- idle: jump to the next arrival or death
+        if active.is_empty() {
+            let ta = (next_arr < total).then(|| reqs[next_arr].t_arrive);
+            let td = deaths.first().map(|d| d.0);
+            match (ta, td) {
+                (Some(a), Some(d)) => t = t.max(a.min(d)),
+                (Some(a), None) => t = t.max(a),
+                (None, Some(d)) => t = t.max(d),
+                (None, None) => break 'serve, // all accounted
+            }
+            continue;
+        }
+
+        max_q = max_q.max(queue.len());
+        qsamples.push((t, queue.len()));
+
+        // --- price the step: §3.5 partition, analytic prefill, DES decode
+        let prefill_remaining: usize = active
+            .iter()
+            .filter(|s| !s.decoding())
+            .map(|s| s.prompt - s.prefill_done)
+            .sum();
+        let prefill_tokens = prefill_remaining.min(cfg.prefill_chunk);
+        let decode_batch = active.iter().filter(|s| s.decoding()).count();
+        let part = plan_serving(&hw, decode_batch, prefill_tokens);
+        let prefill_cost = if prefill_tokens > 0 {
+            prefill_tokens as f64 * flops_per_token
+                / hw.triton_gemm_flops(part.prefill_sms.max(1))
+        } else {
+            0.0
+        };
+        let decode_cost = if decode_batch > 0 {
+            let world = view.world();
+            let kv_tokens: usize = active
+                .iter()
+                .filter(|s| s.decoding())
+                .map(|s| s.prompt + s.decoded)
+                .sum();
+            let kvb = ((kv_tokens / world).max(1) as u64).next_power_of_two();
+            let moeb = if cfg.moe {
+                (decode_batch.div_ceil(world).max(1) as u64).next_power_of_two()
+            } else {
+                0
+            };
+            let (base, ev) = decode_step_cost(
+                cluster, &topo, cfg, &residual, &dead_all, &view, t, kvb, moeb, &mut memo,
+            )?;
+            events += ev;
+            // decode compute slows when prefill holds part of the device
+            base * (hw.sms as f64 / part.decode_sms.max(1) as f64)
+        } else {
+            0.0
+        };
+        let mut step = prefill_cost.max(decode_cost); // phases overlap
+
+        // --- KV rebalance: one migration per step when the spread is
+        // large, charged at the routed inter-node path bandwidth
+        if let Some(moved) = rebalance_kv(&mut active, &mut kv_load, cfg.migrate_spread) {
+            kv_migrations += 1;
+            kv_blocks_moved += moved;
+            step += moved as f64 * cfg.kv_block as f64 * bytes_per_token / topo.inter_path_bw();
+        }
+
+        debug_assert!(step > 0.0, "a live batch must make progress");
+        t += step;
+
+        // --- account the step's work. Decode first: only sequences
+        // that were decode-phase when the step was priced emit a token
+        // (a request finishing prefill this step decodes from the next
+        // step, once its KV has landed).
+        let mut finished: Vec<usize> = Vec::new();
+        for (i, s) in active.iter_mut().enumerate() {
+            if !s.decoding() {
+                continue;
+            }
+            s.decoded += 1;
+            s.t_first.get_or_insert(t);
+            let grown = ((s.prompt + s.decoded) as u64).div_ceil(cfg.kv_block as u64);
+            if grown > s.kv_blocks {
+                *kv_load.get_mut(&s.home).expect("home is a survivor") += grown - s.kv_blocks;
+                s.kv_blocks = grown;
+            }
+            if s.decoded >= s.output {
+                finished.push(i);
+            }
+        }
+        for i in finished.into_iter().rev() {
+            let s = active.swap_remove(i);
+            *kv_load.get_mut(&s.home).expect("home is a survivor") -= s.kv_blocks;
+            let ttft = s.t_first.expect("completed => first token") - s.t_arrive;
+            per_request.push(ReqStat {
+                id: s.id,
+                t_arrive: s.t_arrive,
+                ttft,
+                latency: t - s.t_arrive,
+                tokens: s.output,
+            });
+            tokens_out += s.output as u64;
+            done += 1;
+        }
+        let mut budget = prefill_tokens;
+        for s in active.iter_mut() {
+            if s.decoding() || budget == 0 {
+                continue;
+            }
+            let take = budget.min(s.prompt - s.prefill_done);
+            s.prefill_done += take;
+            budget -= take;
+        }
+    }
+
+    // --- distill the report
+    let ttfts: Vec<f64> = per_request.iter().map(|r| r.ttft).collect();
+    let lats: Vec<f64> = per_request.iter().map(|r| r.latency).collect();
+    let tpots: Vec<f64> = per_request
+        .iter()
+        .map(|r| {
+            if r.tokens > 1 {
+                (r.latency - r.ttft) / (r.tokens - 1) as f64
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let completed = per_request.len();
+    let dropped: usize = drop_reasons.values().sum();
+    debug_assert_eq!(completed + dropped, total, "request conservation");
+    Ok(ServingReport {
+        requests: total,
+        completed,
+        dropped,
+        drop_reasons: drop_reasons
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect(),
+        rerouted: rerouted_total,
+        p50_ttft: percentile(&ttfts, 50.0),
+        p99_ttft: percentile(&ttfts, 99.0),
+        p50_tpot: percentile(&tpots, 50.0),
+        p99_tpot: percentile(&tpots, 99.0),
+        p50_latency: percentile(&lats, 50.0),
+        p99_latency: percentile(&lats, 99.0),
+        tokens_out,
+        goodput: tokens_out as f64 / t.max(1e-12),
+        makespan: t,
+        queue_depth: downsample(&qsamples, 256),
+        max_queue_depth: max_q,
+        kv_migrations,
+        kv_blocks_moved,
+        recoveries,
+        events,
+        per_request,
+    })
+}
+
+/// Convenience: materialize a [`TracePlan`] and serve it.
+pub fn run_serve_plan(
+    cluster: ClusterSpec,
+    plan: &TracePlan,
+    faults: FaultPlan,
+    cfg: &ServeCfg,
+) -> Result<ServingReport, CoordError> {
+    run_serve(cluster, &plan.materialize(), faults, cfg)
+}
+
+/// Price one decode step by running the coordinator programs through
+/// the engine: flash-decode attention (+ the EP-MoE FFN) on the current
+/// world, under the residual plan projected onto this step's clock.
+/// Memoized per `(world, kv bucket, moe bucket)` when the residual is
+/// empty — the dead set grows monotonically, so within a run the world
+/// size uniquely identifies the survivor view.
+#[allow(clippy::too_many_arguments)]
+fn decode_step_cost(
+    cluster: ClusterSpec,
+    topo: &Topology,
+    cfg: &ServeCfg,
+    residual: &FaultPlan,
+    dead_all: &[usize],
+    view: &WorldView,
+    t: f64,
+    kvb: u64,
+    moeb: u64,
+    memo: &mut BTreeMap<(usize, u64, u64), (f64, u64)>,
+) -> Result<(f64, u64), CoordError> {
+    let key = (view.world(), kvb, moeb);
+    if residual.is_empty() {
+        if let Some(&hit) = memo.get(&key) {
+            return Ok(hit);
+        }
+    }
+    let fp = shift_plan(residual, dead_all, t, t);
+    let fcfg = FlashDecodeCfg {
+        heads: cfg.heads,
+        head_dim: cfg.head_dim,
+        kv_per_rank: kvb as usize,
+        numeric: false,
+    };
+    let mut op = if view.is_identity() {
+        flash_decode::build(cluster, fcfg).0
+    } else {
+        build_flash_decode_degraded(cluster, fcfg, view)
+    };
+    let rep = run_timing_threads(&mut op, topo, fp.clone(), cfg.threads)?;
+    let mut cost = rep.makespan;
+    let mut ev = rep.events;
+    if cfg.moe {
+        let shape = MoeShape {
+            tokens_per_rank: moeb as usize,
+            in_hidden: cfg.moe_hidden,
+            out_hidden: cfg.moe_hidden,
+            experts: cfg.moe_experts,
+            topk: 2,
+            ..MoeShape::default()
+        };
+        let routing0 = routing_for(cluster, &shape, cfg.moe_seed);
+        let a2a = A2aCfg::ours();
+        let (mut mop, _bufs) = if view.is_identity() {
+            build_ep_moe_cfg(cluster, shape, &routing0, EpMoeVariant::TokenRouted, &a2a)
+        } else {
+            let routing = survivor_routing(&shape, &routing0, view);
+            build_ep_moe_view(
+                cluster,
+                shape,
+                &routing,
+                EpMoeVariant::TokenRouted,
+                &a2a,
+                view,
+            )
+        };
+        let mrep = run_timing_threads(&mut mop, topo, fp, cfg.threads)?;
+        cost += mrep.makespan;
+        ev += mrep.events;
+    }
+    if residual.is_empty() {
+        memo.insert(key, (cost, ev));
+    }
+    Ok((cost, ev))
+}
+
+/// Slice a full-world routing table down to survivor rows with capacity
+/// recomputed for the smaller world (the same re-plan the elastic EP
+/// MoE controller performs).
+fn survivor_routing(shape: &MoeShape, routing0: &EpRouting, view: &WorldView) -> EpRouting {
+    let g0 = routing0.geom;
+    let wsur = view.world();
+    let tk = g0.t * g0.k;
+    let mut idx = Vec::with_capacity(wsur * tk);
+    let mut gate = Vec::with_capacity(wsur * tk);
+    for l in 0..wsur {
+        let pr = view.phys(l);
+        idx.extend_from_slice(&routing0.idx[pr * tk..(pr + 1) * tk]);
+        gate.extend_from_slice(&routing0.gate[pr * tk..(pr + 1) * tk]);
+    }
+    let gsur = EpGeom {
+        w: wsur,
+        c: shape.expert_capacity(wsur),
+        ..g0
+    };
+    EpRouting::from_table(gsur, idx, gate)
+}
+
+/// Move one request's KV blocks from the most- to the least-loaded rank
+/// when the spread exceeds the trigger; returns blocks moved. At most
+/// one migration per step keeps the rebalance cost bounded and the
+/// choice deterministic (ties break toward the lowest rank).
+fn rebalance_kv(
+    active: &mut [Slot],
+    kv_load: &mut BTreeMap<usize, u64>,
+    spread: u64,
+) -> Option<u64> {
+    let (&hot, &hot_load) = kv_load.iter().max_by_key(|&(r, load)| (*load, std::cmp::Reverse(*r)))?;
+    let (&cold, &cold_load) = kv_load.iter().min_by_key(|&(r, load)| (*load, *r))?;
+    if hot == cold || hot_load - cold_load < spread {
+        return None;
+    }
+    // migrate the smallest resident request on the hot rank that still
+    // narrows the spread (deterministic: lowest id among candidates)
+    let mv = active
+        .iter_mut()
+        .filter(|s| s.home == hot && s.kv_blocks > 0)
+        .min_by_key(|s| (s.kv_blocks, s.id))?;
+    let blocks = mv.kv_blocks;
+    mv.home = cold;
+    *kv_load.get_mut(&hot).expect("hot rank exists") -= blocks;
+    *kv_load.get_mut(&cold).expect("cold rank exists") += blocks;
+    Some(blocks)
+}
+
+/// Keep at most `n` evenly spaced samples (deterministic).
+fn downsample(xs: &[(f64, usize)], n: usize) -> Vec<(f64, usize)> {
+    if xs.len() <= n {
+        return xs.to_vec();
+    }
+    (0..n).map(|i| xs[i * xs.len() / n]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cluster() -> ClusterSpec {
+        ClusterSpec::h800(1, 4)
+    }
+
+    fn small_cfg() -> ServeCfg {
+        ServeCfg {
+            max_batch: 8,
+            moe_experts: 8,
+            ..ServeCfg::default()
+        }
+    }
+
+    #[test]
+    fn empty_trace_is_a_noop() {
+        let rep = run_serve(
+            small_cluster(),
+            &ArrivalTrace::default(),
+            FaultPlan::default(),
+            &small_cfg(),
+        )
+        .unwrap();
+        assert_eq!(rep, ServingReport::default());
+    }
+
+    #[test]
+    fn tiny_trace_conserves_and_replays() {
+        let plan = TracePlan::parse("poisson,2e4,12,7; lens,64,8").unwrap();
+        let trace = plan.materialize();
+        let cfg = small_cfg();
+        let a = run_serve(small_cluster(), &trace, FaultPlan::default(), &cfg).unwrap();
+        let b = run_serve(small_cluster(), &trace, FaultPlan::default(), &cfg).unwrap();
+        assert_eq!(a, b, "same trace + plan must replay bit-for-bit");
+        assert_eq!(a.requests, 12);
+        assert_eq!(a.completed + a.dropped, a.requests);
+        assert_eq!(a.completed, a.per_request.len());
+        assert!(a.p50_ttft <= a.p99_ttft);
+        assert!(a.p50_latency <= a.p99_latency);
+        for r in &a.per_request {
+            assert!(r.ttft <= r.latency, "req {}: ttft > latency", r.id);
+        }
+        assert!(a.makespan > 0.0 && a.events > 0);
+        assert!(a.goodput > 0.0);
+    }
+}

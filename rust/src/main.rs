@@ -5,7 +5,7 @@ use triton_dist_sim::cli::Args;
 use triton_dist_sim::collectives::alltoall::{a2a_deepep_cfg, a2a_ll, A2aBufs, A2aCfg};
 use triton_dist_sim::collectives::ProgBuild;
 use triton_dist_sim::config::{
-    ClusterSpec, DType, FabricSpec, FaultPlan, GemmShape, MoeShape, RailPolicy,
+    ClusterSpec, DType, FabricSpec, FaultPlan, GemmShape, MoeShape, RailPolicy, TracePlan,
 };
 use triton_dist_sim::coordinator::{self, ag_gemm, ep_moe, flash_decode, gemm_rs, moe, recover};
 use triton_dist_sim::mem::SymmetricHeap;
@@ -29,6 +29,10 @@ COMMANDS:
                               (railed dispatch/combine vs fixed capacity)
   alltoall                    run low-latency EP AllToAll (ours vs deepep)
   flash-decode                run distributed flash decoding
+  serve                       trace-driven continuous-batching serving:
+                              arrivals -> prefill/decode SM partition ->
+                              per-step flash-decode + EP-MoE, reporting
+                              p50/p99 TTFT & TPOT into BENCH_engine.json
   timeline                    print an ASCII timeline of AG+GEMM
   artifacts                   list loaded AOT artifacts (PJRT manifest)
 
@@ -56,7 +60,8 @@ FAULT INJECTION (timing runs; empty plan = bit-identical to fault-free):
                   permanent deaths: \"die,<rank>,<t0>\" kills one GPU
                   forever; \"nodedead,<node>,<t0>\" kills a whole node.
                   A run touching a dead rank aborts with a structured
-                  DeadPeer error — pass --recover (ep-moe) to survive it.
+                  DeadPeer error — pass --recover (ep-moe, flash-decode)
+                  to survive it; `serve` always recovers.
   --fault-seed N  synthesize a deterministic random plan (with --fault-rate)
   --fault-rate R  faults per rank for the synthesized plan (default 0)
   --fault-severe  synthesized plan draws from the severe tier too
@@ -65,14 +70,33 @@ FAULT INJECTION (timing runs; empty plan = bit-identical to fault-free):
   --lt-timeout S  watchdog on LL/signal waits, seconds (default: off)
   --retry-max N   retry budget for puts killed on a downed link (default 8)
 
-ELASTIC RECOVERY (ep-moe):
+ELASTIC RECOVERY (ep-moe, flash-decode):
   --recover       survive permanent deaths: detect -> drain -> re-plan
-                  over the survivors -> resume (numerics verified on the
-                  survivor world; prints the recovery ledger with exact
-                  token accounting)
+                  over the survivors -> resume (ep-moe verifies numerics
+                  on the survivor world; both print the recovery ledger
+                  with exact token/KV accounting)
   worked example — kill rank 3 at t=10us mid-dispatch and recover:
     triton-dist-sim ep-moe --nodes 2 --rails 2 \\
         --faults \"die,3,1e-5\" --recover
+
+SERVING (serve):
+  --trace SPEC    explicit trace DSL (wins over --arrival), e.g.
+                  \"poisson,2e4,512,7; bursty,1e4,256,9,4,2e-3; lens,128,32\"
+  --arrival K     poisson|bursty|diurnal arrival process (default poisson)
+  --rate R        mean arrivals/s of virtual time (default 2e4)
+  --requests N    requests to generate (default 256)
+  --seed N        arrival-trace seed (default 1)
+  --prompt/--output  mean prompt/output tokens (default 128/32)
+  --max-batch N   continuous-batching slots (default 32)
+  --prefill-chunk N  prefill token budget per step (default 256)
+  --kv-block N    tokens per KV-cache block (default 64)
+  --no-moe        skip the per-decode-step EP-MoE FFN
+  deaths in --faults are absorbed: the fleet re-plans onto survivors
+  and the report shows the p99 spike. Writes the serving record to
+  BENCH_engine.json ($BENCH_ENGINE_JSON overrides the path).
+  worked example — diurnal load with a mid-trace rank death:
+    triton-dist-sim serve --nodes 2 --arrival diurnal --rate 3e4 \\
+        --requests 512 --seed 7 --faults \"die,3,2e-3\"
 
 EP-MOE OPTIONS:
   --tokens/--in-hidden/--out-hidden/--experts/--topk   MoE shape
@@ -416,7 +440,10 @@ fn run(args: &Args) -> Result<(), String> {
                 ours: 0.0,
                 baselines: Vec::new(),
             };
-            for variant in [ep_moe::EpMoeVariant::TokenRouted, ep_moe::EpMoeVariant::FixedCapacity] {
+            for variant in [
+                ep_moe::EpMoeVariant::TokenRouted,
+                ep_moe::EpMoeVariant::FixedCapacity,
+            ] {
                 let (mut op, bufs) =
                     ep_moe::build_ep_moe_cfg(cluster, shape, &routing, variant, &cfg);
                 let t = if args.flag("numeric")
@@ -512,6 +539,29 @@ fn run(args: &Args) -> Result<(), String> {
                 numeric: false,
             };
             let plan = fault_plan_from(args, &cluster)?;
+            if args.flag("recover") || plan.has_deaths() {
+                // Elastic path: detect the death, drain, re-plan the
+                // decode onto the survivors' flat combine, resume.
+                let (rep, view) =
+                    recover::run_flash_decode_elastic(
+                        cluster,
+                        cfg,
+                        plan,
+                        &recover::RecoverCfg::default(),
+                    )
+                    .map_err(|e| e.to_string())?;
+                match &rep.recovery {
+                    Some(rec) => println!("{}", metrics::recovery_line(rec)),
+                    None => println!("no deaths fired; completed at full world"),
+                }
+                println!(
+                    "flash-decode latency={} (world {} of {})",
+                    fmt_time(rep.makespan),
+                    view.world(),
+                    cluster.world_size()
+                );
+                return Ok(());
+            }
             let threads = args.positive_usize_or("threads", 1)?;
             let topo = Topology::build(cluster);
             let (mut op, _b) = flash_decode::build(cluster, cfg);
@@ -528,6 +578,81 @@ fn run(args: &Args) -> Result<(), String> {
                 fmt_time(t),
                 bw / 1e12
             );
+            Ok(())
+        }
+        Some("serve") => {
+            let cluster = cluster_from(args)?;
+            // explicit --trace DSL wins; else synthesize one arrival
+            // process from --arrival/--rate/--requests/--seed
+            let mut plan = match args.get("trace") {
+                Some(spec) => TracePlan::parse(spec)?,
+                None => {
+                    let kind =
+                        args.choice_or("arrival", "poisson", &["poisson", "bursty", "diurnal"])?;
+                    let rate = args.f64_or("rate", 2e4)?;
+                    let n = args.usize_or("requests", 256)?;
+                    let seed = args.usize_or("seed", 1)? as u64;
+                    TracePlan::arrival(kind, rate, n, seed)?
+                }
+            };
+            plan.prompt_mean = args.usize_or("prompt", plan.prompt_mean)?;
+            plan.output_mean = args.usize_or("output", plan.output_mean)?;
+            let faults = fault_plan_from(args, &cluster)?;
+            let cfg = coordinator::serve::ServeCfg {
+                max_batch: args.usize_or("max-batch", 32)?,
+                prefill_chunk: args.usize_or("prefill-chunk", 256)?,
+                kv_block: args.usize_or("kv-block", 64)?,
+                moe: !args.flag("no-moe"),
+                threads: args.positive_usize_or("threads", 1)?,
+                ..coordinator::serve::ServeCfg::default()
+            };
+            if cfg.max_batch == 0 || cfg.prefill_chunk == 0 || cfg.kv_block == 0 {
+                return Err("--max-batch/--prefill-chunk/--kv-block must be >= 1".into());
+            }
+            let trace = plan.materialize();
+            println!("trace: {plan}");
+            println!("requests: {}", trace.len());
+            let wall = std::time::Instant::now();
+            let rep = coordinator::serve::run_serve(cluster, &trace, faults, &cfg)
+                .map_err(|e| e.to_string())?;
+            let wall_s = wall.elapsed().as_secs_f64();
+            let info = rep.bench_info();
+            println!("{}", metrics::serving_line(&info));
+            for (why, n) in &rep.drop_reasons {
+                println!("  dropped {n}: {why}");
+            }
+            for r in &rep.recoveries {
+                println!(
+                    "  death of rank(s) {:?} at {} -> resumed {} \
+                     ({} request(s) rerouted, {} dropped)",
+                    r.dead,
+                    fmt_time(r.died_at),
+                    fmt_time(r.resumed_at),
+                    r.rerouted,
+                    r.dropped
+                );
+            }
+            if rep.kv_migrations > 0 {
+                println!(
+                    "  kv rebalance: {} migration(s), {} block(s) moved",
+                    rep.kv_migrations, rep.kv_blocks_moved
+                );
+            }
+            let record = metrics::EngineBenchRecord {
+                scenario: "serve-cli".into(),
+                events: rep.events,
+                median_wall_s: wall_s,
+                sim_wall_ns: 0,
+                threads: Vec::new(),
+                fault: None,
+                recovery: None,
+                serving: Some(info),
+            };
+            let path = std::env::var("BENCH_ENGINE_JSON")
+                .unwrap_or_else(|_| "BENCH_engine.json".into());
+            std::fs::write(&path, metrics::engine_bench_json(&[record]))
+                .map_err(|e| e.to_string())?;
+            println!("wrote {path}");
             Ok(())
         }
         Some("timeline") => {

@@ -132,6 +132,40 @@ pub struct RecoveryBenchInfo {
     pub goodput: f64,
 }
 
+/// Serving-scenario annotations riding one engine-perf record: the
+/// latency distribution and throughput of a trace-driven serving run
+/// (`coordinator::serve`). Plain scalars extracted from the
+/// `ServingReport` by the caller, so the report layer stays below the
+/// coordinator layer.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServingBenchInfo {
+    /// Requests in the materialized trace.
+    pub requests: u64,
+    /// Requests that produced their full output.
+    pub completed: u64,
+    /// Requests dropped with a reason (`requests == completed + dropped`).
+    pub dropped: u64,
+    /// Requests that restarted after losing KV-cache to a dead rank
+    /// (each still ends in `completed` or `dropped`).
+    pub rerouted: u64,
+    /// Median time-to-first-token (s).
+    pub p50_ttft_s: f64,
+    /// 99th-percentile time-to-first-token (s).
+    pub p99_ttft_s: f64,
+    /// Median time-per-output-token (s).
+    pub p50_tpot_s: f64,
+    /// 99th-percentile time-per-output-token (s).
+    pub p99_tpot_s: f64,
+    /// Completed output tokens per virtual second.
+    pub goodput_tokens_per_s: f64,
+    /// Virtual time from first arrival to last completion (s).
+    pub makespan_s: f64,
+    /// Peak admission-queue depth over the run.
+    pub max_queue_depth: u64,
+    /// Mid-serving rank deaths survived by the elastic controller.
+    pub recoveries: u32,
+}
+
 /// One wall-clock engine measurement: a scenario of `perf_engine` (events
 /// processed, median elapsed seconds), optionally with its fault ledger.
 #[derive(Debug, Clone)]
@@ -151,6 +185,8 @@ pub struct EngineBenchRecord {
     pub fault: Option<FaultBenchInfo>,
     /// `Some` for scenarios that survived a permanent death.
     pub recovery: Option<RecoveryBenchInfo>,
+    /// `Some` for trace-driven serving scenarios.
+    pub serving: Option<ServingBenchInfo>,
 }
 
 impl EngineBenchRecord {
@@ -216,6 +252,25 @@ pub fn engine_bench_json(records: &[EngineBenchRecord]) -> String {
             ro.insert("goodput".into(), Json::Num(ri.goodput));
             obj.insert("recovery".into(), Json::Obj(ro));
         }
+        if let Some(si) = &r.serving {
+            let mut so = std::collections::BTreeMap::new();
+            so.insert("requests".into(), Json::Num(si.requests as f64));
+            so.insert("completed".into(), Json::Num(si.completed as f64));
+            so.insert("dropped".into(), Json::Num(si.dropped as f64));
+            so.insert("rerouted".into(), Json::Num(si.rerouted as f64));
+            so.insert("p50_ttft_s".into(), Json::Num(si.p50_ttft_s));
+            so.insert("p99_ttft_s".into(), Json::Num(si.p99_ttft_s));
+            so.insert("p50_tpot_s".into(), Json::Num(si.p50_tpot_s));
+            so.insert("p99_tpot_s".into(), Json::Num(si.p99_tpot_s));
+            so.insert(
+                "goodput_tokens_per_s".into(),
+                Json::Num(si.goodput_tokens_per_s),
+            );
+            so.insert("makespan_s".into(), Json::Num(si.makespan_s));
+            so.insert("max_queue_depth".into(), Json::Num(si.max_queue_depth as f64));
+            so.insert("recoveries".into(), Json::Num(si.recoveries as f64));
+            obj.insert("serving".into(), Json::Obj(so));
+        }
         scenarios.insert(r.scenario.clone(), Json::Obj(obj));
     }
     let mut root = std::collections::BTreeMap::new();
@@ -255,6 +310,27 @@ pub fn recovery_line(l: &RecoveryLedger) -> String {
         l.tokens_rerouted,
         l.tokens_dropped,
         l.epochs
+    )
+}
+
+/// One-line human rendering of a serving summary (CLI `serve` output).
+pub fn serving_line(s: &ServingBenchInfo) -> String {
+    format!(
+        "serving: {}/{} completed ({} dropped, {} rerouted); \
+         TTFT p50 {} p99 {}; TPOT p50 {} p99 {}; \
+         goodput {:.0} tok/s over {}; peak queue {}; {} recovery(ies)",
+        s.completed,
+        s.requests,
+        s.dropped,
+        s.rerouted,
+        fmt_time(s.p50_ttft_s),
+        fmt_time(s.p99_ttft_s),
+        fmt_time(s.p50_tpot_s),
+        fmt_time(s.p99_tpot_s),
+        s.goodput_tokens_per_s,
+        fmt_time(s.makespan_s),
+        s.max_queue_depth,
+        s.recoveries
     )
 }
 
@@ -422,6 +498,7 @@ mod tests {
             threads: Vec::new(),
             fault: None,
             recovery: None,
+            serving: None,
         }];
         let s = engine_bench_json(&recs);
         let doc = crate::util::json::parse(&s).unwrap();
@@ -443,6 +520,7 @@ mod tests {
             threads: vec![(1, 2000.0), (8, 12000.0)],
             fault: None,
             recovery: None,
+            serving: None,
         }];
         let s = engine_bench_json(&recs);
         let doc = crate::util::json::parse(&s).unwrap();
@@ -472,6 +550,7 @@ mod tests {
                 slowdown: 1.37,
             }),
             recovery: None,
+            serving: None,
         }];
         let s = engine_bench_json(&recs);
         let doc = crate::util::json::parse(&s).unwrap();
@@ -512,6 +591,7 @@ mod tests {
                 ledger: ledger.clone(),
                 goodput: 84.0 / 96.0,
             }),
+            serving: None,
         }];
         let s = engine_bench_json(&recs);
         let doc = crate::util::json::parse(&s).unwrap();
@@ -530,5 +610,104 @@ mod tests {
     fn fig1_summary_renders() {
         let s = fig1_summary(&[("AG+GEMM", 1.42), ("AG+MoE", 44.97)]);
         assert!(s.contains("44.97x"));
+    }
+
+    #[test]
+    fn engine_bench_json_carries_serving_summary() {
+        let recs = vec![EngineBenchRecord {
+            scenario: "serve-mixed-1k".into(),
+            events: 123456,
+            median_wall_s: 1.0,
+            sim_wall_ns: 0,
+            threads: Vec::new(),
+            fault: None,
+            recovery: None,
+            serving: Some(ServingBenchInfo {
+                requests: 1000,
+                completed: 990,
+                dropped: 10,
+                rerouted: 4,
+                p50_ttft_s: 2e-4,
+                p99_ttft_s: 9e-4,
+                p50_tpot_s: 5e-5,
+                p99_tpot_s: 2e-4,
+                goodput_tokens_per_s: 3.2e5,
+                makespan_s: 0.1,
+                max_queue_depth: 37,
+                recoveries: 1,
+            }),
+        }];
+        let s = engine_bench_json(&recs);
+        let doc = crate::util::json::parse(&s).unwrap();
+        let sv = doc.get("scenarios").get("serve-mixed-1k").get("serving");
+        assert_eq!(sv.get("requests").as_usize(), Some(1000));
+        assert_eq!(sv.get("completed").as_usize(), Some(990));
+        assert_eq!(sv.get("p99_ttft_s").as_f64(), Some(9e-4));
+        assert_eq!(sv.get("p50_tpot_s").as_f64(), Some(5e-5));
+        assert_eq!(sv.get("max_queue_depth").as_usize(), Some(37));
+        assert_eq!(sv.get("recoveries").as_usize(), Some(1));
+        let line = serving_line(recs[0].serving.as_ref().unwrap());
+        assert!(line.contains("990/1000 completed"), "{line}");
+        assert!(line.contains("1 recovery"), "{line}");
+    }
+
+    // -----------------------------------------------------------------
+    // percentile estimator (util::stats::percentile) — the p50/p99
+    // machinery every ServingBenchInfo number flows through
+    // -----------------------------------------------------------------
+
+    use crate::util::stats::percentile;
+
+    #[test]
+    fn percentile_exact_on_known_distributions() {
+        // 1..=5: rank = p/100 * 4, linear interpolation between sorted
+        // neighbours — all exactly representable
+        let xs = [5.0, 3.0, 1.0, 4.0, 2.0]; // unsorted on purpose
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 75.0), 4.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        // interpolated: p62.5 on 1..=5 -> rank 2.5 -> 3.5
+        assert_eq!(percentile(&xs, 62.5), 3.5);
+        // two samples: p99 interpolates 98% of the way up
+        let two = [10.0, 20.0];
+        assert_eq!(percentile(&two, 50.0), 15.0);
+        assert!((percentile(&two, 99.0) - 19.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_single_sample_is_that_sample() {
+        let one = [42.5];
+        for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&one, p), 42.5, "p{p}");
+        }
+    }
+
+    #[test]
+    fn percentile_all_equal_is_constant() {
+        let xs = [7.25; 9];
+        for p in [0.0, 25.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&xs, p), 7.25, "p{p}");
+        }
+    }
+
+    #[test]
+    fn percentile_is_monotone_in_p_and_bounded() {
+        let xs = [0.3, 12.0, 5.5, 5.5, 0.01, 7.0, 100.0, 2.0];
+        let mut last = f64::NEG_INFINITY;
+        for p in 0..=100 {
+            let v = percentile(&xs, p as f64);
+            assert!(v >= last, "p{p}: {v} < {last}");
+            assert!((0.01..=100.0).contains(&v), "p{p}: {v}");
+            last = v;
+        }
+        // p50 <= p99 is the ServingReport sanity invariant
+        assert!(percentile(&xs, 50.0) <= percentile(&xs, 99.0));
+    }
+
+    #[test]
+    fn percentile_empty_is_zero() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
     }
 }

@@ -5,4 +5,6 @@ pub mod features;
 pub mod partition;
 pub mod swizzle;
 
-pub use partition::{plan_inter_ag, plan_inter_rs, plan_intra_ag, Partition};
+pub use partition::{
+    plan_inter_ag, plan_inter_rs, plan_intra_ag, plan_serving, Partition, ServePartition,
+};

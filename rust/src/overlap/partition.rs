@@ -97,6 +97,71 @@ impl Partition {
     }
 }
 
+/// SM budget split between the two serving phases of a continuously
+/// batched step (`coordinator::serve`): prompt prefill (GEMM-bound) and
+/// token decode (memory/collective-bound) run concurrently and compete
+/// for the device, the same §3.5 tradeoff as GEMM vs reduction above.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServePartition {
+    /// SMs granted to the prefill GEMM.
+    pub prefill_sms: u32,
+    /// SMs granted to the decode partial-attention + collective tasks.
+    pub decode_sms: u32,
+}
+
+impl ServePartition {
+    /// Concurrent demand must fit the device.
+    pub fn fits(&self, hw: &HardwareModel) -> bool {
+        self.prefill_sms + self.decode_sms <= hw.sms
+    }
+}
+
+/// Split the device between a decode batch and pending prefill tokens.
+///
+/// A lone phase owns the whole device. When both are live, the split is
+/// proportional to their work — decode weighs each in-flight sequence
+/// as one unit, prefill weighs `prefill_tokens` at one unit per
+/// [`SERVE_PREFILL_TOKENS_PER_UNIT`] tokens (a prefill token is
+/// GEMM-dense; a decode step is memory-bound) — with each side clamped
+/// to at least a quarter of the device so neither phase starves
+/// (§3.8's "avoid long tails": the slower phase gates the step).
+/// Deterministic: integer arithmetic only.
+pub fn plan_serving(
+    hw: &HardwareModel,
+    decode_batch: usize,
+    prefill_tokens: usize,
+) -> ServePartition {
+    match (decode_batch, prefill_tokens) {
+        (0, _) => {
+            return ServePartition {
+                prefill_sms: hw.sms,
+                decode_sms: 0,
+            }
+        }
+        (_, 0) => {
+            return ServePartition {
+                prefill_sms: 0,
+                decode_sms: hw.sms,
+            }
+        }
+        _ => {}
+    }
+    let decode_w = decode_batch as u64;
+    let prefill_w = (prefill_tokens as u64).div_ceil(SERVE_PREFILL_TOKENS_PER_UNIT);
+    let total = decode_w + prefill_w;
+    let floor = hw.sms / 4;
+    let decode = ((hw.sms as u64 * decode_w) / total) as u32;
+    let decode = decode.clamp(floor, hw.sms - floor);
+    ServePartition {
+        prefill_sms: hw.sms - decode,
+        decode_sms: decode,
+    }
+}
+
+/// Prefill tokens weighing as much as one decode sequence in
+/// [`plan_serving`]'s proportional split.
+pub const SERVE_PREFILL_TOKENS_PER_UNIT: u64 = 8;
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,6 +222,46 @@ mod tests {
         assert_eq!(p.p2p_sms, 8); // lws-1 + n_nodes-1 = 7 + 1
         assert_eq!(p.gemm_sms, 124);
         assert!(p.fits(&hw));
+    }
+
+    #[test]
+    fn serving_split_solo_phase_owns_device() {
+        let hw = HardwareModel::h800();
+        assert_eq!(
+            plan_serving(&hw, 0, 4096),
+            ServePartition {
+                prefill_sms: 132,
+                decode_sms: 0
+            }
+        );
+        assert_eq!(
+            plan_serving(&hw, 64, 0),
+            ServePartition {
+                prefill_sms: 0,
+                decode_sms: 132
+            }
+        );
+    }
+
+    #[test]
+    fn serving_split_is_proportional_clamped_and_fits() {
+        for hw in [
+            HardwareModel::h800(),
+            HardwareModel::mi308x(),
+            HardwareModel::l20(),
+        ] {
+            let floor = hw.sms / 4;
+            let mut last_decode = 0;
+            for batch in [1usize, 4, 16, 64, 256] {
+                let p = plan_serving(&hw, batch, 1024);
+                assert!(p.fits(&hw), "{:?} batch={batch}: {p:?}", hw.kind);
+                assert_eq!(p.prefill_sms + p.decode_sms, hw.sms);
+                assert!(p.decode_sms >= floor && p.prefill_sms >= floor, "{p:?}");
+                // more decode work never shrinks the decode share
+                assert!(p.decode_sms >= last_decode, "{:?} batch={batch}", hw.kind);
+                last_decode = p.decode_sms;
+            }
+        }
     }
 
     #[test]

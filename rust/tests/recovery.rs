@@ -23,7 +23,9 @@ use triton_dist_sim::collectives::alltoall::A2aCfg;
 use triton_dist_sim::config::{
     ClusterSpec, FabricSpec, FaultPlan, GemmShape, MoeShape, RailPolicy,
 };
-use triton_dist_sim::coordinator::{ag_gemm, ep_moe, recover, run_numeric, run_timing_faults};
+use triton_dist_sim::coordinator::{
+    ag_gemm, ep_moe, flash_decode, recover, run_numeric, run_timing_faults,
+};
 use triton_dist_sim::runtime::HybridExecutor;
 use triton_dist_sim::sim::SimError;
 use triton_dist_sim::topology::Topology;
@@ -322,6 +324,64 @@ fn ag_gemm_death_replans_onto_the_flat_survivor_program() {
     assert_eq!(rec.epochs, 1);
     // timing-only path: the token ledger stays zero
     assert_eq!(rec.tokens_delivered + rec.tokens_rerouted + rec.tokens_dropped, 0);
+}
+
+#[test]
+fn flash_decode_death_replans_onto_the_degraded_survivor_program() {
+    // decode-time death: rank 3 dies mid flash-decode; the controller
+    // must re-plan the distributed attention onto the survivors' flat
+    // combine with exact KV-shard accounting
+    let cluster = railed_cluster(2, 4);
+    let cfg = flash_decode::FlashDecodeCfg {
+        heads: 8,
+        head_dim: 64,
+        kv_per_rank: 4096,
+        numeric: false,
+    };
+    let plan = FaultPlan::parse("die,3,1e-6").unwrap();
+    let (rep, view) =
+        recover::run_flash_decode_elastic(cluster, cfg, plan.clone(), &RecoverCfg::default())
+            .expect("decode-time death must be survived");
+    let rec = rep.recovery.as_ref().expect("ledger must be on record");
+    assert_eq!(rec.dead_ranks, vec![3]);
+    assert_eq!(view.world(), 7);
+    assert!(rep.makespan >= rec.resumed_at);
+    assert!(
+        rec.died_at <= rec.detected_at
+            && rec.detected_at <= rec.drained_at
+            && rec.drained_at <= rec.replanned_at
+            && rec.replanned_at <= rec.resumed_at,
+        "detect -> drain -> re-plan -> resume must be ordered: {rec:?}"
+    );
+    assert!(!rec.via.is_empty(), "detection path must be named");
+    // exact conservation: every KV entry the full-world decode owed is
+    // either attended by a survivor shard or counted dropped
+    let owed = 8 * cfg.kv_per_rank as u64;
+    assert_eq!(
+        rec.tokens_delivered + rec.tokens_dropped,
+        owed,
+        "KV conservation: {rec:?}"
+    );
+    assert_eq!(
+        rec.tokens_dropped,
+        cfg.kv_per_rank as u64,
+        "exactly the dead rank's shard drops: {rec:?}"
+    );
+    // determinism: same plan, same recovery, bit-for-bit
+    let (rep2, _) =
+        recover::run_flash_decode_elastic(cluster, cfg, plan, &RecoverCfg::default()).unwrap();
+    assert_eq!(rep.makespan.to_bits(), rep2.makespan.to_bits());
+    assert_eq!(rep.recovery, rep2.recovery);
+    // empty plan: bit-identical to the plain engine, no ledger
+    let (plain, v) = recover::run_flash_decode_elastic(
+        cluster,
+        cfg,
+        FaultPlan::default(),
+        &RecoverCfg::default(),
+    )
+    .unwrap();
+    assert!(plain.recovery.is_none(), "no death, no ledger");
+    assert!(v.is_identity());
 }
 
 // ---------------------------------------------------------------------

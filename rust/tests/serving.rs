@@ -1,0 +1,304 @@
+//! Trace-driven serving invariants (ISSUE tentpole acceptance):
+//!
+//! 1. **Replay**: the same `(trace seed, fault seed)` pair replays an
+//!    identical [`ServingReport`] bit-for-bit — percentiles, queue
+//!    samples, recovery log, everything.
+//! 2. **Request conservation**: every admitted request completes, is
+//!    dropped with a named reason, or is rerouted and *then* completes
+//!    or drops — the counters reconcile exactly.
+//! 3. **Percentile sanity**: p50 <= p99 on every metric, and TTFT <=
+//!    total latency per request.
+//! 4. **Empty-trace no-op**: serving an empty trace returns the
+//!    `Default` report — bit-identical to never having run.
+//! 5. **DSL robustness**: fuzzed trace specs parse to `Ok` or a
+//!    structured `Err`, never a panic; valid plans round-trip through
+//!    `Display` exactly.
+//! 6. **Death = spike, not failure**: a mid-serving rank death yields a
+//!    *completed* run whose p99 TTFT is measurably worse than the
+//!    fault-free run of the same trace, with the recovery on record.
+
+use triton_dist_sim::config::{ClusterSpec, FabricSpec, FaultPlan, RailPolicy, TracePlan};
+use triton_dist_sim::coordinator::serve::{run_serve, ServeCfg, ServingReport};
+use triton_dist_sim::util::prop::{check, Gen};
+
+fn railed_cluster(nodes: usize, gpus: usize) -> ClusterSpec {
+    ClusterSpec::h800(nodes, gpus).with_fabric(
+        FabricSpec::rail_optimized(2, 2.0)
+            .with_spine_taper(2.0)
+            .with_rail_policy(RailPolicy::Adaptive),
+    )
+}
+
+/// Small, fast fleet config for the suite (tiny MoE, small batch).
+fn small_cfg() -> ServeCfg {
+    ServeCfg {
+        max_batch: 8,
+        prefill_chunk: 128,
+        moe_experts: 8,
+        moe_hidden: 64,
+        ..ServeCfg::default()
+    }
+}
+
+/// Conservation + sanity audit every run must pass, with the seeds in
+/// every message so a CI failure prints its own repro.
+fn audit(rep: &ServingReport, tag: &str) {
+    assert_eq!(
+        rep.completed + rep.dropped,
+        rep.requests,
+        "{tag}: completed + dropped must equal admitted requests: {rep:?}"
+    );
+    assert_eq!(
+        rep.completed,
+        rep.per_request.len(),
+        "{tag}: one latency record per completion"
+    );
+    let reasons: usize = rep.drop_reasons.iter().map(|(_, n)| n).sum();
+    assert_eq!(reasons, rep.dropped, "{tag}: every drop carries a reason");
+    let rec_rerouted: usize = rep.recoveries.iter().map(|r| r.rerouted).sum();
+    assert_eq!(
+        rec_rerouted, rep.rerouted,
+        "{tag}: reroutes reconcile against the recovery log"
+    );
+    assert!(rep.p50_ttft <= rep.p99_ttft, "{tag}: ttft p50 > p99: {rep:?}");
+    assert!(rep.p50_tpot <= rep.p99_tpot, "{tag}: tpot p50 > p99: {rep:?}");
+    assert!(
+        rep.p50_latency <= rep.p99_latency,
+        "{tag}: latency p50 > p99: {rep:?}"
+    );
+    for r in &rep.per_request {
+        assert!(
+            r.ttft <= r.latency + 1e-15,
+            "{tag}: req {} first token after its last: {r:?}",
+            r.id
+        );
+        assert!(r.ttft >= 0.0 && r.latency >= 0.0, "{tag}: negative time: {r:?}");
+    }
+    if rep.completed > 0 {
+        assert!(rep.makespan > 0.0 && rep.goodput > 0.0, "{tag}: {rep:?}");
+        assert!(
+            rep.p99_latency <= rep.makespan,
+            "{tag}: no request outlives the run: {rep:?}"
+        );
+    }
+    assert!(
+        rep.queue_depth.len() <= 256,
+        "{tag}: queue samples must be downsampled"
+    );
+    for (t, d) in &rep.queue_depth {
+        assert!(*t <= rep.makespan && *d <= rep.max_queue_depth, "{tag}");
+    }
+}
+
+#[test]
+fn same_seeds_replay_the_report_bit_for_bit() {
+    let cluster = railed_cluster(2, 2);
+    let trace = TracePlan::parse("bursty,3e4,24,7,4,2e-3; lens,96,12")
+        .unwrap()
+        .materialize();
+    let faults = FaultPlan::parse("flap,nic,1,0,5e-5,1e-4; strag,2,1.3").unwrap();
+    let cfg = small_cfg();
+    let a = run_serve(cluster, &trace, faults.clone(), &cfg).unwrap();
+    let b = run_serve(cluster, &trace, faults, &cfg).unwrap();
+    assert_eq!(
+        a.makespan.to_bits(),
+        b.makespan.to_bits(),
+        "makespan must replay bit-for-bit"
+    );
+    assert_eq!(a, b, "the whole report must replay identically");
+    audit(&a, "replay");
+}
+
+#[test]
+fn synthesized_traces_conserve_requests_across_seeds() {
+    let cluster = railed_cluster(1, 4);
+    let cfg = small_cfg();
+    check("serving conservation", 6, |g: &mut Gen| {
+        let seed = g.u64();
+        let plan = TracePlan::synthesize(seed, 2e4, 10);
+        let trace = plan.materialize();
+        let rep = run_serve(cluster, &trace, FaultPlan::default(), &cfg)
+            .unwrap_or_else(|e| panic!("trace seed {seed}: serve failed: {e}"));
+        assert_eq!(
+            rep.requests,
+            trace.len(),
+            "trace seed {seed}: every arrival is accounted"
+        );
+        audit(&rep, &format!("trace seed {seed}"));
+        assert_eq!(rep.dropped, 0, "trace seed {seed}: no deaths, no drops");
+        assert_eq!(rep.rerouted, 0, "trace seed {seed}: no deaths, no reroutes");
+        assert!(rep.recoveries.is_empty(), "trace seed {seed}");
+    });
+}
+
+#[test]
+fn empty_trace_is_a_bit_identical_noop() {
+    let cluster = railed_cluster(2, 2);
+    let empty = TracePlan::default().materialize();
+    assert!(empty.is_empty());
+    // even under a fault plan: nothing arrives, nothing runs
+    let faults = FaultPlan::parse("die,3,1e-6; flap,nic,1,0,1e-5,1e-4").unwrap();
+    let rep = run_serve(cluster, &empty, faults, &small_cfg()).unwrap();
+    assert_eq!(rep, ServingReport::default(), "empty trace must be a no-op");
+    assert_eq!(rep.makespan.to_bits(), 0f64.to_bits());
+}
+
+#[test]
+fn mid_serving_rank_death_is_a_p99_spike_not_a_failed_run() {
+    let cluster = railed_cluster(2, 2);
+    let cfg = small_cfg();
+    let trace = TracePlan::parse("poisson,2e4,48,11; lens,96,12")
+        .unwrap()
+        .materialize();
+    let horizon = trace.horizon();
+    let clean = run_serve(cluster, &trace, FaultPlan::default(), &cfg).unwrap();
+    audit(&clean, "clean");
+    assert_eq!(clean.completed, 48, "fault-free run completes everything");
+
+    // kill rank 3 a quarter into the arrival window: the run must
+    // complete (never error), absorb the death, and show the damage
+    let die_at = horizon * 0.25;
+    let faults = FaultPlan::parse(&format!("die,3,{die_at}")).unwrap();
+    let dead = run_serve(cluster, &trace, faults, &cfg)
+        .unwrap_or_else(|e| panic!("mid-serving death must be survived, got: {e}"));
+    audit(&dead, "death");
+    assert_eq!(
+        dead.requests, 48,
+        "death run still accounts every request exactly"
+    );
+    assert_eq!(dead.recoveries.len(), 1, "the death must be on record");
+    let rec = &dead.recoveries[0];
+    assert_eq!(rec.dead, vec![3]);
+    assert!(
+        rec.resumed_at > rec.died_at,
+        "the recovery pause must cost virtual time: {rec:?}"
+    );
+    assert!(
+        dead.p99_ttft > clean.p99_ttft,
+        "a mid-serving death must surface as a p99 TTFT spike: \
+         clean {:.6e}s vs dead {:.6e}s",
+        clean.p99_ttft,
+        dead.p99_ttft
+    );
+    assert!(
+        dead.makespan > clean.makespan,
+        "the pause + re-prefill must stretch the run"
+    );
+}
+
+#[test]
+fn world_collapse_drops_the_remainder_with_exact_accounting() {
+    // 2 GPUs total: one death leaves a single survivor — the fleet
+    // cannot host the collectives, so everything left is dropped with a
+    // reason, and the run still completes
+    let cluster = railed_cluster(1, 2);
+    let trace = TracePlan::parse("poisson,2e4,16,3").unwrap().materialize();
+    let rep = run_serve(
+        cluster,
+        &trace,
+        FaultPlan::parse("die,1,1e-4").unwrap(),
+        &small_cfg(),
+    )
+    .unwrap_or_else(|e| panic!("world collapse must still complete: {e}"));
+    audit(&rep, "collapse");
+    assert!(rep.dropped > 0, "the stranded requests must be dropped");
+    assert!(
+        rep.drop_reasons.iter().any(|(w, _)| w == "world-collapsed"),
+        "the drop reason must be named: {:?}",
+        rep.drop_reasons
+    );
+}
+
+// ---------------------------------------------------------------------
+// trace-DSL robustness (same contract as the fault DSL)
+// ---------------------------------------------------------------------
+
+#[test]
+fn fuzzed_trace_dsl_returns_structured_errors_never_panics() {
+    let kinds = ["poisson", "bursty", "diurnal", "req", "lens", "bogus", ""];
+    let nums = ["0", "3", "1e-3", "2e4", "-1", "nan", "inf", "0.5", "x", ""];
+    check("fuzzed trace DSL: Ok or Err, never a panic", 256, |g: &mut Gen| {
+        let clauses = g.usize_in(0, 5);
+        let mut spec = String::new();
+        for i in 0..clauses {
+            if i > 0 {
+                spec.push(';');
+            }
+            spec.push_str(g.pick(&kinds));
+            for _ in 0..g.usize_in(0, 7) {
+                spec.push(',');
+                spec.push_str(g.pick(&nums));
+            }
+        }
+        match TracePlan::parse(&spec) {
+            Ok(_) => {}
+            Err(e) => assert!(!e.is_empty(), "error must describe the clause: {spec:?}"),
+        }
+    });
+}
+
+#[test]
+fn synthesized_plans_round_trip_through_display() {
+    check("parse(display(p)) == p", 128, |g: &mut Gen| {
+        let seed = g.u64();
+        let p = TracePlan::synthesize(seed, 1e4, 20);
+        let shown = p.to_string();
+        let q = TracePlan::parse(&shown)
+            .unwrap_or_else(|e| panic!("seed {seed}: display must re-parse: {shown:?}: {e}"));
+        assert_eq!(p, q, "seed {seed}: round trip changed the plan:\n  {shown}");
+        // and the materialized trace is identical through the round trip
+        assert_eq!(
+            p.materialize(),
+            q.materialize(),
+            "seed {seed}: round-tripped plan must materialize identically"
+        );
+    });
+}
+
+// ---------------------------------------------------------------------
+// long-trace soak (label-gated in CI; see .github/workflows)
+// ---------------------------------------------------------------------
+
+/// 10^5-request diurnal soak: conservation, percentile sanity, and
+/// replay must hold at scale, with a node death landing mid-trace. Every
+/// assertion carries the seed so CI prints a minimal repro.
+#[test]
+#[ignore = "long-trace soak: run explicitly (cargo test --test serving -- --ignored)"]
+fn soak_100k_request_diurnal_trace_with_mid_trace_death() {
+    let seed = 2026u64;
+    let cluster = railed_cluster(2, 4);
+    let cfg = ServeCfg {
+        moe_experts: 8,
+        moe_hidden: 64,
+        ..ServeCfg::default()
+    };
+    let trace = TracePlan::parse(&format!("diurnal,2e5,100000,{seed},8e-3,0.75; lens,64,8"))
+        .unwrap_or_else(|e| panic!("seed {seed}: {e}"))
+        .materialize();
+    assert_eq!(trace.len(), 100_000, "seed {seed}");
+    let die_at = trace.horizon() * 0.5;
+    let faults = FaultPlan::parse(&format!("die,5,{die_at}"))
+        .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    let rep = run_serve(cluster, &trace, faults.clone(), &cfg)
+        .unwrap_or_else(|e| panic!("seed {seed}: soak must complete: {e}"));
+    audit(&rep, &format!("soak seed {seed}"));
+    assert_eq!(rep.requests, 100_000, "seed {seed}");
+    assert_eq!(rep.recoveries.len(), 1, "seed {seed}: the death must fire");
+    // oversubscribed on purpose: queue-full shedding is fine (and
+    // accounted), but the fleet must keep completing work throughout
+    assert!(
+        rep.completed >= 1000,
+        "seed {seed}: the fleet must keep serving through the death \
+         (completed {} of {})",
+        rep.completed,
+        rep.requests
+    );
+    let again = run_serve(cluster, &trace, faults, &cfg)
+        .unwrap_or_else(|e| panic!("seed {seed}: replay must complete: {e}"));
+    assert_eq!(
+        rep.makespan.to_bits(),
+        again.makespan.to_bits(),
+        "seed {seed}: soak must replay bit-for-bit"
+    );
+    assert_eq!(rep, again, "seed {seed}: full report replay");
+}
