@@ -25,6 +25,14 @@
 //!   prints the makespan matrix and the token-routed vs fixed-capacity
 //!   win (routed must be strictly lower — pinned by the coordinator's
 //!   test suite).
+//! * `alltoall-sched-mixed` — the pinned mixed-traffic issue-scheduler
+//!   scenario (`collectives::alltoall::run_sched_mixed`): a 32-piece
+//!   bulk stream racing 4 GEMM-gating segments out of the same NIC under
+//!   `--sched fifo|srpf|deadline`; the record carries the three virtual
+//!   makespans and the contention-aware speedups (Srpf/Deadline must
+//!   strictly beat Fifo — pinned by `tests/sched_equivalence.rs`), and
+//!   the wall clock prices the ready-queue divert + pump on the event
+//!   path.
 //! * `alltoall-degraded-rail` — 4x8 LL AllToAll with spine plane 0 at
 //!   quarter capacity for the whole run: the health-aware adaptive
 //!   router steers around the degraded plane; the record carries the
@@ -58,16 +66,19 @@
 //! * `ag_gemm-numerics(native)` — data movement through the heap.
 
 use triton_dist_sim::bench::{banner, bench_wall};
-use triton_dist_sim::collectives::alltoall::{a2a_ll, a2a_skew, A2aBufs, A2aCfg};
+use triton_dist_sim::collectives::alltoall::{
+    a2a_ll, a2a_skew, run_sched_mixed_report, A2aBufs, A2aCfg,
+};
 use triton_dist_sim::collectives::ProgBuild;
 use triton_dist_sim::config::{
-    ClusterSpec, DType, FabricSpec, FaultPlan, GemmShape, MoeShape, RailPolicy, TracePlan,
+    ChunkSched, ClusterSpec, DType, FabricSpec, FaultPlan, GemmShape, MoeShape, RailPolicy,
+    TracePlan,
 };
 use triton_dist_sim::coordinator::{ag_gemm, ep_moe, recover, serve};
 use triton_dist_sim::mem::SymmetricHeap;
 use triton_dist_sim::metrics::{
     engine_bench_json, fault_ledger_line, recovery_line, serving_line, EngineBenchRecord,
-    FaultBenchInfo, RecoveryBenchInfo,
+    FaultBenchInfo, RecoveryBenchInfo, SchedBenchInfo,
 };
 use triton_dist_sim::shmem::ShmemCtx;
 use triton_dist_sim::sim::{NoopExecutor, Sim, SimConfig, SimReport};
@@ -124,6 +135,7 @@ fn report_fault(
         fault,
         recovery: None,
         serving: None,
+        sched: None,
     });
 }
 
@@ -261,6 +273,44 @@ fn main() {
     });
     println!("{}", stat_ep.render());
     report(&mut records, "moe-ep-skew", events_ep, &stat_ep);
+
+    // mixed-traffic issue scheduler: the pinned bulk-vs-gating NIC race
+    // under each ChunkSched policy. The Srpf run is the timed one (its
+    // ready-queue divert + pump is the new event-path cost); the record
+    // carries all three virtual makespans so the contention-aware win is
+    // tracked across PRs (the strict win itself is pinned by
+    // tests/sched_equivalence.rs).
+    println!("\nalltoall-sched-mixed (issue-scheduler sweep)");
+    let fifo_rep = run_sched_mixed_report(ChunkSched::Fifo).unwrap();
+    let deadline_rep = run_sched_mixed_report(ChunkSched::Deadline).unwrap();
+    let mut srpf_rep = run_sched_mixed_report(ChunkSched::Srpf).unwrap();
+    let stat_sched = bench_wall("alltoall-sched-mixed", 1, 5, || {
+        srpf_rep = run_sched_mixed_report(ChunkSched::Srpf).unwrap();
+    });
+    println!("{}", stat_sched.render());
+    println!(
+        "  virtual makespan: fifo {:.3} us vs srpf {:.3} us ({:.2}x) vs deadline {:.3} us ({:.2}x)",
+        fifo_rep.makespan * 1e6,
+        srpf_rep.makespan * 1e6,
+        fifo_rep.makespan / srpf_rep.makespan,
+        deadline_rep.makespan * 1e6,
+        fifo_rep.makespan / deadline_rep.makespan
+    );
+    records.push(EngineBenchRecord {
+        scenario: "alltoall-sched-mixed".to_string(),
+        events: srpf_rep.events,
+        median_wall_s: stat_sched.median_s,
+        sim_wall_ns: 0,
+        threads: Vec::new(),
+        fault: None,
+        recovery: None,
+        serving: None,
+        sched: Some(SchedBenchInfo {
+            fifo_s: fifo_rep.makespan,
+            srpf_s: srpf_rep.makespan,
+            deadline_s: deadline_rep.makespan,
+        }),
+    });
 
     // degraded-rail AllToAll: spine plane 0 at quarter capacity for the
     // whole run. The fault machinery is on the hot path here (health-aware
@@ -438,6 +488,7 @@ fn main() {
         fault: None,
         recovery: None,
         serving: None,
+        sched: None,
     });
 
     // 1024-rank token-routed EP MoE, same threads sweep: shard work here
@@ -504,6 +555,7 @@ fn main() {
         fault: None,
         recovery: None,
         serving: None,
+        sched: None,
     });
 
     // AG+GEMM with numerics off — program-build + engine cost
@@ -622,6 +674,7 @@ fn main() {
             goodput: death_goodput,
         }),
         serving: None,
+        sched: None,
     });
 
     // trace-driven serving: a 1k-request mixed trace (poisson floor +
@@ -668,6 +721,7 @@ fn main() {
         fault: None,
         recovery: None,
         serving: Some(serve_info),
+        sched: None,
     });
 
     // machine-readable trajectory for cross-PR tracking

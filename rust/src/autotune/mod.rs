@@ -8,7 +8,7 @@
 //! (3) aggregate a single globally-unified best configuration across
 //! ranks. This module implements those semantics over the DES.
 
-use crate::config::RailPolicy;
+use crate::config::{ChunkSched, RailPolicy};
 use crate::mem::SymmetricHeap;
 
 /// One evaluated configuration.
@@ -164,6 +164,26 @@ pub fn tune_dispatch_chunking(
     tune_rebuild(name, &grid, |&(p, s)| eval(p, s))
 }
 
+/// Tune the chunk-issue scheduling policy (§3.8 over the *when* of
+/// communication, where [`tune_rail_policy`] tunes the *where*): the
+/// [`ChunkSched`] is a tunable axis like any other — the evaluator
+/// rebuilds the cluster with `FabricSpec::with_chunk_sched` and profiles
+/// the whole target function under each policy. Eager FIFO wins when
+/// nothing contends (no reorder bookkeeping, maximal pipelining);
+/// `Srpf`/`Deadline` win mixed-traffic shapes where bulk backlogs delay
+/// small consumer-gating pieces (see
+/// `collectives::alltoall::sched_mixed`).
+pub fn tune_chunk_sched(
+    name: &str,
+    mut eval: impl FnMut(ChunkSched) -> Result<f64, String>,
+) -> Result<TuneResult<ChunkSched>, String> {
+    tune_rebuild(
+        name,
+        &[ChunkSched::Fifo, ChunkSched::Srpf, ChunkSched::Deadline],
+        |s| eval(*s),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -297,6 +317,23 @@ mod tests {
         assert!(
             r.best.config.1 > 1,
             "splitting must engage the second plane: {:?}",
+            r.trials
+        );
+    }
+
+    #[test]
+    fn chunk_sched_is_a_tunable_axis() {
+        // On the pinned mixed-traffic scenario (bulk EP-style backlog
+        // contending with small consumer-gating segments over a tapered
+        // spine) a contention-aware issue order must win; the tuner
+        // should discover that from the trials alone.
+        use crate::collectives::alltoall::run_sched_mixed;
+        let r = tune_chunk_sched("chunk sched (mixed traffic)", run_sched_mixed).unwrap();
+        assert_eq!(r.trials.len(), 3);
+        assert_ne!(
+            r.best.config,
+            ChunkSched::Fifo,
+            "a contention-aware policy must win the mixed workload: {:?}",
             r.trials
         );
     }

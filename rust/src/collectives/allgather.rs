@@ -90,6 +90,10 @@ pub fn ag_inter(ctx: &ShmemCtx, bufs: &AgBufs, pb: &mut ProgBuild) {
                 .with_sms(1)
                 .launch_overhead();
             t.stripe_rail(pid);
+            // gating piece: its arrival releases the peer's consumer
+            // (the GEMM wave in ag_gemm), so the chunk scheduler lets it
+            // overtake bulk backlogs; one shard left in this stream
+            t.chunk_meta(ctx.bytes(bufs.shard), 0);
             t.signal_wait_until(bufs.sig(r), SigCond::Eq, 1);
             t.putmem_signal(bufs.seg(r, r), bufs.seg(r, peer), bufs.sig(r), SigOp::Set, 1);
             pb.prog.push(t.build());

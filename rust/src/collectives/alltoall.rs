@@ -378,6 +378,13 @@ pub struct A2aCfg {
     /// (`autotune::tune_dispatch_chunking`). `1` (the default) is the
     /// unsplit wire, bit-identical to the pre-split builders.
     pub split: usize,
+    /// Consumer-deadline class stamped on every inter-node piece (the
+    /// [`crate::program::ChunkMeta::deadline`] the chunk scheduler
+    /// orders by under `ChunkSched::Deadline`). `u32::MAX` (the
+    /// default) marks bulk traffic with no downstream consumer; `0`
+    /// marks gating traffic — the combine leg whose arrival releases
+    /// an FFN/GEMM consumer. Inert under `ChunkSched::Fifo`.
+    pub deadline: u32,
 }
 
 impl A2aCfg {
@@ -390,6 +397,7 @@ impl A2aCfg {
             intra_via_nic: false,
             queue_overhead: 0.0,
             split: 1,
+            deadline: u32::MAX,
         }
     }
 
@@ -400,6 +408,7 @@ impl A2aCfg {
             intra_via_nic: true,
             queue_overhead: 0.2e-6,
             split: 1,
+            deadline: u32::MAX,
         }
     }
 
@@ -419,6 +428,13 @@ impl A2aCfg {
     pub fn with_split(mut self, split: usize) -> Self {
         assert!(split >= 1, "split factor must be >= 1");
         self.split = split;
+        self
+    }
+
+    /// Set the consumer-deadline class (see [`A2aCfg::deadline`]):
+    /// `0` = gating (combine legs feeding FFN/GEMM), `u32::MAX` = bulk.
+    pub fn with_deadline(mut self, deadline: u32) -> Self {
+        self.deadline = deadline;
         self
     }
 }
@@ -489,6 +505,15 @@ fn a2a_ll_body<L: A2aLayout>(
             });
         }
         send.notify(pr, bufs.sig(r), SigOp::Set, 1);
+        // remaining inter-node payload of this sender's walk — the
+        // shrinking "remaining work" the Srpf chunk scheduler orders by
+        let mut inter_remaining = 0.0;
+        for i in 1..ws {
+            let dst = (r + i) % ws;
+            if ctx.node_of(view.phys(dst)) != node {
+                inter_remaining += ctx.bytes(bufs.elems(r, dst));
+            }
+        }
         let mut inter_idx = 0usize;
         for i in 1..ws {
             let dst = (r + i) % ws;
@@ -506,7 +531,10 @@ fn a2a_ll_body<L: A2aLayout>(
                         secs: cfg.inter_msg_overhead,
                     });
                     plane(&mut send, r, dst, inter_idx);
+                    send.chunk_meta(inter_remaining, cfg.deadline);
                     inter_idx += 1;
+                } else {
+                    send.clear_chunk();
                 }
                 if cfg.queue_overhead > 0.0 {
                     send.op(Op::Sleep {
@@ -517,6 +545,9 @@ fn a2a_ll_body<L: A2aLayout>(
                     bufs.send_chunk(dst, r).sub(off, len).on_rank(pr),
                     bufs.ll_slot(r, dst).sub(off, len).on_rank(pd),
                 );
+                if inter {
+                    inter_remaining -= ctx.bytes(len);
+                }
             }
         }
         send.quiet();
@@ -673,6 +704,7 @@ pub fn a2a_deepep_cfg(ctx: &ShmemCtx, bufs: &A2aBufs, pb: &mut ProgBuild, cfg: &
                     dst: bufs.ll_slot(r, dst),
                     bytes: chunk_bytes + penalty_bytes,
                     tc: Default::default(),
+                    chunk: None,
                 });
             }
         }
@@ -842,12 +874,156 @@ pub fn a2a_skew(ctx: &ShmemCtx, bufs: &A2aBufs, pb: &mut ProgBuild, cfg: &A2aCfg
                 dst: bufs.ll_slot(r, dst),
                 bytes,
                 tc,
+                chunk: send.chunk(),
             });
             inter_idx += 1;
         }
         send.quiet();
         pb.prog.push(send.build());
     }
+}
+
+/// Pinned **mixed-traffic** contention scenario for the chunk scheduler
+/// (the `alltoall-sched-mixed` perf scenario, the workload
+/// `autotune::tune_chunk_sched` tunes over, and the strict-win pin of
+/// `tests/sched_equivalence.rs`). Rank 0 runs two concurrent senders:
+///
+/// * an AllGather-style **gating stream** — `gate_pieces` small nbi
+///   segments (signal on delivery, deadline `0`) to one node-1 GPU,
+///   whose last arrival releases a GEMM consumer of `gemm_secs` there;
+/// * an EP-dispatch-style **bulk backlog** — `bulk_pieces` nbi pieces
+///   to the *other* node-1 GPU, tagged `ChunkMeta` bulk (deadline
+///   `u32::MAX`, descending remaining work).
+///
+/// Both streams leave through rank 0's two NIC planes and cross the
+/// (tapered) spine. Posted eagerly (`ChunkSched::Fifo`), every piece is
+/// in flight at once and the gating segments fair-share every link
+/// against the whole backlog, starting the GEMM late; under
+/// `Srpf`/`Deadline` the backlog parks — gating segments issue first at
+/// a near-exclusive share (the per-link depth gate admits at most one
+/// bulk companion) — so the GEMM overlaps the bulk remainder. The chunk
+/// tags are inert under `Fifo`, which therefore reproduces the eager
+/// engine bit-identically.
+pub fn sched_mixed(
+    ctx: &ShmemCtx,
+    heap: &mut SymmetricHeap,
+    pb: &mut ProgBuild,
+    bulk_pieces: usize,
+    bulk_elems: usize,
+    gate_pieces: usize,
+    gate_elems: usize,
+    gemm_secs: f64,
+) {
+    assert!(ctx.n_nodes() >= 2, "sched_mixed is an inter-node scenario");
+    assert!(
+        ctx.local_world_size() >= 2,
+        "sched_mixed needs two GPUs per node"
+    );
+    assert!(bulk_pieces >= 1 && gate_pieces >= 1);
+    let lws = ctx.local_world_size();
+    let src = 0usize;
+    let gate_dst = lws; // node-1 GPU 0
+    let bulk_dst = lws + 1; // node-1 GPU 1
+    let bulk = heap.alloc("sched_mixed_bulk", bulk_pieces * bulk_elems);
+    let gate = heap.alloc("sched_mixed_gate", gate_pieces * gate_elems);
+    let sig = 0usize;
+    pb.claim_sigs("sched_mixed", sig, 1);
+
+    // gating first in program order under BOTH policies — the contrast
+    // below is purely the issue discipline, not op order
+    let mut g = ctx
+        .task(src, format!("sched_gate[{src}->{gate_dst}]"))
+        .with_sms(1)
+        .launch_overhead();
+    for p in 0..gate_pieces {
+        g.chunk_meta(ctx.bytes((gate_pieces - p) * gate_elems), 0);
+        g.putmem_signal_nbi(
+            Slice::new(src, gate, p * gate_elems, gate_elems),
+            Slice::new(gate_dst, gate, p * gate_elems, gate_elems),
+            sig,
+            SigOp::Add,
+            1,
+        );
+    }
+    g.quiet();
+    pb.prog.push(g.build());
+
+    let mut t = ctx
+        .task(src, format!("sched_bulk[{src}->{bulk_dst}]"))
+        .with_sms(1)
+        .launch_overhead();
+    for p in 0..bulk_pieces {
+        t.chunk_meta(ctx.bytes((bulk_pieces - p) * bulk_elems), u32::MAX);
+        t.putmem_nbi(
+            Slice::new(src, bulk, p * bulk_elems, bulk_elems),
+            Slice::new(bulk_dst, bulk, p * bulk_elems, bulk_elems),
+        );
+    }
+    t.quiet();
+    pb.prog.push(t.build());
+
+    let mut c = ctx
+        .task(gate_dst, format!("sched_gemm[{gate_dst}]"))
+        .with_sms(8)
+        .launch_overhead();
+    c.signal_wait_until(sig, SigCond::Ge, gate_pieces as u64);
+    c.op(Op::Compute {
+        cost: ComputeCost::Fixed { secs: gemm_secs },
+        numeric: NumericOp::None,
+        label: "sched_gemm",
+    });
+    pb.prog.push(c.build());
+}
+
+/// Build and run the **pinned** [`sched_mixed`] shape — h800 2x2 on a
+/// 2-rail oversubscribed fabric with a 2x-tapered spine and adaptive
+/// routing; 32 x 1 MiB bulk pieces against 4 x 256 KiB gating segments,
+/// GEMM sized to the ideal bulk drain time — under chunk policy `sched`;
+/// returns the makespan. Every chunk-scheduler caller (the
+/// `alltoall-sched-mixed` perf scenario, `autotune::tune_chunk_sched`'s
+/// workload test, the strict-win pin of `tests/sched_equivalence.rs`,
+/// README's worked example) goes through this one function, so the
+/// acceptance comparison is always apples to apples.
+pub fn run_sched_mixed(sched: crate::config::ChunkSched) -> Result<f64, String> {
+    run_sched_mixed_report(sched).map(|rep| rep.makespan)
+}
+
+/// [`run_sched_mixed`] returning the full [`SimReport`] — the
+/// `alltoall-sched-mixed` perf scenario records events alongside the
+/// makespan, everyone else only needs the scalar.
+pub fn run_sched_mixed_report(
+    sched: crate::config::ChunkSched,
+) -> Result<crate::sim::SimReport, String> {
+    use crate::config::{ClusterSpec, DType, FabricSpec, RailPolicy};
+    use crate::sim::{NoopExecutor, Sim, SimConfig};
+
+    let cluster = ClusterSpec::h800(2, 2).with_fabric(
+        FabricSpec::rail_optimized(2, 2.0)
+            .with_spine_taper(2.0)
+            .with_rail_policy(RailPolicy::Adaptive)
+            .with_chunk_sched(sched),
+    );
+    let ctx = ShmemCtx::new(cluster, DType::BF16);
+    let topo = Topology::build(cluster);
+    let mut heap = SymmetricHeap::new(ctx.n_pes(), 16);
+    let mut pb = ProgBuild::new();
+    let (bulk_pieces, bulk_elems) = (32usize, 1usize << 19); // 32 x 1 MiB
+    let (gate_pieces, gate_elems) = (4usize, 1usize << 17); // 4 x 256 KiB
+    // the GEMM covers the ideal two-plane bulk drain, so the makespan is
+    // gated by *when the gating segments land*, not by the backlog
+    let gemm_secs = ctx.bytes(bulk_pieces * bulk_elems) / cluster.hw.nic_bw;
+    sched_mixed(
+        &ctx, &mut heap, &mut pb, bulk_pieces, bulk_elems, gate_pieces, gate_elems, gemm_secs,
+    );
+    let sim = Sim::with_config(
+        &topo,
+        SimConfig {
+            numerics: false,
+            trace: false,
+        },
+    );
+    sim.run(&pb.prog, &mut heap, &mut NoopExecutor)
+        .map_err(|e| e.to_string())
 }
 
 /// Seed send chunks with rank/destination-tagged data.

@@ -210,6 +210,7 @@ pub fn nccl_reduce_scatter_ring(ctx: &ShmemCtx, bufs: &RsBufs, pb: &mut ProgBuil
                     )),
                     blocking: true,
                     tc: Default::default(),
+                    chunk: None,
                     label: "ring_fwd",
                 });
                 if s > 0 {

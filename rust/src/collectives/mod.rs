@@ -287,6 +287,25 @@ impl RsBufs {
         }
     }
 
+    /// Like [`RsBufs::alloc`], but sizes the scatter landing area at one
+    /// slot per rank of the *full world* (physical-rank indexed) so the
+    /// flat survivor ReduceScatter
+    /// ([`reduce_scatter::rs_flat_on`](crate::collectives::reduce_scatter::rs_flat_on))
+    /// can land a chunk from any surviving source; dead ranks' slots are
+    /// simply never written.
+    pub fn alloc_flat(heap: &mut SymmetricHeap, ctx: &ShmemCtx, shard: usize) -> Self {
+        let ws = ctx.n_pes();
+        RsBufs {
+            input: heap.alloc("rs_input", ws * shard),
+            scatter: heap.alloc("rs_scatter", ws * shard),
+            partial: heap.alloc("rs_partial", 2 * ctx.n_nodes() * shard),
+            output: heap.alloc("rs_output", shard),
+            shard,
+            sig_base: 0,
+            n_nodes: ctx.n_nodes(),
+        }
+    }
+
     /// Input chunk destined for rank `dst`, on rank `on`.
     pub fn in_chunk(&self, dst: usize, on: usize) -> Slice {
         Slice::new(on, self.input, dst * self.shard, self.shard)

@@ -67,6 +67,90 @@ pub fn rs_push_intra(
     }
 }
 
+/// Flat survivor-indexed ReduceScatter: every logical rank pushes the
+/// chunk destined for each logical peer straight to that peer's landing
+/// slot (with a delivery signal), and each peer reduces survivor slots
+/// incrementally as they arrive. This is the **degraded-world re-plan
+/// path** of the elastic recovery controller (the ReduceScatter twin of
+/// [`ag_flat_on`](crate::collectives::allgather::ag_flat_on)): unlike
+/// [`rs_inter`] it assumes nothing about the node grid being
+/// rectangular, so it stays valid on any survivor set after rank or
+/// node death. Landing slots and signals are indexed by *physical*
+/// rank, so dead ranks' slots are simply never written — allocate via
+/// [`RsBufs::alloc_flat`], which sizes the scatter area at one slot per
+/// physical rank. Non-overlapped and rail-striped only — the price of
+/// generality; the overlapped builders remain the fault-free fast path.
+///
+/// `producer_sig`: if `Some(base)`, the chunk destined for physical
+/// rank `pm` may only be pushed after local signal `base + pm` is set
+/// (the producer-GEMM linkage of degraded GEMM+RS); `None` treats
+/// inputs as ready.
+pub fn rs_flat_on(
+    ctx: &ShmemCtx,
+    bufs: &RsBufs,
+    pb: &mut ProgBuild,
+    view: &crate::collectives::WorldView,
+    reduce_sms: u32,
+    producer_sig: Option<usize>,
+) {
+    let ws = view.world();
+    pb.claim_sigs("rs_flat", bufs.sig_base, ctx.n_pes());
+    for l in 0..ws {
+        let pr = view.phys(l);
+        assert!(pr < ctx.n_pes(), "view physical rank out of range");
+
+        // Stream 1: push each survivor peer's chunk to its landing slot
+        // (shifted walk, own chunk last; inter-node pieces rail-striped).
+        let mut scat = ctx
+            .task(pr, format!("rs_flat_scatter[{l}]"))
+            .on_copy_engine()
+            .launch_overhead();
+        let mut inter_idx = 0usize;
+        for i in 0..ws {
+            let m = (l + 1 + i) % ws;
+            let pm = view.phys(m);
+            if let Some(base) = producer_sig {
+                scat.signal_wait_until(base + pm, SigCond::Eq, 1);
+            }
+            if ctx.node_of(pm) != ctx.node_of(pr) {
+                scat.stripe_rail(inter_idx);
+                inter_idx += 1;
+            }
+            scat.putmem_signal(
+                bufs.in_chunk(pm, pr),
+                bufs.scatter_slot(pr, pm),
+                bufs.scatter_sig(pr),
+                SigOp::Set,
+                1,
+            );
+        }
+        pb.prog.push(scat.build());
+
+        // Stream 2: local reduction over survivor slots, incremental as
+        // they arrive (survivor walk order for determinism).
+        let mut red = ctx
+            .task(pr, format!("rs_flat_reduce[{l}]"))
+            .with_sms(reduce_sms)
+            .launch_overhead();
+        for src in 0..ws {
+            let ps = view.phys(src);
+            red.signal_wait_until(bufs.scatter_sig(ps), SigCond::Eq, 1);
+            red.op(Op::Compute {
+                cost: ComputeCost::Reduce {
+                    bytes: ctx.bytes(bufs.shard) as f64 * 2.0,
+                },
+                numeric: NumericOp::ReduceAdd {
+                    srcs: vec![bufs.scatter_slot(ps, pr)],
+                    dst: bufs.out(pr),
+                    zero_dst: src == 0,
+                },
+                label: "rs_flat_reduce",
+            });
+        }
+        pb.prog.push(red.build());
+    }
+}
+
 /// §3.6 — AMD fused-scatter ReduceScatter: the *producer* stores each
 /// output tile directly to the destination rank (fused into the producer
 /// kernel to avoid hipStreamWriteValue interference), then a barrier and
@@ -252,6 +336,10 @@ pub fn rs_inter(
             if tn != node {
                 let target = tn * lws + lr;
                 p2p.stripe_rail(it);
+                // gating piece: the staged partial releases the target
+                // node's final cross-node reduction; remaining counts the
+                // iterations of this serialized P2P stream still to ship
+                p2p.chunk_meta((n_nodes - 1 - it) as f64 * ctx.bytes(bufs.shard), 0);
                 p2p.signal_wait_until(bufs.stage_sig(tn, lws, n_nodes), SigCond::Ge, 1);
                 p2p.putmem_signal(
                     bufs.stage_slot(tn, r),
@@ -351,6 +439,62 @@ mod tests {
         run_rs(ClusterSpec::h800(4, 4), 16, |c, b, p| {
             rs_inter(c, b, p, 15, 120, None)
         });
+    }
+
+    #[test]
+    fn flat_identity_reduces() {
+        // full-world view: rs_flat_on must produce the same reduction as
+        // any other variant (flat alloc, physical-rank landing slots)
+        let cluster = ClusterSpec::h800(2, 4);
+        let ctx = ShmemCtx::new(cluster, DType::BF16);
+        let topo = Topology::build(cluster);
+        let mut heap = SymmetricHeap::new(ctx.n_pes(), 8 * ctx.n_pes().max(16));
+        let bufs = RsBufs::alloc_flat(&mut heap, &ctx, 16);
+        fill_rs_inputs(&mut heap, &bufs, 5);
+        let expected = expected_reduce_scatter(&heap, &bufs);
+        let mut pb = ProgBuild::new();
+        let view = crate::collectives::WorldView::identity(ctx.n_pes());
+        rs_flat_on(&ctx, &bufs, &mut pb, &view, 15, None);
+        let sim = Sim::new(&topo);
+        sim.run(&pb.prog, &mut heap, &mut NoopExecutor).unwrap();
+        verify_reduce_scatter(&heap, &bufs, &expected).unwrap();
+    }
+
+    #[test]
+    fn flat_survivors_reduce_over_survivors_only() {
+        // degraded world: each survivor's output is the sum over the
+        // SURVIVING sources only; the dead rank's chunk is gone with it
+        let cluster = ClusterSpec::h800(2, 4);
+        let ctx = ShmemCtx::new(cluster, DType::BF16);
+        let topo = Topology::build(cluster);
+        let ws = ctx.n_pes();
+        let shard = 16usize;
+        let mut heap = SymmetricHeap::new(ws, 8 * ws.max(16));
+        let bufs = RsBufs::alloc_flat(&mut heap, &ctx, shard);
+        fill_rs_inputs(&mut heap, &bufs, 7);
+        let view = crate::collectives::WorldView::survivors(ws, &[3]);
+        let mut pb = ProgBuild::new();
+        rs_flat_on(&ctx, &bufs, &mut pb, &view, 15, None);
+        let sim = Sim::new(&topo);
+        sim.run(&pb.prog, &mut heap, &mut NoopExecutor).unwrap();
+        for l in 0..view.world() {
+            let pr = view.phys(l);
+            let mut exp = vec![0.0f32; shard];
+            for s in 0..view.world() {
+                let ps = view.phys(s);
+                for (a, v) in exp.iter_mut().zip(heap.read(bufs.in_chunk(pr, ps))) {
+                    *a += v;
+                }
+            }
+            let got = heap.read(bufs.out(pr));
+            for (i, (g, e)) in got.iter().zip(exp.iter()).enumerate() {
+                let tol = 1e-4f32.max(e.abs() * 1e-5);
+                assert!(
+                    (g - e).abs() <= tol,
+                    "survivor {pr} element {i}: got {g} want {e}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -183,6 +183,52 @@ pub enum RailPolicy {
     Adaptive,
 }
 
+/// When and in what order chunk-level inter-node pieces *issue* — the
+/// engine's chunk scheduler (ROADMAP "contention-aware issue order").
+/// Where [`RailPolicy`] decides *where* a message goes, `ChunkSched`
+/// decides *when*: split dispatch pieces (`A2aCfg::split`) and chunked
+/// `ag_inter`/`rs_inter` segments enter a policy-ordered ready queue in
+/// `sim/engine.rs` instead of posting eagerly, and the scheduler issues
+/// them against the live `topology::LinkOccupancy` view.
+///
+/// * [`ChunkSched::Fifo`] (the default) bypasses the ready queue
+///   entirely: every piece posts the moment its task reaches it, which
+///   reproduces the pre-scheduler engine bit-identically.
+/// * [`ChunkSched::Srpf`] is shortest-remaining-path-first: the stream
+///   with the least remaining bytes issues first, so short latency-bound
+///   collectives slip ahead of bulk transfers sharing a thinned tier.
+/// * [`ChunkSched::Deadline`] is deadline-aware: pieces whose consumers
+///   block on them (combine-leg pieces gating FFN tiles, AG segments
+///   gating GEMM tiles) carry deadline 0 and preempt bulk traffic with
+///   deadline `u32::MAX`; ties fall back to remaining bytes.
+///
+/// All three are deterministic — the ready queue breaks ties on the
+/// stable `(deadline, task, launch-counter)` key, never on wall-clock or
+/// map order — so same-seed replays are bit-identical and the policy is
+/// a §3.8 autotune axis (`autotune::tune_chunk_sched`).
+///
+/// ```
+/// use triton_dist_sim::config::{ChunkSched, ClusterSpec, FabricSpec};
+///
+/// let fabric = FabricSpec::rail_optimized(2, 2.0)
+///     .with_chunk_sched(ChunkSched::Srpf);
+/// let cluster = ClusterSpec::h800(2, 8).with_fabric(fabric);
+/// assert_eq!(cluster.fabric.chunk_sched, ChunkSched::Srpf);
+/// // the default policy is Fifo — eager posting, bit-identical
+/// assert_eq!(FabricSpec::default().chunk_sched, ChunkSched::Fifo);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ChunkSched {
+    /// Eager issue in program order (pre-scheduler behavior,
+    /// bit-identical).
+    #[default]
+    Fifo,
+    /// Shortest-remaining-path-first: least remaining stream bytes wins.
+    Srpf,
+    /// Deadline-aware: consumer-gating pieces preempt bulk traffic.
+    Deadline,
+}
+
 /// Inter-node fabric description: how the per-GPU NIC bandwidth is
 /// physically organized into rails and switch tiers.
 ///
@@ -233,6 +279,9 @@ pub struct FabricSpec {
     /// How `TrafficClass::Auto` messages are mapped onto rails (static
     /// round-robin vs congestion-aware; see [`RailPolicy`]).
     pub rail_policy: RailPolicy,
+    /// When chunk-level pieces issue (eager FIFO vs contention-aware
+    /// reordering; see [`ChunkSched`]).
+    pub chunk_sched: ChunkSched,
 }
 
 impl Default for FabricSpec {
@@ -244,6 +293,7 @@ impl Default for FabricSpec {
             leaf_lat: 0.0,
             spine_lat: 0.0,
             rail_policy: RailPolicy::Static,
+            chunk_sched: ChunkSched::Fifo,
         }
     }
 }
@@ -279,6 +329,13 @@ impl FabricSpec {
     /// the pre-policy round-robin striping.
     pub fn with_rail_policy(mut self, policy: RailPolicy) -> Self {
         self.rail_policy = policy;
+        self
+    }
+
+    /// Select the chunk issue scheduler (see [`ChunkSched`]). `Fifo` —
+    /// the default — is bit-identical to the pre-scheduler eager engine.
+    pub fn with_chunk_sched(mut self, sched: ChunkSched) -> Self {
+        self.chunk_sched = sched;
         self
     }
 
@@ -641,6 +698,27 @@ mod tests {
         );
         let c = ClusterSpec::h800(2, 8).with_fabric(f);
         assert_eq!(c.fabric.rail_policy, RailPolicy::Adaptive);
+    }
+
+    #[test]
+    fn chunk_sched_defaults_fifo_and_threads_through() {
+        assert_eq!(ChunkSched::default(), ChunkSched::Fifo);
+        assert_eq!(FabricSpec::default().chunk_sched, ChunkSched::Fifo);
+        // the scheduler is orthogonal to the blocking/bandwidth math
+        let f = FabricSpec::rail_optimized(2, 2.0).with_chunk_sched(ChunkSched::Deadline);
+        assert_eq!(f.chunk_sched, ChunkSched::Deadline);
+        assert!(f.is_blocking());
+        assert_eq!(
+            f.rail_bw(400e9).to_bits(),
+            FabricSpec::rail_optimized(2, 2.0).rail_bw(400e9).to_bits(),
+            "scheduler must not perturb per-rail bandwidth"
+        );
+        // and orthogonal to the rail policy — both compose on one fabric
+        let g = f.with_rail_policy(RailPolicy::Adaptive);
+        assert_eq!(g.chunk_sched, ChunkSched::Deadline);
+        assert_eq!(g.rail_policy, RailPolicy::Adaptive);
+        let c = ClusterSpec::h800(2, 8).with_fabric(g);
+        assert_eq!(c.fabric.chunk_sched, ChunkSched::Deadline);
     }
 
     #[test]

@@ -317,8 +317,12 @@ pub fn build_ep_moe_view(
     }
 
     // 4. combine: each message leaves on the expert rank's home plane
-    // and crosses into the token owner's plane (Rails { tx, rx })
-    a2a_ep_rails_var_on(&ctx, &comb, &mut pb, &cfg, A2aEpDir::Combine, Some(comb_gate), view);
+    // and crosses into the token owner's plane (Rails { tx, rx }).
+    // Deadline 0 marks these pieces as gating — their arrival releases
+    // the weighted-reduction consumer, so the chunk scheduler lets them
+    // overtake bulk dispatch backlogs from concurrent collectives.
+    let comb_cfg = cfg.with_deadline(0);
+    a2a_ep_rails_var_on(&ctx, &comb, &mut pb, &comb_cfg, A2aEpDir::Combine, Some(comb_gate), view);
 
     // 5. gate-weighted reduction into the token owner's output
     for r in 0..ws {

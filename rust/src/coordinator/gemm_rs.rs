@@ -162,6 +162,7 @@ pub fn build(
                     )),
                     blocking: false,
                     tc: Default::default(),
+                    chunk: None,
                     label: "flux_fused_store",
                 });
             } else {

@@ -34,18 +34,20 @@
 
 use crate::collectives::allgather::ag_flat_on;
 use crate::collectives::alltoall::{A2aCfg, EpRouting};
-use crate::collectives::{AgBufs, ProgBuild, WorldView};
+use crate::collectives::reduce_scatter::rs_flat_on;
+use crate::collectives::{AgBufs, ProgBuild, RsBufs, WorldView};
 use crate::config::{ClusterSpec, DeathScope, FaultPlan, GemmShape, MoeShape};
 use crate::kernels::exec::FixedPlan;
 use crate::kernels::names::{Entry, EpGeom};
 use crate::mem::{Slice, SymmetricHeap};
-use crate::program::{ComputeCost, NumericOp, Op, SigCond};
+use crate::program::{ComputeCost, NumericOp, Op, SigCond, SigOp};
 use crate::runtime::HybridExecutor;
 use crate::sim::{RecoveryLedger, SimError, SimReport};
 use crate::topology::Topology;
 
 use super::ag_gemm::{self, AgGemmVariant};
 use super::flash_decode::{self, FlashDecodeBufs, FlashDecodeCfg};
+use super::gemm_rs::{self, GemmRsVariant};
 use super::ep_moe::{
     build_ep_moe_cfg, build_ep_moe_view, fill_ep_moe, fill_ep_moe_view, routing_for, EpMoeBufs,
     EpMoeVariant,
@@ -373,6 +375,123 @@ pub fn run_ag_gemm_elastic(
         }
         pb.prog.push(t.build());
     }
+    let mut op2 = BuiltOp {
+        ctx,
+        heap,
+        prog: pb.prog,
+        name: format!("{} (degraded)", op.name),
+    };
+    let fp = shift_plan(&faults, &dead, detected_at, resumed_at);
+    let mut rep = run_timing_faults(&mut op2, &topo, fp)?;
+    rep.makespan += resumed_at;
+    for s in &mut rep.task_spans {
+        s.2 += resumed_at;
+        s.3 += resumed_at;
+    }
+    rep.recovery = Some(RecoveryLedger {
+        dead_ranks: {
+            let mut d = dead;
+            d.sort_unstable();
+            d
+        },
+        died_at,
+        detected_at,
+        via: info.via.clone(),
+        drained_at,
+        replanned_at,
+        resumed_at,
+        flows_drained: info.flows_drained,
+        steps_checkpointed: info.checkpoint.len() as u64,
+        tokens_delivered: 0,
+        tokens_rerouted: 0,
+        tokens_dropped: 0,
+        epochs: 1,
+    });
+    Ok((rep, view))
+}
+
+/// Timing-only elastic GEMM+RS: run the chosen overlapped variant; on a
+/// permanent death, re-plan with a full-SM partial GEMM per survivor
+/// (survivor destination chunks only) feeding the flat survivor
+/// ReduceScatter ([`rs_flat_on`]) — the degraded, non-overlapped
+/// program that stays valid on any survivor set. The dead ranks' K
+/// shards are gone with them, so the degraded reduction sums survivor
+/// partials only. Single recovery epoch (a further death during the
+/// degraded run propagates).
+pub fn run_gemm_rs_elastic(
+    cluster: ClusterSpec,
+    shape: GemmShape,
+    variant: GemmRsVariant,
+    faults: FaultPlan,
+    rcfg: &RecoverCfg,
+) -> Result<(SimReport, WorldView), CoordError> {
+    let topo = Topology::build(cluster);
+    let ws = cluster.world_size();
+    let (mut op, _bufs) = gemm_rs::build(cluster, shape, variant);
+    let err = match run_timing_faults(&mut op, &topo, faults.clone()) {
+        Ok(rep) => return Ok((rep, WorldView::identity(ws))),
+        Err(e) => e,
+    };
+    let SimError::DeadPeer(info) = &err.source else {
+        return Err(err);
+    };
+    let dead = info.dead.clone();
+    if ws - dead.len() < 2 {
+        return Err(err);
+    }
+    let view = WorldView::survivors(ws, &dead);
+    let died_at = info.died_at;
+    let detected_at = info.detected_at;
+    let drained_at = detected_at + rcfg.drain_per_flow * info.flows_drained as f64;
+    let replanned_at =
+        drained_at + rcfg.replan_base + rcfg.replan_per_rank * view.world() as f64;
+    let resumed_at = replanned_at;
+
+    // degraded re-plan: one full-SM GEMM task per survivor producing the
+    // partial chunks for the surviving destinations only, gated into the
+    // flat survivor ReduceScatter
+    let (ctx, _t) = setup(cluster);
+    assert!(shape.m % ws == 0, "M must divide world size");
+    let m_per_rank = shape.m / ws;
+    let shard = m_per_rank * shape.n;
+    let mut heap = SymmetricHeap::new(ws, 4 * ws.max(16));
+    let bufs = RsBufs::alloc_flat(&mut heap, &ctx, shard);
+    let act = heap.alloc("act", shape.m * shape.k);
+    let weight = heap.alloc("weight", shape.k * shape.n);
+    let mut pb = ProgBuild::new();
+    // chunk-ready signals live above the flat RS footprint [0, ws)
+    let prod_base = ctx.n_pes();
+    pb.claim_sigs("degraded_gemm_rs", prod_base, ctx.n_pes());
+    let chunk_flops = 2.0 * m_per_rank as f64 * shape.n as f64 * shape.k as f64;
+    let entry = Entry::gemm_name(m_per_rank, shape.k, shape.n);
+    for l in 0..view.world() {
+        let pr = view.phys(l);
+        let mut t = ctx
+            .task(pr, format!("degraded_gemm[{l}]"))
+            .with_sms(cluster.hw.sms)
+            .launch_overhead();
+        for i in 0..view.world() {
+            let pm = view.phys((l + 1 + i) % view.world()); // own chunk last
+            t.op(Op::Compute {
+                cost: ComputeCost::Gemm {
+                    flops: chunk_flops,
+                    vendor: false,
+                },
+                numeric: NumericOp::Call {
+                    entry: entry.clone(),
+                    args: vec![
+                        Slice::new(pr, act, pm * m_per_rank * shape.k, m_per_rank * shape.k),
+                        Slice::new(pr, weight, 0, shape.k * shape.n),
+                    ],
+                    outs: vec![bufs.in_chunk(pm, pr)],
+                },
+                label: "degraded_gemm_chunk",
+            });
+            t.notify(pr, prod_base + pm, SigOp::Set, 1);
+        }
+        pb.prog.push(t.build());
+    }
+    rs_flat_on(&ctx, &bufs, &mut pb, &view, 15, Some(prod_base));
     let mut op2 = BuiltOp {
         ctx,
         heap,

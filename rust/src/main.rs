@@ -5,7 +5,8 @@ use triton_dist_sim::cli::Args;
 use triton_dist_sim::collectives::alltoall::{a2a_deepep_cfg, a2a_ll, A2aBufs, A2aCfg};
 use triton_dist_sim::collectives::ProgBuild;
 use triton_dist_sim::config::{
-    ClusterSpec, DType, FabricSpec, FaultPlan, GemmShape, MoeShape, RailPolicy, TracePlan,
+    ChunkSched, ClusterSpec, DType, FabricSpec, FaultPlan, GemmShape, MoeShape, RailPolicy,
+    TracePlan,
 };
 use triton_dist_sim::coordinator::{self, ag_gemm, ep_moe, flash_decode, gemm_rs, moe, recover};
 use triton_dist_sim::mem::SymmetricHeap;
@@ -45,6 +46,11 @@ COMMON OPTIONS:
   --router static|adaptive   rail selection for un-pinned traffic
                   (default static: deterministic round-robin striping;
                   adaptive: emptiest plane per message by live occupancy)
+  --sched fifo|srpf|deadline chunk-issue scheduling across in-flight
+                  collectives (default fifo: issue in program order,
+                  bit-identical to the pre-scheduler engine; srpf:
+                  shortest-remaining-path-first; deadline: consumer-
+                  gating pieces first, e.g. combine legs feeding GEMMs)
   --m/--n/--k     GEMM dims          --trace    write chrome trace JSON
   --numeric       run real numerics through PJRT/native executors
   --threads N     host threads for the sharded event loop (default 1;
@@ -60,8 +66,9 @@ FAULT INJECTION (timing runs; empty plan = bit-identical to fault-free):
                   permanent deaths: \"die,<rank>,<t0>\" kills one GPU
                   forever; \"nodedead,<node>,<t0>\" kills a whole node.
                   A run touching a dead rank aborts with a structured
-                  DeadPeer error — pass --recover (ep-moe, flash-decode)
-                  to survive it; `serve` always recovers.
+                  DeadPeer error — pass --recover (ep-moe, flash-decode,
+                  ag-gemm, gemm-rs) to survive it; `serve` always
+                  recovers.
   --fault-seed N  synthesize a deterministic random plan (with --fault-rate)
   --fault-rate R  faults per rank for the synthesized plan (default 0)
   --fault-severe  synthesized plan draws from the severe tier too
@@ -70,11 +77,13 @@ FAULT INJECTION (timing runs; empty plan = bit-identical to fault-free):
   --lt-timeout S  watchdog on LL/signal waits, seconds (default: off)
   --retry-max N   retry budget for puts killed on a downed link (default 8)
 
-ELASTIC RECOVERY (ep-moe, flash-decode):
+ELASTIC RECOVERY (ep-moe, flash-decode, ag-gemm, gemm-rs):
   --recover       survive permanent deaths: detect -> drain -> re-plan
                   over the survivors -> resume (ep-moe verifies numerics
-                  on the survivor world; both print the recovery ledger
-                  with exact token/KV accounting)
+                  on the survivor world; all print the recovery ledger
+                  with exact accounting. ag-gemm re-plans onto the flat
+                  survivor AllGather, gemm-rs onto the flat survivor
+                  ReduceScatter)
   worked example — kill rank 3 at t=10us mid-dispatch and recover:
     triton-dist-sim ep-moe --nodes 2 --rails 2 \\
         --faults \"die,3,1e-5\" --recover
@@ -90,6 +99,8 @@ SERVING (serve):
   --max-batch N   continuous-batching slots (default 32)
   --prefill-chunk N  prefill token budget per step (default 256)
   --kv-block N    tokens per KV-cache block (default 64)
+  --migrate-batch N  max KV rebalance migrations per serving step
+                  (default 1; each is charged and exactly accounted)
   --no-moe        skip the per-decode-step EP-MoE FFN
   deaths in --faults are absorbed: the fleet re-plans onto survivors
   and the report shows the p99 spike. Writes the serving record to
@@ -129,6 +140,11 @@ fn cluster_from(args: &Args) -> Result<ClusterSpec, String> {
         "adaptive" => RailPolicy::Adaptive,
         _ => RailPolicy::Static,
     };
+    let sched = match args.choice_or("sched", "fifo", &["fifo", "srpf", "deadline"])? {
+        "srpf" => ChunkSched::Srpf,
+        "deadline" => ChunkSched::Deadline,
+        _ => ChunkSched::Fifo,
+    };
     let cluster = match args.choice_or("hw", "h800", &["h800", "mi308x", "l20"])? {
         "mi308x" => ClusterSpec::mi308x(gpus),
         "l20" => ClusterSpec::l20(nodes, gpus),
@@ -137,7 +153,8 @@ fn cluster_from(args: &Args) -> Result<ClusterSpec, String> {
     Ok(cluster.with_fabric(
         FabricSpec::rail_optimized(rails, oversub)
             .with_spine_taper(spine_taper)
-            .with_rail_policy(policy),
+            .with_rail_policy(policy)
+            .with_chunk_sched(sched),
     ))
 }
 
@@ -235,6 +252,34 @@ fn run(args: &Args) -> Result<(), String> {
             let k = args.usize_or("k", 2048)?;
             let shape = GemmShape::new(m, n, k);
             let plan = fault_plan_from(args, &cluster)?;
+            if args.flag("recover") || plan.has_deaths() {
+                // Elastic path: detect the death, drain, re-plan onto
+                // the flat survivor AllGather + full-SM GEMM, resume.
+                let variant = if cluster.nodes > 1 {
+                    ag_gemm::AgGemmVariant::OursInter
+                } else {
+                    ag_gemm::AgGemmVariant::OursPush
+                };
+                let (rep, view) = recover::run_ag_gemm_elastic(
+                    cluster,
+                    shape,
+                    variant,
+                    plan,
+                    &recover::RecoverCfg::default(),
+                )
+                .map_err(|e| e.to_string())?;
+                match &rep.recovery {
+                    Some(rec) => println!("{}", metrics::recovery_line(rec)),
+                    None => println!("no deaths fired; completed at full world"),
+                }
+                println!(
+                    "AG+GEMM latency={} (world {} of {})",
+                    fmt_time(rep.makespan),
+                    view.world(),
+                    ws
+                );
+                return Ok(());
+            }
             let threads = args.positive_usize_or("threads", 1)?;
             let topo = Topology::build(cluster);
             let mut report = metrics::FigureReport::new("AG+GEMM");
@@ -310,6 +355,35 @@ fn run(args: &Args) -> Result<(), String> {
                 ]
             };
             let plan = fault_plan_from(args, &cluster)?;
+            if args.flag("recover") || plan.has_deaths() {
+                // Elastic path: detect the death, drain, re-plan onto a
+                // full-SM partial GEMM per survivor feeding the flat
+                // survivor ReduceScatter, resume.
+                let variant = if cluster.nodes > 1 {
+                    gemm_rs::GemmRsVariant::OursInter
+                } else {
+                    gemm_rs::GemmRsVariant::OursIntra
+                };
+                let (rep, view) = recover::run_gemm_rs_elastic(
+                    cluster,
+                    shape,
+                    variant,
+                    plan,
+                    &recover::RecoverCfg::default(),
+                )
+                .map_err(|e| e.to_string())?;
+                match &rep.recovery {
+                    Some(rec) => println!("{}", metrics::recovery_line(rec)),
+                    None => println!("no deaths fired; completed at full world"),
+                }
+                println!(
+                    "GEMM+RS latency={} (world {} of {})",
+                    fmt_time(rep.makespan),
+                    view.world(),
+                    ws
+                );
+                return Ok(());
+            }
             let threads = args.positive_usize_or("threads", 1)?;
             for v in variants {
                 let (mut op, _b) = gemm_rs::build(cluster, shape, v);
@@ -604,6 +678,7 @@ fn run(args: &Args) -> Result<(), String> {
                 kv_block: args.usize_or("kv-block", 64)?,
                 moe: !args.flag("no-moe"),
                 threads: args.positive_usize_or("threads", 1)?,
+                migrate_batch: args.positive_usize_or("migrate-batch", 1)?,
                 ..coordinator::serve::ServeCfg::default()
             };
             if cfg.max_batch == 0 || cfg.prefill_chunk == 0 || cfg.kv_block == 0 {
@@ -647,6 +722,7 @@ fn run(args: &Args) -> Result<(), String> {
                 fault: None,
                 recovery: None,
                 serving: Some(info),
+                sched: None,
             };
             let path = std::env::var("BENCH_ENGINE_JSON")
                 .unwrap_or_else(|_| "BENCH_engine.json".into());

@@ -166,6 +166,21 @@ pub struct ServingBenchInfo {
     pub recoveries: u32,
 }
 
+/// Issue-scheduler annotations riding one engine-perf record: the
+/// virtual makespan of the same pinned mixed-traffic workload under each
+/// `ChunkSched` policy, so the contention-aware win is tracked across
+/// PRs next to the wall-clock numbers (the strict win itself is pinned
+/// by `tests/sched_equivalence.rs`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SchedBenchInfo {
+    /// Makespan (s) under `ChunkSched::Fifo` — today's issue order.
+    pub fifo_s: f64,
+    /// Makespan (s) under `ChunkSched::Srpf`.
+    pub srpf_s: f64,
+    /// Makespan (s) under `ChunkSched::Deadline`.
+    pub deadline_s: f64,
+}
+
 /// One wall-clock engine measurement: a scenario of `perf_engine` (events
 /// processed, median elapsed seconds), optionally with its fault ledger.
 #[derive(Debug, Clone)]
@@ -187,6 +202,8 @@ pub struct EngineBenchRecord {
     pub recovery: Option<RecoveryBenchInfo>,
     /// `Some` for trace-driven serving scenarios.
     pub serving: Option<ServingBenchInfo>,
+    /// `Some` for scenarios that sweep the chunk issue scheduler.
+    pub sched: Option<SchedBenchInfo>,
 }
 
 impl EngineBenchRecord {
@@ -270,6 +287,18 @@ pub fn engine_bench_json(records: &[EngineBenchRecord]) -> String {
             so.insert("max_queue_depth".into(), Json::Num(si.max_queue_depth as f64));
             so.insert("recoveries".into(), Json::Num(si.recoveries as f64));
             obj.insert("serving".into(), Json::Obj(so));
+        }
+        if let Some(sc) = &r.sched {
+            let mut sco = std::collections::BTreeMap::new();
+            sco.insert("fifo_makespan_s".into(), Json::Num(sc.fifo_s));
+            sco.insert("srpf_makespan_s".into(), Json::Num(sc.srpf_s));
+            sco.insert("deadline_makespan_s".into(), Json::Num(sc.deadline_s));
+            sco.insert("srpf_speedup".into(), Json::Num(sc.fifo_s / sc.srpf_s.max(1e-300)));
+            sco.insert(
+                "deadline_speedup".into(),
+                Json::Num(sc.fifo_s / sc.deadline_s.max(1e-300)),
+            );
+            obj.insert("sched".into(), Json::Obj(sco));
         }
         scenarios.insert(r.scenario.clone(), Json::Obj(obj));
     }
@@ -499,6 +528,7 @@ mod tests {
             fault: None,
             recovery: None,
             serving: None,
+            sched: None,
         }];
         let s = engine_bench_json(&recs);
         let doc = crate::util::json::parse(&s).unwrap();
@@ -521,6 +551,7 @@ mod tests {
             fault: None,
             recovery: None,
             serving: None,
+            sched: None,
         }];
         let s = engine_bench_json(&recs);
         let doc = crate::util::json::parse(&s).unwrap();
@@ -551,6 +582,7 @@ mod tests {
             }),
             recovery: None,
             serving: None,
+            sched: None,
         }];
         let s = engine_bench_json(&recs);
         let doc = crate::util::json::parse(&s).unwrap();
@@ -592,6 +624,7 @@ mod tests {
                 goodput: 84.0 / 96.0,
             }),
             serving: None,
+            sched: None,
         }];
         let s = engine_bench_json(&recs);
         let doc = crate::util::json::parse(&s).unwrap();
@@ -604,6 +637,33 @@ mod tests {
         let line = recovery_line(&ledger);
         assert!(line.contains("flow-kill"), "{line}");
         assert!(line.contains("84 delivered"), "{line}");
+    }
+
+    #[test]
+    fn engine_bench_json_carries_sched_sweep() {
+        let recs = vec![EngineBenchRecord {
+            scenario: "alltoall-sched-mixed".into(),
+            events: 2000,
+            median_wall_s: 0.5,
+            sim_wall_ns: 0,
+            threads: Vec::new(),
+            fault: None,
+            recovery: None,
+            serving: None,
+            sched: Some(SchedBenchInfo {
+                fifo_s: 2e-3,
+                srpf_s: 1.6e-3,
+                deadline_s: 1e-3,
+            }),
+        }];
+        let s = engine_bench_json(&recs);
+        let doc = crate::util::json::parse(&s).unwrap();
+        let sc = doc.get("scenarios").get("alltoall-sched-mixed").get("sched");
+        assert_eq!(sc.get("fifo_makespan_s").as_f64(), Some(2e-3));
+        assert_eq!(sc.get("srpf_makespan_s").as_f64(), Some(1.6e-3));
+        assert_eq!(sc.get("deadline_makespan_s").as_f64(), Some(1e-3));
+        assert!((sc.get("srpf_speedup").as_f64().unwrap() - 1.25).abs() < 1e-12);
+        assert!((sc.get("deadline_speedup").as_f64().unwrap() - 2.0).abs() < 1e-12);
     }
 
     #[test]
@@ -636,6 +696,7 @@ mod tests {
                 max_queue_depth: 37,
                 recoveries: 1,
             }),
+            sched: None,
         }];
         let s = engine_bench_json(&recs);
         let doc = crate::util::json::parse(&s).unwrap();

@@ -27,6 +27,42 @@ pub enum SigCond {
     Ge,
 }
 
+/// Chunk-scheduler metadata carried by split/chunked inter-node pieces
+/// (`config::ChunkSched`): how much of the owning stream is still
+/// unsent after this piece, and how urgently a consumer is waiting.
+/// Pieces without metadata (`chunk: None`) always post eagerly — the
+/// scheduler only ever reorders tagged pieces, so untagged programs are
+/// bit-identical under every policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChunkMeta {
+    /// Wire bytes remaining in this piece's stream *including* this
+    /// piece — the SRPF key (shortest remaining path first).
+    pub remaining: f64,
+    /// Consumer urgency class: `0` for pieces that gate a blocked
+    /// FFN/GEMM consumer (combine legs, AG segments feeding tiles),
+    /// `u32::MAX` for bulk traffic nothing is waiting on yet. The
+    /// `Deadline` policy orders by this first.
+    pub deadline: u32,
+}
+
+impl ChunkMeta {
+    /// Bulk piece: nothing blocks on it yet (deadline `u32::MAX`).
+    pub fn bulk(remaining: f64) -> Self {
+        ChunkMeta {
+            remaining,
+            deadline: u32::MAX,
+        }
+    }
+
+    /// Consumer-gating piece: a compute tile waits on it (deadline 0).
+    pub fn gating(remaining: f64) -> Self {
+        ChunkMeta {
+            remaining,
+            deadline: 0,
+        }
+    }
+}
+
 /// A signal cell in symmetric memory.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct SigRef {
@@ -97,6 +133,9 @@ pub enum Op {
         /// message at simulation time under the fabric's `RailPolicy`
         /// (deterministic hash, or emptiest plane by live occupancy).
         tc: TrafficClass,
+        /// Chunk-scheduler metadata; `None` (untagged) posts eagerly
+        /// under every [`crate::config::ChunkSched`] policy.
+        chunk: Option<ChunkMeta>,
         label: &'static str,
     },
     /// One-sided read `src -> dst` where `src` is remote (getmem).
@@ -121,6 +160,9 @@ pub enum Op {
         dst: Slice,
         bytes: f64,
         tc: TrafficClass,
+        /// Chunk-scheduler metadata; `None` (untagged) posts eagerly
+        /// under every [`crate::config::ChunkSched`] policy.
+        chunk: Option<ChunkMeta>,
     },
     /// Spin until the LL flags for `dst` indicate arrival.
     LLWait { dst: Slice },
@@ -362,6 +404,7 @@ mod tests {
                 signal: None,
                 blocking: true,
                 tc: Default::default(),
+                chunk: None,
                 label: "put_chunk",
             }
             .label(),

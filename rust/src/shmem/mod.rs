@@ -29,7 +29,8 @@
 use crate::config::{ClusterSpec, DType, RailPolicy, TrafficClass};
 use crate::mem::Slice;
 use crate::program::{
-    ComputeCost, EngineClass, NumericOp, Op, Scope, SigCond, SigOp, SigRef, TaskBuilder, TaskSpec,
+    ChunkMeta, ComputeCost, EngineClass, NumericOp, Op, Scope, SigCond, SigOp, SigRef,
+    TaskBuilder, TaskSpec,
 };
 
 /// World geometry, shared by every rank's builder (the "host side").
@@ -78,6 +79,7 @@ impl ShmemCtx {
             pe,
             b: TaskBuilder::new(pe, name),
             tc: TrafficClass::Auto,
+            chunk: None,
         }
     }
 }
@@ -91,6 +93,11 @@ pub struct ShmemTask {
     /// CUDA stream's NIC binding): set with [`Self::on_rail`], cleared
     /// with [`Self::auto_rail`].
     tc: TrafficClass,
+    /// Chunk-scheduler metadata for subsequent puts (stream-modal, like
+    /// `tc`): set with [`Self::chunk_meta`], cleared with
+    /// [`Self::clear_chunk`]. `None` (the default) leaves pieces
+    /// untagged, which every `ChunkSched` policy posts eagerly.
+    chunk: Option<ChunkMeta>,
 }
 
 impl ShmemTask {
@@ -207,6 +214,38 @@ impl ShmemTask {
         self.tc
     }
 
+    // -- chunk-scheduler tagging ----------------------------------------------
+    //
+    // Stream-modal like the rail selection above: collective builders tag
+    // the pieces of a split dispatch / chunked segment walk with how many
+    // wire bytes remain in the stream and whether a consumer is already
+    // gated on them, and the engine's `ChunkSched` ready queue orders
+    // tagged pieces across *all* in-flight collectives. Untagged ops
+    // always post eagerly, so tagging is purely additive.
+
+    /// Tag subsequent puts with chunk-scheduler metadata (see
+    /// [`ChunkMeta`]): `remaining` wire bytes still unsent in this stream
+    /// including the next piece, and the consumer `deadline` class.
+    pub fn chunk_meta(&mut self, remaining: f64, deadline: u32) -> &mut Self {
+        self.chunk = Some(ChunkMeta {
+            remaining,
+            deadline,
+        });
+        self
+    }
+
+    /// Stop tagging: subsequent puts post eagerly under every policy.
+    pub fn clear_chunk(&mut self) -> &mut Self {
+        self.chunk = None;
+        self
+    }
+
+    /// The chunk metadata subsequent data-movement ops will carry (for
+    /// builders assembling raw [`Op`]s alongside the primitives).
+    pub fn chunk(&self) -> Option<ChunkMeta> {
+        self.chunk
+    }
+
     // -- OpenSHMEM data movement ----------------------------------------------
 
     /// `putmem`: blocking one-sided write of `src` (local) to `dst`
@@ -221,6 +260,7 @@ impl ShmemTask {
             signal: None,
             blocking: true,
             tc: self.tc,
+            chunk: self.chunk,
             label: "putmem",
         });
         self
@@ -237,6 +277,7 @@ impl ShmemTask {
             signal: None,
             blocking: false,
             tc: self.tc,
+            chunk: self.chunk,
             label: "putmem_nbi",
         });
         self
@@ -264,6 +305,7 @@ impl ShmemTask {
             signal: Some((sig, op, value)),
             blocking: true,
             tc: self.tc,
+            chunk: self.chunk,
             label: "putmem_signal",
         });
         self
@@ -291,6 +333,7 @@ impl ShmemTask {
             signal: Some((sig, op, value)),
             blocking: false,
             tc: self.tc,
+            chunk: self.chunk,
             label: "putmem_signal_nbi",
         });
         self
@@ -423,6 +466,7 @@ impl ShmemTask {
             dst,
             bytes,
             tc: self.tc,
+            chunk: self.chunk,
         });
         self
     }
@@ -506,6 +550,7 @@ impl ShmemTask {
             signal: None,
             blocking: true,
             tc: self.tc,
+            chunk: None,
             label: "copy_local",
         });
         self
@@ -562,6 +607,27 @@ mod tests {
         // explicit pins are never rewritten by the policy
         t.on_rails(0, 1);
         assert_eq!(t.tc(), TrafficClass::Rails { tx: 0, rx: 1 });
+    }
+
+    #[test]
+    fn chunk_tagging_is_stream_modal() {
+        let c = ctx();
+        let mut t = c.task(0, "t");
+        assert_eq!(t.chunk(), None, "untagged by default");
+        t.chunk_meta(4096.0, 0);
+        let src = Slice::new(0, BufId(0), 0, 4);
+        let dst = Slice::new(1, BufId(0), 0, 4);
+        t.putmem_nbi(src, dst);
+        t.clear_chunk();
+        t.putmem_nbi(src, dst);
+        let spec = t.build();
+        match (&spec.ops[0], &spec.ops[1]) {
+            (Op::Put { chunk: Some(m), .. }, Op::Put { chunk: None, .. }) => {
+                assert_eq!(m.remaining, 4096.0);
+                assert_eq!(m.deadline, 0);
+            }
+            other => panic!("chunk tag must follow the modal state: {other:?}"),
+        }
     }
 
     #[test]

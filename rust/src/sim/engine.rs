@@ -25,6 +25,18 @@
 //! re-entered, the counters are not even maintained under
 //! `RailPolicy::Static` (the default), and static routing is
 //! bit-identical to calling [`Topology::route_tc`] directly.
+//!
+//! Chunk scheduling: under `ChunkSched::Srpf`/`Deadline`, inter-node
+//! puts tagged with [`ChunkMeta`] (split dispatch pieces, chunked
+//! AG/RS segments) divert into a policy-ordered ready queue instead of
+//! posting eagerly. [`Runner::pump`] issues queue heads against the
+//! live occupancy view — at most [`CHUNK_DEPTH`] flows per link, so a
+//! short latency-critical stream is never fair-shared behind bulk
+//! traffic it could overtake — re-resolving each chunk's route at
+//! *issue* time (late binding: an adaptive rail pick sees the fabric
+//! as it is when the chunk actually goes out, not when the program
+//! reached the op). `ChunkSched::Fifo` (the default) never diverts, so
+//! it is bit-identical to the pre-scheduler engine by construction.
 
 //!
 //! Fault injection: a [`FaultPlan`] (see `config::fault`) schedules
@@ -50,9 +62,11 @@
 use std::cmp::Ordering;
 use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 
-use crate::config::{DeathScope, FaultPlan, FaultTarget, HardwareModel, RailPolicy, TrafficClass};
+use crate::config::{
+    ChunkSched, DeathScope, FaultPlan, FaultTarget, HardwareModel, RailPolicy, TrafficClass,
+};
 use crate::mem::{Slice, SymmetricHeap};
-use crate::program::{ComputeCost, NumericOp, Op, Program, Scope, SigCond, SigOp, SigRef};
+use crate::program::{ChunkMeta, ComputeCost, NumericOp, Op, Program, Scope, SigCond, SigOp, SigRef};
 use crate::sim::flow::{FlowId, FlowNet};
 use crate::topology::{FabricHealth, LinkId, LinkOccupancy, Route, Router, Topology};
 use crate::util::Rng;
@@ -429,6 +443,25 @@ struct RetryEntry {
     orig_links: Vec<LinkId>,
 }
 
+/// How many flows the chunk scheduler keeps in flight per link before it
+/// parks further chunks in the ready queue. `1` would serialize a stream
+/// and pay the full route latency between consecutive chunks; `2`
+/// pipelines the latency (one chunk on the wire while the next arms)
+/// without letting bulk streams rebuild the deep fair-shared backlog the
+/// scheduler exists to prevent.
+const CHUNK_DEPTH: u32 = 2;
+
+/// One diverted chunk parked in the scheduler's ready queue. The flow
+/// context (and with it the canonical `(task, launch)` key and the
+/// retry route the issue-time re-route reuses) was built at *enqueue*
+/// time in program order; only the wire departure is deferred.
+struct ReadyChunk {
+    /// Wire bytes (LL doubling already applied).
+    bytes: f64,
+    meta: ChunkMeta,
+    ctx: FlowCtx,
+}
+
 pub(crate) struct BarrierState {
     pub(crate) arrived: Vec<usize>,
     pub(crate) needed: usize,
@@ -596,9 +629,22 @@ pub(crate) struct Runner<'s, 'a, 'h, E: ?Sized = dyn ComputeExecutor + 'h> {
     /// Live per-link committed-bytes / in-flight counters the adaptive
     /// router reads; bumped at post time, released at completion.
     occ: LinkOccupancy,
-    /// Occupancy is only ever read under `RailPolicy::Adaptive`; skip the
-    /// per-flow bookkeeping entirely on the (default) static hot path.
+    /// Occupancy is only ever read under `RailPolicy::Adaptive` or a
+    /// non-FIFO `ChunkSched`; skip the per-flow bookkeeping entirely on
+    /// the (default) static/eager hot path.
     track_occ: bool,
+    /// The fabric's chunk issue policy (`Fifo` = eager, pre-scheduler).
+    chunk_sched: ChunkSched,
+    /// Divert tagged inter-node puts through the ready queue? Only under
+    /// a non-FIFO policy, and only on the solo engine — `sim/par.rs`
+    /// routes non-FIFO runs to the sequential fallback, so a sharded
+    /// runner never schedules chunks.
+    sched_on: bool,
+    /// Policy-ordered ready queue, one FIFO stream per `(task, dst)` —
+    /// the scheduler reorders *across* streams, never within one, so
+    /// per-(src, dst, rail) delivery order is preserved structurally.
+    /// BTreeMap: deterministic iteration is a standing invariant.
+    ready: BTreeMap<(u32, usize), VecDeque<ReadyChunk>>,
     /// Flow contexts, slab-indexed by `FlowId` (slots are recycled in
     /// lockstep with `FlowNet`'s free list).
     flow_ctx: Vec<Option<FlowCtx>>,
@@ -714,6 +760,8 @@ impl<'s, 'a, 'h, E: ComputeExecutor + ?Sized> Runner<'s, 'a, 'h, E> {
         let jitter = plan.jitter.map(|j| (Rng::new(j.seed), j.max_secs));
         let base_bw = link_bw.clone();
         let c = &sim.topo.cluster;
+        let chunk_sched = c.fabric.chunk_sched;
+        let sched_on = chunk_sched != ChunkSched::Fifo && role == Role::Solo;
         let death_ranks: Vec<Vec<usize>> = plan
             .deaths
             .iter()
@@ -756,7 +804,10 @@ impl<'s, 'a, 'h, E: ComputeExecutor + ?Sized> Runner<'s, 'a, 'h, E> {
             flows: FlowNet::new(link_bw),
             router: Router::new(sim.topo),
             occ: LinkOccupancy::new(sim.topo.link_count()),
-            track_occ: sim.topo.cluster.fabric.rail_policy == RailPolicy::Adaptive,
+            track_occ: sim.topo.cluster.fabric.rail_policy == RailPolicy::Adaptive || sched_on,
+            chunk_sched,
+            sched_on,
+            ready: BTreeMap::new(),
             flow_ctx: Vec::new(),
             pending: Vec::new(),
             pending_free: Vec::new(),
@@ -1127,6 +1178,12 @@ impl<'s, 'a, 'h, E: ComputeExecutor + ?Sized> Runner<'s, 'a, 'h, E> {
         }
         for ctx in done_ctxs {
             self.finish_flow(ctx)?;
+        }
+
+        // completed flows released link occupancy: parked chunks may
+        // now be admissible
+        if self.sched_on {
+            self.pump();
         }
 
         // hand the (emptied) batch buffers back for reuse
@@ -1590,12 +1647,10 @@ impl<'s, 'a, 'h, E: ComputeExecutor + ?Sized> Runner<'s, 'a, 'h, E> {
                     signal,
                     blocking,
                     tc,
+                    chunk,
                     label,
                 } => {
                     self.check_endpoints_alive(src.rank, dst.rank)?;
-                    let mut route =
-                        self.router
-                            .route_faulty(src.rank, dst.rank, tc, &self.occ, self.health.as_ref());
                     let lat_add = if signal.is_some() {
                         // flag packet + fence after the payload (§3.4's
                         // "each P2P transfer requires a pair of signal
@@ -1604,7 +1659,6 @@ impl<'s, 'a, 'h, E: ComputeExecutor + ?Sized> Runner<'s, 'a, 'h, E> {
                     } else {
                         0.0
                     };
-                    route.latency += lat_add;
                     let ctx = FlowCtx {
                         copies: vec![(src, dst)],
                         signal,
@@ -1622,7 +1676,19 @@ impl<'s, 'a, 'h, E: ComputeExecutor + ?Sized> Runner<'s, 'a, 'h, E> {
                             lat_add,
                         }),
                     };
-                    self.launch_flow(route, bytes, ctx);
+                    if let Some(meta) = self.divert_meta(chunk, src.rank, dst.rank) {
+                        self.enqueue_chunk(task, dst.rank, bytes, meta, ctx);
+                    } else {
+                        let mut route = self.router.route_faulty(
+                            src.rank,
+                            dst.rank,
+                            tc,
+                            &self.occ,
+                            self.health.as_ref(),
+                        );
+                        route.latency += lat_add;
+                        self.launch_flow(route, bytes, ctx);
+                    }
                     if blocking {
                         self.tasks[task].state = TState::BlockedFlow;
                         return Ok(());
@@ -1703,11 +1769,14 @@ impl<'s, 'a, 'h, E: ComputeExecutor + ?Sized> Runner<'s, 'a, 'h, E> {
                     self.tasks[task].state = TState::BlockedFlow;
                     return Ok(());
                 }
-                Op::LLPut { src, dst, bytes, tc } => {
+                Op::LLPut {
+                    src,
+                    dst,
+                    bytes,
+                    tc,
+                    chunk,
+                } => {
                     self.check_endpoints_alive(src.rank, dst.rank)?;
-                    let route =
-                        self.router
-                            .route_faulty(src.rank, dst.rank, tc, &self.occ, self.health.as_ref());
                     let ctx = FlowCtx {
                         copies: vec![(src, dst)],
                         signal: None,
@@ -1726,7 +1795,18 @@ impl<'s, 'a, 'h, E: ComputeExecutor + ?Sized> Runner<'s, 'a, 'h, E> {
                         }),
                     };
                     // LL doubles the wire size (flag bytes in-band, §3.4)
-                    self.launch_flow(route, bytes * 2.0, ctx);
+                    if let Some(meta) = self.divert_meta(chunk, src.rank, dst.rank) {
+                        self.enqueue_chunk(task, dst.rank, bytes * 2.0, meta, ctx);
+                    } else {
+                        let route = self.router.route_faulty(
+                            src.rank,
+                            dst.rank,
+                            tc,
+                            &self.occ,
+                            self.health.as_ref(),
+                        );
+                        self.launch_flow(route, bytes * 2.0, ctx);
+                    }
                     self.tasks[task].outstanding_nbi += 1;
                     self.tasks[task].pc += 1;
                 }
@@ -1863,6 +1943,117 @@ impl<'s, 'a, 'h, E: ComputeExecutor + ?Sized> Runner<'s, 'a, 'h, E> {
         let n = self.tasks[task].launches;
         self.tasks[task].launches += 1;
         (task as u32, n)
+    }
+
+    // -- chunk scheduler (ChunkSched::Srpf / Deadline) -----------------------
+
+    /// Should this transfer divert through the ready queue? Only tagged
+    /// pieces, only under a non-FIFO policy, and only inter-node routes
+    /// (intra-node NVLink paths are never the contended resource the
+    /// scheduler manages). Returns the metadata to order by.
+    fn divert_meta(&self, chunk: Option<ChunkMeta>, src: usize, dst: usize) -> Option<ChunkMeta> {
+        if !self.sched_on {
+            return None;
+        }
+        let c = &self.sim.topo.cluster;
+        if c.node_of(src) == c.node_of(dst) {
+            return None;
+        }
+        chunk
+    }
+
+    /// Park a diverted chunk on its `(task, dst)` stream and try to
+    /// issue. The stream queue is strict FIFO — the scheduler reorders
+    /// across streams only — so per-destination delivery order (which
+    /// signal/LL semantics rely on) is preserved by construction.
+    fn enqueue_chunk(&mut self, task: usize, dst: usize, bytes: f64, meta: ChunkMeta, ctx: FlowCtx) {
+        self.ready
+            .entry((task as u32, dst))
+            .or_default()
+            .push_back(ReadyChunk { bytes, meta, ctx });
+        self.pump();
+    }
+
+    /// Issue ready chunks in policy order until every remaining stream
+    /// head is gated. A head is admissible when every link of its
+    /// issue-time route has fewer than [`CHUNK_DEPTH`] flows in flight —
+    /// the late-bound route means an adaptive rail pick sees the live
+    /// occupancy at departure, and the depth gate keeps short streams
+    /// from fair-sharing behind bulk backlogs. Work-conserving: a gated
+    /// head never blocks a lower-priority admissible one. Deterministic:
+    /// candidate order is a total sort ending in the unique
+    /// `(task, launch-counter)` key, and re-evaluation happens at
+    /// enqueue and at flow-batch completion only — both deterministic
+    /// points of the event loop.
+    fn pump(&mut self) {
+        if !self.sched_on || self.ready.is_empty() {
+            return;
+        }
+        let pol = self.chunk_sched;
+        loop {
+            // stream heads, policy-ordered; ctx.key is the stable
+            // tie-break (deadline, then task, then launch counter)
+            let mut heads: Vec<(ChunkMeta, (u32, u32), (u32, usize))> = self
+                .ready
+                .iter()
+                .map(|(k, q)| {
+                    let c = q.front().expect("empty stream queue left in ready map");
+                    (c.meta, c.ctx.key, *k)
+                })
+                .collect();
+            heads.sort_by(|a, b| match pol {
+                ChunkSched::Srpf => a
+                    .0
+                    .remaining
+                    .total_cmp(&b.0.remaining)
+                    .then(a.0.deadline.cmp(&b.0.deadline))
+                    .then(a.1.cmp(&b.1)),
+                ChunkSched::Deadline => a
+                    .0
+                    .deadline
+                    .cmp(&b.0.deadline)
+                    .then(a.0.remaining.total_cmp(&b.0.remaining))
+                    .then(a.1.cmp(&b.1)),
+                ChunkSched::Fifo => unreachable!("pump under ChunkSched::Fifo"),
+            });
+            let mut issued = false;
+            for &(_, _, key) in &heads {
+                let rt = self.ready[&key]
+                    .front()
+                    .expect("stream head vanished")
+                    .ctx
+                    .rt
+                    .expect("ready chunk without a retry route");
+                let mut route = self.router.route_faulty(
+                    rt.src,
+                    rt.dst,
+                    rt.tc,
+                    &self.occ,
+                    self.health.as_ref(),
+                );
+                if route
+                    .links
+                    .iter()
+                    .any(|&l| self.occ.in_flight(l) >= CHUNK_DEPTH)
+                {
+                    continue; // gated; try the next-priority stream
+                }
+                route.latency = route.latency * rt.lat_mult + rt.lat_add;
+                let q = self.ready.get_mut(&key).expect("stream queue vanished");
+                let chunk = q.pop_front().expect("stream head vanished");
+                if q.is_empty() {
+                    self.ready.remove(&key);
+                }
+                // launch commits occupancy, so the next round's gate and
+                // rail picks see this chunk in flight
+                self.launch_flow(route, chunk.bytes, chunk.ctx);
+                issued = true;
+                break;
+            }
+            if !issued {
+                return;
+            }
+        }
     }
 
     pub(crate) fn launch_flow(&mut self, mut route: Route, bytes: f64, ctx: FlowCtx) {
@@ -2034,6 +2225,7 @@ mod tests {
             signal: None,
             blocking: true,
             tc: Default::default(),
+            chunk: None,
             label: "put",
         });
         prog.push(t.build());
@@ -2060,6 +2252,7 @@ mod tests {
             signal: Some((SigRef { rank: 1, idx: 0 }, SigOp::Set, 1)),
             blocking: true,
             tc: Default::default(),
+            chunk: None,
             label: "put",
         });
         prog.push(prod.build());
@@ -2172,6 +2365,7 @@ mod tests {
                 signal: None,
                 blocking: false,
                 tc: Default::default(),
+                chunk: None,
                 label: "nbi_put",
             });
         }
@@ -2201,6 +2395,7 @@ mod tests {
             dst: Slice::new(1, buf, 0, 4),
             bytes: 1024.0,
             tc: Default::default(),
+            chunk: None,
         });
         prog.push(sender.build());
         let mut recv = TaskBuilder::new(1, "r").sms(1);
@@ -2306,6 +2501,7 @@ mod tests {
                             signal: None,
                             blocking: false,
                             tc: Default::default(),
+                            chunk: None,
                             label: "p",
                         });
                     }
@@ -2345,6 +2541,7 @@ mod tests {
             signal: None,
             blocking: true,
             tc: TrafficClass::Rail(0),
+            chunk: None,
             label: "put",
         });
         prog.push(t.build());
@@ -2369,6 +2566,7 @@ mod tests {
                             signal: None,
                             blocking: false,
                             tc: Default::default(),
+                            chunk: None,
                             label: "p",
                         });
                     }
@@ -2442,6 +2640,7 @@ mod tests {
             signal: None,
             blocking: true,
             tc: TrafficClass::Rail(1),
+            chunk: None,
             label: "bg",
         });
         prog.push(bg.build());
@@ -2453,6 +2652,7 @@ mod tests {
             signal: None,
             blocking: true,
             tc: TrafficClass::Auto,
+            chunk: None,
             label: "put",
         });
         prog.push(t.build());

@@ -43,12 +43,13 @@
 //! pre-scan unions the involved nodes into one shard: the coupling
 //! becomes shard-local and exact. Runs that are not eligible at all
 //! (numerics, tracing, adaptive routing's global occupancy feedback,
-//! latency jitter's global draw order, single-node clusters, programs
-//! that collapse to one partition) fall back to the sequential engine.
+//! chunk scheduling's global ready queue, latency jitter's global draw
+//! order, single-node clusters, programs that collapse to one
+//! partition) fall back to the sequential engine.
 
 use std::collections::BTreeMap;
 
-use crate::config::RailPolicy;
+use crate::config::{ChunkSched, RailPolicy};
 use crate::mem::SymmetricHeap;
 use crate::program::{Op, Program, Scope};
 use crate::sim::engine::{
@@ -74,6 +75,7 @@ pub(crate) fn plan(sim: &Sim, prog: &Program) -> Option<PartitionMap> {
         || sim.faults().jitter.is_some()
         || sim.faults().has_deaths()
         || sim.topo.cluster.fabric.rail_policy != RailPolicy::Static
+        || sim.topo.cluster.fabric.chunk_sched != ChunkSched::Fifo
         || sim.topo.cluster.nodes < 2
     {
         return None;

@@ -24,7 +24,7 @@ use triton_dist_sim::config::{
     ClusterSpec, FabricSpec, FaultPlan, GemmShape, MoeShape, RailPolicy,
 };
 use triton_dist_sim::coordinator::{
-    ag_gemm, ep_moe, flash_decode, recover, run_numeric, run_timing_faults,
+    ag_gemm, ep_moe, flash_decode, gemm_rs, recover, run_numeric, run_timing_faults,
 };
 use triton_dist_sim::runtime::HybridExecutor;
 use triton_dist_sim::sim::SimError;
@@ -324,6 +324,52 @@ fn ag_gemm_death_replans_onto_the_flat_survivor_program() {
     assert_eq!(rec.epochs, 1);
     // timing-only path: the token ledger stays zero
     assert_eq!(rec.tokens_delivered + rec.tokens_rerouted + rec.tokens_dropped, 0);
+}
+
+#[test]
+fn gemm_rs_death_replans_onto_the_flat_survivor_program() {
+    let cluster = ClusterSpec::h800(2, 4);
+    let (rep, view) = recover::run_gemm_rs_elastic(
+        cluster,
+        GemmShape::new(512, 256, 256),
+        gemm_rs::GemmRsVariant::OursInter,
+        FaultPlan::parse("die,5,1e-6").unwrap(),
+        &RecoverCfg::default(),
+    )
+    .unwrap();
+    let rec = rep.recovery.as_ref().expect("death must be survived");
+    assert_eq!(rec.dead_ranks, vec![5]);
+    assert_eq!(view.world(), 7);
+    assert!(rep.makespan >= rec.resumed_at);
+    assert_eq!(rec.epochs, 1);
+    // timing-only path: the token ledger stays zero
+    assert_eq!(rec.tokens_delivered + rec.tokens_rerouted + rec.tokens_dropped, 0);
+}
+
+#[test]
+fn gemm_rs_elastic_without_deaths_is_the_plain_run() {
+    // bit-identity: the elastic entry point with an empty plan must be
+    // the plain fault-free run, recovery None
+    let cluster = ClusterSpec::h800(2, 4);
+    let shape = GemmShape::new(512, 256, 256);
+    let (rep, view) = recover::run_gemm_rs_elastic(
+        cluster,
+        shape,
+        gemm_rs::GemmRsVariant::OursInter,
+        FaultPlan::default(),
+        &RecoverCfg::default(),
+    )
+    .unwrap();
+    assert!(rep.recovery.is_none());
+    assert_eq!(view.world(), 8);
+    let (mut op, _b) = gemm_rs::build(cluster, shape, gemm_rs::GemmRsVariant::OursInter);
+    let topo = Topology::build(cluster);
+    let plain = run_timing_faults(&mut op, &topo, FaultPlan::default()).unwrap();
+    assert_eq!(
+        rep.makespan.to_bits(),
+        plain.makespan.to_bits(),
+        "fault-free elastic must be bit-identical to the plain run"
+    );
 }
 
 #[test]

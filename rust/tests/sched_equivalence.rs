@@ -1,0 +1,304 @@
+//! Chunk-scheduler acceptance suite (ISSUE tentpole):
+//!
+//! 1. **Fifo bit-identity**: `ChunkSched::Fifo` (the default) must
+//!    reproduce the pre-scheduler engine bit for bit on the fig13
+//!    (inter-node AG+GEMM), fig14 (inter-node GEMM+RS), fig16
+//!    (low-latency AllToAll), and EP-MoE workload shapes — under Fifo
+//!    the divert point is disabled and no piece ever enters the ready
+//!    queue, so nothing may drift.
+//! 2. **Determinism**: same-seed replays of the scheduled engine are
+//!    bit-identical, including across `--threads {1,4}` (a non-Fifo
+//!    policy makes the parallel planner fall back to the sequential
+//!    loop, so the thread knob stays a pure wall-clock knob).
+//! 3. **Strict win**: on the pinned mixed-traffic scenario (concurrent
+//!    EP-style gating stream + bulk backlog from one source over a
+//!    tapered adaptive spine, `alltoall-sched-mixed`), `Srpf` and
+//!    `Deadline` each beat adaptive-routing-alone (`Fifo`) by >= 5%
+//!    makespan.
+//! 4. **FIFO-per-stream safety**: the scheduler reorders *across*
+//!    streams only. Builder tags never reorder pieces within a
+//!    `(task, dst)` stream — remaining-work tags are non-increasing in
+//!    program order — and tagged collectives stay numerically correct
+//!    under `Srpf` on a blocking railed fabric.
+
+use triton_dist_sim::collectives::allgather::ag_inter;
+use triton_dist_sim::collectives::alltoall::{
+    a2a_ll, run_sched_mixed, sched_mixed, verify_alltoall, A2aBufs, A2aCfg,
+};
+use triton_dist_sim::collectives::{
+    expected_allgather, fill_ag_inputs, verify_allgather, AgBufs, ProgBuild,
+};
+use triton_dist_sim::config::{
+    ChunkSched, ClusterSpec, DType, FabricSpec, FaultPlan, GemmShape, MoeShape, RailPolicy,
+};
+use triton_dist_sim::coordinator::{
+    self, ag_gemm, ep_moe, gemm_rs, run_timing, run_timing_threads,
+};
+use triton_dist_sim::mem::SymmetricHeap;
+use triton_dist_sim::program::Op;
+use triton_dist_sim::shmem::ShmemCtx;
+use triton_dist_sim::sim::{NoopExecutor, Sim, SimConfig};
+use triton_dist_sim::topology::Topology;
+
+/// A railed blocking fabric with the chunk scheduler spelled out.
+fn railed(sched: ChunkSched) -> ClusterSpec {
+    ClusterSpec::h800(2, 8).with_fabric(
+        FabricSpec::rail_optimized(2, 2.0).with_chunk_sched(sched),
+    )
+}
+
+fn ag_gemm_makespan(cluster: ClusterSpec, shape: GemmShape) -> f64 {
+    let topo = Topology::build(cluster);
+    let (mut op, _b) = ag_gemm::build(cluster, shape, ag_gemm::AgGemmVariant::OursInter);
+    run_timing(&mut op, &topo).unwrap()
+}
+
+fn gemm_rs_makespan(cluster: ClusterSpec, shape: GemmShape) -> f64 {
+    let topo = Topology::build(cluster);
+    let (mut op, _b) = gemm_rs::build(cluster, shape, gemm_rs::GemmRsVariant::OursInter);
+    run_timing(&mut op, &topo).unwrap()
+}
+
+fn a2a_makespan(cluster: ClusterSpec, chunk: usize) -> f64 {
+    let ctx = ShmemCtx::new(cluster, DType::BF16);
+    let topo = Topology::build(cluster);
+    let mut heap = SymmetricHeap::new(ctx.n_pes(), 4 * ctx.n_pes().max(16));
+    let bufs = A2aBufs::alloc(&mut heap, &ctx, chunk);
+    let mut pb = ProgBuild::new();
+    a2a_ll(&ctx, &bufs, &mut pb, &A2aCfg::ours().with_split(2));
+    let sim = Sim::with_config(
+        &topo,
+        SimConfig {
+            numerics: false,
+            trace: false,
+        },
+    );
+    sim.run(&pb.prog, &mut heap, &mut NoopExecutor)
+        .unwrap()
+        .makespan
+}
+
+fn ep_moe_makespan(cluster: ClusterSpec) -> f64 {
+    let shape = MoeShape {
+        tokens_per_rank: 32,
+        in_hidden: 64,
+        out_hidden: 64,
+        experts: 32,
+        topk: 2,
+        ..MoeShape::default()
+    };
+    let routing = ep_moe::routing_for(cluster, &shape, 3);
+    let cfg = A2aCfg::ours().with_split(2);
+    let (mut op, _b) = ep_moe::build_ep_moe_cfg(
+        cluster,
+        shape,
+        &routing,
+        ep_moe::EpMoeVariant::TokenRouted,
+        &cfg,
+    );
+    let topo = Topology::build(cluster);
+    run_timing(&mut op, &topo).unwrap()
+}
+
+// -- 1. Fifo bit-identity ---------------------------------------------------
+
+/// `chunk_sched` must be inert under `Fifo`: a railed fabric with the
+/// policy spelled out reproduces the policy-less (default) railed
+/// makespans bit-identically on the fig13/fig14/fig16 shapes.
+#[test]
+fn explicit_fifo_bit_identical_on_fig_shapes() {
+    let default_fab = ClusterSpec::h800(2, 8).with_fabric(FabricSpec::rail_optimized(2, 2.0));
+    let fifo = railed(ChunkSched::Fifo);
+    let shape = GemmShape::new(16 * 64, 128, 256);
+    assert_eq!(
+        ag_gemm_makespan(default_fab, shape).to_bits(),
+        ag_gemm_makespan(fifo, shape).to_bits(),
+        "fig13 AG+GEMM must not drift under explicit Fifo"
+    );
+    let rs_shape = GemmShape::new(16 * 32, 128, 256);
+    assert_eq!(
+        gemm_rs_makespan(default_fab, rs_shape).to_bits(),
+        gemm_rs_makespan(fifo, rs_shape).to_bits(),
+        "fig14 GEMM+RS must not drift under explicit Fifo"
+    );
+    assert_eq!(
+        a2a_makespan(default_fab, 1024).to_bits(),
+        a2a_makespan(fifo, 1024).to_bits(),
+        "fig16 AllToAll must not drift under explicit Fifo"
+    );
+}
+
+/// Same bit-identity on the flagship EP-MoE pipeline, whose split
+/// dispatch and combine legs carry chunk tags — inert under Fifo.
+#[test]
+fn explicit_fifo_bit_identical_on_ep_moe() {
+    let default_fab = ClusterSpec::h800(2, 4).with_fabric(FabricSpec::rail_optimized(2, 2.0));
+    let fifo = ClusterSpec::h800(2, 4)
+        .with_fabric(FabricSpec::rail_optimized(2, 2.0).with_chunk_sched(ChunkSched::Fifo));
+    assert_eq!(
+        ep_moe_makespan(default_fab).to_bits(),
+        ep_moe_makespan(fifo).to_bits()
+    );
+}
+
+// -- 2. Determinism ---------------------------------------------------------
+
+/// Same-seed replays of every policy are bit-identical.
+#[test]
+fn sched_replays_bit_identically() {
+    for sched in [ChunkSched::Fifo, ChunkSched::Srpf, ChunkSched::Deadline] {
+        let a = run_sched_mixed(sched).unwrap();
+        let b = run_sched_mixed(sched).unwrap();
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{sched:?} must replay bit-for-bit"
+        );
+    }
+}
+
+/// The scheduled engine under `--threads {1,4}` stays bit-identical: a
+/// non-Fifo policy forces the parallel planner's sequential fallback,
+/// so the thread count remains a pure wall-clock knob.
+#[test]
+fn srpf_bit_identical_across_threads() {
+    let run = |threads: usize| -> f64 {
+        let cluster = ClusterSpec::h800(2, 2).with_fabric(
+            FabricSpec::rail_optimized(2, 2.0)
+                .with_spine_taper(2.0)
+                .with_rail_policy(RailPolicy::Adaptive)
+                .with_chunk_sched(ChunkSched::Srpf),
+        );
+        let ctx = ShmemCtx::new(cluster, DType::BF16);
+        let topo = Topology::build(cluster);
+        let mut heap = SymmetricHeap::new(ctx.n_pes(), 16);
+        let mut pb = ProgBuild::new();
+        let gemm_secs = ctx.bytes(32 << 19) / cluster.hw.nic_bw;
+        sched_mixed(&ctx, &mut heap, &mut pb, 32, 1 << 19, 4, 1 << 17, gemm_secs);
+        let mut op = coordinator::BuiltOp {
+            ctx,
+            heap,
+            prog: pb.prog,
+            name: "sched_mixed".into(),
+        };
+        run_timing_threads(&mut op, &topo, FaultPlan::default(), threads)
+            .unwrap()
+            .makespan
+    };
+    assert_eq!(run(1).to_bits(), run(4).to_bits());
+}
+
+// -- 3. Strict win on the pinned mixed-traffic scenario ---------------------
+
+/// Acceptance: on concurrent gating + bulk traffic from one source over
+/// a tapered adaptive spine, contention-aware issue is **strictly**
+/// faster than adaptive routing alone — FIFO shares the egress planes
+/// between the gating pieces and the whole bulk backlog, while `Srpf`
+/// and `Deadline` issue the consumer-gating pieces first.
+#[test]
+fn contention_aware_policies_strictly_beat_fifo_on_mixed_traffic() {
+    let fifo = run_sched_mixed(ChunkSched::Fifo).unwrap();
+    let srpf = run_sched_mixed(ChunkSched::Srpf).unwrap();
+    let deadline = run_sched_mixed(ChunkSched::Deadline).unwrap();
+    assert!(
+        srpf < fifo * 0.95,
+        "expected >= 5% win, got srpf {srpf} vs fifo {fifo}"
+    );
+    assert!(
+        deadline < fifo * 0.95,
+        "expected >= 5% win, got deadline {deadline} vs fifo {fifo}"
+    );
+}
+
+// -- 4. FIFO-per-stream safety ----------------------------------------------
+
+/// The builders' remaining-work tags are non-increasing in program
+/// order within every task — the invariant that makes SRPF starvation-
+/// free *within* a stream: a stream's head is always its oldest piece,
+/// and its priority only rises as the stream drains.
+#[test]
+fn stream_tags_are_nonincreasing_in_program_order() {
+    let cluster = ClusterSpec::h800(2, 2).with_fabric(
+        FabricSpec::rail_optimized(2, 2.0)
+            .with_spine_taper(2.0)
+            .with_chunk_sched(ChunkSched::Srpf),
+    );
+    let ctx = ShmemCtx::new(cluster, DType::BF16);
+    let mut heap = SymmetricHeap::new(ctx.n_pes(), 16);
+    let mut pb = ProgBuild::new();
+    sched_mixed(&ctx, &mut heap, &mut pb, 8, 64, 4, 32, 1e-6);
+    let mut tagged_tasks = 0usize;
+    let mut saw_gating = false;
+    let mut saw_bulk = false;
+    for task in &pb.prog.tasks {
+        let mut last: Option<(u32, f64)> = None;
+        for op in &task.ops {
+            let chunk = match op {
+                Op::Put { chunk, .. } | Op::LLPut { chunk, .. } => *chunk,
+                _ => None,
+            };
+            let Some(meta) = chunk else { continue };
+            if let Some((deadline, remaining)) = last {
+                assert_eq!(
+                    meta.deadline, deadline,
+                    "a stream's deadline class is constant"
+                );
+                assert!(
+                    meta.remaining <= remaining,
+                    "remaining work must drain monotonically within a stream: \
+                     {} after {remaining}",
+                    meta.remaining
+                );
+            }
+            last = Some((meta.deadline, meta.remaining));
+            if meta.deadline == 0 {
+                saw_gating = true;
+            }
+            if meta.deadline == u32::MAX {
+                saw_bulk = true;
+            }
+        }
+        if last.is_some() {
+            tagged_tasks += 1;
+        }
+    }
+    assert_eq!(tagged_tasks, 2, "one gating and one bulk stream");
+    assert!(saw_gating && saw_bulk, "both deadline classes present");
+}
+
+/// Tagged collectives stay numerically correct when the scheduler
+/// actually reorders their pieces: the split low-latency AllToAll and
+/// the gating-tagged inter-node AllGather on a blocking railed adaptive
+/// fabric under `Srpf`. Per-(task, dst) delivery order is preserved by
+/// the stream queues, so the data must land exactly.
+#[test]
+fn tagged_collectives_stay_correct_under_srpf() {
+    let cluster = ClusterSpec::h800(2, 4).with_fabric(
+        FabricSpec::rail_optimized(2, 2.0)
+            .with_rail_policy(RailPolicy::Adaptive)
+            .with_chunk_sched(ChunkSched::Srpf),
+    );
+    let ctx = ShmemCtx::new(cluster, DType::BF16);
+    let topo = Topology::build(cluster);
+
+    // split AllToAll: every dispatch chunk becomes multiple tagged pieces
+    let mut heap = SymmetricHeap::new(ctx.n_pes(), 4 * ctx.n_pes());
+    let bufs = A2aBufs::alloc(&mut heap, &ctx, 32);
+    triton_dist_sim::collectives::alltoall::fill_a2a_inputs(&mut heap, &bufs, 5);
+    let mut pb = ProgBuild::new();
+    a2a_ll(&ctx, &bufs, &mut pb, &A2aCfg::ours().with_split(4));
+    let sim = Sim::new(&topo);
+    sim.run(&pb.prog, &mut heap, &mut NoopExecutor).unwrap();
+    verify_alltoall(&heap, &bufs).unwrap();
+
+    // gating-tagged inter-node AllGather
+    let mut heap = SymmetricHeap::new(ctx.n_pes(), 4 * ctx.n_pes());
+    let bufs = AgBufs::alloc(&mut heap, &ctx, 16);
+    fill_ag_inputs(&mut heap, &bufs, 7);
+    let expected = expected_allgather(&heap, &bufs);
+    let mut pb = ProgBuild::new();
+    ag_inter(&ctx, &bufs, &mut pb);
+    let sim = Sim::new(&topo);
+    sim.run(&pb.prog, &mut heap, &mut NoopExecutor).unwrap();
+    verify_allgather(&heap, &bufs, &expected).unwrap();
+}
